@@ -1,0 +1,9 @@
+"""Pytest shim: allow `pytest python/tests/` from the repo root by
+putting `python/` (the package root for `compile` and `tests`) on the
+path. The Makefile's `cd python && pytest tests/` needs nothing, but the
+repo-root invocation is what CI-style drivers use."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent / "python"))

@@ -1,0 +1,160 @@
+//! END-TO-END VALIDATION (DESIGN.md §3, experiment V2): the full system
+//! on a real small workload, proving all layers compose:
+//!
+//!   L2/L1 (build time): the LSTM-AE was trained in JAX on synthetic
+//!   benign telemetry and AOT-lowered (Pallas cell kernel → scan → HLO
+//!   text) into `artifacts/`.
+//!   L3 (this binary): loads the artifact via PJRT, calibrates an anomaly
+//!   threshold on benign traffic, then serves a Poisson stream of
+//!   telemetry windows through the dynamic batcher, reporting
+//!   latency/throughput and detection quality, and cross-checks the
+//!   quantized (FPGA-datapath) scores against the f32 artifact scores.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example anomaly_detection
+//! ```
+//! (falls back to the bit-accurate Q8.24 golden model when artifacts are
+//! missing, so the example always runs.)
+
+use std::sync::Arc;
+
+use lstm_ae_accel::model::{LstmAutoencoder, ModelWeights, Topology};
+use lstm_ae_accel::server::{
+    calibrate_threshold, AnomalyServer, Backend, PjrtBackend, QuantBackend, ServerConfig,
+};
+use lstm_ae_accel::util::cli::Args;
+use lstm_ae_accel::util::table::Table;
+use lstm_ae_accel::workload::{trace::poisson_trace, TelemetryGen};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn main() {
+    let args = Args::from_env();
+    let model = args.get_or("model", "F32-D2").to_string();
+    let t = args.get_usize("timesteps", 16);
+    let n = args.get_usize("requests", 2000);
+    let rate = args.get_f64("rate", 4000.0);
+    let anomaly_rate = args.get_f64("anomaly-rate", 0.15);
+    let topo = Topology::from_name(&model).expect("model");
+
+    // ---- backend: AOT artifact via PJRT, golden model as fallback -------
+    let backend: Arc<dyn Backend> = match PjrtBackend::new(artifacts_dir(), &model, t) {
+        Ok(b) => {
+            println!("backend: {} (AOT artifact, python-free request path)", b.name());
+            Arc::new(b)
+        }
+        Err(e) => {
+            println!("backend: quant golden model (no artifacts: {e})");
+            // Use trained weights if present even without HLO artifacts.
+            let w_path = artifacts_dir().join(format!("weights_{}.bin", topo.name));
+            let ae = match ModelWeights::load(&w_path) {
+                Ok(w) => LstmAutoencoder::new(topo.clone(), w).expect("weights"),
+                Err(_) => LstmAutoencoder::random(topo.clone(), 7),
+            };
+            Arc::new(QuantBackend::new(ae))
+        }
+    };
+
+    // ---- telemetry: stream the family the model was trained on ----------
+    let spec_path = artifacts_dir().join(format!("telemetry_F{}.json", topo.features));
+    let mk_gen = |seed: u64| -> TelemetryGen {
+        TelemetryGen::from_spec_file(&spec_path, seed)
+            .unwrap_or_else(|_| TelemetryGen::new(topo.features, seed))
+    };
+
+    // ---- threshold calibration on benign traffic -------------------------
+    let mut gen = mk_gen(21);
+    let benign_scores: Vec<f64> =
+        (0..128).map(|_| backend.score_batch(&[&gen.benign_window(t)])[0]).collect();
+    let threshold = calibrate_threshold(&benign_scores, 0.99);
+    println!(
+        "calibrated threshold: {threshold:.6} (benign p50 {:.6})",
+        lstm_ae_accel::util::stats::Summary::of(&benign_scores).p50
+    );
+
+    // ---- quantization cross-check (FPGA datapath vs f32 artifact) --------
+    if let Ok(w) = ModelWeights::load(&artifacts_dir().join(format!("weights_{}.bin", topo.name)))
+    {
+        let ae = LstmAutoencoder::new(topo.clone(), w).expect("weights");
+        let mut agree = 0usize;
+        let total = 64usize;
+        let mut gen2 = mk_gen(33);
+        for i in 0..total {
+            let w = if i % 3 == 0 {
+                gen2.anomalous_window(t, lstm_ae_accel::workload::AnomalyKind::Spike)
+            } else {
+                gen2.benign_window(t)
+            };
+            let f32_dec = backend.score_batch(&[&w])[0] > threshold;
+            let q_dec = ae.score_quant(&w.data) > threshold;
+            agree += (f32_dec == q_dec) as usize;
+        }
+        println!(
+            "quantization decision agreement (Q8.24+PWL vs f32): {agree}/{total} windows"
+        );
+    }
+
+    // ---- serve a Poisson trace -------------------------------------------
+    let cfg = ServerConfig {
+        max_batch: args.get_usize("max-batch", 8),
+        max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us", 400)),
+        workers: args.get_usize("workers", 2),
+        threshold,
+    };
+    let srv = AnomalyServer::start(backend, cfg);
+    let mut gen = mk_gen(55);
+    let trace = poisson_trace(&mut gen, 77, rate, n, t, anomaly_rate);
+    println!("replaying {n} requests at {rate:.0} rps (anomaly rate {anomaly_rate}) ...");
+    let start = std::time::Instant::now();
+    let mut inflight = Vec::with_capacity(n);
+    for req in trace {
+        let target = std::time::Duration::from_secs_f64(req.at_s);
+        if let Some(sleep) = target.checked_sub(start.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        let truth = req.window.anomaly.map(|k| k);
+        inflight.push((srv.submit(req.window), truth));
+    }
+    let mut per_kind: std::collections::BTreeMap<String, (u64, u64)> = Default::default();
+    let (mut tp, mut fp, mut fneg, mut tn) = (0u64, 0u64, 0u64, 0u64);
+    for (rx, truth) in inflight {
+        let r = rx.recv().expect("response");
+        match (r.is_anomaly, truth) {
+            (true, Some(k)) => {
+                tp += 1;
+                per_kind.entry(format!("{k:?}")).or_default().0 += 1;
+            }
+            (false, Some(k)) => {
+                fneg += 1;
+                per_kind.entry(format!("{k:?}")).or_default().1 += 1;
+            }
+            (true, None) => fp += 1,
+            (false, None) => tn += 1,
+        }
+    }
+    let wall = start.elapsed().as_secs_f64();
+
+    // ---- report -----------------------------------------------------------
+    println!("\n{}", srv.metrics().report());
+    println!("wall time {wall:.2}s → {:.0} windows/s sustained", n as f64 / wall);
+    let precision = tp as f64 / (tp + fp).max(1) as f64;
+    let recall = tp as f64 / (tp + fneg).max(1) as f64;
+    let f1 = 2.0 * precision * recall / (precision + recall).max(1e-9);
+    println!(
+        "detection: TP {tp} FP {fp} FN {fneg} TN {tn} | precision {precision:.3} recall {recall:.3} F1 {f1:.3}"
+    );
+    let mut table = Table::new("Per-anomaly-kind recall").header(&["Kind", "detected", "missed", "recall"]);
+    for (k, (d, m)) in &per_kind {
+        let total = (d + m).max(1);
+        table.row(vec![
+            k.clone(),
+            d.to_string(),
+            m.to_string(),
+            format!("{:.2}", *d as f64 / total as f64),
+        ]);
+    }
+    print!("{}", table.render());
+    srv.shutdown();
+}

@@ -1,0 +1,84 @@
+//! Design-space exploration (paper §4.1's future work: "Determining the
+//! optimal RH_m for a given model and platform"): sweep RH_m across FPGA
+//! devices and report the latency/resource trade-off, plus the PWL
+//! segment-count accuracy trade-off of the activation unit.
+//!
+//! ```bash
+//! cargo run --release --example design_space -- --model F64-D6 --timesteps 64
+//! ```
+
+use lstm_ae_accel::accel::energy::{energy_per_timestep_mj, fpga_power_w};
+use lstm_ae_accel::accel::latency::LatencyModel;
+use lstm_ae_accel::accel::platform::FpgaDevice;
+use lstm_ae_accel::accel::resources::{estimate, min_fitting_rh_m};
+use lstm_ae_accel::accel::reuse::BalancedConfig;
+use lstm_ae_accel::activations::{ActKind, Pwl};
+use lstm_ae_accel::model::Topology;
+use lstm_ae_accel::util::cli::Args;
+use lstm_ae_accel::util::table::Table;
+
+fn main() {
+    let args = Args::from_env();
+    let model = args.get_or("model", "F64-D6");
+    let t = args.get_usize("timesteps", 64);
+    let topo = Topology::from_name(model).expect("model name");
+
+    // ---- RH_m sweep on the paper's device -------------------------------
+    let dev = FpgaDevice::ZCU104;
+    let mut table = Table::new(&format!("RH_m design space for {} on {} (T={t})", topo.name, dev.name))
+        .header(&["RH_m", "Lat (ms)", "E/t (mJ)", "LUT%", "BRAM%", "DSP%", "mults", "fits"]);
+    for rh_m in [1u64, 2, 4, 8, 16, 32] {
+        let cfg = BalancedConfig::balance(&topo, rh_m);
+        let lm = LatencyModel::of(&cfg);
+        let usage = estimate(&cfg);
+        let pct = usage.pct(&dev);
+        let lat = lm.acc_lat_ms(t, dev.clock_hz);
+        let e = energy_per_timestep_mj(fpga_power_w(&pct, &dev), lat, t);
+        table.row(vec![
+            rh_m.to_string(),
+            format!("{lat:.4}"),
+            format!("{e:.4}"),
+            format!("{:.1}", pct.lut),
+            format!("{:.1}", pct.bram),
+            format!("{:.1}", pct.dsp),
+            cfg.total_multipliers().to_string(),
+            if usage.fits(&dev) { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    print!("{}", table.render());
+
+    // ---- device portability (the §4.1 embedded-device claim) ------------
+    let mut table = Table::new("Minimum fitting RH_m per device (all paper models)")
+        .header(&["Device", "F32-D2", "F64-D2", "F32-D6", "F64-D6"]);
+    for dev in FpgaDevice::catalog() {
+        let mut row = vec![dev.name.to_string()];
+        for topo in Topology::paper_models() {
+            row.push(match min_fitting_rh_m(&topo, dev, 512) {
+                Some((rh_m, _)) => {
+                    let lm = LatencyModel::of(&BalancedConfig::balance(&topo, rh_m));
+                    format!("{rh_m} ({:.3} ms)", lm.acc_lat_ms(t, dev.clock_hz))
+                }
+                None => "-".into(),
+            });
+        }
+        table.row(row);
+    }
+    print!("{}", table.render());
+
+    // ---- PWL activation unit accuracy vs size ----------------------------
+    let mut table = Table::new("PWL activation design space (max |error| vs exact)")
+        .header(&["Segments", "sigmoid", "tanh", "BRAM words"]);
+    for segs in [16usize, 32, 64, 128, 256, 512] {
+        let sig = Pwl::new(ActKind::Sigmoid, segs).max_error(40_000);
+        let tanh = Pwl::new(ActKind::Tanh, segs).max_error(40_000);
+        table.row(vec![
+            segs.to_string(),
+            format!("{sig:.2e}"),
+            format!("{tanh:.2e}"),
+            (2 * (segs + 1)).to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("(paper §4.1 uses PWL sigmoid/tanh; we default to 128 segments: tanh error");
+    println!(" ~1.4e-3, below the Q8.24 datapath's compounded rounding on deep models.)");
+}

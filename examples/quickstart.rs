@@ -1,0 +1,91 @@
+//! Quickstart: configure the accelerator for a paper model, balance the
+//! dataflow, simulate a sequence, and print the latency/energy story.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use lstm_ae_accel::accel::dataflow::DataflowSim;
+use lstm_ae_accel::accel::energy::{energy_per_timestep_mj, fpga_power_w};
+use lstm_ae_accel::accel::latency::LatencyModel;
+use lstm_ae_accel::accel::platform::FpgaDevice;
+use lstm_ae_accel::accel::resources::estimate;
+use lstm_ae_accel::accel::reuse::BalancedConfig;
+use lstm_ae_accel::model::{LstmAutoencoder, ModelWeights, Topology};
+use lstm_ae_accel::util::table::Table;
+
+fn main() {
+    // 1. The paper's LSTM-AE-F32-D2: 32 → 16 → 32 features.
+    let topo = Topology::from_name("LSTM-AE-F32-D2").expect("known model");
+    println!("model: {}  chain: {:?}", topo.name, topo.chain());
+
+    // 2. Balance the dataflow around the paper's RH_m = 1 (Table 1).
+    let cfg = BalancedConfig::balance(&topo, 1);
+    let mut t = Table::new("Balanced configuration (Eqs 5–8)")
+        .header(&["Layer", "LX", "LH", "RX(exact)", "RH(exact)", "MX", "MH", "Lat_t"]);
+    for (i, l) in cfg.layers.iter().enumerate() {
+        t.row(vec![
+            format!("LSTM_{i}{}", if i == cfg.bottleneck { " (m)" } else { "" }),
+            l.lx.to_string(),
+            l.lh.to_string(),
+            format!("{:.2}", l.rx_exact),
+            format!("{:.2}", l.rh_exact),
+            l.mx.to_string(),
+            l.mh.to_string(),
+            l.lat_t().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // 3. Cycle-accurate simulation vs the paper's Eq 1.
+    let dev = FpgaDevice::ZCU104;
+    let lm = LatencyModel::of(&cfg);
+    let sim = DataflowSim::new(&cfg);
+    let mut t = Table::new("Latency: simulator vs analytical Eq 1 (300 MHz)")
+        .header(&["T", "sim cycles", "Eq1 cycles", "ms", "steady II"]);
+    for steps in [1usize, 4, 16, 64] {
+        let run = sim.run_sequence(steps);
+        t.row(vec![
+            steps.to_string(),
+            run.total_cycles.to_string(),
+            lm.acc_lat(steps).to_string(),
+            format!("{:.4}", run.total_ms(dev.clock_hz)),
+            run.steady_ii.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // 4. Resources + energy.
+    let usage = estimate(&cfg);
+    let pct = usage.pct(&dev);
+    let power = fpga_power_w(&pct, &dev);
+    println!(
+        "resources on {}: LUT {:.1}% FF {:.1}% BRAM {:.1}% DSP {:.1}%  (fits: {})",
+        dev.name,
+        pct.lut,
+        pct.ff,
+        pct.bram,
+        pct.dsp,
+        usage.fits(&dev)
+    );
+    let lat64 = lm.acc_lat_ms(64, dev.clock_hz);
+    println!(
+        "power {power:.1} W → energy/timestep at T=64: {:.4} mJ",
+        energy_per_timestep_mj(power, lat64, 64)
+    );
+
+    // 5. Functional pass through the bit-accurate Q8.24 datapath.
+    let weights = ModelWeights::random(&topo, 42);
+    let ae = LstmAutoencoder::new(topo, weights).expect("weights match");
+    let window: Vec<Vec<f32>> =
+        (0..8).map(|t| (0..32).map(|f| (0.1 * (t + f) as f32).sin() * 0.5).collect()).collect();
+    println!(
+        "reconstruction MSE (f32 path {:.6} | Q8.24+PWL datapath {:.6})",
+        ae.score_f32(&window),
+        ae.score_quant(&window)
+    );
+    println!(
+        "temporal-parallelism speedup vs layer-by-layer at T=64: x{:.2}",
+        lm.temporal_speedup(64)
+    );
+}

@@ -1,0 +1,152 @@
+"""AOT compile path: train each paper model, bake the trained weights
+into the HLO as constants, and emit HLO **text** artifacts the Rust
+runtime loads via ``HloModuleProto::from_text_file``.
+
+HLO text (not ``.serialize()``): jax ≥ 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+
+Outputs under --out:
+  <model>_T<t>.hlo.txt       per (model, sequence length)
+  weights_<model>.bin        Rust-loadable trained weights
+  manifest.json              the runtime's index (written last: it is the
+                             Makefile's freshness sentinel)
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from . import train as train_lib
+from .topology import PAPER_MODELS, Topology
+
+# Table 2/3 sequence lengths.
+TIMESTEPS = (1, 2, 4, 6, 16, 64)
+# Batch sizes for the vmapped serving artifacts.
+SERVE_BATCHES = (4, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path).
+
+    ``print_large_constants=True`` is load-bearing: the trained weights are
+    baked into the module as constants, and the default printer elides
+    them as ``constant({...})``, which does not round-trip through the
+    Rust-side text parser.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_model(params, t: int, features: int) -> str:
+    """Lower forward(params, ·) at fixed (T, F) with params as constants."""
+    fn = functools.partial(model_lib.forward, params, use_pallas=True, interpret=True)
+    spec = jax.ShapeDtypeStruct((t, features), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_model_batched(params, b: int, t: int, features: int) -> str:
+    """Lower the vmapped forward at fixed (B, T, F) — serving artifacts
+    that amortize PJRT dispatch across a whole batch."""
+    fn = functools.partial(
+        model_lib.forward_batched, params, use_pallas=True, interpret=True
+    )
+    spec = jax.ShapeDtypeStruct((b, t, features), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def build_all(out_dir: Path, *, steps: int, timesteps=TIMESTEPS, models=PAPER_MODELS, log=print):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {"version": 1, "quant": {"word": 32, "frac_bits": 24}, "models": []}
+    telemetry_written: set[int] = set()
+    for name in models:
+        topo = Topology.from_name(name)
+        # Deeper models converge slower (longer credit-assignment path
+        # through the bottleneck); give them proportionally more steps so
+        # the benign-reconstruction floor is low enough for anomaly
+        # separation (integration-tested on the Rust side).
+        model_steps = steps if topo.depth <= 2 else steps * 4
+        # Export the training telemetry family spec once per feature width
+        # so the Rust workload generator can stream in-distribution data.
+        tele_file = f"telemetry_F{topo.features}.json"
+        if topo.features not in telemetry_written:
+            spec = train_lib.telemetry_for(topo.features).spec()
+            (out_dir / tele_file).write_text(json.dumps(spec) + "\n")
+            telemetry_written.add(topo.features)
+        log(f"[aot] training {name} ({model_steps} steps) ...")
+        params, loss = train_lib.train_model(topo, steps=model_steps, log=log)
+        weights_file = f"weights_{name}.bin"
+        train_lib.write_weights_bin(out_dir / weights_file, params)
+        hlo_map = {}
+        for t in timesteps:
+            log(f"[aot] lowering {name} T={t} ...")
+            text = lower_model(params, t, topo.features)
+            fname = f"{name}_T{t}.hlo.txt"
+            (out_dir / fname).write_text(text)
+            hlo_map[str(t)] = fname
+        # Batched serving artifacts at the serving window length.
+        serve_t = 16 if 16 in timesteps else max(timesteps)
+        batch_map = {}
+        for b in SERVE_BATCHES:
+            log(f"[aot] lowering {name} T={serve_t} B={b} (serving) ...")
+            text = lower_model_batched(params, b, serve_t, topo.features)
+            fname = f"{name}_T{serve_t}_B{b}.hlo.txt"
+            (out_dir / fname).write_text(text)
+            batch_map[str(b)] = fname
+        manifest["models"].append(
+            {
+                "name": name,
+                "features": topo.features,
+                "depth": topo.depth,
+                "layers": topo.chain(),
+                "weights": weights_file,
+                "timesteps": list(timesteps),
+                "hlo": hlo_map,
+                "hlo_batch": {"t": serve_t, "sizes": batch_map},
+                "telemetry": tele_file,
+                "train_loss": loss,
+            }
+        )
+    # Manifest last: it is the freshness sentinel for `make artifacts`.
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    log(f"[aot] wrote {out_dir / 'manifest.json'}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--steps", type=int, default=240, help="training steps per model")
+    ap.add_argument(
+        "--models",
+        default=",".join(PAPER_MODELS),
+        help="comma-separated model names",
+    )
+    ap.add_argument(
+        "--timesteps",
+        default=",".join(str(t) for t in TIMESTEPS),
+        help="comma-separated sequence lengths",
+    )
+    args = ap.parse_args()
+    build_all(
+        Path(args.out),
+        steps=args.steps,
+        timesteps=tuple(int(t) for t in args.timesteps.split(",")),
+        models=tuple(args.models.split(",")),
+    )
+
+
+if __name__ == "__main__":
+    main()

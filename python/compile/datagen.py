@@ -1,0 +1,62 @@
+"""Synthetic benign telemetry for training — the Python counterpart of
+``rust/src/workload``: per-feature sinusoid mixtures (periods 8–64
+timesteps, feature-correlated phases) plus small Gaussian noise. The
+trained LSTM-AE therefore reconstructs exactly the distribution the Rust
+workload generator streams at serving time.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+LATENTS = 4  # shared with rust/src/workload: telemetry is low-rank
+
+
+class Telemetry:
+    """K latent sinusoids (periods 8–64 steps) mixed into F features.
+
+    Low-rank structure is what makes the LSTM-AE's bottleneck learnable
+    (and is how real fleet telemetry behaves: a few physical drivers,
+    many correlated sensors)."""
+
+    def __init__(self, features: int, seed: int, latents: int = LATENTS):
+        rng = np.random.default_rng(seed)
+        self.features = features
+        self.latents = latents
+        self.freq = 2.0 * np.pi / rng.uniform(8.0, 64.0, size=latents)
+        self.phase = rng.uniform(0.0, 2.0 * np.pi, size=latents)
+        # Mixing matrix, rows L1-normalized to keep |x| ≲ 0.9.
+        m = rng.uniform(-1.0, 1.0, size=(features, latents))
+        m = m / np.abs(m).sum(axis=1, keepdims=True)
+        self.mix = m * rng.uniform(0.5, 0.9, size=(features, 1))
+        self.noise_std = 0.02
+        self.rng = rng
+
+    def latent(self, steps: np.ndarray) -> np.ndarray:
+        """(..., latents) latent trajectory at integer timesteps."""
+        arg = self.freq * steps[..., None] + self.phase
+        return np.sin(arg) + 0.15 * np.cos(2.0 * arg)
+
+    def windows(self, n: int, t: int) -> np.ndarray:
+        """(n, t, features) float32 batch of benign windows with random
+        stream offsets."""
+        starts = self.rng.integers(0, 100_000, size=n)
+        steps = starts[:, None] + np.arange(t)[None, :]  # (n, t)
+        z = self.latent(steps)  # (n, t, K)
+        x = z @ self.mix.T
+        x = x + self.noise_std * self.rng.standard_normal(x.shape)
+        return x.astype(np.float32)
+
+    def spec(self) -> dict:
+        """Serializable family parameters — exported into artifacts/ so the
+        Rust workload generator streams the *same* telemetry family the
+        model was trained on (rust/src/workload TelemetryGen::from_spec)."""
+        return {
+            "features": self.features,
+            "latents": self.latents,
+            "freq": [float(v) for v in self.freq],
+            "phase": [float(v) for v in self.phase],
+            "mix": [float(v) for v in self.mix.reshape(-1)],
+            "noise_std": self.noise_std,
+        }

@@ -1,0 +1,129 @@
+"""L1 — fused LSTM-cell Pallas kernel.
+
+The paper's compute hot-spot is the pair of per-gate MVMs (MVM_X, MVM_H
+in Fig. 2) followed by the activation/element-wise unit. On the FPGA these
+are spatial units with configurable reuse factors; the TPU-style
+re-expression (DESIGN.md §7 Hardware-Adaptation) is a **single fused
+kernel** per (layer, timestep):
+
+- the two MVMs become one matmul over the concatenated ``[x_t, h_{t−1}]``
+  vector against the concatenated ``[Wx | Wh]`` weight block — the MXU
+  analog of instantiating parallel multipliers;
+- gate activations and the cell update run in the same kernel while the
+  matmul tile is still in VMEM (the FPGA's FIFO-coupled activation unit);
+- the reuse factor R maps to the row-tile size of the weight block: R = 1
+  is a full 4·LH-row tile, higher R processes 4·LH/R rows per grid step
+  (less parallelism, smaller live tile) — expressed via the grid +
+  BlockSpec below.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is validated against ``ref.py`` and the timing
+story lives in the Rust simulator.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_kernel(w_ref, b_ref, xh_ref, c_ref, h_out_ref, c_out_ref, *, lh: int):
+    """Fused gate matmul + activations + element-wise cell update.
+
+    Shapes:
+      w_ref:  (4·LH, LX+LH)   concatenated [Wx | Wh], gate-major rows
+      b_ref:  (4·LH,)         bx + bh (biases fused at trace time)
+      xh_ref: (LX+LH,)        concatenated [x_t, h_{t−1}]
+      c_ref:  (LH,)           previous cell state
+    """
+    w = w_ref[...]
+    xh = xh_ref[...]
+    pre = w @ xh + b_ref[...]
+    i = jax.nn.sigmoid(pre[0:lh])
+    f = jax.nn.sigmoid(pre[lh : 2 * lh])
+    g = jnp.tanh(pre[2 * lh : 3 * lh])
+    o = jax.nn.sigmoid(pre[3 * lh : 4 * lh])
+    c_new = f * c_ref[...] + i * g
+    h_out_ref[...] = o * jnp.tanh(c_new)
+    c_out_ref[...] = c_new
+
+
+def _lstm_kernel_tiled(w_ref, b_ref, xh_ref, c_ref, pre_ref, *, rows: int):
+    """Row-tiled gate matmul (the reuse-factor analog): grid step k
+    computes `rows` gate pre-activations. Activations are applied by the
+    caller once all tiles land (they need gate-aligned slices)."""
+    del rows
+    pre_ref[...] = w_ref[...] @ xh_ref[...] + b_ref[...]
+    _ = c_ref  # c is consumed by the element-wise stage in the caller
+
+
+def lstm_cell_pallas(params, h, c, x, *, interpret: bool = True):
+    """One LSTM timestep through the fused Pallas kernel.
+
+    Numerically identical to ``ref.lstm_cell_ref`` (same op order, f32).
+    """
+    wx, wh, bx, bh = params["wx"], params["wh"], params["bx"], params["bh"]
+    lh = h.shape[-1]
+    w = jnp.concatenate([wx, wh], axis=1)
+    b = bx + bh
+    xh = jnp.concatenate([x, h])
+    kernel = functools.partial(_lstm_kernel, lh=lh)
+    h_new, c_new = pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((lh,), x.dtype),
+            jax.ShapeDtypeStruct((lh,), x.dtype),
+        ),
+        interpret=interpret,
+    )(w, b, xh, c)
+    return h_new, c_new
+
+
+def lstm_cell_pallas_tiled(params, h, c, x, *, reuse: int = 1, interpret: bool = True):
+    """Reuse-factor-tiled variant: the gate matmul runs over a grid of
+    ``reuse`` row-tiles (4·LH/R rows each), mirroring how an FPGA MVM unit
+    with reuse factor R time-multiplexes its multipliers. Functionally
+    identical; exists to let the hardware-adaptation story be *tested*
+    (tiled == fused == ref) and to bound the live VMEM tile.
+    """
+    wx, wh, bx, bh = params["wx"], params["wh"], params["bx"], params["bh"]
+    lh = h.shape[-1]
+    rows_total = 4 * lh
+    if rows_total % reuse != 0:
+        raise ValueError(f"reuse {reuse} must divide 4·LH = {rows_total}")
+    rows = rows_total // reuse
+    w = jnp.concatenate([wx, wh], axis=1)
+    b = bx + bh
+    xh = jnp.concatenate([x, h])
+    kernel = functools.partial(_lstm_kernel_tiled, rows=rows)
+    pre = pl.pallas_call(
+        kernel,
+        grid=(reuse,),
+        in_specs=[
+            pl.BlockSpec((rows, w.shape[1]), lambda k: (k, 0)),
+            pl.BlockSpec((rows,), lambda k: (k,)),
+            pl.BlockSpec(xh.shape, lambda k: (0,)),
+            pl.BlockSpec(c.shape, lambda k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows,), lambda k: (k,)),
+        out_shape=jax.ShapeDtypeStruct((rows_total,), x.dtype),
+        interpret=interpret,
+    )(w, b, xh, c)
+    i = jax.nn.sigmoid(pre[0:lh])
+    f = jax.nn.sigmoid(pre[lh : 2 * lh])
+    g = jnp.tanh(pre[2 * lh : 3 * lh])
+    o = jax.nn.sigmoid(pre[3 * lh : 4 * lh])
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def vmem_bytes(lx: int, lh: int, reuse: int = 1, dtype_bytes: int = 4) -> int:
+    """Estimated live VMEM footprint of one kernel invocation (weights
+    tile + vectors) — the §9 structural estimate recorded in DESIGN.md."""
+    rows = 4 * lh // reuse
+    cols = lx + lh
+    return dtype_bytes * (rows * cols + rows + cols + 3 * lh)

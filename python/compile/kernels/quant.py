@@ -1,0 +1,105 @@
+"""Q8.24 quantization grid + PWL sigmoid/tanh in jnp — the FPGA datapath
+emulation, mirroring ``rust/src/fixed`` and ``rust/src/activations``
+(same grid: breakpoints over [−8, 8], 128 segments, node values quantized
+to Q8.24; hard saturation outside).
+
+The hardware stores Q8.24 integers; here we emulate the *grid* in float:
+``quantize(v) = round(v · 2²⁴) / 2²⁴`` with saturation at ±(2⁷ − ulp).
+Computation is float64 inside the emulation so the only rounding is the
+grid itself (f32 cannot represent all Q8.24 values above 1.0 exactly; the
+Rust agreement test bounds that representation error).
+"""
+
+from __future__ import annotations
+
+import jax
+
+# The grid emulation needs true float64 (f32 cannot represent all Q8.24
+# values above 1.0). Explicit dtypes keep the f32 model paths unchanged.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+FRAC_BITS = 24
+SCALE = float(1 << FRAC_BITS)
+Q_MAX = (2.0**31 - 1.0) / SCALE
+Q_MIN = -(2.0**31) / SCALE
+
+PWL_LO = -8.0
+PWL_HI = 8.0
+SEGMENTS = 128
+
+
+def quantize(v):
+    """Round to the Q8.24 grid with saturation (round-half-away like the
+    Rust ``f64::round``)."""
+    scaled = jnp.asarray(v, dtype=jnp.float64) * SCALE
+    # jnp.round is round-half-even; emulate half-away like Rust's round():
+    rounded = jnp.sign(scaled) * jnp.floor(jnp.abs(scaled) + 0.5)
+    return jnp.clip(rounded, -(2.0**31), 2.0**31 - 1.0) / SCALE
+
+
+def _pwl_nodes(fn):
+    import numpy as np
+
+    xs = np.linspace(PWL_LO, PWL_HI, SEGMENTS + 1)
+    ys = fn(xs)
+    return jnp.asarray(np.asarray(quantize(ys)), dtype=jnp.float64)
+
+
+def _pwl_eval(nodes, sat_lo, sat_hi, x):
+    x64 = jnp.asarray(x, dtype=jnp.float64)
+    width = (PWL_HI - PWL_LO) / SEGMENTS
+    pos = (x64 - PWL_LO) / width
+    k = jnp.clip(jnp.floor(pos), 0, SEGMENTS - 1).astype(jnp.int32)
+    t = pos - k
+    y0 = nodes[k]
+    y1 = nodes[k + 1]
+    y = y0 + (y1 - y0) * t
+    y = jnp.where(x64 <= PWL_LO, sat_lo, y)
+    y = jnp.where(x64 >= PWL_HI, sat_hi, y)
+    return y
+
+
+import numpy as _np
+
+_SIG_NODES = _pwl_nodes(lambda x: 1.0 / (1.0 + _np.exp(-x)))
+_TANH_NODES = _pwl_nodes(_np.tanh)
+
+
+def pwl_sigmoid(x):
+    """PWL sigmoid on the quantized node table (FPGA activation unit)."""
+    return _pwl_eval(_SIG_NODES, 0.0, 1.0, x)
+
+
+def pwl_tanh(x):
+    return _pwl_eval(_TANH_NODES, -1.0, 1.0, x)
+
+
+def lstm_cell_quant(params, h, c, x):
+    """One LSTM timestep in the quantized datapath: weights/inputs/outputs
+    on the Q8.24 grid, PWL activations, MVM accumulation in float64 with a
+    single grid-rounding per MVM (matching the Rust wide-MAC discipline).
+    """
+    wx = quantize(params["wx"])
+    wh = quantize(params["wh"])
+    bx = quantize(params["bx"])
+    bh = quantize(params["bh"])
+    lh = h.shape[-1]
+    x = quantize(x)
+    h = quantize(h)
+    c = quantize(c)
+    mx = quantize(jnp.asarray(wx, jnp.float64) @ jnp.asarray(x, jnp.float64)) + bx
+    mh = quantize(jnp.asarray(wh, jnp.float64) @ jnp.asarray(h, jnp.float64)) + bh
+    pre = mx + mh
+    i = pre[0:lh]
+    f = pre[lh : 2 * lh]
+    g = pre[2 * lh : 3 * lh]
+    o = pre[3 * lh : 4 * lh]
+    i = pwl_sigmoid(i)
+    f = pwl_sigmoid(f)
+    g = pwl_tanh(g)
+    o = pwl_sigmoid(o)
+    c_new = quantize(quantize(f * c) + quantize(i * g))
+    h_new = quantize(o * pwl_tanh(c_new))
+    return h_new, c_new

@@ -1,0 +1,61 @@
+"""Pure-jnp correctness oracle for the Pallas LSTM-cell kernel.
+
+Implements the paper's Figure-1 equations exactly, in f32, with the same
+parameter layout the Rust golden model uses:
+
+- ``wx``: (4·LH, LX), gate-major rows in order i, f, g, o
+- ``wh``: (4·LH, LH)
+- ``bx``, ``bh``: (4·LH,)
+
+This file is the CORE correctness reference — the Pallas kernel
+(``lstm_cell.py``), the scanned model (``model.py``), and (through the AOT
+artifact + weights binary) the Rust f32 golden model are all tested
+against it.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sigmoid(x):
+    return jnp.reciprocal(1.0 + jnp.exp(-x))
+
+
+def split_gates(pre, lh):
+    """Split a (4·LH,) pre-activation vector into (i, f, g, o)."""
+    return pre[0:lh], pre[lh : 2 * lh], pre[2 * lh : 3 * lh], pre[3 * lh : 4 * lh]
+
+
+def lstm_cell_ref(params, h, c, x):
+    """One LSTM timestep (paper Fig. 1). Returns (h_new, c_new)."""
+    wx, wh, bx, bh = params["wx"], params["wh"], params["bx"], params["bh"]
+    lh = h.shape[-1]
+    pre = (wx @ x + bx) + (wh @ h + bh)
+    i, f, g, o = split_gates(pre, lh)
+    c_new = sigmoid(f) * c + sigmoid(i) * jnp.tanh(g)
+    h_new = sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm_layer_ref(params, xs):
+    """Run one layer over a (T, LX) sequence with zero init; returns (T, LH).
+
+    Plain Python loop — the unambiguous oracle for the scanned versions.
+    """
+    lh = params["wh"].shape[-1]
+    h = jnp.zeros((lh,), dtype=xs.dtype)
+    c = jnp.zeros((lh,), dtype=xs.dtype)
+    outs = []
+    for t in range(xs.shape[0]):
+        h, c = lstm_cell_ref(params, h, c, xs[t])
+        outs.append(h)
+    return jnp.stack(outs)
+
+
+def lstm_ae_ref(layer_params, xs):
+    """Full autoencoder forward: stacked layers, loop oracle."""
+    seq = xs
+    for params in layer_params:
+        seq = lstm_layer_ref(params, seq)
+    return seq

@@ -1,0 +1,76 @@
+"""L2 — the LSTM-Autoencoder model in JAX: stacked LSTM layers scanned
+over the sequence, calling the L1 Pallas kernel per (layer, timestep).
+
+The AOT artifact (``aot.py``) lowers ``forward`` with trained weights
+closed over as constants, so the Rust runtime receives a single
+``(T, F) -> (T, F)`` computation with no parameter plumbing.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.lstm_cell import lstm_cell_pallas
+from .kernels.ref import lstm_cell_ref
+from .topology import Topology
+
+
+def init_params(topo: Topology, key):
+    """PyTorch-style uniform(-1/sqrt(LH), 1/sqrt(LH)) init; returns a list
+    of per-layer dicts with the wx/wh/bx/bh layout shared with Rust."""
+    params = []
+    for dims in topo.layers:
+        key, k1, k2, k3, k4 = jax.random.split(key, 5)
+        bound = 1.0 / jnp.sqrt(jnp.asarray(dims.lh, dtype=jnp.float32))
+        u = lambda k, shape: jax.random.uniform(  # noqa: E731
+            k, shape, jnp.float32, -bound, bound
+        )
+        params.append(
+            {
+                "wx": u(k1, (4 * dims.lh, dims.lx)),
+                "wh": u(k2, (4 * dims.lh, dims.lh)),
+                "bx": u(k3, (4 * dims.lh,)),
+                "bh": u(k4, (4 * dims.lh,)),
+            }
+        )
+    return params
+
+
+def _layer_scan(params, xs, cell):
+    """Scan one LSTM layer over (T, LX) -> (T, LH)."""
+    lh = params["wh"].shape[-1]
+
+    def step(carry, x):
+        h, c = carry
+        h2, c2 = cell(params, h, c, x)
+        return (h2, c2), h2
+
+    h0 = jnp.zeros((lh,), dtype=xs.dtype)
+    c0 = jnp.zeros((lh,), dtype=xs.dtype)
+    _, ys = jax.lax.scan(step, (h0, c0), xs)
+    return ys
+
+
+def forward(params, xs, *, use_pallas: bool = True, interpret: bool = True):
+    """LSTM-AE reconstruction of a (T, F) window."""
+    cell = (
+        (lambda p, h, c, x: lstm_cell_pallas(p, h, c, x, interpret=interpret))
+        if use_pallas
+        else lstm_cell_ref
+    )
+    seq = xs
+    for p in params:
+        seq = _layer_scan(p, seq, cell)
+    return seq
+
+
+def forward_batched(params, xs, **kw):
+    """(B, T, F) -> (B, T, F) via vmap (serving artifacts)."""
+    return jax.vmap(lambda w: forward(params, w, **kw))(xs)
+
+
+def reconstruction_mse(params, xs, **kw):
+    """The anomaly score the server computes on the Rust side."""
+    recon = forward(params, xs, **kw)
+    return jnp.mean((recon - xs) ** 2)

@@ -1,0 +1,57 @@
+"""LSTM-AE-F{X}-D{Y} topology derivation — the Python mirror of
+``rust/src/model/topology.rs`` (paper §4.1).
+
+Layer i consumes ``LX_i`` features and produces ``LH_i``; the chain halves
+feature sizes to the bottleneck and doubles back symmetrically, so the last
+layer's hidden width equals the input width and the decoder output is the
+reconstruction.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class LayerDims:
+    lx: int
+    lh: int
+
+
+@dataclass(frozen=True)
+class Topology:
+    name: str
+    features: int
+    depth: int
+    layers: tuple[LayerDims, ...]
+
+    @staticmethod
+    def make(features: int, depth: int) -> "Topology":
+        if depth <= 0 or depth % 2 != 0:
+            raise ValueError(f"depth must be even and positive, got {depth}")
+        half = depth // 2
+        if features >> half == 0 or features % (1 << half) != 0:
+            raise ValueError(f"features {features} incompatible with depth {depth}")
+        chain = [features >> i for i in range(half + 1)]
+        chain += [features >> i for i in reversed(range(half))]
+        layers = tuple(LayerDims(chain[i], chain[i + 1]) for i in range(depth))
+        return Topology(
+            name=f"LSTM-AE-F{features}-D{depth}",
+            features=features,
+            depth=depth,
+            layers=layers,
+        )
+
+    @staticmethod
+    def from_name(name: str) -> "Topology":
+        short = name.removeprefix("LSTM-AE-")
+        f_part, _, d_part = short.partition("-D")
+        if not f_part.startswith("F") or not d_part:
+            raise ValueError(f"bad model name {name!r}")
+        return Topology.make(int(f_part[1:]), int(d_part))
+
+    def chain(self) -> list[int]:
+        return [self.layers[0].lx] + [l.lh for l in self.layers]
+
+
+PAPER_MODELS = ("LSTM-AE-F32-D2", "LSTM-AE-F64-D2", "LSTM-AE-F32-D6", "LSTM-AE-F64-D6")

@@ -1,0 +1,127 @@
+"""Train the four paper LSTM-AE models on synthetic benign telemetry.
+
+Standard LSTM-AE recipe (§2): minimize reconstruction MSE on benign
+windows only; at deployment anomalous inputs reconstruct poorly and score
+above threshold.
+
+Training uses the pure-jnp cell (identical math to the Pallas kernel —
+pytest asserts this — but faster to differentiate under interpret mode).
+Adam is implemented inline: the offline image has no optax.
+
+Also writes ``weights_<model>.bin`` in the Rust interchange format
+(magic "LAEW", little-endian; see rust/src/model/weights.rs).
+"""
+
+from __future__ import annotations
+
+import struct
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as model_lib
+from .datagen import Telemetry
+from .topology import Topology
+
+WEIGHTS_MAGIC = 0x4C414557
+WEIGHTS_VERSION = 1
+
+
+def telemetry_for(features: int) -> Telemetry:
+    """The canonical training telemetry family for a feature width."""
+    return Telemetry(features, seed=1234 + features)
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr=3e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def train_model(
+    topo: Topology,
+    *,
+    seed: int = 0,
+    steps: int = 240,
+    batch: int = 32,
+    window: int = 16,
+    log=print,
+):
+    """Train one model; returns (params, final_loss)."""
+    key = jax.random.PRNGKey(seed)
+    params = model_lib.init_params(topo, key)
+    # One telemetry family per feature width (seed depends on features
+    # only) — its spec is exported to artifacts/ so the Rust serving side
+    # generates the exact family the model learned.
+    data = telemetry_for(topo.features)
+
+    def loss_fn(p, xb):
+        recon = jax.vmap(lambda w: model_lib.forward(p, w, use_pallas=False))(xb)
+        return jnp.mean((recon - xb) ** 2)
+
+    value_grad = jax.jit(jax.value_and_grad(loss_fn))
+    opt = adam_init(params)
+    loss = float("nan")
+    for step in range(steps):
+        xb = jnp.asarray(data.windows(batch, window))
+        loss, grads = value_grad(params, xb)
+        params, opt = adam_update(params, grads, opt)
+        if step % 60 == 0 or step == steps - 1:
+            log(f"  [{topo.name}] step {step:4d} loss {float(loss):.6f}")
+    return params, float(loss)
+
+
+def write_weights_bin(path: Path, params) -> None:
+    """Serialize to the Rust interchange format (LAEW v1)."""
+    out = bytearray()
+    out += struct.pack("<III", WEIGHTS_MAGIC, WEIGHTS_VERSION, len(params))
+    for p in params:
+        lh4, lx = p["wx"].shape
+        lh = lh4 // 4
+        out += struct.pack("<II", lx, lh)
+        for name in ("wx", "wh", "bx", "bh"):
+            arr = np.asarray(p[name], dtype="<f4")
+            out += arr.tobytes(order="C")
+    path.write_bytes(bytes(out))
+
+
+def read_weights_bin(path: Path):
+    """Inverse of write_weights_bin (round-trip testing)."""
+    buf = path.read_bytes()
+    magic, version, n_layers = struct.unpack_from("<III", buf, 0)
+    assert magic == WEIGHTS_MAGIC and version == WEIGHTS_VERSION
+    off = 12
+    params = []
+    for _ in range(n_layers):
+        lx, lh = struct.unpack_from("<II", buf, off)
+        off += 8
+        layer = {}
+        for name, shape in (
+            ("wx", (4 * lh, lx)),
+            ("wh", (4 * lh, lh)),
+            ("bx", (4 * lh,)),
+            ("bh", (4 * lh,)),
+        ):
+            count = int(np.prod(shape))
+            arr = np.frombuffer(buf, dtype="<f4", count=count, offset=off)
+            off += 4 * count
+            layer[name] = jnp.asarray(arr.reshape(shape))
+        params.append(layer)
+    assert off == len(buf), "trailing bytes"
+    return params

@@ -1,0 +1,83 @@
+# AOT path tests: HLO text structure, weights-binary round-trip, and
+# manifest consistency — the contract with the Rust runtime.
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from compile import aot, model as model_lib, train as train_lib
+from compile.topology import Topology
+
+
+def tiny_params():
+    topo = Topology.from_name("F8-D2")
+    return topo, model_lib.init_params(topo, jax.random.PRNGKey(0))
+
+
+def test_lowered_hlo_text_structure():
+    topo, params = tiny_params()
+    text = aot.lower_model(params, t=3, features=topo.features)
+    assert "ENTRY" in text
+    assert "f32[3,8]" in text, "input parameter shape embedded"
+    # Weights are baked in as constants: exactly one runtime parameter.
+    entry = [l for l in text.splitlines() if "ENTRY" in l][0]
+    assert entry.count("parameter") <= 1 or "param" in entry
+    # return_tuple=True → tuple root.
+    assert "tuple" in text
+
+
+def test_hlo_is_deterministic():
+    topo, params = tiny_params()
+    a = aot.lower_model(params, t=2, features=topo.features)
+    b = aot.lower_model(params, t=2, features=topo.features)
+    assert a == b
+
+
+def test_weights_bin_roundtrip(tmp_path: Path):
+    topo, params = tiny_params()
+    f = tmp_path / "w.bin"
+    train_lib.write_weights_bin(f, params)
+    back = train_lib.read_weights_bin(f)
+    assert len(back) == len(params)
+    for a, b in zip(params, back):
+        for k in ("wx", "wh", "bx", "bh"):
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+def test_weights_bin_header(tmp_path: Path):
+    topo, params = tiny_params()
+    f = tmp_path / "w.bin"
+    train_lib.write_weights_bin(f, params)
+    buf = f.read_bytes()
+    import struct
+
+    magic, version, n_layers = struct.unpack_from("<III", buf, 0)
+    assert magic == 0x4C414557  # "LAEW" — matches rust WEIGHTS_MAGIC
+    assert version == 1
+    assert n_layers == topo.depth
+    lx, lh = struct.unpack_from("<II", buf, 12)
+    assert (lx, lh) == (topo.layers[0].lx, topo.layers[0].lh)
+
+
+def test_build_all_manifest_consistency(tmp_path: Path):
+    # End-to-end build of one tiny model with 2 sequence lengths.
+    aot.build_all(
+        tmp_path,
+        steps=5,
+        timesteps=(1, 2),
+        models=("LSTM-AE-F8-D2",),
+        log=lambda *_: None,
+    )
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    assert manifest["quant"] == {"word": 32, "frac_bits": 24}
+    (entry,) = manifest["models"]
+    assert entry["name"] == "LSTM-AE-F8-D2"
+    assert entry["layers"] == [8, 4, 8]
+    for t in ("1", "2"):
+        f = tmp_path / entry["hlo"][t]
+        assert f.exists() and f.stat().st_size > 100
+    assert (tmp_path / entry["weights"]).exists()
+    assert entry["train_loss"] >= 0.0

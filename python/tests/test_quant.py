@@ -1,0 +1,85 @@
+# Quantization grid + PWL activation properties — mirrors the invariants
+# asserted on the Rust side (rust/src/fixed, rust/src/activations) so the
+# two implementations stay in lock-step.
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.quant import (
+    PWL_HI,
+    PWL_LO,
+    SCALE,
+    SEGMENTS,
+    lstm_cell_quant,
+    pwl_sigmoid,
+    pwl_tanh,
+    quantize,
+)
+from compile.kernels.ref import lstm_cell_ref
+from tests.test_kernel import make_params
+
+
+@settings(max_examples=50, deadline=None)
+@given(v=st.floats(-120.0, 120.0, allow_nan=False))
+def test_quantize_error_bounded(v):
+    q = float(quantize(v))
+    assert abs(q - v) <= 0.5 / SCALE + 1e-15
+
+
+def test_quantize_idempotent_and_saturating():
+    xs = jnp.asarray([-1e9, -128.5, -1.0, 0.0, 0.3, 127.9, 1e9])
+    q1 = quantize(xs)
+    np.testing.assert_array_equal(np.asarray(quantize(q1)), np.asarray(q1))
+    assert float(q1[0]) == -(2.0**31) / SCALE
+    assert float(q1[-1]) == (2.0**31 - 1) / SCALE
+
+
+def test_grid_spec_matches_rust():
+    # The contract with rust/src/activations: [-8, 8], 128 segments.
+    assert (PWL_LO, PWL_HI, SEGMENTS) == (-8.0, 8.0, 128)
+
+
+@settings(max_examples=40, deadline=None)
+@given(x=st.floats(-12.0, 12.0, allow_nan=False))
+def test_pwl_error_bounds(x):
+    # Same bounds the Rust tests assert: sigmoid < 4e-4, tanh < 2e-3
+    # (vs the saturated reference outside [-8, 8]).
+    sig_ref = 0.0 if x <= PWL_LO else (1.0 if x >= PWL_HI else 1.0 / (1.0 + np.exp(-x)))
+    tanh_ref = -1.0 if x <= PWL_LO else (1.0 if x >= PWL_HI else np.tanh(x))
+    assert abs(float(pwl_sigmoid(x)) - sig_ref) < 4e-4
+    assert abs(float(pwl_tanh(x)) - tanh_ref) < 2e-3
+
+
+def test_pwl_monotone():
+    xs = np.linspace(-10, 10, 4001)
+    for fn in (pwl_sigmoid, pwl_tanh):
+        ys = np.asarray(fn(jnp.asarray(xs)))
+        assert np.all(np.diff(ys) >= -1e-12)
+
+
+def test_pwl_tanh_odd_symmetry():
+    xs = np.linspace(0, 8, 257)
+    pos = np.asarray(pwl_tanh(jnp.asarray(xs)))
+    neg = np.asarray(pwl_tanh(jnp.asarray(-xs)))
+    np.testing.assert_allclose(pos + neg, 0.0, atol=4.0 / SCALE)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_quant_cell_tracks_f32_cell(seed):
+    # Same tolerance the Rust golden-model test uses (PWL dominates).
+    params, h, c, x = make_params(16, 16, seed)
+    hq, cq = h, c
+    hf, cf = h, c
+    for _ in range(8):
+        hf, cf = lstm_cell_ref(params, hf, cf, x)
+        hq, cq = lstm_cell_quant(params, hq, cq, x)
+    np.testing.assert_allclose(np.asarray(hq), np.asarray(hf), atol=0.02)
+
+
+def test_quant_cell_outputs_on_grid():
+    params, h, c, x = make_params(8, 8, 3)
+    hq, _cq = lstm_cell_quant(params, h, c, x)
+    raw = np.asarray(hq, dtype=np.float64) * SCALE
+    np.testing.assert_allclose(raw, np.round(raw), atol=1e-6)

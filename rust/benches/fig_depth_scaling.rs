@@ -1,0 +1,53 @@
+//! Bench E4: the depth-scalability figure (§4.2 text): latency vs depth
+//! at fixed width/sequence length, FPGA vs calibrated CPU/GPU. Prints the
+//! series a plot would consume (CSV block at the end).
+//!
+//! ```bash
+//! cargo bench --bench fig_depth_scaling
+//! ```
+
+use lstm_ae_accel::accel::dataflow::DataflowSim;
+use lstm_ae_accel::accel::platform::FpgaDevice;
+use lstm_ae_accel::accel::reuse::BalancedConfig;
+use lstm_ae_accel::baselines::{CalibratedModel, Platform};
+use lstm_ae_accel::model::Topology;
+use lstm_ae_accel::report;
+use lstm_ae_accel::report::tables::PS_INVOCATION_OVERHEAD_MS;
+
+fn main() {
+    print!("{}", report::depth_scaling());
+
+    let cpu = CalibratedModel::fit(Platform::XeonGold5218R);
+    let gpu = CalibratedModel::fit(Platform::V100);
+    let dev = FpgaDevice::ZCU104;
+    println!("\n## CSV (depth, fpga_ms, cpu_ms, gpu_ms) — F64, T=64");
+    println!("depth,fpga_ms,cpu_ms,gpu_ms");
+    for depth in (2..=10).step_by(2) {
+        let Ok(topo) = Topology::new(64, depth) else { continue };
+        let cfg = BalancedConfig::balance(&topo, 4);
+        let f = PS_INVOCATION_OVERHEAD_MS
+            + DataflowSim::new(&cfg).run_sequence(64).total_ms(dev.clock_hz);
+        println!(
+            "{depth},{f:.5},{:.5},{:.5}",
+            cpu.latency_ms(&topo, 64),
+            gpu.latency_ms(&topo, 64)
+        );
+    }
+
+    // The §4.2 claim, asserted (exit code is the pass/fail).
+    let d2 = Topology::new(64, 2).unwrap();
+    let d6 = Topology::new(64, 6).unwrap();
+    let f =
+        |t: &Topology| -> f64 {
+            PS_INVOCATION_OVERHEAD_MS
+                + DataflowSim::new(&BalancedConfig::paper_config(t))
+                    .run_sequence(64)
+                    .total_ms(dev.clock_hz)
+        };
+    let fpga_ratio = f(&d6) / f(&d2);
+    let cpu_ratio = cpu.latency_ms(&d6, 64) / cpu.latency_ms(&d2, 64);
+    let gpu_ratio = gpu.latency_ms(&d6, 64) / gpu.latency_ms(&d2, 64);
+    println!("\nD2→D6 ratios: FPGA x{fpga_ratio:.2} (paper ~1.4), CPU x{cpu_ratio:.2} (2.9), GPU x{gpu_ratio:.2} (2.2)");
+    assert!(fpga_ratio < gpu_ratio && gpu_ratio < cpu_ratio, "ordering must hold");
+    println!("[PASS] FPGA < GPU < CPU depth-scaling ordering");
+}

@@ -1,0 +1,52 @@
+//! Bench E5: latency-vs-T scaling series (§4.2's discussion of how RH_m
+//! shapes scaling) — FPGA simulation for each paper model over a dense
+//! T sweep, with the paper's measured points interleaved for comparison.
+//!
+//! ```bash
+//! cargo bench --bench fig_latency_scaling
+//! ```
+
+use lstm_ae_accel::model::Topology;
+use lstm_ae_accel::report;
+use lstm_ae_accel::report::paper_data;
+use lstm_ae_accel::report::tables::{fpga_latency_ms, fpga_platform_latency_ms};
+
+fn main() {
+    print!("{}", report::latency_scaling());
+
+    println!("\n## CSV (T, per-model platform-adjusted ms; paper cells where available)");
+    print!("T");
+    for c in &paper_data::TABLE2 {
+        print!(",{}_sim,{}_paper", c.model, c.model);
+    }
+    println!();
+    for &t in &[1usize, 2, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128] {
+        print!("{t}");
+        for c in &paper_data::TABLE2 {
+            let topo = Topology::from_name(c.model).unwrap();
+            let sim = fpga_platform_latency_ms(&topo, t);
+            let paper = paper_data::TIMESTEPS
+                .iter()
+                .position(|&x| x == t)
+                .map(|i| format!("{:.3}", c.fpga[i]))
+                .unwrap_or_default();
+            print!(",{sim:.5},{paper}");
+        }
+        println!();
+    }
+
+    // Slope analysis: ms per additional timestep in steady state.
+    println!("\n## Steady-state slope (µs/timestep)");
+    for c in &paper_data::TABLE2 {
+        let topo = Topology::from_name(c.model).unwrap();
+        let slope_sim = (fpga_latency_ms(&topo, 128) - fpga_latency_ms(&topo, 64)) / 64.0 * 1e3;
+        let slope_paper = (c.fpga[5] - c.fpga[4]) / 48.0 * 1e3;
+        println!(
+            "{:>16}: sim {slope_sim:7.3}  paper {slope_paper:7.3}  (RH_m = {})",
+            c.model,
+            lstm_ae_accel::accel::reuse::BalancedConfig::paper_rh_m(c.model).unwrap()
+        );
+    }
+    println!("\nThe paper's observation — wider models (RH_m = 4, 8) scale more steeply");
+    println!("with T than RH_m = 1 models — falls out of the slope column above.");
+}

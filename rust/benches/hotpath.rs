@@ -1,0 +1,155 @@
+//! Microbenchmarks of the hot paths — the §Perf baseline/tracking bench.
+//!
+//! Covers: the dataflow simulator (events/s), the analytical model, the
+//! Q8.24 datapath (cell step, dot product, PWL eval), workload generation,
+//! and server throughput through the quant backend.
+//!
+//! ```bash
+//! cargo bench --bench hotpath
+//! ```
+
+use std::sync::Arc;
+
+use lstm_ae_accel::accel::dataflow::DataflowSim;
+use lstm_ae_accel::accel::latency::LatencyModel;
+use lstm_ae_accel::accel::reuse::BalancedConfig;
+use lstm_ae_accel::activations::Pwl;
+use lstm_ae_accel::fixed::{dot_q, Q8_24};
+use lstm_ae_accel::model::lstm::{QuantLstmCell, QuantLstmState};
+use lstm_ae_accel::model::{LstmAutoencoder, Topology};
+use lstm_ae_accel::server::{AnomalyServer, QuantBackend, ServerConfig};
+use lstm_ae_accel::util::timer::{bench, bench_auto, black_box};
+use lstm_ae_accel::workload::TelemetryGen;
+
+fn main() {
+    println!("## Simulator & analytical model");
+    let topo = Topology::from_name("F64-D6").unwrap();
+    let cfg = BalancedConfig::paper_config(&topo);
+    let sim = DataflowSim::new(&cfg);
+    for t in [64usize, 1024, 16384] {
+        let r = bench_auto(&format!("dataflow sim F64-D6 T={t}"), 20, || {
+            black_box(sim.run_sequence(black_box(t)).total_cycles);
+        });
+        let events = (t * 6) as f64; // module-timestep events
+        println!(
+            "{}   ({:.1} M module-events/s)",
+            r.report(),
+            events / r.per_iter.mean / 1e6
+        );
+    }
+    let lm = LatencyModel::of(&cfg);
+    let r = bench_auto("analytical Eq1 eval", 20, || {
+        black_box(lm.acc_lat(black_box(64)));
+    });
+    println!("{}", r.report());
+    let r = bench_auto("balance(F64-D6, 8)", 20, || {
+        black_box(BalancedConfig::balance(&topo, 8));
+    });
+    println!("{}", r.report());
+
+    println!("\n## Q8.24 datapath");
+    let pwl = Pwl::tanh();
+    let xs: Vec<Q8_24> = (0..1024).map(|i| Q8_24::from_f64(i as f64 * 0.01 - 5.0)).collect();
+    let r = bench("pwl tanh eval x1024", 3, 20, 200, || {
+        let mut acc = 0i64;
+        for &x in &xs {
+            acc = acc.wrapping_add(pwl.eval_q(x).0 as i64);
+        }
+        black_box(acc);
+    });
+    println!("{}   ({:.1} M evals/s)", r.report(), 1024.0 / r.per_iter.mean / 1e6);
+
+    let a: Vec<Q8_24> = (0..256).map(|i| Q8_24::from_f64((i as f64 * 0.013).sin())).collect();
+    let b: Vec<Q8_24> = (0..256).map(|i| Q8_24::from_f64((i as f64 * 0.007).cos())).collect();
+    let r = bench("dot_q n=256", 3, 20, 2000, || {
+        black_box(dot_q(black_box(&a), black_box(&b)));
+    });
+    println!("{}   ({:.1} M MAC/s)", r.report(), 256.0 / r.per_iter.mean / 1e6);
+
+    let w = lstm_ae_accel::model::weights::LayerWeights::random(
+        lstm_ae_accel::model::topology::LayerDims { lx: 64, lh: 64 },
+        &mut lstm_ae_accel::util::rng::Xoshiro256::seeded(1),
+    );
+    let cell = QuantLstmCell::new(&w);
+    let state = QuantLstmState::zeros(64);
+    let x: Vec<Q8_24> = (0..64).map(|i| Q8_24::from_f64(i as f64 * 0.01)).collect();
+    let r = bench_auto("quant LSTM cell step 64x64", 20, || {
+        black_box(cell.step(black_box(&state), black_box(&x)));
+    });
+    let macs = 4.0 * 64.0 * (64.0 + 64.0);
+    println!("{}   ({:.1} M MAC/s)", r.report(), macs / r.per_iter.mean / 1e6);
+
+    println!("\n## Model forward (bit-accurate FPGA datapath, F32-D2, T=16)");
+    let ae = LstmAutoencoder::random(Topology::from_name("F32-D2").unwrap(), 3);
+    let mut gen = TelemetryGen::new(32, 5);
+    let win = gen.benign_window(16);
+    let r = bench_auto("score_quant F32-D2 T=16", 20, || {
+        black_box(ae.score_quant(black_box(&win.data)));
+    });
+    println!("{}", r.report());
+    let r = bench_auto("score_f32 F32-D2 T=16", 20, || {
+        black_box(ae.score_f32(black_box(&win.data)));
+    });
+    println!("{}", r.report());
+
+    println!("\n## Workload generation");
+    let r = bench_auto("benign_window T=16 F=32", 20, || {
+        black_box(gen.benign_window(16));
+    });
+    println!("{}", r.report());
+
+    println!("\n## PJRT dispatch (needs artifacts; skipped otherwise)");
+    if let Ok(rt) = lstm_ae_accel::runtime::Runtime::open(
+        &lstm_ae_accel::runtime::Runtime::default_dir(),
+    ) {
+        let t = 16usize;
+        let f = 32usize;
+        let mut gen = TelemetryGen::new(f, 77);
+        let one: Vec<f32> = gen.benign_window(t).data.into_iter().flatten().collect();
+        let eight: Vec<f32> = (0..8)
+            .flat_map(|_| gen.benign_window(t).data.into_iter().flatten().collect::<Vec<_>>())
+            .collect();
+        let _ = rt.infer("F32-D2", t, &one); // compile outside timing
+        let _ = rt.infer_batch("F32-D2", t, 8, &eight);
+        let r = bench_auto("pjrt infer F32-D2 T=16 (single)", 20, || {
+            black_box(rt.infer("F32-D2", 16, black_box(&one)).unwrap());
+        });
+        println!("{}   ({:.0} windows/s)", r.report(), 1.0 / r.per_iter.mean);
+        let r = bench_auto("pjrt infer_batch F32-D2 T=16 B=8", 20, || {
+            black_box(rt.infer_batch("F32-D2", 16, 8, black_box(&eight)).unwrap());
+        });
+        println!("{}   ({:.0} windows/s)", r.report(), 8.0 / r.per_iter.mean);
+    } else {
+        println!("(no artifacts)");
+    }
+
+    println!("\n## Server throughput (quant backend, closed loop)");
+    let backend = Arc::new(QuantBackend::new(LstmAutoencoder::random(
+        Topology::from_name("F32-D2").unwrap(),
+        9,
+    )));
+    let srv = AnomalyServer::start(
+        backend,
+        ServerConfig {
+            max_batch: 16,
+            max_wait: std::time::Duration::from_micros(200),
+            workers: 4,
+            threshold: 0.1,
+        },
+    );
+    let mut gen = TelemetryGen::new(32, 11);
+    let windows: Vec<_> = (0..512).map(|_| gen.benign_window(16)).collect();
+    let start = std::time::Instant::now();
+    let rxs: Vec<_> = windows.iter().map(|w| srv.submit(w.clone())).collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let dt = start.elapsed().as_secs_f64();
+    println!(
+        "512 windows in {:.3}s → {:.0} windows/s | {}",
+        dt,
+        512.0 / dt,
+        srv.metrics().report()
+    );
+    srv.shutdown();
+}

@@ -1,0 +1,62 @@
+//! Bench E1: regenerate the paper's Table 1 (FPGA resource utilization
+//! and RH_m), model vs paper, plus residual statistics and the cost of
+//! the resource-estimation hot path.
+//!
+//! ```bash
+//! cargo bench --bench table1_resources
+//! ```
+
+use lstm_ae_accel::accel::platform::FpgaDevice;
+use lstm_ae_accel::accel::resources::{estimate, min_fitting_rh_m};
+use lstm_ae_accel::accel::reuse::BalancedConfig;
+use lstm_ae_accel::model::Topology;
+use lstm_ae_accel::report;
+use lstm_ae_accel::report::paper_data::TABLE1;
+use lstm_ae_accel::util::timer::{bench_auto, black_box};
+
+fn main() {
+    println!("{}", report::table1());
+
+    // Residuals vs the paper (DSP/LUT are calibrated; BRAM is structural
+    // and expected to deviate on F64 — see resources.rs docs).
+    let dev = FpgaDevice::ZCU104;
+    println!("## Residuals (model − paper, percentage points)");
+    for (name, rh_m, lut_p, ff_p, bram_p, dsp_p) in TABLE1 {
+        let topo = Topology::from_name(name).unwrap();
+        let pct = estimate(&BalancedConfig::balance(&topo, rh_m)).pct(&dev);
+        println!(
+            "{name:>16}: LUT {:+6.2}  FF {:+6.2}  BRAM {:+6.2}  DSP {:+6.2}",
+            pct.lut - lut_p,
+            pct.ff - ff_p,
+            pct.bram - bram_p,
+            pct.dsp - dsp_p
+        );
+    }
+
+    // §4.1 procedure timing: smallest fitting RH_m per model.
+    println!("\n## RH_m fitting procedure (min fitting RH_m on ZCU104)");
+    for topo in Topology::paper_models() {
+        let (rh_m, usage) = min_fitting_rh_m(&topo, &dev, 64).expect("fits");
+        let pct = usage.pct(&dev);
+        println!(
+            "{:>16}: RH_m {} (paper {}), mean util {:.1}%",
+            topo.name,
+            rh_m,
+            BalancedConfig::paper_rh_m(&topo.name).unwrap(),
+            pct.mean()
+        );
+    }
+
+    // Hot-path cost: the estimator runs inside design-space sweeps.
+    println!("\n## Estimator micro-costs");
+    let topo = Topology::from_name("F64-D6").unwrap();
+    let r = bench_auto("estimate(F64-D6)", 30, || {
+        let cfg = BalancedConfig::balance(&topo, 8);
+        black_box(estimate(&cfg));
+    });
+    println!("{}", r.report());
+    let r = bench_auto("min_fitting_rh_m(F64-D6, ZCU104)", 20, || {
+        black_box(min_fitting_rh_m(&topo, &FpgaDevice::ZCU104, 64));
+    });
+    println!("{}", r.report());
+}

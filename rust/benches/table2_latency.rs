@@ -1,0 +1,46 @@
+//! Bench E2: regenerate the paper's Table 2 (inference latency, ms) —
+//! FPGA dataflow simulation vs paper-calibrated CPU/GPU models, plus a
+//! *measured* XLA-CPU column when artifacts are present, and the paper's
+//! own numbers inline.
+//!
+//! ```bash
+//! cargo bench --bench table2_latency            # model columns only
+//! BENCH_REPS=1000 cargo bench --bench table2_latency   # paper-grade reps
+//! ```
+
+use lstm_ae_accel::baselines::cpu as cpu_baseline;
+use lstm_ae_accel::report;
+use lstm_ae_accel::runtime::Runtime;
+
+fn main() {
+    let reps: usize = std::env::var("BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(200);
+
+    let rt = Runtime::open(&Runtime::default_dir()).ok();
+    if rt.is_none() {
+        println!("(no artifacts — measured XLA-CPU column omitted; run `make artifacts`)\n");
+    }
+    let measured = rt.map(|rt| {
+        move |model: &str, t: usize| -> Option<f64> {
+            cpu_baseline::measure(&rt, model, t, 10, reps).ok().map(|m| m.latency_ms.mean)
+        }
+    });
+    match measured {
+        Some(f) => print!("{}", report::tables::table2(Some(&f))),
+        None => print!("{}", report::tables::table2(None)),
+    }
+
+    println!("\nColumns: FPGA(kernel) = Eq-1-exact dataflow simulation @300 MHz;");
+    println!("FPGA(+ovh) adds the {:.0} µs PS invocation overhead (DESIGN.md §6);",
+             report::tables::PS_INVOCATION_OVERHEAD_MS * 1e3);
+    println!("CPU/GPU(model) are least-squares fits of the paper's own columns;");
+    println!("CPU(measured XLA) is this machine running the AOT artifact ({reps} reps).");
+
+    // Shape checks — the pass/fail criteria for this experiment.
+    println!("\n## Shape checks");
+    let mut failed = 0;
+    for (name, ok, detail) in report::tables::shape_checks() {
+        println!("[{}] {name} {detail}", if ok { "PASS" } else { "FAIL" });
+        failed += (!ok) as u32;
+    }
+    std::process::exit(if failed == 0 { 0 } else { 1 });
+}

@@ -1,0 +1,57 @@
+//! Bench E3: regenerate the paper's Table 3 (energy per timestep, mJ)
+//! from the latency machinery plus the platform power models.
+//!
+//! ```bash
+//! cargo bench --bench table3_energy
+//! ```
+
+use lstm_ae_accel::accel::energy;
+use lstm_ae_accel::accel::platform::FpgaDevice;
+use lstm_ae_accel::accel::resources::estimate;
+use lstm_ae_accel::accel::reuse::BalancedConfig;
+use lstm_ae_accel::model::Topology;
+use lstm_ae_accel::report;
+
+fn main() {
+    print!("{}", report::table3());
+
+    // The paper's headline energy ratios.
+    println!("\n## Headline ratios (ours, from the models above)");
+    let dev = FpgaDevice::ZCU104;
+    let cpu = lstm_ae_accel::baselines::CalibratedModel::fit(
+        lstm_ae_accel::baselines::Platform::XeonGold5218R,
+    );
+    let gpu =
+        lstm_ae_accel::baselines::CalibratedModel::fit(lstm_ae_accel::baselines::Platform::V100);
+    let mut max_cpu: (f64, String) = (0.0, String::new());
+    let mut max_gpu: (f64, String) = (0.0, String::new());
+    let mut min_cpu: (f64, String) = (f64::INFINITY, String::new());
+    let mut min_gpu: (f64, String) = (f64::INFINITY, String::new());
+    for topo in Topology::paper_models() {
+        let cfg = BalancedConfig::paper_config(&topo);
+        let p_fpga = energy::fpga_power_w(&estimate(&cfg).pct(&dev), &dev);
+        for &t in &report::paper_data::TIMESTEPS {
+            let lat = report::tables::fpga_platform_latency_ms(&topo, t);
+            let e_f = energy::energy_per_timestep_mj(p_fpga, lat, t);
+            let rc = cpu.energy_per_timestep_mj(&topo, t) / e_f;
+            let rg = gpu.energy_per_timestep_mj(&topo, t) / e_f;
+            let tag = format!("{} T={t}", topo.name);
+            if rc > max_cpu.0 {
+                max_cpu = (rc, tag.clone());
+            }
+            if rg > max_gpu.0 {
+                max_gpu = (rg, tag.clone());
+            }
+            if rc < min_cpu.0 {
+                min_cpu = (rc, tag.clone());
+            }
+            if rg < min_gpu.0 {
+                min_gpu = (rg, tag);
+            }
+        }
+    }
+    println!("energy-per-timestep reduction vs CPU: {:.1}x–{:.1}x  (paper: 151.0x–1722.1x; max at {})",
+             min_cpu.0, max_cpu.0, max_cpu.1);
+    println!("energy-per-timestep reduction vs GPU: {:.1}x–{:.1}x  (paper: 3.5x–59.3x; max at {})",
+             min_gpu.0, max_gpu.0, max_gpu.1);
+}

@@ -1,0 +1,359 @@
+//! Cycle-accurate dataflow simulator (paper §3.1–3.2).
+//!
+//! Architecture simulated: `DataReader → LSTM_0 → … → LSTM_{N−1} →
+//! DataWriter`, every arrow a bounded FIFO of timestep-vector tokens.
+//! Module semantics (matching Eq 1's fill accounting): a module pops a
+//! complete `x_t` vector, is busy `Lat_t_i` cycles (MVM_X ∥ MVM_H + the
+//! activation drain), then pushes `h_t` downstream — blocking after
+//! service if the FIFO is full.
+//!
+//! The simulator evaluates the exact **max-plus recurrence** of that
+//! discrete-event system (service times are constant, so the recurrence
+//! *is* the DES — [`super::stepped`] validates this cycle-by-cycle):
+//!
+//! ```text
+//! start_i(t) = max(push_{i−1}(t), push_i(t−1))
+//! fin_i(t)   = start_i(t) + Lat_t_i
+//! push_i(t)  = max(fin_i(t), start_{i+1}(t − C_{i+1}))   // backpressure
+//! ```
+//!
+//! With adequate FIFOs and a balanced config, `push_{N−1}(T−1)` equals
+//! the paper's Eq 1 exactly (integration-tested).
+
+use super::reuse::BalancedConfig;
+use crate::fixed::Q8_24;
+use crate::model::lstm::{QuantLstmCell, QuantLstmState};
+use crate::model::ModelWeights;
+
+/// Simulation options.
+#[derive(Clone, Copy, Debug)]
+pub struct SimOptions {
+    /// Capacity, in timestep-vectors, of every inter-module FIFO.
+    pub fifo_capacity: usize,
+    /// DataReader cycles to deliver one timestep (0 = DMA fully
+    /// overlapped, the paper's Eq-1 idealization; `LX_0` models a
+    /// 1-word/cycle stream).
+    pub reader_cycles_per_t: u64,
+    /// DataWriter cycles to drain one timestep.
+    pub writer_cycles_per_t: u64,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { fifo_capacity: 2, reader_cycles_per_t: 0, writer_cycles_per_t: 0 }
+    }
+}
+
+/// Per-module statistics from a simulated run.
+#[derive(Clone, Debug)]
+pub struct ModuleStats {
+    /// Constant service latency (cycles).
+    pub service: u64,
+    /// Total cycles busy computing (T · service).
+    pub busy: u64,
+    /// Cycles spent waiting for input after being free (starvation).
+    pub starved: u64,
+    /// Cycles spent blocked pushing output (backpressure).
+    pub blocked: u64,
+    /// Busy / (busy + starved + blocked + lead-in) over the module's
+    /// active window.
+    pub utilization: f64,
+}
+
+/// Result of simulating one sequence.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    /// Total cycles from t=0 issue to the last output timestep pushed.
+    pub total_cycles: u64,
+    /// Cycle at which each output timestep left the last module.
+    pub output_times: Vec<u64>,
+    pub per_module: Vec<ModuleStats>,
+    /// Steady-state initiation interval observed (cycles between the last
+    /// two outputs) — equals `Lat_t_m` when the pipeline is healthy.
+    pub steady_ii: u64,
+}
+
+impl RunResult {
+    pub fn total_ms(&self, hz: f64) -> f64 {
+        crate::cycles_to_ms(self.total_cycles, hz)
+    }
+
+    /// Aggregate utilization across modules (resource-weighted by service
+    /// time — the quantity dataflow balancing maximizes).
+    pub fn mean_utilization(&self) -> f64 {
+        let n = self.per_module.len() as f64;
+        self.per_module.iter().map(|m| m.utilization).sum::<f64>() / n
+    }
+}
+
+/// The dataflow accelerator simulator.
+pub struct DataflowSim {
+    pub cfg: BalancedConfig,
+    pub opts: SimOptions,
+    service: Vec<u64>,
+}
+
+impl DataflowSim {
+    pub fn new(cfg: &BalancedConfig) -> DataflowSim {
+        Self::with_options(cfg, SimOptions::default())
+    }
+
+    pub fn with_options(cfg: &BalancedConfig, opts: SimOptions) -> DataflowSim {
+        let service = cfg.layers.iter().map(|l| l.lat_t()).collect();
+        DataflowSim { cfg: cfg.clone(), opts, service }
+    }
+
+    /// Simulate the timing of one sequence of `t` timesteps.
+    ///
+    /// The recurrence only ever references timestep `ts − 1` (same
+    /// module) and `ts − cap` (downstream start), so the state is kept in
+    /// a rolling window of `cap + 1` columns instead of full `N × T`
+    /// tables — O(N·cap) memory, cache-resident for any T, with
+    /// per-module stall statistics accumulated inline. (This replaced
+    /// the original full-table implementation after profiling showed the
+    /// tables falling out of L2 beyond T ≈ 10⁴; see EXPERIMENTS.md §Perf.)
+    pub fn run_sequence(&self, t: usize) -> RunResult {
+        assert!(t >= 1);
+        let n = self.service.len();
+        let cap = self.opts.fifo_capacity.max(1);
+        let window = cap + 1;
+        // Rolling columns indexed by ts % window.
+        let mut start_w = vec![0u64; n * window];
+        let mut push_w = vec![0u64; n * window];
+        let mut output_times = Vec::with_capacity(t);
+        // Inline stats.
+        let mut starved = vec![0u64; n];
+        let mut blocked = vec![0u64; n];
+        let mut first_start = vec![0u64; n];
+        let mut last_push = vec![0u64; n];
+        for ts in 0..t {
+            let col = ts % window;
+            let prev_col = (ts + window - 1) % window; // ts − 1
+            let back_col = (ts + window - cap) % window; // ts − cap
+            for i in 0..n {
+                // Input availability: reader (i = 0) or upstream push
+                // (current column — module i−1 already updated this ts).
+                let ready = if i == 0 {
+                    self.opts.reader_cycles_per_t * (ts as u64 + 1)
+                } else {
+                    push_w[(i - 1) * window + col]
+                };
+                // Module frees after its previous push completes.
+                let free = if ts == 0 { 0 } else { push_w[i * window + prev_col] };
+                let s = ready.max(free);
+                let fin = s + self.service[i];
+                // Backpressure: the slot in the downstream FIFO frees when
+                // the consumer *starts* timestep ts − cap.
+                let p = if i + 1 < n {
+                    if ts >= cap {
+                        fin.max(start_w[(i + 1) * window + back_col])
+                    } else {
+                        fin
+                    }
+                } else {
+                    // DataWriter drains at its own rate.
+                    fin.max(self.opts.writer_cycles_per_t * (ts as u64 + 1))
+                };
+                if ts > 0 {
+                    starved[i] += s.saturating_sub(push_w[i * window + prev_col]);
+                } else {
+                    first_start[i] = s;
+                }
+                blocked[i] += p - fin;
+                last_push[i] = p;
+                start_w[i * window + col] = s;
+                push_w[i * window + col] = p;
+            }
+            output_times.push(push_w[(n - 1) * window + col]);
+        }
+        let total_cycles = output_times[t - 1];
+        let steady_ii = if t >= 2 {
+            output_times[t - 1] - output_times[t - 2]
+        } else {
+            self.service[n - 1]
+        };
+        let per_module = (0..n)
+            .map(|i| {
+                let service = self.service[i];
+                let busy = service * t as u64;
+                let win = last_push[i] - first_start[i];
+                let utilization =
+                    if win == 0 { 1.0 } else { (busy as f64 / win as f64).min(1.0) };
+                ModuleStats {
+                    service,
+                    busy,
+                    starved: starved[i],
+                    blocked: blocked[i],
+                    utilization,
+                }
+            })
+            .collect();
+        RunResult { total_cycles, output_times, per_module, steady_ii }
+    }
+
+    /// Simulate timing *and* compute the functional output through the
+    /// bit-accurate Q8.24 datapath. `x` is `[T][F]` on the fixed-point
+    /// grid; returns (timing, reconstruction `[T][F]`).
+    pub fn run_with_data(
+        &self,
+        weights: &ModelWeights,
+        x: &[Vec<f32>],
+    ) -> (RunResult, Vec<Vec<f32>>) {
+        weights.validate(&self.cfg.topo).expect("weights match topology");
+        let timing = self.run_sequence(x.len());
+        // Functional pass: module-by-module streaming, same order the
+        // hardware computes (timing and function are independent — the
+        // datapath is data-oblivious).
+        let cells: Vec<QuantLstmCell> =
+            weights.layers.iter().map(QuantLstmCell::new).collect();
+        let mut seq: Vec<Vec<Q8_24>> = x
+            .iter()
+            .map(|row| row.iter().map(|&v| Q8_24::from_f32(v)).collect())
+            .collect();
+        for cell in &cells {
+            let mut state = QuantLstmState::zeros(cell.w.dims.lh);
+            for xt in seq.iter_mut() {
+                state = cell.step(&state, xt);
+                *xt = state.h.clone();
+            }
+        }
+        let out = seq
+            .into_iter()
+            .map(|row| row.iter().map(|q| q.to_f32()).collect())
+            .collect();
+        (timing, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::latency::LatencyModel;
+    use crate::model::Topology;
+    use crate::util::prop::props;
+
+    #[test]
+    fn matches_eq1_for_all_paper_models() {
+        for topo in Topology::paper_models() {
+            let rh_m = BalancedConfig::paper_rh_m(&topo.name).unwrap();
+            let cfg = BalancedConfig::balance(&topo, rh_m);
+            let lm = LatencyModel::of(&cfg);
+            let sim = DataflowSim::new(&cfg);
+            for t in [1usize, 2, 4, 6, 16, 64] {
+                assert_eq!(
+                    sim.run_sequence(t).total_cycles,
+                    lm.acc_lat(t),
+                    "{} T={t}",
+                    topo.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_eq1_for_random_balanced_configs() {
+        props("sim_eq1", 64, |g| {
+            let f = 1usize << g.usize_in(3, 6);
+            let d = 2 * g.usize_in(1, 3);
+            let Ok(topo) = Topology::new(f, d) else { return };
+            let cfg = BalancedConfig::balance(&topo, g.u64_below(8) + 1);
+            let lm = LatencyModel::of(&cfg);
+            let t = g.usize_in(1, 128);
+            let sim = DataflowSim::new(&cfg);
+            assert_eq!(sim.run_sequence(t).total_cycles, lm.acc_lat(t));
+        });
+    }
+
+    #[test]
+    fn steady_ii_equals_bottleneck() {
+        let topo = Topology::from_name("F64-D6").unwrap();
+        let cfg = BalancedConfig::balance(&topo, 8);
+        let lm = LatencyModel::of(&cfg);
+        let run = DataflowSim::new(&cfg).run_sequence(32);
+        assert_eq!(run.steady_ii, lm.lat_t_m());
+    }
+
+    #[test]
+    fn unbalanced_config_shows_stalls_and_lower_utilization() {
+        let topo = Topology::from_name("F32-D6").unwrap();
+        let bal = DataflowSim::new(&BalancedConfig::balance(&topo, 1)).run_sequence(64);
+        let uni = DataflowSim::new(&BalancedConfig::uniform(&topo, 1)).run_sequence(64);
+        assert!(bal.mean_utilization() > 0.9, "balanced util {}", bal.mean_utilization());
+        assert!(
+            uni.mean_utilization() < bal.mean_utilization(),
+            "uniform {} vs balanced {}",
+            uni.mean_utilization(),
+            bal.mean_utilization()
+        );
+        // The uniform config starves the small middle layers.
+        let total_starved: u64 = uni.per_module.iter().map(|m| m.starved).sum();
+        assert!(total_starved > 0);
+    }
+
+    #[test]
+    fn tiny_fifo_capacity_cannot_beat_unbounded() {
+        props("fifo_monotone", 48, |g| {
+            let topo = g.choose(&Topology::paper_models()).clone();
+            // Unbalanced on purpose so backpressure matters.
+            let cfg = BalancedConfig::uniform(&topo, g.u64_below(4) + 1);
+            let t = g.usize_in(2, 64);
+            let small = DataflowSim::with_options(
+                &cfg,
+                SimOptions { fifo_capacity: 1, ..Default::default() },
+            )
+            .run_sequence(t);
+            let big = DataflowSim::with_options(
+                &cfg,
+                SimOptions { fifo_capacity: 1024, ..Default::default() },
+            )
+            .run_sequence(t);
+            assert!(small.total_cycles >= big.total_cycles);
+        });
+    }
+
+    #[test]
+    fn reader_rate_shifts_but_does_not_bottleneck() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let cfg = BalancedConfig::balance(&topo, 1);
+        let lm = LatencyModel::of(&cfg);
+        // 1 word/cycle reader: LX_0 = 32 cycles per timestep < Lat_t = 64.
+        let run = DataflowSim::with_options(
+            &cfg,
+            SimOptions { reader_cycles_per_t: 32, ..Default::default() },
+        )
+        .run_sequence(64);
+        // Reader adds at most its first-timestep delivery to the total.
+        assert!(run.total_cycles >= lm.acc_lat(64));
+        assert!(run.total_cycles <= lm.acc_lat(64) + 32);
+        assert_eq!(run.steady_ii, lm.lat_t_m());
+    }
+
+    #[test]
+    fn output_times_monotone_spaced_by_at_least_bottleneck() {
+        let topo = Topology::from_name("F64-D2").unwrap();
+        let cfg = BalancedConfig::balance(&topo, 4);
+        let run = DataflowSim::new(&cfg).run_sequence(32);
+        let lm = LatencyModel::of(&cfg);
+        for w in run.output_times.windows(2) {
+            assert!(w[1] > w[0]);
+            assert!(w[1] - w[0] >= lm.lat_t[lm.lat_t.len() - 1].min(lm.lat_t_m()));
+        }
+    }
+
+    #[test]
+    fn functional_output_matches_golden_quant_model() {
+        use crate::model::{LstmAutoencoder, ModelWeights};
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let weights = ModelWeights::random(&topo, 11);
+        let cfg = BalancedConfig::balance(&topo, 1);
+        let sim = DataflowSim::new(&cfg);
+        let mut rng = crate::util::rng::Xoshiro256::seeded(5);
+        let x: Vec<Vec<f32>> = (0..6)
+            .map(|_| (0..32).map(|_| rng.uniform(-1.0, 1.0) as f32).collect())
+            .collect();
+        let (_, sim_out) = sim.run_with_data(&weights, &x);
+        let ae = LstmAutoencoder::new(topo, weights).unwrap();
+        let golden = ae.forward_quant(&x);
+        assert_eq!(sim_out, golden, "simulator functional path == golden Q8.24 model");
+    }
+}

@@ -1,0 +1,95 @@
+//! Platform power and energy models → Table 3 (energy per timestep, mJ).
+//!
+//! The paper computes energy-per-timestep as `P · latency / T` from
+//! wall-power measurements: FPGA 11–12 W, CPU 255–265 W, GPU 35–40 W
+//! (§4.2). We substitute a resource-proportional FPGA power model that
+//! lands in the paper's measured band, and the paper's reported constants
+//! for CPU/GPU (DESIGN.md §6):
+//!
+//! ```text
+//! P_fpga = P_STATIC + P_DYN_SCALE · mean_utilization
+//! ```
+//!
+//! with `P_STATIC = 9 W` (MPSoC PS + idle PL + board) and
+//! `P_DYN_SCALE = 8 W` at 300 MHz — giving 11.3 W for LSTM-AE-F32-D2 and
+//! 12.4 W for LSTM-AE-F64-D6, matching the 11–12 W the paper reports.
+
+use super::platform::FpgaDevice;
+use super::resources::ResourcePct;
+
+/// Idle + board power of the MPSoC platform (W).
+pub const FPGA_STATIC_W: f64 = 9.0;
+/// Dynamic power at 100% mean resource utilization, 300 MHz (W).
+pub const FPGA_DYN_SCALE_W: f64 = 8.0;
+/// Paper's CPU package power band midpoint (Xeon Gold 5218R under
+/// PyTorch inference: 255–265 W reported).
+pub const CPU_POWER_W: f64 = 260.0;
+/// Paper's GPU board power band midpoint (V100: 35–40 W reported for
+/// these small models).
+pub const GPU_POWER_W: f64 = 37.5;
+
+/// FPGA power for a design with the given utilization, scaled by clock
+/// relative to the 300 MHz calibration point.
+pub fn fpga_power_w(pct: &ResourcePct, dev: &FpgaDevice) -> f64 {
+    let clock_scale = dev.clock_hz / 300.0e6;
+    FPGA_STATIC_W + FPGA_DYN_SCALE_W * (pct.mean() / 100.0) * clock_scale
+}
+
+/// Energy per timestep in millijoules: `P(W) · latency(ms) / T` —
+/// W·ms = mJ, the paper's Table-3 unit.
+pub fn energy_per_timestep_mj(power_w: f64, latency_ms: f64, t: usize) -> f64 {
+    assert!(t >= 1);
+    power_w * latency_ms / t as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::resources::estimate;
+    use crate::accel::reuse::BalancedConfig;
+    use crate::model::Topology;
+
+    #[test]
+    fn fpga_power_in_paper_band() {
+        for topo in Topology::paper_models() {
+            let cfg = BalancedConfig::paper_config(&topo);
+            let pct = estimate(&cfg).pct(&FpgaDevice::ZCU104);
+            let p = fpga_power_w(&pct, &FpgaDevice::ZCU104);
+            assert!(
+                (10.0..=13.5).contains(&p),
+                "{}: {p:.1} W outside the paper's 11-12 W band (±1.5)",
+                topo.name
+            );
+        }
+    }
+
+    #[test]
+    fn energy_unit_conversion() {
+        // 11 W × 0.033 ms / 1 timestep = 0.363 mJ (paper's F32-D2 T=1 row
+        // is 0.362 — same arithmetic).
+        let e = energy_per_timestep_mj(11.0, 0.033, 1);
+        assert!((e - 0.363).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_decreases_with_sequence_length_at_fixed_slope() {
+        // Affine latency in T ⇒ energy/timestep strictly decreases in T.
+        let cfg = BalancedConfig::paper_config(&Topology::from_name("F32-D2").unwrap());
+        let lm = crate::accel::latency::LatencyModel::of(&cfg);
+        let pct = estimate(&cfg).pct(&FpgaDevice::ZCU104);
+        let p = fpga_power_w(&pct, &FpgaDevice::ZCU104);
+        let mut prev = f64::INFINITY;
+        for t in [1usize, 2, 4, 6, 16, 64] {
+            let e = energy_per_timestep_mj(p, lm.acc_lat_ms(t, 300.0e6), t);
+            assert!(e < prev, "T={t}: {e} !< {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn platform_power_ordering() {
+        assert!(CPU_POWER_W > GPU_POWER_W);
+        let pct = ResourcePct { lut: 30.0, ff: 15.0, bram: 40.0, dsp: 35.0 };
+        assert!(GPU_POWER_W > fpga_power_w(&pct, &FpgaDevice::ZCU104));
+    }
+}

@@ -1,0 +1,145 @@
+//! Bounded FIFO with cycle-stamped occupancy tracking — the only
+//! inter-module communication mechanism in the dataflow architecture
+//! (§3.1: "inter-module communication exclusively through FIFO queues").
+//!
+//! The payload is a timestep-vector token; the simulators care about
+//! *when* tokens move, the functional path about *what* they carry.
+
+use std::collections::VecDeque;
+
+/// A bounded FIFO of tokens `T` with high-water-mark tracking.
+#[derive(Clone, Debug)]
+pub struct Fifo<T> {
+    items: VecDeque<T>,
+    capacity: usize,
+    /// Maximum occupancy ever observed (sizing feedback for HLS).
+    high_water: usize,
+    /// Counts of rejected pushes (upstream stall events).
+    push_stalls: u64,
+    /// Counts of failed pops (downstream starvation events).
+    pop_starves: u64,
+}
+
+impl<T> Fifo<T> {
+    pub fn new(capacity: usize) -> Fifo<T> {
+        assert!(capacity >= 1, "FIFO capacity must be >= 1");
+        Fifo {
+            items: VecDeque::with_capacity(capacity),
+            capacity,
+            high_water: 0,
+            push_stalls: 0,
+            pop_starves: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.items.len() >= self.capacity
+    }
+
+    /// Try to push; on a full FIFO records a stall and returns the token
+    /// back (the producer must hold it and retry — blocking-after-service).
+    pub fn try_push(&mut self, token: T) -> Result<(), T> {
+        if self.is_full() {
+            self.push_stalls += 1;
+            return Err(token);
+        }
+        self.items.push_back(token);
+        self.high_water = self.high_water.max(self.items.len());
+        Ok(())
+    }
+
+    /// Try to pop; on an empty FIFO records a starvation event.
+    pub fn try_pop(&mut self) -> Option<T> {
+        match self.items.pop_front() {
+            Some(t) => Some(t),
+            None => {
+                self.pop_starves += 1;
+                None
+            }
+        }
+    }
+
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    pub fn push_stalls(&self) -> u64 {
+        self.push_stalls
+    }
+
+    pub fn pop_starves(&self) -> u64 {
+        self.pop_starves
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::props;
+
+    #[test]
+    fn fifo_ordering() {
+        let mut f = Fifo::new(4);
+        for i in 0..4 {
+            f.try_push(i).unwrap();
+        }
+        assert!(f.is_full());
+        assert_eq!(f.try_push(99), Err(99));
+        assert_eq!(f.push_stalls(), 1);
+        for i in 0..4 {
+            assert_eq!(f.try_pop(), Some(i));
+        }
+        assert_eq!(f.try_pop(), None);
+        assert_eq!(f.pop_starves(), 1);
+    }
+
+    #[test]
+    fn high_water_tracks_max() {
+        let mut f = Fifo::new(8);
+        f.try_push(1).unwrap();
+        f.try_push(2).unwrap();
+        f.try_pop();
+        f.try_push(3).unwrap();
+        assert_eq!(f.high_water(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn zero_capacity_rejected() {
+        let _ = Fifo::<u8>::new(0);
+    }
+
+    #[test]
+    fn never_exceeds_capacity_under_random_ops() {
+        props("fifo_cap", 128, |g| {
+            let cap = g.usize_in(1, 8);
+            let mut f = Fifo::new(cap);
+            let mut pushed = 0u64;
+            let mut popped = 0u64;
+            for _ in 0..200 {
+                if g.bool() {
+                    if f.try_push(pushed).is_ok() {
+                        pushed += 1;
+                    }
+                } else if let Some(v) = f.try_pop() {
+                    assert_eq!(v, popped, "FIFO order");
+                    popped += 1;
+                }
+                assert!(f.len() <= cap);
+            }
+            assert_eq!(f.len() as u64, pushed - popped);
+        });
+    }
+}

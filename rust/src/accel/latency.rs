@@ -1,0 +1,163 @@
+//! Analytical latency model (paper §3.2, Eqs 1–4).
+//!
+//! ```text
+//! Acc_Lat = T · Lat_t_m  +  Σ_{i<m} Lat_t_i  +  Σ_{i>m} Lat_t_i      (1)
+//! Lat_t_i = max(X_t_i, H_t_i)                                        (2)
+//! X_t_i   = LX_i·RX_i + LH_i                                         (3)
+//! H_t_i   = LH_i·RH_i + LH_i                                         (4)
+//! ```
+//!
+//! Eq 1 decomposes into the steady-state term (T repetitions of the
+//! bottleneck stage) plus the pipeline fill/drain contribution of every
+//! other stage. The cycle-accurate simulator ([`super::dataflow`]) must
+//! reproduce this exactly for balanced configs with adequate FIFOs —
+//! an integration test asserts it.
+
+use super::reuse::BalancedConfig;
+
+/// Analytical latency results for one configuration.
+#[derive(Clone, Debug)]
+pub struct LatencyModel {
+    /// Per-module per-timestep latencies `Lat_t_i` (cycles).
+    pub lat_t: Vec<u64>,
+    /// Bottleneck module index m.
+    pub m: usize,
+}
+
+impl LatencyModel {
+    pub fn of(cfg: &BalancedConfig) -> LatencyModel {
+        let lat_t: Vec<u64> = cfg.layers.iter().map(|l| l.lat_t()).collect();
+        let mut m = 0;
+        for (i, &l) in lat_t.iter().enumerate() {
+            if l > lat_t[m] {
+                m = i;
+            }
+        }
+        LatencyModel { lat_t, m }
+    }
+
+    /// The bottleneck per-timestep latency `Lat_t_m` (cycles).
+    pub fn lat_t_m(&self) -> u64 {
+        self.lat_t[self.m]
+    }
+
+    /// Eq 1: total cycles to process a sequence of `t` timesteps.
+    pub fn acc_lat(&self, t: usize) -> u64 {
+        assert!(t >= 1, "sequence length must be >= 1");
+        let fill: u64 = self
+            .lat_t
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != self.m)
+            .map(|(_, &l)| l)
+            .sum();
+        t as u64 * self.lat_t_m() + fill
+    }
+
+    /// Latency in milliseconds at clock `hz`.
+    pub fn acc_lat_ms(&self, t: usize, hz: f64) -> f64 {
+        crate::cycles_to_ms(self.acc_lat(t), hz)
+    }
+
+    /// Throughput in timesteps/second once the pipeline is full.
+    pub fn steady_state_rate(&self, hz: f64) -> f64 {
+        hz / self.lat_t_m() as f64
+    }
+
+    /// The layer-by-layer (no temporal parallelism) latency of the same
+    /// hardware: each timestep of each layer executes serially —
+    /// `T · Σ_i Lat_t_i`. Prior-work style baseline used by ablation A2
+    /// (see also [`super::layer_by_layer`] for the simulated version).
+    pub fn serial_lat(&self, t: usize) -> u64 {
+        t as u64 * self.lat_t.iter().sum::<u64>()
+    }
+
+    /// Speedup of the dataflow execution over layer-by-layer on the same
+    /// hardware (the value temporal parallelism buys).
+    pub fn temporal_speedup(&self, t: usize) -> f64 {
+        self.serial_lat(t) as f64 / self.acc_lat(t) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Topology;
+    use crate::util::prop::props;
+
+    #[test]
+    fn f32d2_hand_computed() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let cfg = BalancedConfig::balance(&topo, 1);
+        let lm = LatencyModel::of(&cfg);
+        // Both layers have Lat_t = 64 (see reuse.rs tests). m is layer 0
+        // or 1 (tie); fill = 64, steady = 64·T.
+        assert_eq!(lm.lat_t, vec![64, 64]);
+        assert_eq!(lm.acc_lat(1), 64 + 64);
+        assert_eq!(lm.acc_lat(64), 64 * 64 + 64);
+        // At 300 MHz: 64 timesteps → (4096+64)/300e6 s = 0.01387 ms.
+        let ms = lm.acc_lat_ms(64, 300.0e6);
+        assert!((ms - 4160.0 / 300.0e6 * 1e3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_is_affine_in_t() {
+        props("affine_in_t", 64, |g| {
+            let topo = g.choose(&Topology::paper_models()).clone();
+            let rh_m = g.u64_below(6) + 1;
+            let lm = LatencyModel::of(&BalancedConfig::balance(&topo, rh_m));
+            let t1 = g.usize_in(1, 100);
+            let t2 = t1 + g.usize_in(1, 100);
+            let slope = (lm.acc_lat(t2) - lm.acc_lat(t1)) / (t2 - t1) as u64;
+            assert_eq!(slope, lm.lat_t_m());
+        });
+    }
+
+    #[test]
+    fn deeper_models_add_fill_not_slope() {
+        // The paper's depth-scalability claim in analytical form: D6 and
+        // D2 at the same width share the bottleneck layer (widest = F),
+        // so the *slope* over T is identical; depth only adds fill.
+        for f in [32usize, 64] {
+            let d2 = LatencyModel::of(&BalancedConfig::balance(
+                &Topology::new(f, 2).unwrap(),
+                1,
+            ));
+            let d6 = LatencyModel::of(&BalancedConfig::balance(
+                &Topology::new(f, 6).unwrap(),
+                1,
+            ));
+            assert_eq!(d2.lat_t_m(), d6.lat_t_m(), "F{f}");
+            assert!(d6.acc_lat(64) > d2.acc_lat(64));
+            let added = d6.acc_lat(64) - d2.acc_lat(64);
+            // Added fill is bounded by the extra stages' latencies.
+            let extra: u64 = d6.lat_t.iter().sum::<u64>() - d2.lat_t.iter().sum::<u64>();
+            assert!(added <= extra, "added {added} extra {extra}");
+        }
+    }
+
+    #[test]
+    fn temporal_speedup_approaches_depth_for_balanced_long_seq() {
+        // Perfectly balanced N-stage pipeline: serial = T·N·L,
+        // dataflow = T·L + (N−1)·L ⇒ speedup → N as T → ∞.
+        let topo = Topology::from_name("F32-D6").unwrap();
+        let lm = LatencyModel::of(&BalancedConfig::balance(&topo, 1));
+        let s = lm.temporal_speedup(1024);
+        assert!(s > 5.5 && s <= 6.0, "speedup {s}");
+    }
+
+    #[test]
+    fn steady_state_rate_matches_bottleneck() {
+        let topo = Topology::from_name("F64-D2").unwrap();
+        let lm = LatencyModel::of(&BalancedConfig::balance(&topo, 4));
+        let rate = lm.steady_state_rate(300.0e6);
+        assert!((rate - 300.0e6 / lm.lat_t_m() as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "sequence length")]
+    fn rejects_t_zero() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        LatencyModel::of(&BalancedConfig::balance(&topo, 1)).acc_lat(0);
+    }
+}

@@ -1,0 +1,121 @@
+//! Prior-work baseline: layer-by-layer execution (§3.4's "traditional
+//! layer-by-layer execution, which underutilizes hardware").
+//!
+//! The same per-layer hardware processes the whole sequence through layer
+//! 0, writes the intermediate hidden sequence to DRAM, reloads it, runs
+//! layer 1, and so on — the execution style of single-layer LSTM
+//! accelerators [2, 3, 7] and (across one layer's timesteps) SHARP [1].
+//! No temporal overlap across layers exists, and intermediate sequences
+//! round-trip through global memory.
+//!
+//! Used by ablation A2 (`cargo bench --bench ablation_temporal`).
+
+use super::reuse::BalancedConfig;
+
+/// DRAM round-trip model for intermediate sequences.
+#[derive(Clone, Copy, Debug)]
+pub struct MemModel {
+    /// Words (32-bit) transferred per cycle on the DDR interface
+    /// (ZCU104: 64-bit DDR4 @ ~1200 MT/s against a 300 MHz kernel ≈ 8
+    /// words/cycle peak; 4 is a realistic sustained figure).
+    pub words_per_cycle: u64,
+    /// Fixed DMA descriptor/setup cycles per transfer direction.
+    pub setup_cycles: u64,
+}
+
+impl Default for MemModel {
+    fn default() -> Self {
+        MemModel { words_per_cycle: 4, setup_cycles: 200 }
+    }
+}
+
+/// Result of the layer-by-layer execution model.
+#[derive(Clone, Debug)]
+pub struct LayerByLayerResult {
+    pub total_cycles: u64,
+    pub compute_cycles: u64,
+    pub dram_cycles: u64,
+}
+
+/// Simulate layer-by-layer execution of a `t`-timestep sequence.
+///
+/// Compute per layer is `T · Lat_t_i` (the same per-timestep service as
+/// the dataflow modules — recurrent dependence serializes timesteps
+/// within a layer). Between layers the hidden sequence `T·LH_i` words is
+/// written to and read back from DRAM.
+pub fn run_layer_by_layer(
+    cfg: &BalancedConfig,
+    mem: MemModel,
+    t: usize,
+) -> LayerByLayerResult {
+    assert!(t >= 1);
+    let mut compute = 0u64;
+    let mut dram = 0u64;
+    let n = cfg.layers.len();
+    for (i, l) in cfg.layers.iter().enumerate() {
+        compute += t as u64 * l.lat_t();
+        if i + 1 < n {
+            // Write h sequence out, read it back for the next layer.
+            let words = t as u64 * l.lh as u64;
+            let per_dir = super::reuse::div_ceil(words, mem.words_per_cycle) + mem.setup_cycles;
+            dram += 2 * per_dir;
+        }
+    }
+    LayerByLayerResult { total_cycles: compute + dram, compute_cycles: compute, dram_cycles: dram }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::dataflow::DataflowSim;
+    use crate::accel::latency::LatencyModel;
+    use crate::model::Topology;
+    use crate::util::prop::props;
+
+    #[test]
+    fn compute_matches_serial_model() {
+        let topo = Topology::from_name("F32-D6").unwrap();
+        let cfg = BalancedConfig::balance(&topo, 1);
+        let lm = LatencyModel::of(&cfg);
+        let r = run_layer_by_layer(&cfg, MemModel { words_per_cycle: 4, setup_cycles: 0 }, 16);
+        assert_eq!(r.compute_cycles, lm.serial_lat(16));
+    }
+
+    #[test]
+    fn dataflow_always_wins_and_gap_grows_with_depth() {
+        props("temporal_wins", 48, |g| {
+            let topo = g.choose(&Topology::paper_models()).clone();
+            let cfg = BalancedConfig::paper_config(&topo);
+            let t = g.usize_in(2, 64);
+            let lbl = run_layer_by_layer(&cfg, MemModel::default(), t);
+            let df = DataflowSim::new(&cfg).run_sequence(t);
+            assert!(
+                lbl.total_cycles > df.total_cycles,
+                "{} T={t}: lbl {} df {}",
+                topo.name,
+                lbl.total_cycles,
+                df.total_cycles
+            );
+        });
+        // Speedup at T=64 is larger for D6 than D2 (temporal parallelism
+        // scales with depth).
+        let s = |name: &str| {
+            let topo = Topology::from_name(name).unwrap();
+            let cfg = BalancedConfig::paper_config(&topo);
+            let lbl = run_layer_by_layer(&cfg, MemModel::default(), 64).total_cycles as f64;
+            let df = DataflowSim::new(&cfg).run_sequence(64).total_cycles as f64;
+            lbl / df
+        };
+        assert!(s("F32-D6") > s("F32-D2") * 1.5, "D6 {} D2 {}", s("F32-D6"), s("F32-D2"));
+    }
+
+    #[test]
+    fn dram_traffic_counted_only_between_layers() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let cfg = BalancedConfig::balance(&topo, 1);
+        let mem = MemModel { words_per_cycle: 4, setup_cycles: 100 };
+        let r = run_layer_by_layer(&cfg, mem, 8);
+        // One boundary (L0→L1): 8·16 words = 128 → 32 cycles + setup, ×2.
+        assert_eq!(r.dram_cycles, 2 * (128 / 4 + 100));
+    }
+}

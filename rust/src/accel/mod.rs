@@ -1,0 +1,42 @@
+//! The paper's contribution: a dataflow FPGA accelerator for LSTM
+//! autoencoders exploiting **temporal parallelism** — every LSTM layer is
+//! its own always-running module, adjacent modules are coupled only by
+//! FIFOs, and in steady state module *i* processes timestep *t − i* while
+//! its neighbours work on adjacent timesteps (§3).
+//!
+//! Submodules:
+//! - [`reuse`] — hardware reuse factors and the **dataflow balancing
+//!   methodology** (paper Eqs 5–8).
+//! - [`latency`] — the analytical per-timestep / whole-sequence latency
+//!   model (Eqs 1–4).
+//! - [`fifo`] — cycle-stamped bounded FIFO used by the simulators.
+//! - [`mvm`] — MVM_X / MVM_H unit model (timing + functional compute).
+//! - [`lstm_module`] — one `LSTM_i` dataflow module.
+//! - [`dataflow`] — the fast cycle-accurate simulator (max-plus recurrence
+//!   over (module, timestep), exact for constant service times with
+//!   blocking-after-service semantics) plus functional execution.
+//! - [`stepped`] — a per-cycle, element-granular reference simulator used
+//!   to validate [`dataflow`] on small configs.
+//! - [`layer_by_layer`] — the prior-work baseline (one layer at a time,
+//!   §3.4's "traditional layer-by-layer execution") for the ablation.
+//! - [`resources`] — XCZU7EV resource model → Table 1.
+//! - [`energy`] — platform power/energy models → Table 3.
+//! - [`platform`] — FPGA device catalog.
+
+pub mod reuse;
+pub mod latency;
+pub mod fifo;
+pub mod mvm;
+pub mod lstm_module;
+pub mod dataflow;
+pub mod stepped;
+pub mod layer_by_layer;
+pub mod resources;
+pub mod energy;
+pub mod platform;
+pub mod optimizer;
+pub mod multi;
+
+pub use dataflow::DataflowSim;
+pub use latency::LatencyModel;
+pub use reuse::BalancedConfig;

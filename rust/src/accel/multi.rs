@@ -1,0 +1,123 @@
+//! Multi-sequence (throughput-mode) scheduling: back-to-back sequences
+//! through the dataflow pipeline.
+//!
+//! The paper evaluates single-sequence latency; a deployment (its §1
+//! motivation: continuous network-traffic / ECG monitoring) streams many
+//! windows. Because each `LSTM_i` module's recurrent state must reset
+//! between sequences, a module can start sequence `s+1`'s timestep 0 as
+//! soon as it finished sequence `s`'s last timestep — sequences pipeline
+//! across *modules* exactly like timesteps do, with no drain in between.
+//!
+//! Steady-state throughput is therefore `hz / (T · Lat_t_m)` sequences/s
+//! — the pipeline fill is paid once per *batch*, not per sequence
+//! (tested), which is the dataflow architecture's serving story.
+
+use super::dataflow::{DataflowSim, SimOptions};
+use super::latency::LatencyModel;
+use super::reuse::BalancedConfig;
+
+/// Result of streaming `n_seq` back-to-back sequences of length `t`.
+#[derive(Clone, Debug)]
+pub struct BatchRunResult {
+    pub n_seq: usize,
+    pub t: usize,
+    /// Completion cycle of each sequence's last timestep.
+    pub seq_done: Vec<u64>,
+    pub total_cycles: u64,
+}
+
+impl BatchRunResult {
+    /// Sequences per second at clock `hz`, amortized over the batch.
+    pub fn throughput_seq_per_s(&self, hz: f64) -> f64 {
+        self.n_seq as f64 / (self.total_cycles as f64 / hz)
+    }
+
+    /// Per-sequence latency (issue of its first timestep → completion),
+    /// for sequence `s` — grows by at most fill for s = 0 then stabilizes.
+    pub fn seq_latency_cycles(&self, s: usize) -> u64 {
+        let issue = s as u64 * self.steady_issue_interval();
+        self.seq_done[s].saturating_sub(issue)
+    }
+
+    fn steady_issue_interval(&self) -> u64 {
+        if self.n_seq < 2 {
+            self.seq_done[0]
+        } else {
+            self.seq_done[self.n_seq - 1].saturating_sub(self.seq_done[self.n_seq - 2])
+        }
+    }
+}
+
+/// Simulate `n_seq` sequences streamed back-to-back: equivalent to one
+/// long sequence of `n_seq · t` timesteps whose outputs are grouped per
+/// sequence (state reset is a zero-cost mux on the FPGA — the module is
+/// busy `Lat_t` regardless; the reader just tags sequence boundaries).
+pub fn run_batch(cfg: &BalancedConfig, opts: SimOptions, t: usize, n_seq: usize) -> BatchRunResult {
+    assert!(t >= 1 && n_seq >= 1);
+    let run = DataflowSim::with_options(cfg, opts).run_sequence(t * n_seq);
+    let seq_done: Vec<u64> =
+        (0..n_seq).map(|s| run.output_times[(s + 1) * t - 1]).collect();
+    BatchRunResult { n_seq, t, seq_done, total_cycles: run.total_cycles }
+}
+
+/// Analytical steady-state throughput (sequences/s).
+pub fn steady_throughput(cfg: &BalancedConfig, t: usize, hz: f64) -> f64 {
+    let lm = LatencyModel::of(cfg);
+    hz / (t as u64 * lm.lat_t_m()) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Topology;
+
+    fn cfg() -> BalancedConfig {
+        BalancedConfig::paper_config(&Topology::from_name("F32-D6").unwrap())
+    }
+
+    #[test]
+    fn fill_paid_once_per_batch() {
+        let cfg = cfg();
+        let lm = LatencyModel::of(&cfg);
+        let t = 16;
+        let single = lm.acc_lat(t);
+        let batch = run_batch(&cfg, SimOptions::default(), t, 8);
+        // 8 sequences take far less than 8 independent runs.
+        assert!(batch.total_cycles < 8 * single);
+        // Exactly: fill + 8·T·bottleneck.
+        assert_eq!(batch.total_cycles, lm.acc_lat(8 * t));
+    }
+
+    #[test]
+    fn throughput_approaches_analytical_steady_state() {
+        let cfg = cfg();
+        let hz = 300.0e6;
+        let t = 16;
+        let analytical = steady_throughput(&cfg, t, hz);
+        let measured = run_batch(&cfg, SimOptions::default(), t, 64).throughput_seq_per_s(hz);
+        let rel = (measured - analytical).abs() / analytical;
+        assert!(rel < 0.05, "measured {measured:.1} vs analytical {analytical:.1}");
+    }
+
+    #[test]
+    fn sequence_completions_evenly_spaced_in_steady_state() {
+        let cfg = cfg();
+        let lm = LatencyModel::of(&cfg);
+        let t = 8;
+        let batch = run_batch(&cfg, SimOptions::default(), t, 16);
+        let spacing: Vec<u64> =
+            batch.seq_done.windows(2).map(|w| w[1] - w[0]).collect();
+        for s in spacing.iter().skip(1) {
+            assert_eq!(*s, t as u64 * lm.lat_t_m());
+        }
+    }
+
+    #[test]
+    fn single_sequence_degenerates_to_acc_lat() {
+        let cfg = cfg();
+        let lm = LatencyModel::of(&cfg);
+        let b = run_batch(&cfg, SimOptions::default(), 16, 1);
+        assert_eq!(b.total_cycles, lm.acc_lat(16));
+        assert_eq!(b.seq_latency_cycles(0), lm.acc_lat(16));
+    }
+}

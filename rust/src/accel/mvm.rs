@@ -1,0 +1,154 @@
+//! MVM unit model (paper §3.1): each `LSTM_i` module contains an `MVM_X`
+//! and an `MVM_H` unit computing the blue/orange matrix-vector products of
+//! Figure 1 across all four gates.
+//!
+//! A unit with `M` parallel multipliers streams `4·LH·n_in` MACs per
+//! timestep, taking `⌈n_in·4·LH / M⌉` compute cycles — i.e. an effective
+//! reuse factor `R = 4·LH/M` cycles per input element (Eqs 5–6) — then
+//! drains `LH` cycles through the activation/element-wise pipeline
+//! (the `+LH` term of Eqs 3–4). This module captures the *timing* and
+//! *occupancy* view; the functional arithmetic lives in
+//! [`crate::model::lstm`] (wide-MAC Q8.24), which the hardware reproduces
+//! element-for-element.
+
+use super::reuse::div_ceil;
+
+/// Static description of one MVM unit.
+#[derive(Clone, Copy, Debug)]
+pub struct MvmSpec {
+    /// Number of input elements consumed per timestep (LX for MVM_X,
+    /// LH for MVM_H).
+    pub n_in: usize,
+    /// Hidden dimension LH (output rows per gate; also drain cycles).
+    pub lh: usize,
+    /// Parallel multipliers.
+    pub multipliers: u64,
+}
+
+impl MvmSpec {
+    /// Build from a multiplier count.
+    pub fn with_multipliers(n_in: usize, lh: usize, multipliers: u64) -> MvmSpec {
+        assert!(multipliers >= 1);
+        MvmSpec { n_in, lh, multipliers }
+    }
+
+    /// Build from an integer reuse factor R (cycles per element):
+    /// `M = ⌈4·LH/R⌉` (Eqs 5–6).
+    pub fn new(n_in: usize, lh: usize, reuse: u64) -> MvmSpec {
+        assert!(reuse >= 1);
+        Self::with_multipliers(n_in, lh, div_ceil(4 * lh as u64, reuse))
+    }
+
+    /// Effective reuse factor `4·LH / M` (cycles per input element).
+    pub fn reuse(&self) -> f64 {
+        4.0 * self.lh as f64 / self.multipliers as f64
+    }
+
+    /// Per-timestep latency (Eqs 3–4): `⌈n_in·4·LH/M⌉ + LH`.
+    pub fn latency(&self) -> u64 {
+        self.compute_cycles() + self.lh as u64
+    }
+
+    /// Cycles during which the multiplier array is actually multiplying.
+    pub fn compute_cycles(&self) -> u64 {
+        div_ceil(self.macs(), self.multipliers)
+    }
+
+    /// Total useful MAC operations per timestep: `4 · LH · n_in`.
+    pub fn macs(&self) -> u64 {
+        4 * self.lh as u64 * self.n_in as u64
+    }
+
+    /// Multiplier-array efficiency during the compute phase:
+    /// `macs / (multipliers · compute_cycles)` ∈ (0, 1]. Equals 1 when
+    /// `M` divides `4·LH·n_in` exactly.
+    pub fn multiplier_efficiency(&self) -> f64 {
+        self.macs() as f64 / (self.multipliers * self.compute_cycles()) as f64
+    }
+
+    /// Fraction of a given module interval this unit is busy.
+    pub fn occupancy_in(&self, module_latency: u64) -> f64 {
+        self.latency() as f64 / module_latency as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::props;
+
+    #[test]
+    fn latency_eq3_eq4() {
+        // MVM_X of F32-D2 layer 1: LX=16, LH=32, RX=2 → 16·2 + 32 = 64.
+        let x = MvmSpec::new(16, 32, 2);
+        assert_eq!(x.latency(), 64);
+        // MVM_H: LH=32, RH=1 → 32·1 + 32 = 64.
+        let h = MvmSpec::new(32, 32, 1);
+        assert_eq!(h.latency(), 64);
+    }
+
+    #[test]
+    fn multiplier_count_inverse_in_reuse() {
+        assert_eq!(MvmSpec::new(32, 32, 1).multipliers, 128);
+        assert_eq!(MvmSpec::new(32, 32, 4).multipliers, 32);
+    }
+
+    #[test]
+    fn fractional_effective_reuse_supported() {
+        // 43 multipliers on 4·LH = 64 rows → R_eff = 1.488; latency for
+        // 32 elements: ⌈32·64/43⌉ + 16 = 48 + 16 = 64 (the F32-D2 layer-0
+        // MVM_X case that integer-R rounding would push to 80).
+        let spec = MvmSpec::with_multipliers(32, 16, 43);
+        assert_eq!(spec.latency(), 64);
+        assert!((spec.reuse() - 64.0 / 43.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn efficiency_is_one_when_reuse_divides() {
+        props("mvm_eff", 256, |g| {
+            let lh = 1usize << g.usize_in(2, 7);
+            let n_in = 1usize << g.usize_in(2, 7);
+            let reuse = 1u64 << g.usize_in(0, 4); // divides 4·lh (pow2)
+            let spec = MvmSpec::new(n_in, lh, reuse);
+            assert!((spec.multiplier_efficiency() - 1.0).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn efficiency_below_one_on_ragged_counts() {
+        // 4·LH = 64, R = 7 → M = ⌈64/7⌉ = 10; 16 elements → 1024 MACs,
+        // ⌈1024/10⌉ = 103 cycles, eff = 1024/1030.
+        let spec = MvmSpec::new(16, 16, 7);
+        assert_eq!(spec.multipliers, 10);
+        let eff = spec.multiplier_efficiency();
+        assert!((eff - 1024.0 / 1030.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn macs_match_topology_accounting() {
+        use crate::model::Topology;
+        for t in Topology::paper_models() {
+            let total: u64 = t
+                .layers
+                .iter()
+                .map(|l| {
+                    MvmSpec::new(l.lx, l.lh, 1).macs() + MvmSpec::new(l.lh, l.lh, 1).macs()
+                })
+                .sum();
+            assert_eq!(total, t.macs_per_timestep());
+        }
+    }
+
+    #[test]
+    fn latency_monotone_in_multipliers() {
+        props("mvm_monotone", 128, |g| {
+            let lh = g.usize_in(2, 64);
+            let n_in = g.usize_in(1, 64);
+            let m1 = g.u64_below(64) + 1;
+            let m2 = m1 + g.u64_below(64) + 1;
+            let a = MvmSpec::with_multipliers(n_in, lh, m1).latency();
+            let b = MvmSpec::with_multipliers(n_in, lh, m2).latency();
+            assert!(b <= a, "more multipliers must not be slower");
+        });
+    }
+}

@@ -1,0 +1,92 @@
+//! FPGA device catalog. The paper targets the AMD Zynq UltraScale+
+//! MPSoC ZCU104 board (XCZU7EV device); smaller devices are included for
+//! the §4.1 claim that the RH_m-based configurability "shows potential
+//! for various FPGAs, including resource-constrained embedded devices"
+//! (explored by `examples/design_space.rs`).
+
+/// Available resources of an FPGA device.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FpgaDevice {
+    pub name: &'static str,
+    pub luts: u64,
+    pub ffs: u64,
+    /// BRAM36 blocks (36 Kb each).
+    pub bram36: u64,
+    pub dsps: u64,
+    /// Nominal kernel clock (Hz) for latency conversion.
+    pub clock_hz: f64,
+}
+
+impl FpgaDevice {
+    /// XCZU7EV on the ZCU104 (paper's platform, 300 MHz target).
+    pub const ZCU104: FpgaDevice = FpgaDevice {
+        name: "XCZU7EV (ZCU104)",
+        luts: 230_400,
+        ffs: 460_800,
+        bram36: 312,
+        dsps: 1_728,
+        clock_hz: 300.0e6,
+    };
+
+    /// XCZU3EG (Ultra96-class embedded board).
+    pub const ULTRA96: FpgaDevice = FpgaDevice {
+        name: "XCZU3EG (Ultra96)",
+        luts: 70_560,
+        ffs: 141_120,
+        bram36: 216,
+        dsps: 360,
+        clock_hz: 250.0e6,
+    };
+
+    /// XC7Z020 (PYNQ-Z2 class, older Zynq-7000).
+    pub const PYNQ_Z2: FpgaDevice = FpgaDevice {
+        name: "XC7Z020 (PYNQ-Z2)",
+        luts: 53_200,
+        ffs: 106_400,
+        bram36: 140,
+        dsps: 220,
+        clock_hz: 142.0e6,
+    };
+
+    /// Alveo U50-class datacenter card (for headroom studies).
+    pub const ALVEO_U50: FpgaDevice = FpgaDevice {
+        name: "XCU50 (Alveo U50)",
+        luts: 872_000,
+        ffs: 1_743_000,
+        bram36: 1_344,
+        dsps: 5_952,
+        clock_hz: 300.0e6,
+    };
+
+    pub fn catalog() -> &'static [FpgaDevice] {
+        const ALL: [FpgaDevice; 4] = [
+            FpgaDevice::ZCU104,
+            FpgaDevice::ULTRA96,
+            FpgaDevice::PYNQ_Z2,
+            FpgaDevice::ALVEO_U50,
+        ];
+        &ALL
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zcu104_matches_datasheet() {
+        let d = FpgaDevice::ZCU104;
+        assert_eq!(d.luts, 230_400);
+        assert_eq!(d.dsps, 1_728);
+        assert_eq!(d.bram36, 312);
+        assert_eq!(d.clock_hz, 300.0e6);
+    }
+
+    #[test]
+    fn catalog_ordered_reasonably() {
+        let c = FpgaDevice::catalog();
+        assert!(c.len() >= 4);
+        assert!(FpgaDevice::ALVEO_U50.dsps > FpgaDevice::ZCU104.dsps);
+        assert!(FpgaDevice::ZCU104.dsps > FpgaDevice::ULTRA96.dsps);
+    }
+}

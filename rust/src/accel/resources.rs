@@ -1,0 +1,263 @@
+//! FPGA resource model → Table 1 (LUT/FF/BRAM/DSP % and RH_m).
+//!
+//! Structural counting + documented calibration (DESIGN.md §6). We do not
+//! have the authors' HLS pragmas, so the model counts what the balanced
+//! configuration *implies* structurally and uses constants fitted (least
+//! squares over the four Table-1 rows) where the mapping is
+//! toolchain-specific:
+//!
+//! - **DSP**: `⌈2.5 DSP per multiplier⌉` — a 32×32 Q8.24 product on
+//!   DSP48E2 slices (27×24 native) needs a 2-DSP cascade plus shared
+//!   correction logic amortized across the array.
+//! - **BRAM**: structural max(capacity, port) per weight array — cyclic
+//!   partitioning into `M` banks, two banks packed per true-dual-port
+//!   BRAM36 — plus FIFO and DMA buffers. The paper's own BRAM column is
+//!   non-monotone in width/depth; our structural count reproduces the
+//!   F32 rows closely and underestimates the F64 rows (their RTL
+//!   realization evidently replicates weights more aggressively at high
+//!   reuse; we report both numbers side by side rather than inventing a
+//!   fudge term).
+//! - **LUT/FF**: affine model in (multipliers, datapath elements)
+//!   calibrated on Table 1: control/mux/interp logic per multiplier and
+//!   per vector lane.
+//!
+//! The *trends* the paper draws from Table 1 are asserted by tests:
+//! wider models need larger RH_m to fit; depth is cheaper than width;
+//! every configuration fits the XCZU7EV.
+
+use super::platform::FpgaDevice;
+use super::reuse::{div_ceil, BalancedConfig};
+
+/// Absolute resource usage estimate.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ResourceUsage {
+    pub luts: u64,
+    pub ffs: u64,
+    pub bram36: u64,
+    pub dsps: u64,
+}
+
+impl ResourceUsage {
+    pub fn add(&mut self, o: ResourceUsage) {
+        self.luts += o.luts;
+        self.ffs += o.ffs;
+        self.bram36 += o.bram36;
+        self.dsps += o.dsps;
+    }
+
+    /// Utilization percentages on a device (Table-1 columns).
+    pub fn pct(&self, dev: &FpgaDevice) -> ResourcePct {
+        ResourcePct {
+            lut: 100.0 * self.luts as f64 / dev.luts as f64,
+            ff: 100.0 * self.ffs as f64 / dev.ffs as f64,
+            bram: 100.0 * self.bram36 as f64 / dev.bram36 as f64,
+            dsp: 100.0 * self.dsps as f64 / dev.dsps as f64,
+        }
+    }
+
+    /// Does the design fit the device (≤ 100% everywhere, with a routing
+    /// headroom margin on LUTs)?
+    pub fn fits(&self, dev: &FpgaDevice) -> bool {
+        let p = self.pct(dev);
+        p.lut <= 85.0 && p.ff <= 90.0 && p.bram <= 100.0 && p.dsp <= 100.0
+    }
+}
+
+/// Utilization percentages.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResourcePct {
+    pub lut: f64,
+    pub ff: f64,
+    pub bram: f64,
+    pub dsp: f64,
+}
+
+impl ResourcePct {
+    pub fn mean(&self) -> f64 {
+        (self.lut + self.ff + self.bram + self.dsp) / 4.0
+    }
+}
+
+// ---- calibration constants (DESIGN.md §6) --------------------------------
+
+/// DSP slices per Q8.24 multiplier.
+const DSP_PER_MULT: f64 = 2.5;
+/// LUTs per multiplier (accumulator correction, control FSM share).
+const LUT_PER_MULT: f64 = 94.0;
+/// LUTs per datapath element lane (LX+LH per layer: quantize, PWL
+/// interpolation, element-wise unit, FIFO handshake).
+const LUT_PER_ELEM: f64 = 447.0;
+/// FFs per multiplier (pipeline registers in the MAC cascade).
+const FF_PER_MULT: f64 = 69.0;
+/// FFs per element lane.
+const FF_PER_ELEM: f64 = 202.0;
+/// Static FF base (DMA engines, AXI, control).
+const FF_BASE: f64 = 23_000.0;
+/// Static BRAM base (DMA/AXI stream buffers).
+const BRAM_BASE: u64 = 8;
+/// Words per BRAM36 at 32-bit width.
+const WORDS_PER_BRAM: u64 = 1_024;
+
+/// Per-layer structural resource estimate.
+pub fn layer_usage(lx: usize, lh: usize, mx: u64, mh: u64, fifo_words: u64) -> ResourceUsage {
+    let mults = mx + mh;
+    let elems = (lx + lh) as u64;
+    // Weight storage: wx is 4·LH×LX words cyclically partitioned into MX
+    // banks; wh is 4·LH×LH into MH banks. Each bank is ⌈depth/1024⌉
+    // BRAM36-halves; two banks pack into one true-dual-port BRAM36.
+    let wx_words = 4 * lh as u64 * lx as u64;
+    let wh_words = 4 * lh as u64 * lh as u64;
+    let banks = |words: u64, m: u64| -> u64 {
+        let depth = div_ceil(words, m.max(1));
+        m * div_ceil(depth, WORDS_PER_BRAM)
+    };
+    let weight_halves = banks(wx_words, mx) + banks(wh_words, mh);
+    let fifo_brams = div_ceil(fifo_words, WORDS_PER_BRAM * 2); // simple dual port
+    let bram = div_ceil(weight_halves, 2) + fifo_brams;
+    ResourceUsage {
+        luts: (LUT_PER_MULT * mults as f64 + LUT_PER_ELEM * elems as f64) as u64,
+        ffs: (FF_PER_MULT * mults as f64 + FF_PER_ELEM * elems as f64) as u64,
+        bram36: bram,
+        dsps: (DSP_PER_MULT * mults as f64).ceil() as u64,
+    }
+}
+
+/// Whole-accelerator estimate for a balanced configuration.
+pub fn estimate(cfg: &BalancedConfig) -> ResourceUsage {
+    let mut total = ResourceUsage { luts: 0, ffs: FF_BASE as u64, bram36: BRAM_BASE, dsps: 0 };
+    let cap_timesteps = 2u64;
+    for l in &cfg.layers {
+        // FIFO feeding this module holds `cap` timestep-vectors of LX words.
+        let fifo_words = cap_timesteps * l.lx as u64;
+        total.add(layer_usage(l.lx, l.lh, l.mx, l.mh, fifo_words));
+    }
+    total
+}
+
+/// Pick the smallest `RH_m` whose design fits a device — the §4.1
+/// procedure ("determined based on the resource constraints of the
+/// target FPGA, ensuring synthesizability while maximizing exploited
+/// parallelism"). Returns `(rh_m, usage)`.
+pub fn min_fitting_rh_m(
+    topo: &crate::model::Topology,
+    dev: &FpgaDevice,
+    max_rh_m: u64,
+) -> Option<(u64, ResourceUsage)> {
+    for rh_m in 1..=max_rh_m {
+        let cfg = BalancedConfig::balance(topo, rh_m);
+        let usage = estimate(&cfg);
+        if usage.fits(dev) {
+            return Some((rh_m, usage));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Topology;
+
+    fn paper_pct(topo_name: &str) -> ResourcePct {
+        let topo = Topology::from_name(topo_name).unwrap();
+        let cfg = BalancedConfig::paper_config(&topo);
+        estimate(&cfg).pct(&FpgaDevice::ZCU104)
+    }
+
+    #[test]
+    fn all_paper_configs_fit_zcu104() {
+        for topo in Topology::paper_models() {
+            let cfg = BalancedConfig::paper_config(&topo);
+            let usage = estimate(&cfg);
+            assert!(
+                usage.fits(&FpgaDevice::ZCU104),
+                "{} does not fit: {:?}",
+                topo.name,
+                usage.pct(&FpgaDevice::ZCU104)
+            );
+        }
+    }
+
+    #[test]
+    fn dsp_pct_tracks_table1_closely() {
+        // Table 1 DSP%: F32-D2 34.72, F64-D2 18.06, F32-D6 48.15, F64-D6 16.67.
+        for (name, paper) in [
+            ("F32-D2", 34.72),
+            ("F64-D2", 18.06),
+            ("F32-D6", 48.15),
+            ("F64-D6", 16.67),
+        ] {
+            let got = paper_pct(name).dsp;
+            assert!(
+                (got - paper).abs() < 8.0,
+                "{name}: model {got:.2}% vs paper {paper}%"
+            );
+        }
+    }
+
+    #[test]
+    fn lut_pct_tracks_table1() {
+        for (name, paper) in [
+            ("F32-D2", 26.11),
+            ("F64-D2", 43.04),
+            ("F32-D6", 42.47),
+            ("F64-D6", 69.27),
+        ] {
+            let got = paper_pct(name).lut;
+            assert!(
+                (got - paper).abs() < 10.0,
+                "{name}: model {got:.2}% vs paper {paper}%"
+            );
+        }
+    }
+
+    #[test]
+    fn width_costs_more_than_depth() {
+        // §4.1: "adding depth has a less pronounced resource impact than
+        // increasing input feature dimensions" — compare at equal RH_m.
+        let lut = |name: &str, rh| {
+            let topo = Topology::from_name(name).unwrap();
+            estimate(&BalancedConfig::balance(&topo, rh)).luts
+        };
+        let widen = lut("F64-D2", 4) as f64 / lut("F32-D2", 4) as f64;
+        let deepen = lut("F32-D6", 4) as f64 / lut("F32-D2", 4) as f64;
+        assert!(widen > deepen, "widen {widen:.2}x vs deepen {deepen:.2}x");
+    }
+
+    #[test]
+    fn f64_models_need_larger_rh_m_than_f32() {
+        // §4.1: narrow models allow RH_m = 1, wide models are forced up.
+        let dev = FpgaDevice::ZCU104;
+        let fit = |name: &str| {
+            min_fitting_rh_m(&Topology::from_name(name).unwrap(), &dev, 64).unwrap().0
+        };
+        assert!(fit("F32-D2") <= fit("F64-D2"));
+        assert!(fit("F32-D6") <= fit("F64-D6"));
+    }
+
+    #[test]
+    fn smaller_devices_force_larger_rh_m() {
+        // F32-D2 fits the ZCU104 at RH_m = 1 but exceeds the Ultra96's
+        // 360 DSPs there, forcing a higher reuse factor.
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let zcu = min_fitting_rh_m(&topo, &FpgaDevice::ZCU104, 128).unwrap().0;
+        let u96 = min_fitting_rh_m(&topo, &FpgaDevice::ULTRA96, 128).unwrap().0;
+        assert_eq!(zcu, 1);
+        assert!(u96 > zcu, "Ultra96 RH_m {u96} vs ZCU104 {zcu}");
+        // Models whose element-lane logic alone exceeds a device never
+        // fit, at any RH_m (width is the hard constraint, §4.1).
+        let wide = Topology::from_name("F64-D2").unwrap();
+        assert!(min_fitting_rh_m(&wide, &FpgaDevice::PYNQ_Z2, 256).is_none());
+    }
+
+    #[test]
+    fn usage_monotone_decreasing_in_rh_m() {
+        let topo = Topology::from_name("F64-D6").unwrap();
+        let mut prev = u64::MAX;
+        for rh_m in [1u64, 2, 4, 8, 16] {
+            let d = estimate(&BalancedConfig::balance(&topo, rh_m)).dsps;
+            assert!(d <= prev, "DSPs should not grow with RH_m");
+            prev = d;
+        }
+    }
+}

@@ -1,0 +1,335 @@
+//! Hardware reuse factors and the dataflow-balancing methodology
+//! (paper §3.2–3.3, Eqs 5–8).
+//!
+//! A reuse factor is the number of cycles an MVM unit spends per input
+//! element; it is inversely proportional to the number of parallel
+//! multipliers (Eqs 5–6):
+//!
+//! ```text
+//! RX_i = 4·LH_i / MX_i        RH_i = 4·LH_i / MH_i
+//! ```
+//!
+//! Balancing happens at two levels:
+//! 1. **intra-module** (Eq 7): `RX_i = (LH_i / LX_i) · RH_i` so MVM_X and
+//!    MVM_H finish a timestep together;
+//! 2. **inter-module** (Eq 8): `RH_i = (LH_m − LH_i)/LH_i + (LH_m/LH_i)·RH_m`
+//!    so every module's per-timestep latency equals the bottleneck
+//!    module's.
+//!
+//! With the exact (real-valued) factors both balances are *identities*:
+//! substituting Eq 7 into Eq 3 gives `X_t_i = H_t_i`, and Eq 8 into Eq 4
+//! gives `H_t_i = H_t_m` (tests verify both).
+//!
+//! **Integer quantization.** What hardware actually quantizes is the
+//! *multiplier count*, not the reuse factor: an MVM unit instantiates
+//! `M = ⌈4·LH/R_exact⌉` multipliers and streams `4·LH·n_in` MACs through
+//! them, taking `⌈n_in·4·LH / M⌉` compute cycles (a fractional reuse
+//! factor like 1.5 is simply an element schedule alternating 1- and
+//! 2-cycle elements). Rounding the multiplier count *up* keeps every
+//! module at least as fast as the exact balance, so the designated
+//! bottleneck still dominates and Eq 1 stays exact.
+
+use crate::model::topology::Topology;
+
+/// Hardware configuration of one `LSTM_i` module.
+#[derive(Clone, Debug)]
+pub struct LayerHw {
+    /// Input feature dimension `LX_i`.
+    pub lx: usize,
+    /// Hidden dimension `LH_i`.
+    pub lh: usize,
+    /// Exact balanced reuse factors (Eqs 7–8).
+    pub rx_exact: f64,
+    pub rh_exact: f64,
+    /// Parallel multiplier counts (Eqs 5–6 inverted, ceil).
+    pub mx: u64,
+    pub mh: u64,
+}
+
+impl LayerHw {
+    /// Per-timestep latency of MVM_X (Eq 3 with the integer multiplier
+    /// schedule): `⌈LX·4·LH / MX⌉ + LH`.
+    pub fn x_t(&self) -> u64 {
+        div_ceil(self.lx as u64 * 4 * self.lh as u64, self.mx) + self.lh as u64
+    }
+
+    /// Per-timestep latency of MVM_H (Eq 4): `⌈LH·4·LH / MH⌉ + LH`.
+    pub fn h_t(&self) -> u64 {
+        div_ceil(self.lh as u64 * 4 * self.lh as u64, self.mh) + self.lh as u64
+    }
+
+    /// Module per-timestep latency (Eq 2): `max(X_t, H_t)`.
+    pub fn lat_t(&self) -> u64 {
+        self.x_t().max(self.h_t())
+    }
+
+    /// Effective integer-schedule reuse factors (cycles per element,
+    /// averaged): `4·LH / M`.
+    pub fn rx_effective(&self) -> f64 {
+        4.0 * self.lh as f64 / self.mx as f64
+    }
+
+    pub fn rh_effective(&self) -> f64 {
+        4.0 * self.lh as f64 / self.mh as f64
+    }
+
+    /// Total multipliers in the module.
+    pub fn multipliers(&self) -> u64 {
+        self.mx + self.mh
+    }
+}
+
+/// A fully-configured accelerator: one [`LayerHw`] per LSTM layer.
+#[derive(Clone, Debug)]
+pub struct BalancedConfig {
+    pub topo: Topology,
+    pub layers: Vec<LayerHw>,
+    /// The primary reuse factor `RH_m` the design was balanced around.
+    pub rh_m: u64,
+    /// Index of the bottleneck module m.
+    pub bottleneck: usize,
+}
+
+impl BalancedConfig {
+    /// The paper's balancing methodology (§3.3): given the topology and the
+    /// primary reuse factor `RH_m` of the bottleneck (widest) layer, derive
+    /// every layer's reuse factors via Eqs 7–8, then size multiplier arrays.
+    pub fn balance(topo: &Topology, rh_m: u64) -> BalancedConfig {
+        assert!(rh_m >= 1, "RH_m must be >= 1");
+        let m = topo.widest_layer();
+        let lh_m = topo.layers[m].lh as f64;
+        let layers = topo
+            .layers
+            .iter()
+            .map(|d| {
+                let lh_i = d.lh as f64;
+                let lx_i = d.lx as f64;
+                // Eq 8: equalize module latency with the bottleneck.
+                let rh_exact = (lh_m - lh_i) / lh_i + (lh_m / lh_i) * rh_m as f64;
+                // Eq 7: equalize MVM_X with MVM_H inside the module.
+                let rx_exact = (lh_i / lx_i) * rh_exact;
+                // Eqs 5–6 inverted: enough multipliers to sustain the
+                // exact factors (ceil ⇒ at least as fast as balance).
+                let mx = (4.0 * lh_i / rx_exact).ceil() as u64;
+                let mh = (4.0 * lh_i / rh_exact).ceil() as u64;
+                LayerHw { lx: d.lx, lh: d.lh, rx_exact, rh_exact, mx: mx.max(1), mh: mh.max(1) }
+            })
+            .collect();
+        BalancedConfig { topo: topo.clone(), layers, rh_m, bottleneck: m }
+    }
+
+    /// Deliberately *unbalanced* configuration for the ablation (A1):
+    /// every layer gets the same reuse factor `RX = RH = r` — the naive
+    /// "give every layer identical per-element parallelism" choice the
+    /// paper argues against.
+    pub fn uniform(topo: &Topology, r: u64) -> BalancedConfig {
+        assert!(r >= 1);
+        let layers = topo
+            .layers
+            .iter()
+            .map(|d| LayerHw {
+                lx: d.lx,
+                lh: d.lh,
+                rx_exact: r as f64,
+                rh_exact: r as f64,
+                mx: div_ceil(4 * d.lh as u64, r),
+                mh: div_ceil(4 * d.lh as u64, r),
+            })
+            .collect();
+        let mut cfg = BalancedConfig { topo: topo.clone(), layers, rh_m: r, bottleneck: 0 };
+        cfg.bottleneck = cfg.bottleneck_by_latency();
+        cfg
+    }
+
+    /// The module with the largest per-timestep latency (`Lat_t_m`).
+    pub fn bottleneck_by_latency(&self) -> usize {
+        let mut m = 0;
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.lat_t() > self.layers[m].lat_t() {
+                m = i;
+            }
+        }
+        m
+    }
+
+    /// The paper's `RH_m` values for the four evaluated models (Table 1).
+    pub fn paper_rh_m(model_name: &str) -> Option<u64> {
+        match model_name.trim_start_matches("LSTM-AE-") {
+            "F32-D2" => Some(1),
+            "F64-D2" => Some(4),
+            "F32-D6" => Some(1),
+            "F64-D6" => Some(8),
+            _ => None,
+        }
+    }
+
+    /// Build the paper's Table-1 configuration for a paper model.
+    pub fn paper_config(topo: &Topology) -> BalancedConfig {
+        let rh_m = Self::paper_rh_m(&topo.name).unwrap_or(1);
+        Self::balance(topo, rh_m)
+    }
+
+    /// Total multipliers across all modules.
+    pub fn total_multipliers(&self) -> u64 {
+        self.layers.iter().map(|l| l.multipliers()).sum()
+    }
+
+    /// Worst-case imbalance: min/max of per-module latency — 1.0 means
+    /// perfectly balanced (every module equally busy).
+    pub fn balance_ratio(&self) -> f64 {
+        let max = self.layers.iter().map(|l| l.lat_t()).max().unwrap() as f64;
+        let min = self.layers.iter().map(|l| l.lat_t()).min().unwrap() as f64;
+        min / max
+    }
+}
+
+pub(crate) fn div_ceil(a: u64, b: u64) -> u64 {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::props;
+
+    #[test]
+    fn eq7_makes_mvms_equal_exactly() {
+        // With real-valued factors, X_t == H_t identically.
+        for topo in Topology::paper_models() {
+            for rh_m in [1u64, 2, 4, 8] {
+                let cfg = BalancedConfig::balance(&topo, rh_m);
+                for l in &cfg.layers {
+                    let x = l.lx as f64 * l.rx_exact + l.lh as f64;
+                    let h = l.lh as f64 * l.rh_exact + l.lh as f64;
+                    assert!((x - h).abs() < 1e-9, "X_t={x} H_t={h}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eq8_equalizes_module_latency_exactly() {
+        for topo in Topology::paper_models() {
+            let cfg = BalancedConfig::balance(&topo, 4);
+            let m = cfg.bottleneck;
+            let lm = &cfg.layers[m];
+            let h_m = lm.lh as f64 * lm.rh_exact + lm.lh as f64;
+            for l in &cfg.layers {
+                let h_i = l.lh as f64 * l.rh_exact + l.lh as f64;
+                assert!((h_i - h_m).abs() < 1e-9, "H_t_i={h_i} H_t_m={h_m}");
+            }
+        }
+    }
+
+    #[test]
+    fn bottleneck_dominates_after_integer_sizing() {
+        // Ceil on multiplier counts only makes non-bottleneck modules
+        // faster; the designated bottleneck keeps Lat_t = LH_m·RH_m + LH_m.
+        props("bottleneck_dominates", 96, |g| {
+            let topo = g.choose(&Topology::paper_models()).clone();
+            let rh_m = g.u64_below(8) + 1;
+            let cfg = BalancedConfig::balance(&topo, rh_m);
+            let m = cfg.bottleneck;
+            let eq4 = cfg.layers[m].lh as u64 * rh_m + cfg.layers[m].lh as u64;
+            let got = cfg.layers[m].lat_t();
+            // Ceil on the multiplier count can only make the bottleneck
+            // (slightly) faster than Eq 4, never slower.
+            assert!(got <= eq4, "{}: {got} > Eq4 {eq4}", topo.name);
+            assert!(got as f64 >= 0.95 * eq4 as f64, "{}: {got} << Eq4 {eq4}", topo.name);
+            for l in &cfg.layers {
+                assert!(l.lat_t() <= eq4, "{}: {} > bottleneck {eq4}", topo.name, l.lat_t());
+            }
+        });
+    }
+
+    #[test]
+    fn balanced_configs_are_tightly_balanced() {
+        // D2 models balance almost perfectly; D6 models contain tiny
+        // middle layers (LH = 4–8) that cannot be slowed below a single
+        // multiplier, so they run *faster* than the bottleneck (never
+        // slower — which is what matters for Eq 1) and the min/max ratio
+        // drops. Balanced must always beat the uniform strawman.
+        for topo in Topology::paper_models() {
+            let rh_m = BalancedConfig::paper_rh_m(&topo.name).unwrap();
+            let bal = BalancedConfig::balance(&topo, rh_m);
+            let uni = BalancedConfig::uniform(&topo, rh_m);
+            assert!(
+                bal.balance_ratio() >= uni.balance_ratio(),
+                "{}: balanced {} vs uniform {}",
+                topo.name,
+                bal.balance_ratio(),
+                uni.balance_ratio()
+            );
+            if topo.depth == 2 {
+                assert!(bal.balance_ratio() > 0.95, "{}: {}", topo.name, bal.balance_ratio());
+            }
+        }
+    }
+
+    #[test]
+    fn paper_f32d2_reuse_values() {
+        // Hand-computed from Eqs 7–8: layers 32→16 and 16→32, RH_m = 1.
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let cfg = BalancedConfig::balance(&topo, 1);
+        // Layer 1 (bottleneck, 16→32): RH = 1, RX = 32/16·1 = 2.
+        assert_eq!(cfg.layers[1].rh_exact, 1.0);
+        assert_eq!(cfg.layers[1].rx_exact, 2.0);
+        assert_eq!(cfg.layers[1].mx, 64);
+        assert_eq!(cfg.layers[1].mh, 128);
+        // Layer 0 (32→16): RH = (32−16)/16 + 32/16 = 3, RX = 1.5 ⇒ MX = ⌈64/1.5⌉ = 43.
+        assert_eq!(cfg.layers[0].rh_exact, 3.0);
+        assert_eq!(cfg.layers[0].rx_exact, 1.5);
+        assert_eq!(cfg.layers[0].mx, 43);
+        assert_eq!(cfg.layers[0].mh, 22);
+        // Latencies: both modules land on the bottleneck's 64 cycles.
+        assert_eq!(cfg.layers[1].lat_t(), 64);
+        assert_eq!(cfg.layers[0].lat_t(), 64);
+    }
+
+    #[test]
+    fn uniform_config_is_imbalanced_for_ae_topologies() {
+        let topo = Topology::from_name("F32-D6").unwrap();
+        let bal = BalancedConfig::balance(&topo, 1);
+        let uni = BalancedConfig::uniform(&topo, 1);
+        assert!(bal.balance_ratio() > 0.7, "balanced ratio {}", bal.balance_ratio());
+        assert!(uni.balance_ratio() < 0.5, "uniform ratio {}", uni.balance_ratio());
+    }
+
+    #[test]
+    fn multipliers_scale_inversely_with_rh_m() {
+        let topo = Topology::from_name("F64-D2").unwrap();
+        let m1 = BalancedConfig::balance(&topo, 1).total_multipliers();
+        let m4 = BalancedConfig::balance(&topo, 4).total_multipliers();
+        let m8 = BalancedConfig::balance(&topo, 8).total_multipliers();
+        assert!(m1 > 2 * m4, "m1={m1} m4={m4}");
+        assert!(m4 > m8, "m4={m4} m8={m8}");
+    }
+
+    #[test]
+    fn mx_mh_meet_throughput() {
+        // M multipliers at the exact reuse factor cover all 4·LH MACs per
+        // element: M ≥ 4·LH/R_exact.
+        props("throughput", 128, |g| {
+            let topo = g.choose(&Topology::paper_models()).clone();
+            let rh_m = g.u64_below(8) + 1;
+            for l in BalancedConfig::balance(&topo, rh_m).layers {
+                assert!(l.mx as f64 * l.rx_exact >= 4.0 * l.lh as f64 - 1e-9);
+                assert!(l.mh as f64 * l.rh_exact >= 4.0 * l.lh as f64 - 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn effective_reuse_close_to_exact() {
+        props("eff_reuse", 64, |g| {
+            let topo = g.choose(&Topology::paper_models()).clone();
+            let cfg = BalancedConfig::balance(&topo, g.u64_below(6) + 1);
+            for l in &cfg.layers {
+                assert!(l.rx_effective() <= l.rx_exact + 1e-9);
+                assert!(l.rh_effective() <= l.rh_exact + 1e-9);
+                // Never more than 2x faster than asked (ceil of small counts).
+                assert!(l.rx_effective() * 2.0 + 1e-9 >= l.rx_exact.min(4.0 * l.lh as f64));
+            }
+        });
+    }
+}

@@ -1,0 +1,186 @@
+//! Per-cycle stepped reference simulator.
+//!
+//! A literal state-machine implementation of the dataflow architecture:
+//! every module is an Idle/Busy/WaitPush automaton, inter-module FIFOs
+//! are explicit [`super::fifo::Fifo`]s, and the main loop advances one
+//! clock cycle at a time (with an intra-cycle fixpoint so that a pop and
+//! the push it unblocks can land in the same cycle, as combinational
+//! FIFO handshakes do).
+//!
+//! This is deliberately *different machinery* from the max-plus
+//! recurrence in [`super::dataflow`]; tests assert the two produce
+//! identical cycle counts on every configuration, which validates the
+//! fast simulator's semantics.
+
+use super::fifo::Fifo;
+use super::dataflow::SimOptions;
+use super::reuse::BalancedConfig;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum State {
+    Idle,
+    Busy { done_at: u64, token: usize },
+    WaitPush { token: usize },
+}
+
+/// Stepped simulation result (subset of the fast simulator's output).
+#[derive(Clone, Debug)]
+pub struct SteppedResult {
+    pub total_cycles: u64,
+    /// push time of each output timestep from the last module.
+    pub output_times: Vec<u64>,
+    /// per-FIFO high-water marks (sizing feedback).
+    pub fifo_high_water: Vec<usize>,
+}
+
+/// Run the per-cycle reference simulation.
+pub fn run_stepped(cfg: &BalancedConfig, opts: SimOptions, t: usize) -> SteppedResult {
+    assert!(t >= 1);
+    let n = cfg.layers.len();
+    let service: Vec<u64> = cfg.layers.iter().map(|l| l.lat_t()).collect();
+    let cap = opts.fifo_capacity.max(1);
+    // FIFO f[i] feeds module i (for i >= 1). Module 0 reads the DRAM
+    // stream directly (the reader's availability schedule is the buffer).
+    let mut fifos: Vec<Fifo<usize>> = (1..n).map(|_| Fifo::new(cap)).collect();
+    let mut state = vec![State::Idle; n];
+    let mut next_token = vec![0usize; n]; // next timestep index each module will pop
+    let mut output_times = vec![0u64; t];
+    let mut outputs_done = 0usize;
+
+    let reader_avail = |tok: usize| opts.reader_cycles_per_t * (tok as u64 + 1);
+    let writer_free = |tok: usize| opts.writer_cycles_per_t * (tok as u64 + 1);
+
+    let mut cycle: u64 = 0;
+    // Generous guard: serial execution bound + fills + slack.
+    let guard = (t as u64 + n as u64 + 4)
+        * (service.iter().sum::<u64>()
+            + opts.reader_cycles_per_t
+            + opts.writer_cycles_per_t
+            + 4)
+        + 1_000;
+    while outputs_done < t {
+        assert!(cycle <= guard, "stepped simulator exceeded cycle guard — deadlock?");
+        // Intra-cycle fixpoint: at most N+1 dependent handshakes per cycle.
+        for _ in 0..=n {
+            let mut changed = false;
+            for i in 0..n {
+                match state[i] {
+                    State::Busy { done_at, token } if done_at <= cycle => {
+                        state[i] = State::WaitPush { token };
+                        changed = true;
+                    }
+                    State::WaitPush { token } => {
+                        let pushed = if i + 1 < n {
+                            fifos[i].try_push(token).is_ok()
+                        } else {
+                            writer_free(token) <= cycle
+                        };
+                        if pushed {
+                            if i + 1 == n {
+                                output_times[token] = cycle;
+                                outputs_done += 1;
+                            }
+                            state[i] = State::Idle;
+                            changed = true;
+                        }
+                    }
+                    State::Idle => {
+                        let tok = next_token[i];
+                        if tok < t {
+                            let available = if i == 0 {
+                                reader_avail(tok) <= cycle
+                            } else {
+                                // Peek: pop only if a token is waiting.
+                                !fifos[i - 1].is_empty()
+                            };
+                            if available {
+                                if i > 0 {
+                                    let got = fifos[i - 1].try_pop().unwrap();
+                                    debug_assert_eq!(got, tok, "FIFO order");
+                                }
+                                next_token[i] += 1;
+                                state[i] =
+                                    State::Busy { done_at: cycle + service[i], token: tok };
+                                changed = true;
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        if outputs_done < t {
+            cycle += 1;
+        }
+    }
+
+    SteppedResult {
+        total_cycles: output_times[t - 1],
+        output_times,
+        fifo_high_water: fifos.iter().map(|f| f.high_water()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::dataflow::DataflowSim;
+    use crate::model::Topology;
+    use crate::util::prop::props;
+
+    #[test]
+    fn agrees_with_fast_simulator_on_paper_models() {
+        for topo in Topology::paper_models() {
+            let rh_m = BalancedConfig::paper_rh_m(&topo.name).unwrap();
+            let cfg = BalancedConfig::balance(&topo, rh_m);
+            for t in [1usize, 2, 6, 16] {
+                let fast = DataflowSim::new(&cfg).run_sequence(t);
+                let slow = run_stepped(&cfg, SimOptions::default(), t);
+                assert_eq!(fast.total_cycles, slow.total_cycles, "{} T={t}", topo.name);
+                assert_eq!(fast.output_times, slow.output_times);
+            }
+        }
+    }
+
+    #[test]
+    fn agrees_under_random_configs_fifos_and_rates() {
+        props("stepped_vs_fast", 40, |g| {
+            let f = 1usize << g.usize_in(3, 5);
+            let d = 2 * g.usize_in(1, 3);
+            let Ok(topo) = Topology::new(f, d) else { return };
+            let cfg = if g.bool() {
+                BalancedConfig::balance(&topo, g.u64_below(4) + 1)
+            } else {
+                BalancedConfig::uniform(&topo, g.u64_below(4) + 1)
+            };
+            let opts = SimOptions {
+                fifo_capacity: g.usize_in(1, 4),
+                reader_cycles_per_t: g.u64_below(3) * (f as u64 / 2),
+                writer_cycles_per_t: g.u64_below(2) * (f as u64 / 2),
+            };
+            let t = g.usize_in(1, 24);
+            let fast = DataflowSim::with_options(&cfg, opts).run_sequence(t);
+            let slow = run_stepped(&cfg, opts, t);
+            assert_eq!(
+                fast.total_cycles, slow.total_cycles,
+                "{} T={t} opts={opts:?}",
+                topo.name
+            );
+            assert_eq!(fast.output_times, slow.output_times);
+        });
+    }
+
+    #[test]
+    fn fifo_high_water_bounded_by_capacity() {
+        let topo = Topology::from_name("F32-D6").unwrap();
+        let cfg = BalancedConfig::uniform(&topo, 1); // imbalanced → pressure
+        let opts = SimOptions { fifo_capacity: 3, ..Default::default() };
+        let r = run_stepped(&cfg, opts, 32);
+        for hw in r.fifo_high_water {
+            assert!(hw <= 3);
+        }
+    }
+}

@@ -1,0 +1,256 @@
+//! Piecewise-Linear (PWL) approximations of sigmoid and tanh, matching the
+//! paper's FPGA implementation (§4.1: "Piecewise Linear Approximations for
+//! sigmoid and tanh").
+//!
+//! Scheme (mirrored bit-for-bit in grid layout by
+//! `python/compile/kernels/quant.py`):
+//! - uniform breakpoints over [-8, 8], `SEGMENTS` segments (default 128,
+//!   width 0.125 — a power of two so the index computation is a shift on
+//!   the FPGA);
+//! - node values `y_k = f(x_k)` quantized to Q8.24;
+//! - linear interpolation between nodes;
+//! - hard saturation outside the range (σ→{0,1}, tanh→{−1,1} — at |8| the
+//!   true functions are within 3.4e-4 of the limits, below the PWL error).
+//!
+//! Maximum absolute error vs the exact function is ~f''·w²/8: ≈1.2e-4 for
+//! sigmoid, ≈1.5e-3 for tanh at width 0.125 (verified by tests below).
+
+use crate::fixed::Q8_24;
+
+/// PWL input range lower bound.
+pub const PWL_LO: f64 = -8.0;
+/// PWL input range upper bound.
+pub const PWL_HI: f64 = 8.0;
+/// Default number of linear segments.
+pub const SEGMENTS: usize = 128;
+
+/// Which function a table approximates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActKind {
+    Sigmoid,
+    Tanh,
+}
+
+impl ActKind {
+    pub fn exact(self, x: f64) -> f64 {
+        match self {
+            ActKind::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            ActKind::Tanh => x.tanh(),
+        }
+    }
+
+    fn sat_lo(self) -> f64 {
+        match self {
+            ActKind::Sigmoid => 0.0,
+            ActKind::Tanh => -1.0,
+        }
+    }
+
+    fn sat_hi(self) -> f64 {
+        1.0
+    }
+}
+
+/// A PWL table: node values quantized to Q8.24.
+#[derive(Clone, Debug)]
+pub struct Pwl {
+    pub kind: ActKind,
+    pub segments: usize,
+    /// segments + 1 node values on the Q8.24 grid.
+    nodes: Vec<Q8_24>,
+    lo: f64,
+    inv_width: f64,
+    sat_lo: Q8_24,
+    sat_hi: Q8_24,
+    /// Cached quantized range bounds (hot path: one compare each).
+    lo_q: Q8_24,
+    hi_q: Q8_24,
+    /// `Some(s)` when `pos = dx << s` (segments a power of two with the
+    /// 16-wide range), else the f64 fallback is used.
+    pos_shift: Option<u32>,
+}
+
+impl Pwl {
+    pub fn new(kind: ActKind, segments: usize) -> Pwl {
+        assert!(segments >= 2);
+        let lo = PWL_LO;
+        let width = (PWL_HI - PWL_LO) / segments as f64;
+        let nodes = (0..=segments)
+            .map(|k| Q8_24::from_f64(kind.exact(lo + k as f64 * width)))
+            .collect();
+        // pos = dx · segments / 16: a pure left shift when segments is a
+        // power of two ≥ 16 (default 128 ⇒ shift 3).
+        let pos_shift = if segments.is_power_of_two() && segments >= 16 {
+            Some((segments / 16).trailing_zeros())
+        } else {
+            None
+        };
+        Pwl {
+            kind,
+            segments,
+            nodes,
+            lo,
+            inv_width: 1.0 / width,
+            sat_lo: Q8_24::from_f64(kind.sat_lo()),
+            sat_hi: Q8_24::from_f64(kind.sat_hi()),
+            lo_q: Q8_24::from_f64(lo),
+            hi_q: Q8_24::from_f64(PWL_HI),
+            pos_shift,
+        }
+    }
+
+    pub fn sigmoid() -> Pwl {
+        Pwl::new(ActKind::Sigmoid, SEGMENTS)
+    }
+
+    pub fn tanh() -> Pwl {
+        Pwl::new(ActKind::Tanh, SEGMENTS)
+    }
+
+    /// Evaluate in f64 on the quantized node table (reference semantics —
+    /// what the JAX quantized path computes, modulo f32 rounding).
+    pub fn eval_f64(&self, x: f64) -> f64 {
+        if x <= self.lo {
+            return self.sat_lo.to_f64();
+        }
+        if x >= PWL_HI {
+            return self.sat_hi.to_f64();
+        }
+        let pos = (x - self.lo) * self.inv_width;
+        let k = (pos as usize).min(self.segments - 1);
+        let t = pos - k as f64;
+        let y0 = self.nodes[k].to_f64();
+        let y1 = self.nodes[k + 1].to_f64();
+        y0 + (y1 - y0) * t
+    }
+
+    /// Evaluate in Q8.24 — the golden-model datapath. Index arithmetic uses
+    /// the raw integer directly: with width = 2⁻³ · 2⁰ = 0.125 = 2^(24−3−…)
+    /// the segment index is a shift, as on the FPGA.
+    #[inline]
+    pub fn eval_q(&self, x: Q8_24) -> Q8_24 {
+        if x.0 <= self.lo_q.0 {
+            return self.sat_lo;
+        }
+        if x.0 >= self.hi_q.0 {
+            return self.sat_hi;
+        }
+        // pos = (x - lo) / width, in raw units. width = 16/segments is a
+        // power of two for the default tables, so pos is a left shift;
+        // non-power-of-two segment counts take the f64 fallback.
+        let dx = (x.0 as i64) - (self.lo_q.0 as i64); // ≥ 0, scale 2^24
+        let (k, t_raw) = match self.pos_shift {
+            Some(s) => {
+                let pos = dx << s; // raw pos, scale 2^24 ⇒ k = pos >> 24
+                let k = (pos >> 24) as usize;
+                let t_raw = (pos & ((1 << 24) - 1)) as i32; // frac, Q0.24
+                (k.min(self.segments - 1), Q8_24(t_raw))
+            }
+            None => {
+                let pos = (dx as f64 / crate::fixed::SCALE) * self.inv_width;
+                let k = (pos as usize).min(self.segments - 1);
+                (k, Q8_24::from_f64(pos - k as f64))
+            }
+        };
+        let y0 = self.nodes[k];
+        let y1 = self.nodes[k + 1];
+        y0.add(y1.sub(y0).mul(t_raw))
+    }
+
+    /// Maximum absolute error vs the exact function over a dense grid
+    /// (used by tests and the design-space example).
+    pub fn max_error(&self, samples: usize) -> f64 {
+        (0..=samples)
+            .map(|i| {
+                let x = PWL_LO - 1.0 + (PWL_HI - PWL_LO + 2.0) * i as f64 / samples as f64;
+                let approx = self.eval_f64(x);
+                let exact = match self.kind {
+                    // Outside the range the saturated value is the reference.
+                    _ if x <= PWL_LO => self.sat_lo.to_f64(),
+                    _ if x >= PWL_HI => self.sat_hi.to_f64(),
+                    k => k.exact(x),
+                };
+                (approx - exact).abs()
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::props;
+
+    #[test]
+    fn sigmoid_error_bound() {
+        let p = Pwl::sigmoid();
+        let err = p.max_error(100_000);
+        assert!(err < 4e-4, "sigmoid PWL max err {err}");
+    }
+
+    #[test]
+    fn tanh_error_bound() {
+        let p = Pwl::tanh();
+        let err = p.max_error(100_000);
+        assert!(err < 2e-3, "tanh PWL max err {err}");
+    }
+
+    #[test]
+    fn q_path_matches_f64_path() {
+        let ps = [Pwl::sigmoid(), Pwl::tanh()];
+        props("pwl_q_vs_f64", 2048, |g| {
+            let p = g.choose(&ps);
+            let x = g.f64_in(-10.0, 10.0);
+            let xq = Q8_24::from_f64(x);
+            let yq = p.eval_q(xq).to_f64();
+            let yf = p.eval_f64(xq.to_f64());
+            // One rounding of the interp product + one of the node values.
+            assert!((yq - yf).abs() < 3.0 / crate::fixed::SCALE, "x={x} yq={yq} yf={yf}");
+        });
+    }
+
+    #[test]
+    fn saturation() {
+        let s = Pwl::sigmoid();
+        assert_eq!(s.eval_q(Q8_24::from_f64(-20.0)), Q8_24::from_f64(0.0));
+        assert_eq!(s.eval_q(Q8_24::from_f64(20.0)), Q8_24::from_f64(1.0));
+        let t = Pwl::tanh();
+        assert_eq!(t.eval_q(Q8_24::from_f64(-20.0)), Q8_24::from_f64(-1.0));
+        assert_eq!(t.eval_q(Q8_24::from_f64(20.0)), Q8_24::from_f64(1.0));
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        let ps = [Pwl::sigmoid(), Pwl::tanh()];
+        for p in &ps {
+            let mut prev = f64::NEG_INFINITY;
+            for i in 0..4000 {
+                let x = -10.0 + i as f64 * 0.005;
+                let y = p.eval_f64(x);
+                assert!(y >= prev - 1e-12, "{:?} not monotone at {x}", p.kind);
+                prev = y;
+            }
+        }
+    }
+
+    #[test]
+    fn odd_symmetry_of_tanh_nodes() {
+        // tanh(-x) = -tanh(x) holds on the node grid up to quantization.
+        let p = Pwl::tanh();
+        props("tanh_odd", 512, |g| {
+            let x = g.f64_in(0.0, 8.0);
+            let xq = Q8_24::from_f64(x);
+            let pos = p.eval_q(xq).to_f64();
+            let neg = p.eval_q(Q8_24::from_f64(-xq.to_f64())).to_f64();
+            assert!((pos + neg).abs() < 4.0 / crate::fixed::SCALE, "x={x} pos={pos} neg={neg}");
+        });
+    }
+
+    #[test]
+    fn segment_count_convergence() {
+        // Error shrinks ~quadratically with segment count.
+        let e32 = Pwl::new(ActKind::Tanh, 32).max_error(20_000);
+        let e128 = Pwl::new(ActKind::Tanh, 128).max_error(20_000);
+        assert!(e32 / e128 > 8.0, "e32={e32} e128={e128}");
+    }
+}

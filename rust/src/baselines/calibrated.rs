@@ -1,0 +1,170 @@
+//! Analytical latency models of the paper's CPU (Xeon Gold 5218R,
+//! PyTorch JIT) and GPU (V100, PyTorch JIT), calibrated by linear least
+//! squares against the paper's Table 2.
+//!
+//! Model form (per platform):
+//!
+//! ```text
+//! lat_ms(N, w, T) = a + b·N + c·N·T + d·w·N·T ,   w = features / 32
+//! ```
+//!
+//! Rationale: the paper's CPU/GPU latencies are dominated by per-layer,
+//! per-timestep kernel dispatch (both scale ~linearly in N·T and are
+//! nearly width-independent at these sizes — framework overhead, not
+//! FLOPs); the affine `a + b·N` term captures fixed launch/sync cost.
+//! The fit quality (R² ≥ 0.98 for CPU, ≥ 0.99 for GPU) is asserted by
+//! tests, so if the embedded paper data and the model ever disagree the
+//! suite fails loudly rather than silently misrepresenting the baseline.
+
+use crate::model::Topology;
+use crate::report::paper_data;
+use crate::util::linalg::{lstsq, r_squared};
+
+/// Which published platform a calibrated model reproduces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Platform {
+    XeonGold5218R,
+    V100,
+}
+
+impl Platform {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Platform::XeonGold5218R => "CPU (Xeon Gold 5218R, paper-calibrated)",
+            Platform::V100 => "GPU (V100, paper-calibrated)",
+        }
+    }
+
+    pub fn power_w(&self) -> f64 {
+        match self {
+            Platform::XeonGold5218R => paper_data::PAPER_CPU_POWER_W,
+            Platform::V100 => paper_data::PAPER_GPU_POWER_W,
+        }
+    }
+}
+
+/// A calibrated `a + b·N + c·N·T + d·w·N·T` latency model.
+#[derive(Clone, Debug)]
+pub struct CalibratedModel {
+    pub platform: Platform,
+    /// β = [a, b, c, d].
+    pub beta: [f64; 4],
+    /// Goodness of fit on the 24 calibration points.
+    pub r2: f64,
+}
+
+fn design_row(n: usize, w: f64, t: usize) -> [f64; 4] {
+    [1.0, n as f64, n as f64 * t as f64, w * n as f64 * t as f64]
+}
+
+impl CalibratedModel {
+    /// Fit against the paper's Table 2 column for the platform.
+    pub fn fit(platform: Platform) -> CalibratedModel {
+        let mut xs = Vec::with_capacity(24 * 4);
+        let mut ys = Vec::with_capacity(24);
+        for col in &paper_data::TABLE2 {
+            let topo = Topology::from_name(col.model).expect("paper model");
+            let w = topo.features as f64 / 32.0;
+            let lat = match platform {
+                Platform::XeonGold5218R => &col.cpu,
+                Platform::V100 => &col.gpu,
+            };
+            for (i, &t) in paper_data::TIMESTEPS.iter().enumerate() {
+                xs.extend_from_slice(&design_row(topo.depth, w, t));
+                ys.push(lat[i]);
+            }
+        }
+        let beta_v = lstsq(&xs, &ys, 4).expect("calibration fit");
+        let beta = [beta_v[0], beta_v[1], beta_v[2], beta_v[3]];
+        let pred: Vec<f64> = (0..ys.len())
+            .map(|i| {
+                (0..4).map(|k| beta[k] * xs[i * 4 + k]).sum::<f64>()
+            })
+            .collect();
+        CalibratedModel { platform, beta, r2: r_squared(&pred, &ys) }
+    }
+
+    /// Predicted latency in ms for a topology and sequence length.
+    pub fn latency_ms(&self, topo: &Topology, t: usize) -> f64 {
+        let w = topo.features as f64 / 32.0;
+        let row = design_row(topo.depth, w, t);
+        (0..4).map(|k| self.beta[k] * row[k]).sum()
+    }
+
+    /// Energy per timestep in mJ via the platform power band.
+    pub fn energy_per_timestep_mj(&self, topo: &Topology, t: usize) -> f64 {
+        crate::accel::energy::energy_per_timestep_mj(
+            self.platform.power_w(),
+            self.latency_ms(topo, t),
+            t,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_fit_quality() {
+        let m = CalibratedModel::fit(Platform::XeonGold5218R);
+        assert!(m.r2 > 0.97, "CPU fit R² = {}", m.r2);
+    }
+
+    #[test]
+    fn gpu_fit_quality() {
+        let m = CalibratedModel::fit(Platform::V100);
+        assert!(m.r2 > 0.99, "GPU fit R² = {}", m.r2);
+    }
+
+    #[test]
+    fn predictions_close_to_paper_cells() {
+        for platform in [Platform::XeonGold5218R, Platform::V100] {
+            let m = CalibratedModel::fit(platform);
+            for col in &paper_data::TABLE2 {
+                let topo = Topology::from_name(col.model).unwrap();
+                let lat = match platform {
+                    Platform::XeonGold5218R => &col.cpu,
+                    Platform::V100 => &col.gpu,
+                };
+                for (i, &t) in paper_data::TIMESTEPS.iter().enumerate() {
+                    let pred = m.latency_ms(&topo, t);
+                    let rel = (pred - lat[i]).abs() / lat[i];
+                    assert!(
+                        rel < 0.35,
+                        "{:?} {} T={t}: pred {pred:.3} vs paper {:.3}",
+                        platform,
+                        col.model,
+                        lat[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gpu_nearly_flat_in_t_cpu_is_not() {
+        // The regime the paper describes: GPU latency barely moves with T,
+        // CPU grows steeply.
+        let topo = Topology::from_name("F32-D6").unwrap();
+        let gpu = CalibratedModel::fit(Platform::V100);
+        let cpu = CalibratedModel::fit(Platform::XeonGold5218R);
+        let gpu_ratio = gpu.latency_ms(&topo, 64) / gpu.latency_ms(&topo, 1);
+        let cpu_ratio = cpu.latency_ms(&topo, 64) / cpu.latency_ms(&topo, 1);
+        assert!(gpu_ratio < 1.6, "gpu 64/1 ratio {gpu_ratio}");
+        assert!(cpu_ratio > 4.0, "cpu 64/1 ratio {cpu_ratio}");
+    }
+
+    #[test]
+    fn depth_scaling_matches_paper_claim() {
+        // D2 → D6 at T=64 on F64: CPU ≈ 2.9x, GPU ≈ 2.2x (§4.2).
+        let d2 = Topology::from_name("F64-D2").unwrap();
+        let d6 = Topology::from_name("F64-D6").unwrap();
+        let cpu = CalibratedModel::fit(Platform::XeonGold5218R);
+        let gpu = CalibratedModel::fit(Platform::V100);
+        let cpu_scale = cpu.latency_ms(&d6, 64) / cpu.latency_ms(&d2, 64);
+        let gpu_scale = gpu.latency_ms(&d6, 64) / gpu.latency_ms(&d2, 64);
+        assert!((cpu_scale - 2.9).abs() < 0.35, "cpu {cpu_scale}");
+        assert!((gpu_scale - 2.2).abs() < 0.35, "gpu {gpu_scale}");
+    }
+}

@@ -1,0 +1,63 @@
+//! Measured CPU baseline: the LSTM-AE artifact executed through PJRT
+//! (XLA-CPU) on this machine — the honest sequential-software comparator
+//! for the simulated accelerator (paper §4.2's CPU column, with XLA-CPU
+//! on local silicon substituting for PyTorch-JIT on a Xeon Gold 5218R;
+//! see DESIGN.md §1).
+
+use anyhow::Result;
+use std::time::Instant;
+
+use crate::runtime::Runtime;
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::Summary;
+
+/// A latency measurement of one `(model, T)` artifact.
+#[derive(Clone, Debug)]
+pub struct CpuMeasurement {
+    pub model: String,
+    pub t: usize,
+    /// Per-inference wall latency (ms) summary.
+    pub latency_ms: Summary,
+    pub reps: usize,
+}
+
+/// Measure mean inference latency over `reps` runs (after `warmup`),
+/// mirroring the paper's "average latency over 1000 inferences".
+pub fn measure(
+    rt: &Runtime,
+    model: &str,
+    t: usize,
+    warmup: usize,
+    reps: usize,
+) -> Result<CpuMeasurement> {
+    let entry = rt
+        .manifest()
+        .find(model)
+        .ok_or_else(|| anyhow::anyhow!("model {model:?} not in manifest"))?;
+    let f = entry.features;
+    let name = entry.name.clone();
+    let mut rng = Xoshiro256::seeded(0xBA5E11);
+    let x: Vec<f32> = (0..t * f).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    // Compile outside the timed region (the paper's JIT baselines are
+    // likewise timed post-warmup).
+    let _ = rt.infer(&name, t, &x)?;
+    for _ in 0..warmup {
+        let _ = rt.infer(&name, t, &x)?;
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let start = Instant::now();
+        let out = rt.infer(&name, t, &x)?;
+        samples.push(start.elapsed().as_secs_f64() * 1e3);
+        std::hint::black_box(out);
+    }
+    Ok(CpuMeasurement { model: name, t, latency_ms: Summary::of(&samples), reps })
+}
+
+/// Quick power estimate for the measured CPU: we cannot meter wall power
+/// here, so energy columns for the *measured* baseline use the paper's
+/// CPU band (documented substitution); the calibrated model covers the
+/// paper's own platform.
+pub fn assumed_power_w() -> f64 {
+    crate::report::paper_data::PAPER_CPU_POWER_W
+}

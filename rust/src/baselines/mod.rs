@@ -1,0 +1,19 @@
+//! CPU and GPU baselines (paper §4.2 compares against PyTorch-JIT on a
+//! Xeon Gold 5218R and an NVIDIA V100).
+//!
+//! Two kinds of baseline, per the substitution table in DESIGN.md §1:
+//!
+//! - [`cpu`] — a **measured** sequential-software baseline: the same
+//!   LSTM-AE, AOT-lowered by JAX, executed on *this machine's* CPU
+//!   through PJRT (XLA-CPU). Real silicon, real memory hierarchy, honest
+//!   wall-clock.
+//! - [`calibrated`] — **analytical** models of the paper's own platforms,
+//!   least-squares fitted to the 24 published latency cells per platform
+//!   (`lat = a + b·N + (c + d·w)·N·T`, w = F/32). These regenerate the
+//!   paper's rows so the comparison shape (who wins, crossovers) can be
+//!   verified even though we do not own a V100 or a 5218R.
+
+pub mod calibrated;
+pub mod cpu;
+
+pub use calibrated::{CalibratedModel, Platform};

@@ -1,0 +1,235 @@
+//! Fixed-point arithmetic matching the paper's FPGA datapath: 32-bit
+//! words with 24 fractional bits (Q8.24, §4.1), saturating, with
+//! round-to-nearest-even on precision-losing operations.
+//!
+//! Two layers:
+//! - [`QFormat`] — a runtime format descriptor (word length, fractional
+//!   bits) used by the resource model and accuracy sweeps.
+//! - [`Q8_24`] — the concrete datapath type used by the golden model:
+//!   value = raw / 2²⁴, raw: i32, range [−128, 128 − 2⁻²⁴].
+//!
+//! Multiplication widens to i64 (as DSP48 cascades do), then rounds and
+//! saturates back. The Pallas kernel's quantized variant emulates the same
+//! grid in f32 — every representable Q8.24 value with |v| < 2⁷ has ≤ 31
+//! significant bits, so the *grid* is shared even though f32 rounds values
+//! with > 24 significant mantissa bits; the python/rust agreement test
+//! bounds that representation error explicitly.
+
+pub mod qformat;
+
+pub use qformat::QFormat;
+
+/// Number of fractional bits in the paper's datapath.
+pub const FRAC_BITS: u32 = 24;
+/// 2^24 as f64, the quantization step reciprocal.
+pub const SCALE: f64 = (1u64 << FRAC_BITS) as f64;
+
+/// A Q8.24 fixed-point number: i32 raw, 24 fractional bits, saturating.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct Q8_24(pub i32);
+
+impl Q8_24 {
+    pub const ZERO: Q8_24 = Q8_24(0);
+    pub const ONE: Q8_24 = Q8_24(1 << FRAC_BITS);
+    pub const MAX: Q8_24 = Q8_24(i32::MAX);
+    pub const MIN: Q8_24 = Q8_24(i32::MIN);
+
+    /// Quantize an f64 with round-to-nearest(-even at .5 via `round_ties_even`
+    /// is unstable; we use round-half-away which matches `jnp.round`'s
+    /// behaviour only at exact .5 raws — the agreement test avoids exact
+    /// ties by construction) and saturation.
+    #[inline]
+    pub fn from_f64(v: f64) -> Q8_24 {
+        let scaled = v * SCALE;
+        if scaled >= i32::MAX as f64 {
+            Q8_24::MAX
+        } else if scaled <= i32::MIN as f64 {
+            Q8_24::MIN
+        } else {
+            Q8_24(scaled.round() as i32)
+        }
+    }
+
+    #[inline]
+    pub fn from_f32(v: f32) -> Q8_24 {
+        Self::from_f64(v as f64)
+    }
+
+    #[inline]
+    pub fn to_f64(self) -> f64 {
+        self.0 as f64 / SCALE
+    }
+
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        self.to_f64() as f32
+    }
+
+    /// Saturating addition — FPGA adders in the datapath saturate rather
+    /// than wrap so anomalies cannot alias into benign reconstructions.
+    #[inline]
+    pub fn add(self, rhs: Q8_24) -> Q8_24 {
+        Q8_24(self.0.saturating_add(rhs.0))
+    }
+
+    #[inline]
+    pub fn sub(self, rhs: Q8_24) -> Q8_24 {
+        Q8_24(self.0.saturating_sub(rhs.0))
+    }
+
+    /// Saturating multiply: widen to i64, round-to-nearest (half away from
+    /// zero), shift back, saturate. Mirrors a DSP48E2 27×24 multiply with
+    /// post-adder rounding.
+    #[inline]
+    pub fn mul(self, rhs: Q8_24) -> Q8_24 {
+        let wide = self.0 as i64 * rhs.0 as i64;
+        Q8_24(clamp_i64(round_shift(wide)))
+    }
+
+    /// Fused multiply-accumulate into a wide i64 accumulator (raw scale
+    /// 2^48). The MVM units accumulate wide and round once per dot product,
+    /// exactly like the HLS implementation keeps the DSP cascade wide.
+    #[inline]
+    pub fn mac_wide(acc: i64, a: Q8_24, b: Q8_24) -> i64 {
+        acc.saturating_add(a.0 as i64 * b.0 as i64)
+    }
+
+    /// Collapse a wide accumulator (scale 2^48) back to Q8.24.
+    #[inline]
+    pub fn from_wide(acc: i64) -> Q8_24 {
+        Q8_24(clamp_i64(round_shift(acc)))
+    }
+
+    /// Round an f64 onto the Q8.24 grid and return it as f64 — what the
+    /// quantized JAX path computes. Useful for tolerance reasoning.
+    pub fn quantize_f64(v: f64) -> f64 {
+        Self::from_f64(v).to_f64()
+    }
+}
+
+/// Round-to-nearest, half away from zero, of `v / 2^FRAC_BITS`.
+/// (An arithmetic right shift alone is floor division, which would bias
+/// negative values downward — e.g. round(−1.4) must be −1, not −2.)
+#[inline]
+fn round_shift(v: i64) -> i64 {
+    let half = 1i64 << (FRAC_BITS - 1);
+    if v >= 0 {
+        (v + half) >> FRAC_BITS
+    } else {
+        -((-v + half) >> FRAC_BITS)
+    }
+}
+
+#[inline]
+fn clamp_i64(v: i64) -> i32 {
+    if v > i32::MAX as i64 {
+        i32::MAX
+    } else if v < i32::MIN as i64 {
+        i32::MIN
+    } else {
+        v as i32
+    }
+}
+
+/// Dot product in the wide-accumulator discipline used by the MVM units.
+pub fn dot_q(a: &[Q8_24], b: &[Q8_24]) -> Q8_24 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0i64;
+    for (&x, &w) in a.iter().zip(b) {
+        acc = Q8_24::mac_wide(acc, x, w);
+    }
+    Q8_24::from_wide(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::props;
+
+    #[test]
+    fn roundtrip_exact_on_grid() {
+        for raw in [0i32, 1, -1, 1 << 24, -(1 << 24), 12345678, i32::MAX, i32::MIN] {
+            let q = Q8_24(raw);
+            assert_eq!(Q8_24::from_f64(q.to_f64()), q, "raw={raw}");
+        }
+    }
+
+    #[test]
+    fn quantization_error_bounded() {
+        props("quant_err", 512, |g| {
+            let v = g.f64_in(-100.0, 100.0);
+            let q = Q8_24::from_f64(v).to_f64();
+            assert!((q - v).abs() <= 0.5 / SCALE + 1e-15, "v={v} q={q}");
+        });
+    }
+
+    #[test]
+    fn saturation_add() {
+        let big = Q8_24::from_f64(127.0);
+        assert_eq!(big.add(big), Q8_24::MAX);
+        let small = Q8_24::from_f64(-127.0);
+        assert_eq!(small.add(small), Q8_24::MIN);
+    }
+
+    #[test]
+    fn saturation_mul() {
+        let a = Q8_24::from_f64(100.0);
+        assert_eq!(a.mul(a), Q8_24::MAX); // 10000 >> 128
+        let b = Q8_24::from_f64(-100.0);
+        assert_eq!(a.mul(b), Q8_24::MIN);
+    }
+
+    #[test]
+    fn mul_matches_float_within_half_ulp() {
+        props("mul_close", 1024, |g| {
+            let x = g.f64_in(-8.0, 8.0);
+            let y = g.f64_in(-8.0, 8.0);
+            let qx = Q8_24::from_f64(x);
+            let qy = Q8_24::from_f64(y);
+            let got = qx.mul(qy).to_f64();
+            let want = qx.to_f64() * qy.to_f64();
+            assert!((got - want).abs() <= 0.5 / SCALE + 1e-12, "x={x} y={y} got={got} want={want}");
+        });
+    }
+
+    #[test]
+    fn one_is_identity() {
+        props("mul_one", 256, |g| {
+            let x = Q8_24::from_f64(g.f64_in(-100.0, 100.0));
+            assert_eq!(x.mul(Q8_24::ONE), x);
+        });
+    }
+
+    #[test]
+    fn mul_commutes() {
+        props("mul_comm", 512, |g| {
+            let a = Q8_24::from_f64(g.f64_in(-11.0, 11.0));
+            let b = Q8_24::from_f64(g.f64_in(-11.0, 11.0));
+            assert_eq!(a.mul(b), b.mul(a));
+        });
+    }
+
+    #[test]
+    fn wide_dot_more_accurate_than_narrow() {
+        // Accumulating wide then rounding once must equal the exact integer
+        // dot product rounded once.
+        props("dot_exact", 128, |g| {
+            let n = g.usize_in(1, 64);
+            let a: Vec<Q8_24> = (0..n).map(|_| Q8_24::from_f64(g.f64_in(-1.0, 1.0))).collect();
+            let b: Vec<Q8_24> = (0..n).map(|_| Q8_24::from_f64(g.f64_in(-1.0, 1.0))).collect();
+            let got = dot_q(&a, &b).to_f64();
+            let exact: f64 = a.iter().zip(&b).map(|(x, w)| x.to_f64() * w.to_f64()).sum();
+            assert!((got - exact).abs() <= 0.5 / SCALE + 1e-9, "got={got} exact={exact}");
+        });
+    }
+
+    #[test]
+    fn from_wide_rounds_half_away() {
+        // 1.5 ulp in wide scale rounds to 2 raw.
+        let acc = 3i64 << (FRAC_BITS - 1); // = 1.5 * 2^24 in 2^48 scale? No:
+        // acc is at scale 2^48; 1.5 raw-units of Q8.24 = 1.5 * 2^24 at 2^48.
+        let acc = acc; // 3 * 2^23 = 1.5 * 2^24 ✓
+        assert_eq!(Q8_24::from_wide(acc).0, 2);
+        assert_eq!(Q8_24::from_wide(-acc).0, -2);
+    }
+}

@@ -1,0 +1,111 @@
+//! Runtime fixed-point format descriptor. The datapath type is Q8.24
+//! ([`super::Q8_24`]); this descriptor exists so the resource model and
+//! the accuracy-vs-precision sweep (`examples/design_space.rs`) can
+//! reason about alternative word lengths the way an HLS `ap_fixed<W,I>`
+//! template parameter would.
+
+/// `Q{int_bits}.{frac_bits}` signed fixed point in a `word_bits` word
+/// (word_bits = 1 sign + int_bits + frac_bits).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QFormat {
+    pub word_bits: u32,
+    pub frac_bits: u32,
+}
+
+impl QFormat {
+    /// The paper's datapath format (§4.1): 32-bit, 24 fractional.
+    pub const PAPER: QFormat = QFormat { word_bits: 32, frac_bits: 24 };
+
+    pub fn new(word_bits: u32, frac_bits: u32) -> QFormat {
+        assert!(word_bits >= 2 && word_bits <= 64, "word_bits {word_bits}");
+        assert!(frac_bits < word_bits, "frac {frac_bits} must leave a sign bit");
+        QFormat { word_bits, frac_bits }
+    }
+
+    pub fn int_bits(&self) -> u32 {
+        self.word_bits - 1 - self.frac_bits
+    }
+
+    /// Quantization step 2^-frac.
+    pub fn step(&self) -> f64 {
+        (2.0f64).powi(-(self.frac_bits as i32))
+    }
+
+    /// Largest representable value.
+    pub fn max_value(&self) -> f64 {
+        let max_raw = (1i128 << (self.word_bits - 1)) - 1;
+        max_raw as f64 * self.step()
+    }
+
+    /// Most negative representable value.
+    pub fn min_value(&self) -> f64 {
+        -((1i128 << (self.word_bits - 1)) as f64) * self.step()
+    }
+
+    /// Quantize with round-to-nearest + saturation (reference semantics for
+    /// arbitrary formats; the Q8.24 fast path lives in `Q8_24`).
+    pub fn quantize(&self, v: f64) -> f64 {
+        let scaled = (v / self.step()).round();
+        let max_raw = ((1i128 << (self.word_bits - 1)) - 1) as f64;
+        let min_raw = -((1i128 << (self.word_bits - 1)) as f64);
+        scaled.clamp(min_raw, max_raw) * self.step()
+    }
+
+    /// Mean squared quantization error of a sample (accuracy sweeps).
+    pub fn mse(&self, xs: &[f64]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.iter().map(|&x| (x - self.quantize(x)).powi(2)).sum::<f64>() / xs.len() as f64
+    }
+}
+
+impl std::fmt::Display for QFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Q{}.{}", self.int_bits(), self.frac_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q8_24;
+    use crate::util::prop::props;
+
+    #[test]
+    fn paper_format_bounds() {
+        let q = QFormat::PAPER;
+        assert_eq!(q.int_bits(), 7);
+        assert_eq!(format!("{q}"), "Q7.24");
+        assert!((q.max_value() - (128.0 - q.step())).abs() < 1e-12);
+        assert_eq!(q.min_value(), -128.0);
+    }
+
+    #[test]
+    fn quantize_agrees_with_q8_24() {
+        props("qformat_vs_q824", 512, |g| {
+            let v = g.f64_in(-200.0, 200.0);
+            let a = QFormat::PAPER.quantize(v);
+            let b = Q8_24::from_f64(v).to_f64();
+            assert!((a - b).abs() < 1e-12, "v={v} a={a} b={b}");
+        });
+    }
+
+    #[test]
+    fn narrower_formats_have_larger_error() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64) * 0.001357 - 0.5).collect();
+        let e16 = QFormat::new(16, 12).mse(&xs);
+        let e32 = QFormat::PAPER.mse(&xs);
+        assert!(e16 > e32 * 100.0, "e16={e16} e32={e32}");
+    }
+
+    #[test]
+    fn idempotent() {
+        props("quant_idem", 256, |g| {
+            let q = QFormat::new(18, 12);
+            let v = g.f64_in(-30.0, 30.0);
+            let once = q.quantize(v);
+            assert_eq!(once, q.quantize(once));
+        });
+    }
+}

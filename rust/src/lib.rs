@@ -1,0 +1,54 @@
+//! # lstm-ae-accel
+//!
+//! Reproduction of *"Exploiting temporal parallelism for LSTM Autoencoder
+//! acceleration on FPGA"* (CS.AR 2026) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! - **L1/L2 (build time, Python)** — a fused Pallas LSTM-cell kernel and a
+//!   `lax.scan`-based LSTM-Autoencoder model, trained on synthetic telemetry
+//!   and AOT-lowered to HLO text under `artifacts/`.
+//! - **L3 (this crate)** — the paper's system contribution: a cycle-accurate
+//!   **dataflow accelerator simulator** with temporal parallelism across LSTM
+//!   layers ([`accel::dataflow`]), the **dataflow-balancing methodology** via
+//!   hardware reuse factors ([`accel::reuse`], paper Eqs 5–8), an analytical
+//!   latency model ([`accel::latency`], Eqs 1–4), FPGA resource and energy
+//!   models ([`accel::resources`], [`accel::energy`]), CPU/GPU baselines
+//!   ([`baselines`]), a PJRT runtime that executes the AOT artifacts
+//!   ([`runtime`]), and an end-to-end anomaly-detection service ([`server`]).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use lstm_ae_accel::model::Topology;
+//! use lstm_ae_accel::accel::{reuse::BalancedConfig, dataflow::DataflowSim};
+//!
+//! // The paper's LSTM-AE-F32-D2 model: 32 -> 16 -> 32 features.
+//! let topo = Topology::from_name("LSTM-AE-F32-D2").unwrap();
+//! // Balance the dataflow with the paper's RH_m = 1 (Table 1).
+//! let cfg = BalancedConfig::balance(&topo, 1);
+//! // Cycle-accurate simulation of a 64-timestep sequence.
+//! let run = DataflowSim::new(&cfg).run_sequence(64);
+//! println!("latency = {:.3} ms", run.total_ms(300.0e6));
+//! ```
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod util;
+pub mod fixed;
+pub mod activations;
+pub mod model;
+pub mod accel;
+pub mod baselines;
+pub mod runtime;
+pub mod workload;
+pub mod server;
+pub mod report;
+
+/// Paper's target clock for the FPGA designs (§4.1): 300 MHz.
+pub const FPGA_CLOCK_HZ: f64 = 300.0e6;
+
+/// Convert clock cycles at `hz` to milliseconds.
+pub fn cycles_to_ms(cycles: u64, hz: f64) -> f64 {
+    cycles as f64 / hz * 1e3
+}

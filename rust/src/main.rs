@@ -1,0 +1,443 @@
+//! `lstm-ae-accel` CLI — the L3 coordinator entrypoint.
+//!
+//! ```text
+//! lstm-ae-accel <command> [--flags]
+//!
+//! Commands:
+//!   models                         list the paper's models + topologies
+//!   balance   --model F32-D2 --rhm 1     show balanced reuse factors
+//!   simulate  --model F32-D2 --timesteps 64 [--rhm N] [--fifo N]
+//!   table1 | table2 | table3       regenerate the paper's tables
+//!   figures                        depth + latency scaling series
+//!   resources --device zcu104|ultra96|pynqz2|alveo  RH_m fitting sweep
+//!   infer     --model F32-D2 --timesteps 16        one PJRT inference
+//!   measure   --model F32-D2 --timesteps 16 --reps 1000   CPU baseline
+//!   serve     --model F32-D2 --timesteps 16 --requests 1000 --rate 2000
+//!   checks                         run the paper-shape checks
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use lstm_ae_accel::accel::dataflow::{DataflowSim, SimOptions};
+use lstm_ae_accel::accel::latency::LatencyModel;
+use lstm_ae_accel::accel::platform::FpgaDevice;
+use lstm_ae_accel::accel::resources::min_fitting_rh_m;
+use lstm_ae_accel::accel::reuse::BalancedConfig;
+use lstm_ae_accel::baselines::cpu as cpu_baseline;
+use lstm_ae_accel::model::Topology;
+use lstm_ae_accel::report;
+use lstm_ae_accel::runtime::Runtime;
+use lstm_ae_accel::server::{self, AnomalyServer, Backend, PjrtBackend, QuantBackend, ServerConfig};
+use lstm_ae_accel::util::cli::Args;
+use lstm_ae_accel::util::table::Table;
+use lstm_ae_accel::workload::{trace::poisson_trace, TelemetryGen};
+use lstm_ae_accel::model::LstmAutoencoder;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "models" => cmd_models(),
+        "balance" => cmd_balance(&args),
+        "simulate" => cmd_simulate(&args),
+        "table1" => {
+            print!("{}", report::table1());
+            Ok(())
+        }
+        "table2" => cmd_table2(&args),
+        "table3" => {
+            print!("{}", report::table3());
+            Ok(())
+        }
+        "figures" => {
+            print!("{}", report::depth_scaling());
+            print!("{}", report::latency_scaling());
+            Ok(())
+        }
+        "resources" => cmd_resources(&args),
+        "optimize" => cmd_optimize(&args),
+        "throughput" => cmd_throughput(&args),
+        "infer" => cmd_infer(&args),
+        "measure" => cmd_measure(&args),
+        "serve" => cmd_serve(&args),
+        "checks" => cmd_checks(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!("lstm-ae-accel — temporal-parallel LSTM-AE accelerator (paper reproduction)");
+    println!("commands: models balance simulate table1 table2 table3 figures resources");
+    println!("          infer measure serve checks   (see --help strings in main.rs)");
+}
+
+fn topo_from(args: &Args) -> Result<Topology> {
+    Topology::from_name(args.get_or("model", "F32-D2"))
+}
+
+fn cmd_models() -> Result<()> {
+    let mut t = Table::new("Paper models (§4.1)")
+        .header(&["Name", "Chain", "RH_m", "Params", "MACs/timestep"]);
+    for topo in Topology::paper_models() {
+        let rh = BalancedConfig::paper_rh_m(&topo.name).unwrap();
+        t.row(vec![
+            topo.name.clone(),
+            topo.chain().iter().map(|d| d.to_string()).collect::<Vec<_>>().join("→"),
+            rh.to_string(),
+            topo.param_count().to_string(),
+            topo.macs_per_timestep().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_balance(args: &Args) -> Result<()> {
+    let topo = topo_from(args)?;
+    let rh_m = args
+        .get_u64("rhm", BalancedConfig::paper_rh_m(&topo.name).unwrap_or(1));
+    let cfg = BalancedConfig::balance(&topo, rh_m);
+    let mut t = Table::new(&format!("Balanced dataflow for {} (RH_m = {rh_m})", topo.name))
+        .header(&["Layer", "LX", "LH", "RX", "RH", "MX", "MH", "X_t", "H_t", "Lat_t"]);
+    for (i, l) in cfg.layers.iter().enumerate() {
+        let tag = if i == cfg.bottleneck { format!("LSTM_{i} (m)") } else { format!("LSTM_{i}") };
+        t.row(vec![
+            tag,
+            l.lx.to_string(),
+            l.lh.to_string(),
+            format!("{:.2}", l.rx_exact),
+            format!("{:.2}", l.rh_exact),
+            l.mx.to_string(),
+            l.mh.to_string(),
+            l.x_t().to_string(),
+            l.h_t().to_string(),
+            l.lat_t().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("balance ratio (min/max Lat_t): {:.3}", cfg.balance_ratio());
+    println!("total multipliers: {}", cfg.total_multipliers());
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let topo = topo_from(args)?;
+    let rh_m = args
+        .get_u64("rhm", BalancedConfig::paper_rh_m(&topo.name).unwrap_or(1));
+    let t = args.get_usize("timesteps", 64);
+    let cfg = BalancedConfig::balance(&topo, rh_m);
+    let opts = SimOptions {
+        fifo_capacity: args.get_usize("fifo", 2),
+        reader_cycles_per_t: args.get_u64("reader", 0),
+        writer_cycles_per_t: args.get_u64("writer", 0),
+    };
+    let run = DataflowSim::with_options(&cfg, opts).run_sequence(t);
+    let lm = LatencyModel::of(&cfg);
+    println!("model {} | T={t} | RH_m={rh_m} | fifo={}", topo.name, opts.fifo_capacity);
+    println!(
+        "cycles: {} (analytical Eq1: {}) | {:.3} ms @300MHz | steady II {} cyc",
+        run.total_cycles,
+        lm.acc_lat(t),
+        run.total_ms(FpgaDevice::ZCU104.clock_hz),
+        run.steady_ii
+    );
+    let mut tbl = Table::new("Per-module stats")
+        .header(&["Module", "service", "busy", "starved", "blocked", "util"]);
+    for (i, m) in run.per_module.iter().enumerate() {
+        tbl.row(vec![
+            format!("LSTM_{i}"),
+            m.service.to_string(),
+            m.busy.to_string(),
+            m.starved.to_string(),
+            m.blocked.to_string(),
+            format!("{:.3}", m.utilization),
+        ]);
+    }
+    print!("{}", tbl.render());
+    println!("mean utilization: {:.3}", run.mean_utilization());
+    println!(
+        "temporal-parallelism speedup vs layer-by-layer: x{:.2}",
+        lm.temporal_speedup(t)
+    );
+    Ok(())
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    if args.has("measured") {
+        let rt = Runtime::open(&Runtime::default_dir())?;
+        let reps = args.get_usize("reps", 100);
+        let f = move |model: &str, t: usize| -> Option<f64> {
+            cpu_baseline::measure(&rt, model, t, 5, reps).ok().map(|m| m.latency_ms.mean)
+        };
+        print!("{}", report::tables::table2(Some(&f)));
+    } else {
+        print!("{}", report::tables::table2(None));
+    }
+    Ok(())
+}
+
+fn cmd_resources(args: &Args) -> Result<()> {
+    let dev = match args.get_or("device", "zcu104") {
+        "zcu104" => FpgaDevice::ZCU104,
+        "ultra96" => FpgaDevice::ULTRA96,
+        "pynqz2" => FpgaDevice::PYNQ_Z2,
+        "alveo" => FpgaDevice::ALVEO_U50,
+        other => return Err(anyhow!("unknown device {other:?}")),
+    };
+    let mut t = Table::new(&format!("Minimum fitting RH_m on {}", dev.name))
+        .header(&["Model", "RH_m", "LUT%", "FF%", "BRAM%", "DSP%", "Lat_t_m (cyc)"]);
+    for topo in Topology::paper_models() {
+        match min_fitting_rh_m(&topo, &dev, 256) {
+            Some((rh_m, usage)) => {
+                let cfg = BalancedConfig::balance(&topo, rh_m);
+                let lm = LatencyModel::of(&cfg);
+                let p = usage.pct(&dev);
+                t.row(vec![
+                    topo.name.clone(),
+                    rh_m.to_string(),
+                    format!("{:.1}", p.lut),
+                    format!("{:.1}", p.ff),
+                    format!("{:.1}", p.bram),
+                    format!("{:.1}", p.dsp),
+                    lm.lat_t_m().to_string(),
+                ]);
+            }
+            None => {
+                t.row(vec![
+                    topo.name.clone(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "does not fit".into(),
+                ]);
+            }
+        }
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    use lstm_ae_accel::accel::optimizer::{optimize, pareto_front, Objective};
+    let topo = topo_from(args)?;
+    let dev = match args.get_or("device", "zcu104") {
+        "zcu104" => FpgaDevice::ZCU104,
+        "ultra96" => FpgaDevice::ULTRA96,
+        "pynqz2" => FpgaDevice::PYNQ_Z2,
+        "alveo" => FpgaDevice::ALVEO_U50,
+        other => return Err(anyhow!("unknown device {other:?}")),
+    };
+    let t = args.get_usize("timesteps", 64);
+    let objective = match args.get_or("objective", "latency") {
+        "latency" => Objective::Latency,
+        "energy" => Objective::Energy,
+        "area" => Objective::AreaUnderLatencyBound(args.get_u64("bound-us", 500)),
+        other => return Err(anyhow!("unknown objective {other:?}")),
+    };
+    match optimize(&topo, &dev, t, objective) {
+        None => println!("{} does not fit {} at any RH_m", topo.name, dev.name),
+        Some(p) => {
+            println!(
+                "{} on {} (T={t}, {objective:?}): RH_m = {} | {:.4} ms | {:.4} mJ/t | mean util {:.1}%",
+                topo.name, dev.name, p.rh_m, p.latency_ms, p.energy_mj_per_t, p.mean_util_pct
+            );
+        }
+    }
+    let front = pareto_front(&topo, &dev, t);
+    let mut tbl = Table::new("Pareto front (latency vs area)")
+        .header(&["RH_m", "latency ms", "mJ/t", "mean util %"]);
+    for p in front.iter().take(12) {
+        tbl.row(vec![
+            p.rh_m.to_string(),
+            format!("{:.4}", p.latency_ms),
+            format!("{:.4}", p.energy_mj_per_t),
+            format!("{:.1}", p.mean_util_pct),
+        ]);
+    }
+    print!("{}", tbl.render());
+    Ok(())
+}
+
+fn cmd_throughput(args: &Args) -> Result<()> {
+    use lstm_ae_accel::accel::multi::{run_batch, steady_throughput};
+    let topo = topo_from(args)?;
+    let rh_m = args.get_u64("rhm", BalancedConfig::paper_rh_m(&topo.name).unwrap_or(1));
+    let t = args.get_usize("timesteps", 16);
+    let cfg = BalancedConfig::balance(&topo, rh_m);
+    let hz = FpgaDevice::ZCU104.clock_hz;
+    let mut tbl = Table::new(&format!(
+        "Back-to-back sequence throughput, {} (T={t}, RH_m={rh_m})",
+        topo.name
+    ))
+    .header(&["batch", "total cycles", "seq/s", "vs steady-state"]);
+    let steady = steady_throughput(&cfg, t, hz);
+    for n in [1usize, 2, 8, 64, 512] {
+        let b = run_batch(&cfg, SimOptions::default(), t, n);
+        let tp = b.throughput_seq_per_s(hz);
+        tbl.row(vec![
+            n.to_string(),
+            b.total_cycles.to_string(),
+            format!("{tp:.0}"),
+            format!("{:.1}%", 100.0 * tp / steady),
+        ]);
+    }
+    print!("{}", tbl.render());
+    println!("analytical steady state: {steady:.0} seq/s (fill amortizes per batch)");
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let rt = Runtime::open(&Runtime::default_dir())?;
+    let model = args.get_or("model", "F32-D2");
+    let t = args.get_usize("timesteps", 16);
+    let entry = rt
+        .manifest()
+        .find(model)
+        .ok_or_else(|| anyhow!("model {model:?} not in manifest"))?;
+    let f = entry.features;
+    let mut gen = rt.telemetry_for(model, 42).unwrap_or_else(|_| TelemetryGen::new(f, 42));
+    let w = gen.benign_window(t);
+    let flat: Vec<f32> = w.data.iter().flatten().copied().collect();
+    let out = rt.infer(model, t, &flat)?;
+    let mse = flat
+        .iter()
+        .zip(&out)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / flat.len() as f64;
+    println!("platform: {}", rt.platform());
+    println!("model {model} T={t}: reconstruction MSE on benign window = {mse:.6}");
+    Ok(())
+}
+
+fn cmd_measure(args: &Args) -> Result<()> {
+    let rt = Runtime::open(&Runtime::default_dir())?;
+    let model = args.get_or("model", "F32-D2").to_string();
+    let reps = args.get_usize("reps", 1000);
+    let ts = args.get_usize_list("timesteps", &[1, 2, 4, 6, 16, 64]);
+    let mut t = Table::new(&format!("Measured XLA-CPU latency, {model} ({reps} reps)"))
+        .header(&["T", "mean ms", "p50 ms", "p95 ms", "vs FPGA(sim)"]);
+    let topo = Topology::from_name(&model)?;
+    for steps in ts {
+        let m = cpu_baseline::measure(&rt, &model, steps, 10, reps)?;
+        let fpga = report::tables::fpga_latency_ms(&topo, steps);
+        t.row(vec![
+            steps.to_string(),
+            format!("{:.3}", m.latency_ms.mean),
+            format!("{:.3}", m.latency_ms.p50),
+            format!("{:.3}", m.latency_ms.p95),
+            format!("x{:.1}", m.latency_ms.mean / fpga),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "F32-D2").to_string();
+    let t = args.get_usize("timesteps", 16);
+    let n = args.get_usize("requests", 1000);
+    let rate = args.get_f64("rate", 2000.0);
+    let anomaly_rate = args.get_f64("anomaly-rate", 0.1);
+    let cfg = ServerConfig {
+        max_batch: args.get_usize("max-batch", 8),
+        max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us", 500)),
+        workers: args.get_usize("workers", 2),
+        threshold: args.get_f64("threshold", 0.0), // calibrated below
+    };
+
+    // Backend: PJRT artifact if available, else quantized golden model.
+    let topo = Topology::from_name(&model)?;
+    let (backend, backend_name): (Arc<dyn server::Backend>, String) =
+        match PjrtBackend::new(Runtime::default_dir(), &model, t) {
+            Ok(b) => {
+                let name = b.name();
+                (Arc::new(b), name)
+            }
+            Err(_) => {
+                eprintln!("(no artifacts — using quantized golden-model backend)");
+                let b = QuantBackend::new(LstmAutoencoder::random(topo.clone(), 7));
+                let name = b.name();
+                (Arc::new(b), name)
+            }
+        };
+
+    // Calibrate threshold on benign traffic (training-family telemetry
+    // when the spec artifact exists).
+    let spec = Runtime::default_dir().join(format!("telemetry_F{}.json", topo.features));
+    let mk_gen = |seed: u64| {
+        TelemetryGen::from_spec_file(&spec, seed)
+            .unwrap_or_else(|_| TelemetryGen::new(topo.features, seed))
+    };
+    let mut gen = mk_gen(11);
+    let benign: Vec<f64> = (0..64)
+        .map(|_| {
+            let w = gen.benign_window(t);
+            backend.score_batch(&[&w])[0]
+        })
+        .collect();
+    let threshold = server::calibrate_threshold(&benign, 0.99);
+    let cfg = ServerConfig { threshold, ..cfg };
+    println!("backend {backend_name} | threshold {threshold:.6}");
+
+    let srv = AnomalyServer::start(backend, cfg);
+    let mut gen = mk_gen(13);
+    let trace = poisson_trace(&mut gen, 17, rate, n, t, anomaly_rate);
+    let start = std::time::Instant::now();
+    let mut inflight = Vec::with_capacity(n);
+    for req in trace {
+        let target = std::time::Duration::from_secs_f64(req.at_s);
+        if let Some(sleep) = target.checked_sub(start.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        let is_anomaly = req.window.anomaly.is_some();
+        inflight.push((srv.submit(req.window), is_anomaly));
+    }
+    let mut tp = 0u64;
+    let mut fp = 0u64;
+    let mut fneg = 0u64;
+    let mut tn = 0u64;
+    for (rx, truth) in inflight {
+        let r = rx.recv().expect("response");
+        match (r.is_anomaly, truth) {
+            (true, true) => tp += 1,
+            (true, false) => fp += 1,
+            (false, true) => fneg += 1,
+            (false, false) => tn += 1,
+        }
+    }
+    println!("{}", srv.metrics().report());
+    let precision = tp as f64 / (tp + fp).max(1) as f64;
+    let recall = tp as f64 / (tp + fneg).max(1) as f64;
+    println!(
+        "detection: TP {tp} FP {fp} FN {fneg} TN {tn} | precision {precision:.3} recall {recall:.3}"
+    );
+    srv.shutdown();
+    Ok(())
+}
+
+fn cmd_checks() -> Result<()> {
+    let mut failed = 0;
+    for (name, ok, detail) in report::tables::shape_checks() {
+        println!("[{}] {name} {detail}", if ok { "PASS" } else { "FAIL" });
+        if !ok {
+            failed += 1;
+        }
+    }
+    if failed > 0 {
+        Err(anyhow!("{failed} shape checks failed"))
+    } else {
+        Ok(())
+    }
+}

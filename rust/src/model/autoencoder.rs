@@ -1,0 +1,177 @@
+//! Stacked LSTM-Autoencoder forward pass and reconstruction scoring.
+//!
+//! The AE streams a `[T, F]` sequence through `depth` LSTM layers (half
+//! encoder, half decoder — see [`super::topology`]); the last layer's
+//! hidden sequence *is* the reconstruction (its hidden width equals the
+//! input feature width). Anomaly score = per-window mean squared
+//! reconstruction error, the standard LSTM-AE criterion (§2).
+
+use anyhow::Result;
+
+use super::lstm::{lstm_step_f32, LstmState, QuantLstmCell, QuantLstmState};
+use super::topology::Topology;
+use super::weights::ModelWeights;
+use crate::fixed::Q8_24;
+
+/// An LSTM autoencoder with both f32 and quantized (Q8.24 + PWL) forward
+/// paths over the same weights.
+pub struct LstmAutoencoder {
+    pub topo: Topology,
+    pub weights: ModelWeights,
+    quant_cells: Vec<QuantLstmCell>,
+}
+
+impl LstmAutoencoder {
+    pub fn new(topo: Topology, weights: ModelWeights) -> Result<LstmAutoencoder> {
+        weights.validate(&topo)?;
+        let quant_cells = weights.layers.iter().map(QuantLstmCell::new).collect();
+        Ok(LstmAutoencoder { topo, weights, quant_cells })
+    }
+
+    /// Convenience: deterministic random weights (simulator-only runs).
+    pub fn random(topo: Topology, seed: u64) -> LstmAutoencoder {
+        let weights = ModelWeights::random(&topo, seed);
+        Self::new(topo, weights).expect("random weights match topology")
+    }
+
+    /// f32 forward. `x` is row-major `[T][F]`; returns the reconstruction
+    /// with the same shape. This is the semantics the AOT-lowered JAX
+    /// artifact computes (and the CPU baseline measures).
+    pub fn forward_f32(&self, x: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let mut seq: Vec<Vec<f32>> = x.to_vec();
+        for w in &self.weights.layers {
+            let mut state = LstmState::zeros(w.dims.lh);
+            let mut out = Vec::with_capacity(seq.len());
+            for xt in &seq {
+                state = lstm_step_f32(w, &state, xt);
+                out.push(state.h.clone());
+            }
+            seq = out;
+        }
+        seq
+    }
+
+    /// Quantized forward — bit-accurate to the FPGA datapath. Input is
+    /// quantized onto the Q8.24 grid at the DataReader boundary, exactly
+    /// like the accelerator's DMA path.
+    pub fn forward_quant(&self, x: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let mut seq: Vec<Vec<Q8_24>> = x
+            .iter()
+            .map(|row| row.iter().map(|&v| Q8_24::from_f32(v)).collect())
+            .collect();
+        for cell in &self.quant_cells {
+            let mut state = QuantLstmState::zeros(cell.w.dims.lh);
+            let mut out = Vec::with_capacity(seq.len());
+            for xt in &seq {
+                state = cell.step(&state, xt);
+                out.push(state.h.clone());
+            }
+            seq = out;
+        }
+        seq.into_iter().map(|row| row.iter().map(|q| q.to_f32()).collect()).collect()
+    }
+
+    /// Mean squared reconstruction error over the window — the anomaly
+    /// score. `recon` must be shaped like `x`.
+    pub fn mse(x: &[Vec<f32>], recon: &[Vec<f32>]) -> f64 {
+        assert_eq!(x.len(), recon.len());
+        let mut sum = 0.0f64;
+        let mut n = 0usize;
+        for (a, b) in x.iter().zip(recon) {
+            assert_eq!(a.len(), b.len());
+            for (&u, &v) in a.iter().zip(b) {
+                let d = (u - v) as f64;
+                sum += d * d;
+                n += 1;
+            }
+        }
+        sum / n.max(1) as f64
+    }
+
+    /// Anomaly score of a window through the f32 path.
+    pub fn score_f32(&self, x: &[Vec<f32>]) -> f64 {
+        Self::mse(x, &self.forward_f32(x))
+    }
+
+    /// Anomaly score through the quantized (FPGA) path.
+    pub fn score_quant(&self, x: &[Vec<f32>]) -> f64 {
+        Self::mse(x, &self.forward_quant(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Topology;
+    use crate::util::rng::Xoshiro256;
+
+    fn window(t: usize, f: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut r = Xoshiro256::seeded(seed);
+        (0..t).map(|_| (0..f).map(|_| r.uniform(-1.0, 1.0) as f32).collect()).collect()
+    }
+
+    #[test]
+    fn forward_shapes_all_paper_models() {
+        for topo in Topology::paper_models() {
+            let f = topo.features;
+            let ae = LstmAutoencoder::random(topo, 1);
+            let x = window(4, f, 2);
+            let y = ae.forward_f32(&x);
+            assert_eq!(y.len(), 4);
+            assert_eq!(y[0].len(), f);
+            let yq = ae.forward_quant(&x);
+            assert_eq!(yq.len(), 4);
+            assert_eq!(yq[0].len(), f);
+        }
+    }
+
+    #[test]
+    fn quant_path_tracks_f32_path() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let ae = LstmAutoencoder::random(topo, 3);
+        let x = window(8, 32, 4);
+        let yf = ae.forward_f32(&x);
+        let yq = ae.forward_quant(&x);
+        let mut max_d = 0.0f32;
+        for (a, b) in yf.iter().zip(&yq) {
+            for (&u, &v) in a.iter().zip(b) {
+                max_d = max_d.max((u - v).abs());
+            }
+        }
+        // PWL tanh error compounds across 2 layers and 8 steps.
+        assert!(max_d < 0.05, "max |f32 - quant| = {max_d}");
+    }
+
+    #[test]
+    fn mse_zero_iff_identical() {
+        let x = window(3, 8, 5);
+        assert_eq!(LstmAutoencoder::mse(&x, &x), 0.0);
+        let mut y = x.clone();
+        y[1][2] += 0.5;
+        assert!(LstmAutoencoder::mse(&x, &y) > 0.0);
+    }
+
+    #[test]
+    fn longer_window_is_streaming_prefix_consistent() {
+        // Streaming property of stacked LSTMs: the first t outputs depend
+        // only on the first t inputs.
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let ae = LstmAutoencoder::random(topo, 6);
+        let x = window(10, 32, 7);
+        let full = ae.forward_f32(&x);
+        let prefix = ae.forward_f32(&x[..4]);
+        for t in 0..4 {
+            for (a, b) in full[t].iter().zip(&prefix[t]) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_mismatched_weights() {
+        let t2 = Topology::from_name("F32-D2").unwrap();
+        let t6 = Topology::from_name("F32-D6").unwrap();
+        let w = ModelWeights::random(&t2, 1);
+        assert!(LstmAutoencoder::new(t6, w).is_err());
+    }
+}

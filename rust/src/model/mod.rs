@@ -1,0 +1,21 @@
+//! LSTM-Autoencoder model definitions and golden (bit-accurate) software
+//! implementations.
+//!
+//! - [`topology`] — `LSTM-AE-F{X}-D{Y}` naming → per-layer dimensions
+//!   (paper §4.1).
+//! - [`weights`] — weight container + binary loader for the
+//!   `artifacts/weights_<model>.bin` files written by `python/compile/train.py`,
+//!   and a deterministic random initializer for artifact-free tests.
+//! - [`lstm`] — a single LSTM cell in f32 and in the Q8.24 + PWL datapath
+//!   the FPGA uses.
+//! - [`autoencoder`] — the stacked encoder/decoder forward pass and
+//!   reconstruction-error scoring.
+
+pub mod topology;
+pub mod weights;
+pub mod lstm;
+pub mod autoencoder;
+
+pub use autoencoder::LstmAutoencoder;
+pub use topology::Topology;
+pub use weights::{LayerWeights, ModelWeights};

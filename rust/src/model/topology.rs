@@ -1,0 +1,198 @@
+//! `LSTM-AE-F{X}-D{Y}` topology derivation (paper §4.1).
+//!
+//! The naming indicates an input feature size `X` and `Y` total LSTM
+//! layers — half encoder, half decoder, feature sizes halving down to the
+//! bottleneck and doubling back up symmetrically. E.g.:
+//!
+//! - `LSTM-AE-F32-D2`: 32 → 16 → 32 (2 layers)
+//! - `LSTM-AE-F32-D6`: 32 → 16 → 8 → 4 → 8 → 16 → 32 (6 layers)
+//!
+//! Layer *i* consumes `LX_i` features and produces `LH_i` features; the
+//! last layer's hidden size equals the input feature size, so the decoder
+//! output *is* the reconstruction (no extra dense layer — matching the
+//! paper's feature-size chains).
+
+use anyhow::{bail, Result};
+
+/// One LSTM layer's dimensions (paper notation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerDims {
+    /// Input feature dimension `LX_i`.
+    pub lx: usize,
+    /// Hidden state dimension `LH_i`.
+    pub lh: usize,
+}
+
+/// An LSTM-AE topology: input width + the per-layer dimension chain.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// Canonical name, e.g. `LSTM-AE-F32-D2`.
+    pub name: String,
+    /// Input feature size `X`.
+    pub features: usize,
+    /// Total LSTM layer count `Y`.
+    pub depth: usize,
+    /// Per-layer dims, `depth` entries.
+    pub layers: Vec<LayerDims>,
+}
+
+impl Topology {
+    /// Build the four paper models or any `F{X}-D{Y}` combination with
+    /// `X` divisible by 2^(Y/2) and `Y` even.
+    pub fn new(features: usize, depth: usize) -> Result<Topology> {
+        if depth == 0 || depth % 2 != 0 {
+            bail!("depth must be even and positive, got {depth}");
+        }
+        let half = depth / 2;
+        if features >> half == 0 {
+            bail!("features {features} too small for depth {depth}");
+        }
+        if features % (1 << half) != 0 {
+            bail!("features {features} not divisible by 2^{half}");
+        }
+        // Feature chain: X, X/2, ..., X/2^half, ..., X/2, X
+        let mut chain = Vec::with_capacity(depth + 1);
+        for i in 0..=half {
+            chain.push(features >> i);
+        }
+        for i in (0..half).rev() {
+            chain.push(features >> i);
+        }
+        let layers =
+            (0..depth).map(|i| LayerDims { lx: chain[i], lh: chain[i + 1] }).collect();
+        Ok(Topology {
+            name: format!("LSTM-AE-F{features}-D{depth}"),
+            features,
+            depth,
+            layers,
+        })
+    }
+
+    /// Parse `LSTM-AE-F{X}-D{Y}` (or the short `F{X}-D{Y}`).
+    pub fn from_name(name: &str) -> Result<Topology> {
+        let short = name.strip_prefix("LSTM-AE-").unwrap_or(name);
+        let Some((f_part, d_part)) = short.split_once("-D") else {
+            bail!("bad model name {name:?} (want LSTM-AE-F{{X}}-D{{Y}})");
+        };
+        let Some(f_str) = f_part.strip_prefix('F') else {
+            bail!("bad model name {name:?}");
+        };
+        let features: usize = f_str.parse()?;
+        let depth: usize = d_part.parse()?;
+        Topology::new(features, depth)
+    }
+
+    /// The four models evaluated in the paper (§4.1), in Table 1 order.
+    pub fn paper_models() -> Vec<Topology> {
+        ["LSTM-AE-F32-D2", "LSTM-AE-F64-D2", "LSTM-AE-F32-D6", "LSTM-AE-F64-D6"]
+            .iter()
+            .map(|n| Topology::from_name(n).expect("paper models are valid"))
+            .collect()
+    }
+
+    /// Feature-size chain `X → … → X` (depth+1 entries), for display.
+    pub fn chain(&self) -> Vec<usize> {
+        let mut c = vec![self.layers[0].lx];
+        c.extend(self.layers.iter().map(|l| l.lh));
+        c
+    }
+
+    /// Total multiply-accumulate operations per timestep:
+    /// each layer does `4·LH·(LX + LH)` MACs (two MVMs over the 4 gates).
+    pub fn macs_per_timestep(&self) -> u64 {
+        self.layers.iter().map(|l| 4 * l.lh as u64 * (l.lx as u64 + l.lh as u64)).sum()
+    }
+
+    /// Total weight parameters (incl. the two bias vectors per layer).
+    pub fn param_count(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| {
+                let lh4 = 4 * l.lh as u64;
+                lh4 * l.lx as u64 + lh4 * l.lh as u64 + 2 * lh4
+            })
+            .sum()
+    }
+
+    /// Index of the bottleneck-latency layer `m` under balanced reuse:
+    /// the layer with the largest hidden dimension (ties → later layer,
+    /// matching the decoder-side output layer that dominates).
+    pub fn widest_layer(&self) -> usize {
+        let mut m = 0;
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.lh >= self.layers[m].lh {
+                m = i;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_chains_match_section_4_1() {
+        let t = Topology::from_name("LSTM-AE-F32-D2").unwrap();
+        assert_eq!(t.chain(), vec![32, 16, 32]);
+        let t = Topology::from_name("LSTM-AE-F32-D6").unwrap();
+        assert_eq!(t.chain(), vec![32, 16, 8, 4, 8, 16, 32]);
+        let t = Topology::from_name("LSTM-AE-F64-D2").unwrap();
+        assert_eq!(t.chain(), vec![64, 32, 64]);
+        let t = Topology::from_name("LSTM-AE-F64-D6").unwrap();
+        assert_eq!(t.chain(), vec![64, 32, 16, 8, 16, 32, 64]);
+    }
+
+    #[test]
+    fn layer_dims_are_consistent() {
+        for t in Topology::paper_models() {
+            assert_eq!(t.layers.len(), t.depth);
+            // Chain continuity: layer i's input is layer i-1's hidden.
+            for w in t.layers.windows(2) {
+                assert_eq!(w[0].lh, w[1].lx);
+            }
+            assert_eq!(t.layers[0].lx, t.features);
+            assert_eq!(t.layers.last().unwrap().lh, t.features);
+        }
+    }
+
+    #[test]
+    fn parses_short_names() {
+        assert_eq!(Topology::from_name("F32-D2").unwrap().name, "LSTM-AE-F32-D2");
+    }
+
+    #[test]
+    fn rejects_bad_names_and_dims() {
+        assert!(Topology::from_name("GRU-F32-D2").is_err());
+        assert!(Topology::from_name("LSTM-AE-F32-D3").is_err(), "odd depth");
+        assert!(Topology::from_name("LSTM-AE-F4-D8").is_err(), "too deep");
+        assert!(Topology::from_name("LSTM-AE-F6-D4").is_err(), "not divisible");
+    }
+
+    #[test]
+    fn macs_per_timestep_f32d2() {
+        // L0: 4*16*(32+16) = 3072; L1: 4*32*(16+32) = 6144.
+        let t = Topology::from_name("F32-D2").unwrap();
+        assert_eq!(t.macs_per_timestep(), 3072 + 6144);
+    }
+
+    #[test]
+    fn widest_layer_is_output_layer() {
+        for t in Topology::paper_models() {
+            assert_eq!(t.widest_layer(), t.depth - 1);
+            assert_eq!(t.layers[t.widest_layer()].lh, t.features);
+        }
+    }
+
+    #[test]
+    fn depth_scaling_models_exist() {
+        // The depth-scalability figure sweeps D2..D10 at F64.
+        for d in [2usize, 4, 6, 8, 10] {
+            let t = Topology::new(64, d);
+            if d <= 10 && 64 >> (d / 2) > 0 && 64 % (1 << (d / 2)) == 0 {
+                assert!(t.is_ok(), "D{d}");
+            }
+        }
+    }
+}

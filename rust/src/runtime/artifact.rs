@@ -1,0 +1,235 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (writer)
+//! and the Rust runtime (reader).
+//!
+//! `artifacts/manifest.json` layout:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "quant": {"word": 32, "frac_bits": 24},
+//!   "models": [
+//!     {
+//!       "name": "LSTM-AE-F32-D2",
+//!       "features": 32,
+//!       "depth": 2,
+//!       "layers": [32, 16, 32],
+//!       "weights": "weights_LSTM-AE-F32-D2.bin",
+//!       "timesteps": [1, 2, 4, 6, 16, 64],
+//!       "hlo": {"1": "LSTM-AE-F32-D2_T1.hlo.txt", ...},
+//!       "train_loss": 0.0012
+//!     }, ...
+//!   ]
+//! }
+//! ```
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One model's artifact set.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub features: usize,
+    pub depth: usize,
+    /// Feature chain (depth + 1 entries).
+    pub layers: Vec<usize>,
+    /// Weights file (relative to the artifact dir).
+    pub weights: String,
+    /// Sequence lengths with a compiled artifact.
+    pub timesteps: Vec<usize>,
+    /// T → HLO text file.
+    hlo: Vec<(usize, String)>,
+    /// Batched serving artifacts: (serving T, batch size → file).
+    batch_t: Option<usize>,
+    hlo_batch: Vec<(usize, String)>,
+    /// Telemetry family spec file (training distribution), if exported.
+    pub telemetry: Option<String>,
+    /// Final training loss recorded by train.py (for provenance).
+    pub train_loss: Option<f64>,
+}
+
+impl ArtifactEntry {
+    pub fn hlo_for_t(&self, t: usize) -> Option<&str> {
+        self.hlo.iter().find(|(tt, _)| *tt == t).map(|(_, f)| f.as_str())
+    }
+
+    /// Batched serving artifact for exactly `(t, b)`, if lowered.
+    pub fn hlo_for_batch(&self, t: usize, b: usize) -> Option<&str> {
+        if self.batch_t != Some(t) {
+            return None;
+        }
+        self.hlo_batch.iter().find(|(bb, _)| *bb == b).map(|(_, f)| f.as_str())
+    }
+
+    /// Batch sizes available at the serving T, largest first.
+    pub fn batch_sizes(&self, t: usize) -> Vec<usize> {
+        if self.batch_t != Some(t) {
+            return Vec::new();
+        }
+        let mut v: Vec<usize> = self.hlo_batch.iter().map(|(b, _)| *b).collect();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        v
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: u64,
+    pub models: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Self::parse(&text).with_context(|| format!("parse {path:?}"))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let version =
+            v.get("version").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing version"))?;
+        let models = v
+            .get("models")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing models[]"))?
+            .iter()
+            .map(parse_entry)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { version, models })
+    }
+
+    pub fn find(&self, model: &str) -> Option<&ArtifactEntry> {
+        // Accept both full and short names.
+        let full = if model.starts_with("LSTM-AE-") {
+            model.to_string()
+        } else {
+            format!("LSTM-AE-{model}")
+        };
+        self.models.iter().find(|e| e.name == full || e.name == model)
+    }
+}
+
+fn parse_entry(v: &Json) -> Result<ArtifactEntry> {
+    let get_str = |k: &str| -> Result<String> {
+        Ok(v.get(k)
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("model entry missing {k:?}"))?
+            .to_string())
+    };
+    let name = get_str("name")?;
+    let features =
+        v.get("features").and_then(Json::as_usize).ok_or_else(|| anyhow!("missing features"))?;
+    let depth =
+        v.get("depth").and_then(Json::as_usize).ok_or_else(|| anyhow!("missing depth"))?;
+    let layers = v
+        .get("layers")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing layers"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad layer size")))
+        .collect::<Result<Vec<_>>>()?;
+    let weights = get_str("weights")?;
+    let timesteps = v
+        .get("timesteps")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing timesteps"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad timestep")))
+        .collect::<Result<Vec<_>>>()?;
+    let hlo_obj =
+        v.get("hlo").and_then(Json::as_obj).ok_or_else(|| anyhow!("missing hlo map"))?;
+    let mut hlo = Vec::new();
+    for (k, f) in hlo_obj {
+        let t: usize = k.parse().map_err(|_| anyhow!("bad hlo key {k:?}"))?;
+        hlo.push((t, f.as_str().ok_or_else(|| anyhow!("bad hlo file"))?.to_string()));
+    }
+    hlo.sort_by_key(|(t, _)| *t);
+    for t in &timesteps {
+        if !hlo.iter().any(|(tt, _)| tt == t) {
+            return Err(anyhow!("model {name}: timestep {t} listed but no hlo file"));
+        }
+    }
+    let telemetry = v.get("telemetry").and_then(Json::as_str).map(|s| s.to_string());
+    let train_loss = v.get("train_loss").and_then(Json::as_f64);
+    let (batch_t, hlo_batch) = match v.get("hlo_batch") {
+        None => (None, Vec::new()),
+        Some(hb) => {
+            let t = hb.get("t").and_then(Json::as_usize);
+            let mut sizes = Vec::new();
+            if let Some(m) = hb.get("sizes").and_then(Json::as_obj) {
+                for (k, f) in m {
+                    let b: usize = k.parse().map_err(|_| anyhow!("bad batch key {k:?}"))?;
+                    sizes.push((
+                        b,
+                        f.as_str().ok_or_else(|| anyhow!("bad batch file"))?.to_string(),
+                    ));
+                }
+            }
+            (t, sizes)
+        }
+    };
+    Ok(ArtifactEntry {
+        name,
+        features,
+        depth,
+        layers,
+        weights,
+        timesteps,
+        hlo,
+        batch_t,
+        hlo_batch,
+        telemetry,
+        train_loss,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "quant": {"word": 32, "frac_bits": 24},
+        "models": [
+            {
+                "name": "LSTM-AE-F32-D2",
+                "features": 32,
+                "depth": 2,
+                "layers": [32, 16, 32],
+                "weights": "weights_LSTM-AE-F32-D2.bin",
+                "timesteps": [1, 64],
+                "hlo": {"1": "LSTM-AE-F32-D2_T1.hlo.txt", "64": "LSTM-AE-F32-D2_T64.hlo.txt"},
+                "train_loss": 0.0012
+            }
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 1);
+        let e = m.find("F32-D2").unwrap();
+        assert_eq!(e.features, 32);
+        assert_eq!(e.hlo_for_t(64), Some("LSTM-AE-F32-D2_T64.hlo.txt"));
+        assert_eq!(e.hlo_for_t(2), None);
+        assert_eq!(e.train_loss, Some(0.0012));
+        assert!(m.find("LSTM-AE-F32-D2").is_some());
+        assert!(m.find("F64-D6").is_none());
+    }
+
+    #[test]
+    fn rejects_inconsistent_timesteps() {
+        let bad = SAMPLE.replace(r#""timesteps": [1, 64]"#, r#""timesteps": [1, 2, 64]"#);
+        let err = Manifest::parse(&bad).unwrap_err();
+        assert!(format!("{err}").contains("timestep 2"));
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let bad = SAMPLE.replace(r#""features": 32,"#, "");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

@@ -1,0 +1,225 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust request path.
+//!
+//! Python never runs at inference time — `make artifacts` lowers the JAX
+//! LSTM-AE (with trained weights baked in as HLO constants) to
+//! `artifacts/<model>_T<t>.hlo.txt`; this module compiles each module
+//! once on the PJRT CPU client and caches the executable.
+//!
+//! Interchange is HLO **text** (not serialized `HloModuleProto`): jax ≥
+//! 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see `/opt/xla-example/README.md`).
+
+pub mod artifact;
+
+pub use artifact::{ArtifactEntry, Manifest};
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A compiled-executable cache over the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.json`) and create the
+    /// PJRT CPU client.
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("load manifest from {dir:?} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client, manifest, dir: dir.to_path_buf(), cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// The conventional artifact directory for this repo.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the artifact for `model` at sequence
+    /// length `t`.
+    pub fn executable(
+        &self,
+        model: &str,
+        t: usize,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let entry = self
+            .manifest
+            .find(model)
+            .ok_or_else(|| anyhow!("model {model:?} not in manifest"))?;
+        let file = entry
+            .hlo_for_t(t)
+            .ok_or_else(|| anyhow!("model {model:?} has no artifact for T={t}"))?;
+        let key = format!("{}/T{t}", entry.name);
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client.compile(&comp).with_context(|| format!("compile {path:?}"))?,
+        );
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Run one inference: `x` is row-major `[t][features]` flattened;
+    /// returns the reconstruction with the same layout. The artifact is
+    /// lowered with `return_tuple=True`, so the result is a 1-tuple.
+    pub fn infer(&self, model: &str, t: usize, x: &[f32]) -> Result<Vec<f32>> {
+        let entry = self
+            .manifest
+            .find(model)
+            .ok_or_else(|| anyhow!("model {model:?} not in manifest"))?;
+        let f = entry.features;
+        if x.len() != t * f {
+            return Err(anyhow!("input length {} != T({t})·F({f})", x.len()));
+        }
+        let exe = self.executable(model, t)?;
+        let lit = xla::Literal::vec1(x).reshape(&[t as i64, f as i64])?;
+        let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Compile (or fetch) the batched serving executable for `(model, t, b)`.
+    fn batched_executable(
+        &self,
+        model: &str,
+        t: usize,
+        b: usize,
+    ) -> Result<Option<std::sync::Arc<xla::PjRtLoadedExecutable>>> {
+        let entry = self
+            .manifest
+            .find(model)
+            .ok_or_else(|| anyhow!("model {model:?} not in manifest"))?;
+        let Some(file) = entry.hlo_for_batch(t, b) else {
+            return Ok(None);
+        };
+        let key = format!("{}/T{t}/B{b}", entry.name);
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(Some(exe.clone()));
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&xla::XlaComputation::from_proto(&proto))
+                .with_context(|| format!("compile {path:?}"))?,
+        );
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(Some(exe))
+    }
+
+    /// Run a batch of `b` independent windows: input `[b][t][f]` flattened;
+    /// output has the same layout. Uses vmap-lowered batched artifacts
+    /// when available (greedy largest-chunk decomposition), falling back
+    /// to per-window dispatch — one PJRT execute per chunk instead of per
+    /// window (§Perf iteration 4).
+    pub fn infer_batch(&self, model: &str, t: usize, b: usize, x: &[f32]) -> Result<Vec<f32>> {
+        let entry = self
+            .manifest
+            .find(model)
+            .ok_or_else(|| anyhow!("model {model:?} not in manifest"))?;
+        let f = entry.features;
+        if x.len() != b * t * f {
+            return Err(anyhow!("input length {} != B({b})·T({t})·F({f})", x.len()));
+        }
+        let name = entry.name.clone();
+        let sizes = entry.batch_sizes(t);
+        let window = t * f;
+        let mut out = Vec::with_capacity(x.len());
+        let mut i = 0usize;
+        'outer: while i < b {
+            let remaining = b - i;
+            for &chunk in &sizes {
+                if chunk <= remaining {
+                    if let Some(exe) = self.batched_executable(&name, t, chunk)? {
+                        let slice = &x[i * window..(i + chunk) * window];
+                        let lit = xla::Literal::vec1(slice).reshape(&[
+                            chunk as i64,
+                            t as i64,
+                            f as i64,
+                        ])?;
+                        let result =
+                            exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+                        out.extend(result.to_tuple1()?.to_vec::<f32>()?);
+                        i += chunk;
+                        continue 'outer;
+                    }
+                }
+            }
+            // Fallback: single-window artifact.
+            out.extend(self.infer(&name, t, &x[i * window..(i + 1) * window])?);
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    /// Telemetry generator matching the family `model` was trained on
+    /// (reads the spec exported by `aot.py`). `seed` drives only
+    /// noise/anomaly draws.
+    pub fn telemetry_for(
+        &self,
+        model: &str,
+        seed: u64,
+    ) -> Result<crate::workload::TelemetryGen> {
+        let entry = self
+            .manifest
+            .find(model)
+            .ok_or_else(|| anyhow!("model {model:?} not in manifest"))?;
+        let file = entry
+            .telemetry
+            .as_ref()
+            .ok_or_else(|| anyhow!("model {model:?} has no telemetry spec"))?;
+        crate::workload::TelemetryGen::from_spec_file(&self.dir.join(file), seed)
+    }
+
+    /// All `(model, t)` pairs available.
+    pub fn available(&self) -> Vec<(String, usize)> {
+        let mut v = Vec::new();
+        for e in &self.manifest.models {
+            for &t in &e.timesteps {
+                v.push((e.name.clone(), t));
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Artifact-dependent tests live in `rust/tests/integration_runtime.rs`
+    /// (they need `make artifacts`). Here: error paths that need no files.
+    #[test]
+    fn open_missing_dir_fails_cleanly() {
+        let Err(err) = Runtime::open(Path::new("/nonexistent/artifacts")) else {
+            panic!("expected error");
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("manifest"), "{msg}");
+    }
+}

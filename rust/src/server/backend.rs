@@ -1,0 +1,190 @@
+//! Scoring backends for the anomaly server.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+
+use crate::model::LstmAutoencoder;
+use crate::runtime::Runtime;
+use crate::workload::Window;
+
+/// A reconstruction-error scorer over batches of windows.
+pub trait Backend: Send + Sync {
+    /// Human-readable backend name (for reports).
+    fn name(&self) -> String;
+    /// Score each window (mean squared reconstruction error).
+    fn score_batch(&self, windows: &[&Window]) -> Vec<f64>;
+}
+
+/// Scores through the AOT-compiled PJRT artifact — real numerics,
+/// Python-free request path (the production configuration).
+///
+/// The `xla` crate's PJRT handles are `Rc`-based (not `Send`/`Sync`), so
+/// the backend owns a dedicated executor thread that holds the
+/// [`Runtime`]; `score_batch` ships flattened windows over a channel and
+/// waits for scores. Worker threads thus serialize on the PJRT executor
+/// (the CPU client is single-stream anyway; XLA parallelizes internally).
+pub struct PjrtBackend {
+    tx: Mutex<Sender<Job>>,
+    label: String,
+    t: usize,
+    #[allow(dead_code)]
+    features: usize,
+}
+
+struct Job {
+    /// Flattened `[T][F]` windows.
+    windows: Vec<Vec<f32>>,
+    reply: Sender<Vec<f64>>,
+}
+
+impl PjrtBackend {
+    /// Spawn the executor thread over the artifact directory. Fails fast
+    /// if the manifest/model/T is unavailable.
+    pub fn new(dir: std::path::PathBuf, model: &str, t: usize) -> anyhow::Result<PjrtBackend> {
+        let (tx, rx) = channel::<Job>();
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<(String, usize)>>();
+        let model = model.to_string();
+        std::thread::Builder::new()
+            .name("pjrt-exec".into())
+            .spawn(move || {
+                // Construct the runtime *inside* the thread (not Send).
+                let setup = (|| -> anyhow::Result<(Runtime, String, usize)> {
+                    let rt = Runtime::open(&dir)?;
+                    let entry = rt
+                        .manifest()
+                        .find(&model)
+                        .ok_or_else(|| anyhow::anyhow!("model {model:?} not in manifest"))?;
+                    let name = entry.name.clone();
+                    let features = entry.features;
+                    rt.executable(&name, t)?; // pre-compile
+                    Ok((rt, name, features))
+                })();
+                let (rt, name) = match setup {
+                    Ok((rt, name, features)) => {
+                        let _ = ready_tx.send(Ok((name.clone(), features)));
+                        (rt, name)
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut flat_buf: Vec<f32> = Vec::new();
+                while let Ok(job) = rx.recv() {
+                    // One batched PJRT dispatch for the whole job (vmap
+                    // artifacts, greedy chunking inside infer_batch).
+                    let b = job.windows.len();
+                    flat_buf.clear();
+                    for w in &job.windows {
+                        flat_buf.extend_from_slice(w);
+                    }
+                    let per = flat_buf.len() / b.max(1);
+                    let scores = match rt.infer_batch(&name, t, b, &flat_buf) {
+                        Ok(recon) => (0..b)
+                            .map(|i| {
+                                mse_flat(
+                                    &flat_buf[i * per..(i + 1) * per],
+                                    &recon[i * per..(i + 1) * per],
+                                )
+                            })
+                            .collect(),
+                        Err(_) => vec![f64::INFINITY; b],
+                    };
+                    let _ = job.reply.send(scores);
+                }
+            })
+            .expect("spawn pjrt executor");
+        let (name, features) = ready_rx.recv().map_err(|_| anyhow::anyhow!("executor died"))??;
+        Ok(PjrtBackend {
+            tx: Mutex::new(tx),
+            label: format!("pjrt:{name}/T{t}"),
+            t,
+            features,
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn score_batch(&self, windows: &[&Window]) -> Vec<f64> {
+        let flat: Vec<Vec<f32>> = windows
+            .iter()
+            .map(|w| {
+                assert_eq!(w.data.len(), self.t, "window length matches artifact T");
+                w.data.iter().flat_map(|row| row.iter().copied()).collect()
+            })
+            .collect();
+        let (reply, rx) = channel();
+        {
+            let tx = self.tx.lock().unwrap();
+            if tx.send(Job { windows: flat, reply }).is_err() {
+                return vec![f64::INFINITY; windows.len()];
+            }
+        }
+        rx.recv().unwrap_or_else(|_| vec![f64::INFINITY; windows.len()])
+    }
+}
+
+/// Scores through the bit-accurate Q8.24 + PWL golden model — exactly the
+/// arithmetic the FPGA datapath performs (used to validate that
+/// quantization does not change detection decisions, and as the
+/// artifact-free fallback).
+pub struct QuantBackend {
+    ae: LstmAutoencoder,
+}
+
+impl QuantBackend {
+    pub fn new(ae: LstmAutoencoder) -> QuantBackend {
+        QuantBackend { ae }
+    }
+}
+
+impl Backend for QuantBackend {
+    fn name(&self) -> String {
+        format!("quant:{}", self.ae.topo.name)
+    }
+
+    fn score_batch(&self, windows: &[&Window]) -> Vec<f64> {
+        windows.iter().map(|w| self.ae.score_quant(&w.data)).collect()
+    }
+}
+
+fn mse_flat(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len().max(1);
+    a.iter().zip(b).map(|(&x, &y)| ((x - y) as f64).powi(2)).sum::<f64>() / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Topology;
+    use crate::workload::TelemetryGen;
+
+    #[test]
+    fn quant_backend_scores_are_reconstruction_mse() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let ae = LstmAutoencoder::random(topo.clone(), 1);
+        let ae2 = LstmAutoencoder::random(topo, 1);
+        let b = QuantBackend::new(ae);
+        let mut gen = TelemetryGen::new(32, 3);
+        let w = gen.benign_window(8);
+        let got = b.score_batch(&[&w])[0];
+        assert!((got - ae2.score_quant(&w.data)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mse_flat_basic() {
+        assert_eq!(mse_flat(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((mse_flat(&[0.0, 0.0], &[1.0, 1.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pjrt_backend_fails_cleanly_without_artifacts() {
+        let err = PjrtBackend::new(std::path::PathBuf::from("/nonexistent"), "F32-D2", 4);
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,53 @@
+//! Dynamic batching policy: dispatch a batch when it reaches
+//! `max_batch` windows or when the oldest queued request has waited
+//! `max_wait` — the classic size-or-deadline policy serving systems use
+//! to trade throughput against tail latency.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::Instant;
+
+use super::{Batch, Msg, ServerConfig};
+
+pub(crate) fn run_batcher(rx: Receiver<Msg>, out: Sender<Batch>, cfg: ServerConfig) {
+    let mut pending: Batch = Vec::with_capacity(cfg.max_batch);
+    let mut oldest: Option<Instant> = None;
+    loop {
+        // How long may we keep waiting before flushing?
+        let timeout = match oldest {
+            Some(t0) => cfg.max_wait.saturating_sub(t0.elapsed()),
+            None => cfg.max_wait.max(std::time::Duration::from_millis(50)),
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Req(req)) => {
+                if pending.is_empty() {
+                    oldest = Some(Instant::now());
+                }
+                pending.push(req);
+                if pending.len() >= cfg.max_batch {
+                    flush(&mut pending, &mut oldest, &out);
+                }
+            }
+            Ok(Msg::Shutdown) => {
+                flush(&mut pending, &mut oldest, &out);
+                return; // dropping `out` stops the workers
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if oldest.map(|t0| t0.elapsed() >= cfg.max_wait).unwrap_or(false) {
+                    flush(&mut pending, &mut oldest, &out);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                flush(&mut pending, &mut oldest, &out);
+                return;
+            }
+        }
+    }
+}
+
+fn flush(pending: &mut Batch, oldest: &mut Option<Instant>, out: &Sender<Batch>) {
+    if !pending.is_empty() {
+        let batch = std::mem::take(pending);
+        let _ = out.send(batch);
+    }
+    *oldest = None;
+}

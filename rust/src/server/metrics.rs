@@ -1,0 +1,157 @@
+//! Serving metrics: thread-safe counters + latency histograms.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::LogHistogram;
+
+use super::Response;
+
+/// Thread-safe metrics sink shared by workers.
+pub struct ServerMetrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    anomalies: AtomicU64,
+    batches: AtomicU64,
+    batched_windows: AtomicU64,
+    max_batch: AtomicUsize,
+    e2e_us: Mutex<LogHistogram>,
+    queue_us: Mutex<LogHistogram>,
+    service_us: Mutex<LogHistogram>,
+    started: Instant,
+}
+
+impl ServerMetrics {
+    pub fn new() -> ServerMetrics {
+        ServerMetrics {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            anomalies: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_windows: AtomicU64::new(0),
+            max_batch: AtomicUsize::new(0),
+            e2e_us: Mutex::new(LogHistogram::for_latency()),
+            queue_us: Mutex::new(LogHistogram::for_latency()),
+            service_us: Mutex::new(LogHistogram::for_latency()),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn on_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_batch(&self, size: usize, service_us: f64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_windows.fetch_add(size as u64, Ordering::Relaxed);
+        self.max_batch.fetch_max(size, Ordering::Relaxed);
+        self.service_us.lock().unwrap().record(service_us * 1e-6);
+    }
+
+    pub fn on_response(&self, r: &Response) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        if r.is_anomaly {
+            self.anomalies.fetch_add(1, Ordering::Relaxed);
+        }
+        self.e2e_us.lock().unwrap().record(r.e2e_us * 1e-6);
+        self.queue_us.lock().unwrap().record(r.queue_us * 1e-6);
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    pub fn anomalies(&self) -> u64 {
+        self.anomalies.load(Ordering::Relaxed)
+    }
+
+    pub fn max_batch_seen(&self) -> usize {
+        self.max_batch.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_windows.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// Completed requests per second since start.
+    pub fn throughput_rps(&self) -> f64 {
+        self.completed() as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    /// (p50, p95, p99) end-to-end latency in microseconds.
+    pub fn e2e_percentiles_us(&self) -> (f64, f64, f64) {
+        let h = self.e2e_us.lock().unwrap();
+        (h.percentile(0.5) * 1e6, h.percentile(0.95) * 1e6, h.percentile(0.99) * 1e6)
+    }
+
+    /// Mean service time per batch in microseconds.
+    pub fn mean_service_us(&self) -> f64 {
+        self.service_us.lock().unwrap().mean() * 1e6
+    }
+
+    pub fn report(&self) -> String {
+        let (p50, p95, p99) = self.e2e_percentiles_us();
+        format!(
+            "requests: {} submitted, {} completed, {} flagged | \
+             batches: mean size {:.2}, max {} | \
+             e2e latency µs: p50 {:.0}, p95 {:.0}, p99 {:.0} | \
+             throughput {:.0} rps",
+            self.submitted(),
+            self.completed(),
+            self.anomalies(),
+            self.mean_batch_size(),
+            self.max_batch_seen(),
+            p50,
+            p95,
+            p99,
+            self.throughput_rps(),
+        )
+    }
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_histograms() {
+        let m = ServerMetrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_batch(2, 100.0);
+        for (id, anomaly) in [(0u64, false), (1, true)] {
+            m.on_response(&Response {
+                id,
+                score: 0.1,
+                is_anomaly: anomaly,
+                queue_us: 50.0,
+                service_us: 100.0,
+                e2e_us: 150.0,
+            });
+        }
+        assert_eq!(m.submitted(), 2);
+        assert_eq!(m.completed(), 2);
+        assert_eq!(m.anomalies(), 1);
+        assert_eq!(m.max_batch_seen(), 2);
+        assert!((m.mean_batch_size() - 2.0).abs() < 1e-12);
+        let (p50, _, _) = m.e2e_percentiles_us();
+        assert!(p50 > 100.0 && p50 < 250.0, "p50 {p50}");
+        assert!(m.report().contains("2 completed"));
+    }
+}

@@ -1,0 +1,315 @@
+//! End-to-end anomaly-detection service (the deployment the paper
+//! motivates in §1: real-time, high-throughput LSTM-AE scoring).
+//!
+//! Architecture (all std::thread + mpsc; the vendor set has no tokio —
+//! and a blocking pool is the right shape for a compute-bound scorer):
+//!
+//! ```text
+//! clients ──submit──► [batcher thread] ──batches──► [worker pool]
+//!                      dynamic batching:             score via Backend
+//!                      max_batch / max_wait          (PJRT artifact or
+//!                                                     bit-accurate Q8.24)
+//! ```
+//!
+//! - [`batcher`] — dynamic batching policy (size + deadline), the L3
+//!   serving analog of the paper's throughput scenario.
+//! - [`backend`] — scoring backends: the AOT PJRT artifact (real
+//!   numerics, Python-free) and the bit-accurate quantized golden model
+//!   (the FPGA datapath in software).
+//! - [`metrics`] — latency histograms + throughput counters.
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+
+pub use backend::{Backend, PjrtBackend, QuantBackend};
+pub use metrics::ServerMetrics;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::workload::Window;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Max windows per dispatched batch.
+    pub max_batch: usize,
+    /// Max time the batcher holds the first request of a batch.
+    pub max_wait: Duration,
+    /// Worker threads.
+    pub workers: usize,
+    /// Anomaly threshold on the reconstruction-error score
+    /// (calibrate via [`calibrate_threshold`]).
+    pub threshold: f64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(500),
+            workers: 2,
+            threshold: 0.05,
+        }
+    }
+}
+
+/// A scored response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub score: f64,
+    pub is_anomaly: bool,
+    /// Time from submit to batch dispatch.
+    pub queue_us: f64,
+    /// Time spent scoring (per-batch, shared across its windows).
+    pub service_us: f64,
+    /// Submit → response.
+    pub e2e_us: f64,
+}
+
+pub(crate) struct Request {
+    id: u64,
+    window: Window,
+    submitted: Instant,
+    reply: Sender<Response>,
+}
+
+pub(crate) enum BatcherMsg {
+    Req(Request),
+    Shutdown,
+}
+
+/// Handle to a running server.
+pub struct AnomalyServer {
+    tx: Sender<BatcherMsg>,
+    metrics: Arc<ServerMetrics>,
+    threshold: f64,
+    next_id: AtomicU64,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+    running: Arc<AtomicBool>,
+}
+
+impl AnomalyServer {
+    /// Start batcher + workers over a scoring backend.
+    pub fn start(backend: Arc<dyn Backend>, cfg: ServerConfig) -> AnomalyServer {
+        assert!(cfg.workers >= 1 && cfg.max_batch >= 1);
+        let metrics = Arc::new(ServerMetrics::new());
+        let running = Arc::new(AtomicBool::new(true));
+        let (tx, rx) = channel::<BatcherMsg>();
+        let (batch_tx, batch_rx) = channel::<Vec<Request>>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        let mut threads = Vec::new();
+        // Batcher.
+        {
+            let cfg2 = cfg.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("batcher".into())
+                    .spawn(move || batcher::run_batcher(rx, batch_tx, cfg2))
+                    .expect("spawn batcher"),
+            );
+        }
+        // Workers.
+        for wid in 0..cfg.workers {
+            let backend = backend.clone();
+            let rx = batch_rx.clone();
+            let metrics = metrics.clone();
+            let threshold = cfg.threshold;
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("scorer-{wid}"))
+                    .spawn(move || worker_loop(backend, rx, metrics, threshold))
+                    .expect("spawn worker"),
+            );
+        }
+        AnomalyServer {
+            tx,
+            metrics,
+            threshold: cfg.threshold,
+            next_id: AtomicU64::new(0),
+            threads: Mutex::new(threads),
+            running,
+        }
+    }
+
+    /// Submit a window; returns a receiver for the response.
+    pub fn submit(&self, window: Window) -> Receiver<Response> {
+        let (reply, rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.metrics.on_submit();
+        let _ = self.tx.send(BatcherMsg::Req(Request {
+            id,
+            window,
+            submitted: Instant::now(),
+            reply,
+        }));
+        rx
+    }
+
+    /// Submit and wait (convenience for tests/examples).
+    pub fn score_blocking(&self, window: Window) -> Response {
+        self.submit(window).recv().expect("server alive")
+    }
+
+    pub fn metrics(&self) -> &ServerMetrics {
+        &self.metrics
+    }
+
+    pub fn threshold(&self) -> f64 {
+        self.threshold
+    }
+
+    /// Graceful shutdown: drains in-flight work.
+    pub fn shutdown(&self) {
+        if self.running.swap(false, Ordering::SeqCst) {
+            let _ = self.tx.send(BatcherMsg::Shutdown);
+            for t in self.threads.lock().unwrap().drain(..) {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+impl Drop for AnomalyServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(
+    backend: Arc<dyn Backend>,
+    rx: Arc<Mutex<Receiver<Vec<Request>>>>,
+    metrics: Arc<ServerMetrics>,
+    threshold: f64,
+) {
+    loop {
+        let batch = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(batch) = batch else { return };
+        if batch.is_empty() {
+            continue;
+        }
+        let dispatch = Instant::now();
+        let windows: Vec<&Window> = batch.iter().map(|r| &r.window).collect();
+        let scores = backend.score_batch(&windows);
+        let service_us = dispatch.elapsed().as_secs_f64() * 1e6;
+        metrics.on_batch(batch.len(), service_us);
+        for (req, score) in batch.into_iter().zip(scores) {
+            let e2e_us = req.submitted.elapsed().as_secs_f64() * 1e6;
+            let queue_us = e2e_us - service_us;
+            let resp = Response {
+                id: req.id,
+                score,
+                is_anomaly: score > threshold,
+                queue_us: queue_us.max(0.0),
+                service_us,
+                e2e_us,
+            };
+            metrics.on_response(&resp);
+            let _ = req.reply.send(resp);
+        }
+    }
+}
+
+// Re-exported for the batcher module.
+pub(crate) use BatcherMsg as Msg;
+pub(crate) type Batch = Vec<Request>;
+
+/// Calibrate the anomaly threshold as the `q`-quantile of benign scores
+/// plus a small margin (the standard LSTM-AE deployment recipe).
+pub fn calibrate_threshold(scores: &[f64], q: f64) -> f64 {
+    let mut s = scores.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p = crate::util::stats::percentile_sorted(&s, q);
+    p * 1.25
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{LstmAutoencoder, Topology};
+    use crate::workload::TelemetryGen;
+
+    fn quant_server(cfg: ServerConfig) -> (AnomalyServer, TelemetryGen) {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let ae = LstmAutoencoder::random(topo, 1);
+        let backend = Arc::new(QuantBackend::new(ae));
+        (AnomalyServer::start(backend, cfg), TelemetryGen::new(32, 2))
+    }
+
+    #[test]
+    fn scores_flow_end_to_end() {
+        let (srv, mut gen) = quant_server(ServerConfig::default());
+        let mut responses = Vec::new();
+        for _ in 0..20 {
+            responses.push(srv.submit(gen.benign_window(8)));
+        }
+        for rx in responses {
+            let r = rx.recv().unwrap();
+            assert!(r.score.is_finite() && r.score >= 0.0);
+            assert!(r.e2e_us > 0.0);
+        }
+        assert_eq!(srv.metrics().completed(), 20);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn batching_respects_max_batch() {
+        let cfg = ServerConfig { max_batch: 4, ..Default::default() };
+        let (srv, mut gen) = quant_server(cfg);
+        let rxs: Vec<_> = (0..32).map(|_| srv.submit(gen.benign_window(8))).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        assert!(srv.metrics().max_batch_seen() <= 4);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent() {
+        let (srv, mut gen) = quant_server(ServerConfig::default());
+        let r = srv.score_blocking(gen.benign_window(4));
+        assert!(r.score >= 0.0);
+        srv.shutdown();
+        srv.shutdown();
+    }
+
+    #[test]
+    fn threshold_separates_obvious_anomalies() {
+        // With a *trained-ish* criterion this is exercised in the example;
+        // here: scores for spiky windows exceed benign scores on average
+        // even with random weights (bigger inputs → bigger residuals).
+        let (srv, mut gen) = quant_server(ServerConfig::default());
+        let benign: f64 = (0..10)
+            .map(|_| srv.score_blocking(gen.benign_window(16)).score)
+            .sum::<f64>()
+            / 10.0;
+        let spiky: f64 = (0..10)
+            .map(|_| {
+                srv.score_blocking(
+                    gen.anomalous_window(16, crate::workload::AnomalyKind::Spike),
+                )
+                .score
+            })
+            .sum::<f64>()
+            / 10.0;
+        assert!(spiky > benign, "spiky {spiky} benign {benign}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn calibrate_threshold_above_bulk() {
+        let scores: Vec<f64> = (0..100).map(|i| 0.01 + 0.0001 * i as f64).collect();
+        let th = calibrate_threshold(&scores, 0.99);
+        let below = scores.iter().filter(|&&s| s <= th).count();
+        assert!(below >= 99);
+    }
+}

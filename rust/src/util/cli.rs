@@ -1,0 +1,109 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor set).
+//! Supports `--flag`, `--key value`, `--key=value`, and positionals.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    args.flags.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.insert(stripped.to_string(), String::from("true"));
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list of usize, e.g. `--timesteps 1,2,4,64`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let a = parse(&["simulate", "--model", "F32-D2", "--timesteps=64", "--verbose"]);
+        assert_eq!(a.positional, vec!["simulate"]);
+        assert_eq!(a.get("model"), Some("F32-D2"));
+        assert_eq!(a.get_usize("timesteps", 0), 64);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("model", "all"), "all");
+        assert_eq!(a.get_f64("rate", 1.5), 1.5);
+        assert_eq!(a.get_usize_list("t", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = parse(&["--t", "1,2, 4,64"]);
+        assert_eq!(a.get_usize_list("t", &[]), vec![1, 2, 4, 64]);
+    }
+
+    #[test]
+    fn flag_before_flag_is_boolean() {
+        let a = parse(&["--fast", "--model", "X"]);
+        assert!(a.has("fast"));
+        assert_eq!(a.get("model"), Some("X"));
+    }
+}

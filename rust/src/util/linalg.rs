@@ -1,0 +1,122 @@
+//! Tiny dense linear algebra: Gaussian elimination and linear least
+//! squares via normal equations. Used to calibrate the CPU/GPU analytical
+//! baseline models against the paper's published tables (DESIGN.md §6).
+
+/// Solve `A x = b` for square `A` (row-major, n×n) by Gaussian elimination
+/// with partial pivoting. Returns `None` if singular.
+pub fn solve(a: &[f64], b: &[f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    let mut m = a.to_vec();
+    let mut rhs = b.to_vec();
+    for col in 0..n {
+        // Pivot.
+        let mut piv = col;
+        for r in col + 1..n {
+            if m[r * n + col].abs() > m[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if m[piv * n + col].abs() < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for c in 0..n {
+                m.swap(col * n + c, piv * n + c);
+            }
+            rhs.swap(col, piv);
+        }
+        // Eliminate below.
+        for r in col + 1..n {
+            let factor = m[r * n + col] / m[col * n + col];
+            for c in col..n {
+                m[r * n + c] -= factor * m[col * n + c];
+            }
+            rhs[r] -= factor * rhs[col];
+        }
+    }
+    // Back substitution.
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = rhs[row];
+        for c in row + 1..n {
+            acc -= m[row * n + c] * x[c];
+        }
+        x[row] = acc / m[row * n + row];
+    }
+    Some(x)
+}
+
+/// Least squares `min ‖X β − y‖²` via normal equations `XᵀX β = Xᵀy`.
+/// `x` is row-major with `k` columns; returns β (length k).
+pub fn lstsq(x: &[f64], y: &[f64], k: usize) -> Option<Vec<f64>> {
+    let n = y.len();
+    assert_eq!(x.len(), n * k);
+    let mut xtx = vec![0.0; k * k];
+    let mut xty = vec![0.0; k];
+    for i in 0..n {
+        for a in 0..k {
+            xty[a] += x[i * k + a] * y[i];
+            for b in 0..k {
+                xtx[a * k + b] += x[i * k + a] * x[i * k + b];
+            }
+        }
+    }
+    solve(&xtx, &xty, k)
+}
+
+/// R² of a fit (1 − SS_res / SS_tot).
+pub fn r_squared(pred: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(pred.len(), y.len());
+    let mean = y.iter().sum::<f64>() / y.len() as f64;
+    let ss_tot: f64 = y.iter().map(|v| (v - mean).powi(2)).sum();
+    let ss_res: f64 = pred.iter().zip(y).map(|(p, v)| (p - v).powi(2)).sum();
+    1.0 - ss_res / ss_tot.max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::props;
+
+    #[test]
+    fn solves_known_system() {
+        // 2x + y = 5; x - y = 1 → x = 2, y = 1.
+        let x = solve(&[2.0, 1.0, 1.0, -1.0], &[5.0, 1.0], 2).unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-12);
+        assert!((x[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn detects_singular() {
+        assert!(solve(&[1.0, 2.0, 2.0, 4.0], &[1.0, 2.0], 2).is_none());
+    }
+
+    #[test]
+    fn lstsq_recovers_exact_linear_model() {
+        props("lstsq_exact", 64, |g| {
+            let beta = [g.f64_in(-3.0, 3.0), g.f64_in(-3.0, 3.0), g.f64_in(-3.0, 3.0)];
+            let n = 30;
+            let mut xs = Vec::new();
+            let mut ys = Vec::new();
+            for _ in 0..n {
+                let a = g.f64_in(-5.0, 5.0);
+                let b = g.f64_in(-5.0, 5.0);
+                xs.extend_from_slice(&[1.0, a, b]);
+                ys.push(beta[0] + beta[1] * a + beta[2] * b);
+            }
+            let fit = lstsq(&xs, &ys, 3).unwrap();
+            for (f, t) in fit.iter().zip(&beta) {
+                assert!((f - t).abs() < 1e-8, "fit {f} true {t}");
+            }
+        });
+    }
+
+    #[test]
+    fn r_squared_perfect_and_mean() {
+        let y = [1.0, 2.0, 3.0];
+        assert!((r_squared(&y, &y) - 1.0).abs() < 1e-12);
+        let mean_pred = [2.0, 2.0, 2.0];
+        assert!(r_squared(&mean_pred, &y).abs() < 1e-12);
+    }
+}

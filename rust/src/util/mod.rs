@@ -1,0 +1,17 @@
+//! From-scratch substrates: deterministic PRNGs, a minimal JSON
+//! reader/writer, a property-testing mini-framework, paper-style ASCII
+//! tables, summary statistics, and a tiny CLI argument parser.
+//!
+//! The offline vendor set ships only `xla` + `anyhow`, so everything a
+//! well-maintained systems repo would normally pull from crates.io
+//! (rand, serde_json, proptest, clap, criterion's stats) is implemented
+//! here and tested like any other module.
+
+pub mod rng;
+pub mod json;
+pub mod prop;
+pub mod table;
+pub mod stats;
+pub mod cli;
+pub mod timer;
+pub mod linalg;

@@ -1,0 +1,215 @@
+//! Summary statistics for measurements: mean, stddev, percentiles, and a
+//! streaming histogram used by the server's latency metrics.
+
+/// Simple batch summary over a sample.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p95: percentile_sorted(&sorted, 0.95),
+            p99: percentile_sorted(&sorted, 0.99),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an already-sorted sample.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Log-bucketed streaming histogram: fixed memory, ~4% relative bucket
+/// width; good enough for latency percentiles in the serving metrics.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    /// counts[i] covers [base * growth^i, base * growth^(i+1))
+    counts: Vec<u64>,
+    base: f64,
+    log_growth: f64,
+    underflow: u64,
+    total: u64,
+    sum: f64,
+    max_seen: f64,
+}
+
+impl LogHistogram {
+    /// `base` = smallest resolvable value (e.g. 1e-7 s), 256 buckets with 4%
+    /// growth cover ~5 orders of magnitude.
+    pub fn new(base: f64, growth: f64, buckets: usize) -> Self {
+        Self {
+            counts: vec![0; buckets],
+            base,
+            log_growth: growth.ln(),
+            underflow: 0,
+            total: 0,
+            sum: 0.0,
+            max_seen: 0.0,
+        }
+    }
+
+    /// Default for latencies in seconds: 100 ns .. ~3000 s.
+    pub fn for_latency() -> Self {
+        Self::new(1e-7, 1.04, 620)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.total += 1;
+        self.sum += v;
+        if v > self.max_seen {
+            self.max_seen = v;
+        }
+        if v < self.base {
+            self.underflow += 1;
+            return;
+        }
+        let idx = ((v / self.base).ln() / self.log_growth) as usize;
+        let idx = idx.min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max_seen
+    }
+
+    /// Percentile estimate (bucket lower edge interpolation).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut acc = self.underflow;
+        if acc >= target {
+            return self.base;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.base * (self.log_growth * (i as f64 + 0.5)).exp();
+            }
+        }
+        self.max_seen
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.underflow += other.underflow;
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max_seen = self.max_seen.max(other.max_seen);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn summary_of_known_sample() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert!((percentile_sorted(&sorted, 0.5) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_tracks_percentiles_within_bucket_error() {
+        let mut h = LogHistogram::for_latency();
+        let mut r = Xoshiro256::seeded(1);
+        let mut xs: Vec<f64> = (0..50_000).map(|_| r.uniform(1e-4, 1e-1)).collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.5, 0.95, 0.99] {
+            let exact = percentile_sorted(&xs, q);
+            let est = h.percentile(q);
+            let rel = (est - exact).abs() / exact;
+            assert!(rel < 0.06, "q={q} exact={exact} est={est} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined() {
+        let mut a = LogHistogram::for_latency();
+        let mut b = LogHistogram::for_latency();
+        let mut all = LogHistogram::for_latency();
+        let mut r = Xoshiro256::seeded(2);
+        for i in 0..10_000 {
+            let v = r.uniform(1e-5, 1e-2);
+            if i % 2 == 0 {
+                a.record(v)
+            } else {
+                b.record(v)
+            }
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.percentile(0.5) - all.percentile(0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_summary_is_defaultish() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+    }
+}

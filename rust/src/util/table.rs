@@ -1,0 +1,154 @@
+//! Paper-style ASCII table rendering for the bench harness and CLI.
+//! Produces aligned, pipe-delimited tables that mirror the layout of the
+//! paper's Tables 1–3 so paper-vs-measured comparison is eyeballable.
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// An ASCII table builder.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Self {
+        Table { title: title.to_string(), ..Default::default() }
+    }
+
+    /// Set the header; all columns default to right-aligned except col 0.
+    pub fn header(mut self, cols: &[&str]) -> Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self.aligns = (0..cols.len())
+            .map(|i| if i == 0 { Align::Left } else { Align::Right })
+            .collect();
+        self
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Self {
+        if col < self.aligns.len() {
+            self.aligns[col] = a;
+        }
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Insert a horizontal separator row.
+    pub fn separator(&mut self) -> &mut Self {
+        self.rows.push(Vec::new());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        let rule = |out: &mut String| {
+            out.push('+');
+            for w in &widths {
+                out.push_str(&"-".repeat(w + 2));
+                out.push('+');
+            }
+            out.push('\n');
+        };
+        rule(&mut out);
+        out.push('|');
+        for (i, h) in self.header.iter().enumerate() {
+            out.push_str(&pad(h, widths[i], Align::Left));
+            out.push('|');
+        }
+        out.push('\n');
+        rule(&mut out);
+        for row in &self.rows {
+            if row.is_empty() {
+                rule(&mut out);
+                continue;
+            }
+            out.push('|');
+            for i in 0..ncols {
+                out.push_str(&pad(&row[i], widths[i], self.aligns[i]));
+                out.push('|');
+            }
+            out.push('\n');
+        }
+        rule(&mut out);
+        out
+    }
+}
+
+fn pad(s: &str, w: usize, a: Align) -> String {
+    let len = s.chars().count();
+    let fill = w.saturating_sub(len);
+    match a {
+        Align::Left => format!(" {}{} ", s, " ".repeat(fill)),
+        Align::Right => format!(" {}{} ", " ".repeat(fill), s),
+    }
+}
+
+/// Format a latency in ms the way the paper does (3 decimals).
+pub fn ms(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+/// Format a speedup the way the paper does: `(x12.7)`.
+pub fn speedup(v: f64) -> String {
+    format!("(x{v:.1})")
+}
+
+/// Format a percentage with 2 decimals (Table 1 style).
+pub fn pct(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Demo").header(&["Model", "FPGA", "CPU"]);
+        t.row(vec!["F32-D2".into(), "0.033".into(), "0.420 (x12.7)".into()]);
+        t.row(vec!["F64-D6-long".into(), "0.060".into(), "1.208 (x20.1)".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        // All data lines equal width.
+        let widths: Vec<usize> =
+            s.lines().filter(|l| l.starts_with('|')).map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{s}");
+        assert!(s.contains("F64-D6-long"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("x").header(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(ms(0.0334), "0.033");
+        assert_eq!(speedup(12.72), "(x12.7)");
+        assert_eq!(pct(26.113), "26.11");
+    }
+}

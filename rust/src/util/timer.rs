@@ -1,0 +1,109 @@
+//! Measurement harness for the benches (criterion is not in the offline
+//! vendor set): warmup + timed repetitions with summary statistics, plus
+//! a `black_box` to keep the optimizer honest.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Opaque identity function the optimizer cannot see through.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+/// Result of a timed benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time in seconds.
+    pub per_iter: Summary,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let s = &self.per_iter;
+        format!(
+            "{:<42} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_secs(s.mean),
+            fmt_secs(s.p50),
+            fmt_secs(s.p95),
+        )
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+/// Time `f` with `warmup` untimed runs then `samples` timed batches; each
+/// sample runs `f` `batch` times and the per-iteration time is the batch
+/// mean. Keeps total runtime bounded while giving stable percentiles.
+pub fn bench(name: &str, warmup: usize, samples: usize, batch: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut per_iter = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let start = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        per_iter.push(start.elapsed().as_secs_f64() / batch as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        per_iter: Summary::of(&per_iter),
+        iters: samples * batch,
+    }
+}
+
+/// Convenience: auto-pick batch size so each sample is ≥ ~2 ms, then run
+/// `samples` samples. Good default for microbenchmarks.
+pub fn bench_auto(name: &str, samples: usize, mut f: impl FnMut()) -> BenchResult {
+    // Estimate cost with a couple of probes.
+    let start = Instant::now();
+    f();
+    f();
+    let est = (start.elapsed().as_secs_f64() / 2.0).max(1e-9);
+    let batch = ((2e-3 / est).ceil() as usize).clamp(1, 1_000_000);
+    bench(name, 2, samples, batch, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let r = bench("spin", 1, 5, 100, || {
+            let mut acc = 0u64;
+            for i in 0..100 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(r.per_iter.mean > 0.0);
+        assert_eq!(r.iters, 500);
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with("s"));
+    }
+}

@@ -1,0 +1,68 @@
+//! Request traces for the serving experiments: Poisson (open-loop) and
+//! closed-loop arrival processes over telemetry windows.
+
+use super::{TelemetryGen, Window};
+use crate::util::rng::Xoshiro256;
+
+/// One timed request.
+#[derive(Clone, Debug)]
+pub struct TimedRequest {
+    /// Arrival offset from trace start, seconds.
+    pub at_s: f64,
+    pub window: Window,
+    pub id: u64,
+}
+
+/// An open-loop Poisson trace: `rate_rps` requests/second for `n`
+/// requests, windows drawn from the telemetry generator with the given
+/// anomaly rate.
+pub fn poisson_trace(
+    gen: &mut TelemetryGen,
+    seed: u64,
+    rate_rps: f64,
+    n: usize,
+    t: usize,
+    anomaly_rate: f64,
+) -> Vec<TimedRequest> {
+    assert!(rate_rps > 0.0);
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut at = 0.0f64;
+    let kinds = super::AnomalyKind::all();
+    (0..n as u64)
+        .map(|id| {
+            at += rng.exponential(rate_rps);
+            let window = if rng.next_f64() < anomaly_rate {
+                gen.anomalous_window(t, kinds[rng.below(4) as usize])
+            } else {
+                gen.benign_window(t)
+            };
+            TimedRequest { at_s: at, window, id }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_close() {
+        let mut g = TelemetryGen::new(8, 1);
+        let trace = poisson_trace(&mut g, 2, 500.0, 2000, 4, 0.0);
+        let span = trace.last().unwrap().at_s;
+        let rate = 2000.0 / span;
+        assert!((rate - 500.0).abs() < 50.0, "rate {rate}");
+        // Arrivals sorted, ids sequential.
+        for (i, w) in trace.windows(2).enumerate() {
+            assert!(w[1].at_s >= w[0].at_s, "at {i}");
+        }
+    }
+
+    #[test]
+    fn anomaly_rate_respected_in_trace() {
+        let mut g = TelemetryGen::new(8, 1);
+        let trace = poisson_trace(&mut g, 3, 100.0, 1000, 4, 0.25);
+        let anomalous = trace.iter().filter(|r| r.window.anomaly.is_some()).count();
+        assert!((180..320).contains(&anomalous), "{anomalous}");
+    }
+}

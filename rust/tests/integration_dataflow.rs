@@ -1,0 +1,117 @@
+//! Integration: the three latency views — analytical Eq 1, the fast
+//! max-plus simulator, and the per-cycle stepped reference — must agree,
+//! and the ablation orderings must hold end-to-end.
+
+use lstm_ae_accel::accel::dataflow::{DataflowSim, SimOptions};
+use lstm_ae_accel::accel::latency::LatencyModel;
+use lstm_ae_accel::accel::layer_by_layer::{run_layer_by_layer, MemModel};
+use lstm_ae_accel::accel::reuse::BalancedConfig;
+use lstm_ae_accel::accel::stepped::run_stepped;
+use lstm_ae_accel::model::{LstmAutoencoder, ModelWeights, Topology};
+use lstm_ae_accel::util::prop::props;
+use lstm_ae_accel::util::rng::Xoshiro256;
+
+#[test]
+fn three_way_latency_agreement_full_grid() {
+    for topo in Topology::paper_models() {
+        let rh_m = BalancedConfig::paper_rh_m(&topo.name).unwrap();
+        let cfg = BalancedConfig::balance(&topo, rh_m);
+        let lm = LatencyModel::of(&cfg);
+        let sim = DataflowSim::new(&cfg);
+        for t in [1usize, 2, 4, 6, 16, 64] {
+            let fast = sim.run_sequence(t);
+            let slow = run_stepped(&cfg, SimOptions::default(), t);
+            assert_eq!(fast.total_cycles, lm.acc_lat(t), "{} T={t} fast vs Eq1", topo.name);
+            assert_eq!(fast.total_cycles, slow.total_cycles, "{} T={t} fast vs stepped", topo.name);
+        }
+    }
+}
+
+#[test]
+fn agreement_under_stress_configs() {
+    props("integration_threeway", 64, |g| {
+        let f = 1usize << g.usize_in(3, 6);
+        let d = 2 * g.usize_in(1, 3);
+        let Ok(topo) = Topology::new(f, d) else { return };
+        let cfg = if g.bool() {
+            BalancedConfig::balance(&topo, g.u64_below(8) + 1)
+        } else {
+            BalancedConfig::uniform(&topo, g.u64_below(4) + 1)
+        };
+        let opts = SimOptions {
+            fifo_capacity: g.usize_in(1, 3),
+            reader_cycles_per_t: g.u64_below(2) * f as u64,
+            writer_cycles_per_t: g.u64_below(2) * f as u64,
+        };
+        let t = g.usize_in(1, 40);
+        let fast = DataflowSim::with_options(&cfg, opts).run_sequence(t);
+        let slow = run_stepped(&cfg, opts, t);
+        assert_eq!(fast.total_cycles, slow.total_cycles);
+        assert_eq!(fast.output_times, slow.output_times);
+    });
+}
+
+#[test]
+fn temporal_parallelism_beats_layer_by_layer_everywhere() {
+    for topo in Topology::paper_models() {
+        let cfg = BalancedConfig::paper_config(&topo);
+        for t in [2usize, 16, 64] {
+            let df = DataflowSim::new(&cfg).run_sequence(t).total_cycles;
+            let lbl = run_layer_by_layer(&cfg, MemModel::default(), t).total_cycles;
+            assert!(lbl > df, "{} T={t}", topo.name);
+        }
+    }
+}
+
+#[test]
+fn balancing_beats_uniform_on_total_latency_per_multiplier() {
+    // The methodology's promise: for similar silicon, balanced dataflow
+    // sustains higher throughput. Compare cycles·multipliers (lower is
+    // better silicon-time product).
+    for topo in Topology::paper_models() {
+        let bal = BalancedConfig::paper_config(&topo);
+        let uni = BalancedConfig::uniform(&topo, bal.rh_m);
+        let t = 64;
+        let bal_cost = DataflowSim::new(&bal).run_sequence(t).total_cycles as f64
+            * bal.total_multipliers() as f64;
+        let uni_cost = DataflowSim::new(&uni).run_sequence(t).total_cycles as f64
+            * uni.total_multipliers() as f64;
+        assert!(
+            bal_cost < uni_cost * 1.05,
+            "{}: balanced {bal_cost:.0} vs uniform {uni_cost:.0}",
+            topo.name
+        );
+    }
+}
+
+#[test]
+fn functional_equivalence_sim_vs_golden_all_models() {
+    let mut rng = Xoshiro256::seeded(2024);
+    for topo in Topology::paper_models() {
+        let weights = ModelWeights::random(&topo, 77);
+        let cfg = BalancedConfig::paper_config(&topo);
+        let x: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..topo.features).map(|_| rng.uniform(-1.0, 1.0) as f32).collect())
+            .collect();
+        let (_, sim_out) = DataflowSim::new(&cfg).run_with_data(&weights, &x);
+        let ae = LstmAutoencoder::new(topo.clone(), weights).unwrap();
+        assert_eq!(sim_out, ae.forward_quant(&x), "{}", topo.name);
+    }
+}
+
+#[test]
+fn quant_datapath_tracks_f32_on_realistic_signals() {
+    // On telemetry-like inputs the Q8.24+PWL datapath must stay close to
+    // f32 — quantization must not change anomaly decisions.
+    use lstm_ae_accel::workload::TelemetryGen;
+    for topo in Topology::paper_models() {
+        let f = topo.features;
+        let ae = LstmAutoencoder::random(topo, 3);
+        let mut gen = TelemetryGen::new(f, 9);
+        let w = gen.benign_window(16);
+        let sf = ae.score_f32(&w.data);
+        let sq = ae.score_quant(&w.data);
+        let rel = (sf - sq).abs() / sf.max(1e-9);
+        assert!(rel < 0.25, "{}: f32 {sf:.5} quant {sq:.5}", ae.topo.name);
+    }
+}

@@ -1,0 +1,146 @@
+//! Integration over the AOT artifacts: PJRT execution of the lowered
+//! LSTM-AE vs the Rust f32 golden model over the shared weights binary —
+//! the cross-language numerics contract.
+//!
+//! These tests require `make artifacts`; without artifacts they are
+//! skipped (not failed) so `cargo test` stays useful pre-build.
+
+use std::path::PathBuf;
+
+use lstm_ae_accel::model::{LstmAutoencoder, ModelWeights, Topology};
+use lstm_ae_accel::runtime::Runtime;
+use lstm_ae_accel::util::rng::Xoshiro256;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn open_runtime_or_skip() -> Option<Runtime> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(&artifacts_dir()).expect("open runtime"))
+}
+
+#[test]
+fn manifest_covers_all_paper_models_and_timesteps() {
+    let Some(rt) = open_runtime_or_skip() else { return };
+    for topo in Topology::paper_models() {
+        let entry = rt.manifest().find(&topo.name).expect(&topo.name);
+        assert_eq!(entry.features, topo.features);
+        assert_eq!(entry.depth, topo.depth);
+        assert_eq!(entry.layers, topo.chain());
+        for t in [1usize, 2, 4, 6, 16, 64] {
+            assert!(entry.hlo_for_t(t).is_some(), "{} T={t}", topo.name);
+        }
+        assert!(
+            entry.train_loss.unwrap_or(1.0) < 0.05,
+            "{} training converged (loss {:?})",
+            topo.name,
+            entry.train_loss
+        );
+    }
+}
+
+#[test]
+fn artifact_matches_rust_f32_golden_model() {
+    let Some(rt) = open_runtime_or_skip() else { return };
+    let mut rng = Xoshiro256::seeded(99);
+    for topo in Topology::paper_models() {
+        let weights =
+            ModelWeights::load(&artifacts_dir().join(format!("weights_{}.bin", topo.name)))
+                .expect("load weights");
+        let ae = LstmAutoencoder::new(topo.clone(), weights).unwrap();
+        for t in [1usize, 4, 16] {
+            let x: Vec<Vec<f32>> = (0..t)
+                .map(|_| {
+                    (0..topo.features).map(|_| rng.uniform(-1.0, 1.0) as f32).collect()
+                })
+                .collect();
+            let flat: Vec<f32> = x.iter().flatten().copied().collect();
+            let got = rt.infer(&topo.name, t, &flat).expect("infer");
+            let want: Vec<f32> = ae.forward_f32(&x).into_iter().flatten().collect();
+            assert_eq!(got.len(), want.len());
+            let mut max_d = 0.0f32;
+            for (a, b) in got.iter().zip(&want) {
+                max_d = max_d.max((a - b).abs());
+            }
+            // f32 accumulation-order differences only.
+            assert!(max_d < 2e-4, "{} T={t}: max |Δ| = {max_d}", topo.name);
+        }
+    }
+}
+
+#[test]
+fn artifact_reconstructs_benign_telemetry_with_low_error() {
+    // The trained model must actually have learned the telemetry family:
+    // benign windows reconstruct well, anomalous ones reconstruct worse.
+    use lstm_ae_accel::workload::AnomalyKind;
+    let Some(rt) = open_runtime_or_skip() else { return };
+    for name in ["LSTM-AE-F32-D2", "LSTM-AE-F64-D6"] {
+        // In-distribution telemetry: the family the model was trained on.
+        let mut gen = rt.telemetry_for(name, 4242).expect("telemetry spec");
+        let t = 16;
+        let score = |w: &[Vec<f32>]| -> f64 {
+            let flat: Vec<f32> = w.iter().flatten().copied().collect();
+            let out = rt.infer(name, t, &flat).unwrap();
+            flat.iter()
+                .zip(&out)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                / flat.len() as f64
+        };
+        let benign: f64 =
+            (0..8).map(|_| score(&gen.benign_window(t).data)).sum::<f64>() / 8.0;
+        let spike: f64 = (0..8)
+            .map(|_| score(&gen.anomalous_window(t, AnomalyKind::Spike).data))
+            .sum::<f64>()
+            / 8.0;
+        assert!(benign < 0.05, "{name}: benign score {benign}");
+        assert!(
+            spike > 2.0 * benign,
+            "{name}: spike {spike} vs benign {benign} — separation too weak"
+        );
+    }
+}
+
+#[test]
+fn batched_artifact_matches_per_window_inference() {
+    let Some(rt) = open_runtime_or_skip() else { return };
+    let entry = rt.manifest().find("F32-D2").unwrap();
+    let t = 16;
+    if entry.batch_sizes(t).is_empty() {
+        eprintln!("SKIP: no batched artifacts");
+        return;
+    }
+    let f = entry.features;
+    let mut rng = Xoshiro256::seeded(31);
+    // 13 windows: exercises the greedy 8 + 4 + 1 decomposition.
+    let b = 13usize;
+    let x: Vec<f32> = (0..b * t * f).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let batched = rt.infer_batch("F32-D2", t, b, &x).expect("batched");
+    assert_eq!(batched.len(), b * t * f);
+    for i in 0..b {
+        let single = rt.infer("F32-D2", t, &x[i * t * f..(i + 1) * t * f]).unwrap();
+        for (a, s) in batched[i * t * f..(i + 1) * t * f].iter().zip(&single) {
+            assert!((a - s).abs() < 1e-5, "window {i}: {a} vs {s}");
+        }
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(rt) = open_runtime_or_skip() else { return };
+    let a = rt.executable("F32-D2", 1).expect("compile");
+    let b = rt.executable("F32-D2", 1).expect("cached");
+    assert!(std::sync::Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
+}
+
+#[test]
+fn infer_rejects_bad_shapes() {
+    let Some(rt) = open_runtime_or_skip() else { return };
+    assert!(rt.infer("F32-D2", 4, &[0.0; 3]).is_err(), "wrong length");
+    assert!(rt.infer("F32-D2", 3, &[0.0; 96]).is_err(), "no artifact for T=3");
+    assert!(rt.infer("NOPE", 4, &[0.0; 128]).is_err(), "unknown model");
+}

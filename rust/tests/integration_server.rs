@@ -1,0 +1,116 @@
+//! Integration: the anomaly-detection service end to end — batching under
+//! open-loop load, threshold calibration, detection quality, and (when
+//! artifacts exist) the PJRT backend.
+
+use std::sync::Arc;
+
+use lstm_ae_accel::model::{LstmAutoencoder, Topology};
+use lstm_ae_accel::server::{
+    calibrate_threshold, AnomalyServer, Backend, PjrtBackend, QuantBackend, ServerConfig,
+};
+use lstm_ae_accel::workload::{trace::poisson_trace, AnomalyKind, TelemetryGen};
+
+fn artifacts_exist() -> bool {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+fn serve_trace(
+    backend: Arc<dyn Backend>,
+    t: usize,
+    mk_gen: impl Fn(u64) -> TelemetryGen,
+) -> (u64, u64, u64, u64) {
+    // Calibrate on benign, then classify a mixed trace.
+    let mut gen = mk_gen(5);
+    let benign: Vec<f64> = (0..48)
+        .map(|_| backend.score_batch(&[&gen.benign_window(t)])[0])
+        .collect();
+    let threshold = calibrate_threshold(&benign, 0.99);
+    let cfg = ServerConfig {
+        max_batch: 4,
+        max_wait: std::time::Duration::from_micros(300),
+        workers: 2,
+        threshold,
+    };
+    let srv = AnomalyServer::start(backend, cfg);
+    let mut gen = mk_gen(6);
+    let trace = poisson_trace(&mut gen, 7, 5000.0, 300, t, 0.25);
+    let mut inflight = Vec::new();
+    for req in trace {
+        let truth = req.window.anomaly.is_some();
+        inflight.push((srv.submit(req.window), truth));
+    }
+    let (mut tp, mut fp, mut fneg, mut tn) = (0u64, 0u64, 0u64, 0u64);
+    for (rx, truth) in inflight {
+        let r = rx.recv().expect("response");
+        match (r.is_anomaly, truth) {
+            (true, true) => tp += 1,
+            (true, false) => fp += 1,
+            (false, true) => fneg += 1,
+            (false, false) => tn += 1,
+        }
+    }
+    assert_eq!(srv.metrics().completed(), 300);
+    srv.shutdown();
+    (tp, fp, fneg, tn)
+}
+
+#[test]
+fn quant_backend_under_load_completes_all() {
+    let topo = Topology::from_name("F32-D2").unwrap();
+    let backend = Arc::new(QuantBackend::new(LstmAutoencoder::random(topo, 1)));
+    let (tp, fp, fneg, tn) = serve_trace(backend, 8, |s| TelemetryGen::new(32, s));
+    assert_eq!(tp + fp + fneg + tn, 300);
+    // Untrained weights give weak separation; just require the pipeline
+    // not to classify everything one way.
+    assert!(tp + fneg > 0 && fp + tn > 0);
+}
+
+#[test]
+fn pjrt_backend_detects_anomalies_with_trained_model() {
+    if !artifacts_exist() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let backend = Arc::new(PjrtBackend::new(dir.clone(), "F32-D2", 16).expect("backend"));
+    // Stream the training-distribution family (exported spec).
+    let spec_path = dir.join("telemetry_F32.json");
+    let (tp, fp, fneg, tn) = serve_trace(backend, 16, move |s| {
+        TelemetryGen::from_spec_file(&spec_path, s).expect("telemetry spec")
+    });
+    assert_eq!(tp + fp + fneg + tn, 300);
+    let recall = tp as f64 / (tp + fneg).max(1) as f64;
+    let precision = tp as f64 / (tp + fp).max(1) as f64;
+    // Trained model on this synthetic family should detect most
+    // anomalies without flagging everything.
+    assert!(recall > 0.6, "recall {recall} (tp {tp} fn {fneg})");
+    assert!(precision > 0.6, "precision {precision} (tp {tp} fp {fp})");
+}
+
+#[test]
+fn batcher_amortizes_under_burst() {
+    let topo = Topology::from_name("F32-D2").unwrap();
+    let backend = Arc::new(QuantBackend::new(LstmAutoencoder::random(topo, 2)));
+    let cfg = ServerConfig {
+        max_batch: 8,
+        max_wait: std::time::Duration::from_millis(2),
+        workers: 1,
+        threshold: 1.0,
+    };
+    let srv = AnomalyServer::start(backend, cfg);
+    let mut gen = TelemetryGen::new(32, 8);
+    // Burst of 64 requests at once → batches should form.
+    let rxs: Vec<_> = (0..64).map(|_| srv.submit(gen.benign_window(8))).collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    assert!(
+        srv.metrics().mean_batch_size() > 1.5,
+        "burst should batch (mean {})",
+        srv.metrics().mean_batch_size()
+    );
+    assert!(srv.metrics().max_batch_seen() <= 8);
+    srv.shutdown();
+}

@@ -1,0 +1,183 @@
+//! Cross-module property-test battery: invariants that span modules, run
+//! at higher case counts than the in-module unit tests.
+
+use lstm_ae_accel::accel::dataflow::{DataflowSim, SimOptions};
+use lstm_ae_accel::accel::latency::LatencyModel;
+use lstm_ae_accel::accel::multi::run_batch;
+use lstm_ae_accel::accel::optimizer::{evaluate, optimize, Objective};
+use lstm_ae_accel::accel::platform::FpgaDevice;
+use lstm_ae_accel::accel::reuse::BalancedConfig;
+use lstm_ae_accel::fixed::Q8_24;
+use lstm_ae_accel::model::{LstmAutoencoder, Topology};
+use lstm_ae_accel::util::json::Json;
+use lstm_ae_accel::util::prop::props;
+use lstm_ae_accel::util::rng::Xoshiro256;
+
+fn random_topo(g: &mut lstm_ae_accel::util::prop::Gen) -> Option<Topology> {
+    let f = 1usize << g.usize_in(3, 6);
+    let d = 2 * g.usize_in(1, 3);
+    Topology::new(f, d).ok()
+}
+
+#[test]
+fn acc_lat_additive_in_t() {
+    // acc_lat(a + b) = acc_lat(a) + b·Lat_m for any split (affine form).
+    props("acc_lat_affine", 256, |g| {
+        let Some(topo) = random_topo(g) else { return };
+        let lm = LatencyModel::of(&BalancedConfig::balance(&topo, g.u64_below(8) + 1));
+        let a = g.usize_in(1, 200);
+        let b = g.usize_in(1, 200);
+        assert_eq!(lm.acc_lat(a + b), lm.acc_lat(a) + b as u64 * lm.lat_t_m());
+    });
+}
+
+#[test]
+fn sim_never_beats_analytical() {
+    // Eq 1 is the lower bound; bounded FIFOs / reader rates only add.
+    props("sim_lower_bound", 128, |g| {
+        let Some(topo) = random_topo(g) else { return };
+        let cfg = if g.bool() {
+            BalancedConfig::balance(&topo, g.u64_below(8) + 1)
+        } else {
+            BalancedConfig::uniform(&topo, g.u64_below(4) + 1)
+        };
+        let lm = LatencyModel::of(&cfg);
+        let opts = SimOptions {
+            fifo_capacity: g.usize_in(1, 4),
+            reader_cycles_per_t: g.u64_below(3),
+            writer_cycles_per_t: g.u64_below(3),
+        };
+        let t = g.usize_in(1, 64);
+        let run = DataflowSim::with_options(&cfg, opts).run_sequence(t);
+        assert!(run.total_cycles >= lm.acc_lat(t));
+    });
+}
+
+#[test]
+fn batch_throughput_monotone_in_batch_size() {
+    props("batch_monotone", 64, |g| {
+        let Some(topo) = random_topo(g) else { return };
+        let cfg = BalancedConfig::balance(&topo, g.u64_below(4) + 1);
+        let t = g.usize_in(1, 16);
+        let n1 = g.usize_in(1, 8);
+        let n2 = n1 + g.usize_in(1, 8);
+        let hz = 300.0e6;
+        let tp1 = run_batch(&cfg, SimOptions::default(), t, n1).throughput_seq_per_s(hz);
+        let tp2 = run_batch(&cfg, SimOptions::default(), t, n2).throughput_seq_per_s(hz);
+        assert!(tp2 >= tp1 * 0.999, "throughput must not degrade with batch: {tp1} -> {tp2}");
+    });
+}
+
+#[test]
+fn optimizer_output_always_fits_and_is_minimal() {
+    props("optimizer_sound", 32, |g| {
+        let Some(topo) = random_topo(g) else { return };
+        let dev = *g.choose(&[FpgaDevice::ZCU104, FpgaDevice::ALVEO_U50]);
+        let t = g.usize_in(1, 64);
+        if let Some(p) = optimize(&topo, &dev, t, Objective::Latency) {
+            assert!(p.fits);
+            for smaller in 1..p.rh_m {
+                assert!(!evaluate(&topo, &dev, smaller, t).fits);
+            }
+        }
+    });
+}
+
+#[test]
+fn quant_forward_bounded_outputs() {
+    // LSTM output gate bounds |h| ≤ 1 regardless of input magnitude;
+    // holds through the entire quantized stack (saturation-safe).
+    props("quant_bounded", 24, |g| {
+        let Some(topo) = random_topo(g) else { return };
+        let f = topo.features;
+        let ae = LstmAutoencoder::random(topo, g.case as u64);
+        let x: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..f).map(|_| g.f32_in(-50.0, 50.0)).collect())
+            .collect();
+        for row in ae.forward_quant(&x) {
+            for v in row {
+                assert!(v.abs() <= 1.0 + 1e-6, "output {v} out of gate bound");
+            }
+        }
+    });
+}
+
+#[test]
+fn fixed_point_distributivity_within_rounding() {
+    // a·(b + c) ≈ a·b + a·c within 1.5 ulp (two extra roundings).
+    props("fixed_distrib", 1024, |g| {
+        let a = Q8_24::from_f64(g.f64_in(-8.0, 8.0));
+        let b = Q8_24::from_f64(g.f64_in(-4.0, 4.0));
+        let c = Q8_24::from_f64(g.f64_in(-4.0, 4.0));
+        let lhs = a.mul(b.add(c));
+        let rhs = a.mul(b).add(a.mul(c));
+        let d = (lhs.0 as i64 - rhs.0 as i64).abs();
+        assert!(d <= 2, "distributivity gap {d} ulp");
+    });
+}
+
+#[test]
+fn json_roundtrip_fuzz() {
+    // Random JSON trees survive serialize → parse exactly.
+    fn gen_json(g: &mut lstm_ae_accel::util::prop::Gen, depth: usize) -> Json {
+        if depth == 0 {
+            return match g.u64_below(4) {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.f64_in(-1e6, 1e6) * 100.0).round() / 100.0),
+                _ => {
+                    let n = g.u64_below(1000);
+                    Json::Str(format!("s{}-{}", g.case, n))
+                }
+            };
+        }
+        match g.u64_below(2) {
+            0 => Json::Arr((0..g.usize_in(0, 4)).map(|_| gen_json(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.usize_in(0, 4))
+                    .map(|i| (format!("k{i}"), gen_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    props("json_fuzz", 256, |g| {
+        let v = gen_json(g, 3);
+        let compact = Json::parse(&v.to_string()).expect("compact parse");
+        assert_eq!(compact, v);
+        let pretty = Json::parse(&v.to_string_pretty()).expect("pretty parse");
+        assert_eq!(pretty, v);
+    });
+}
+
+#[test]
+fn telemetry_spec_roundtrip_preserves_stream() {
+    // Export a generator's family as JSON (as aot.py does), reload, and
+    // verify the deterministic latent part matches. (Noise differs by
+    // seed; compare with noise quenched via large window means.)
+    props("spec_roundtrip", 16, |g| {
+        use lstm_ae_accel::workload::{TelemetryGen, LATENTS};
+        let f = 8 * (1 + g.usize_in(0, 3));
+        let seed = g.case as u64 + 1;
+        // Build a spec JSON by sampling one generator's behaviour: we
+        // re-derive the family params by constructing from_spec with
+        // values pulled from a fresh generator's JSON round trip.
+        let mut mk = Xoshiro256::seeded(seed);
+        let freq: Vec<f64> =
+            (0..LATENTS).map(|_| 2.0 * std::f64::consts::PI / mk.uniform(8.0, 64.0)).collect();
+        let phase: Vec<f64> = (0..LATENTS).map(|_| mk.uniform(0.0, 6.28)).collect();
+        let mix: Vec<f64> = (0..f * LATENTS).map(|_| mk.uniform(-0.2, 0.2)).collect();
+        let spec = Json::obj(vec![
+            ("features", Json::num(f as f64)),
+            ("latents", Json::num(LATENTS as f64)),
+            ("freq", Json::Arr(freq.iter().map(|&v| Json::num(v)).collect())),
+            ("phase", Json::Arr(phase.iter().map(|&v| Json::num(v)).collect())),
+            ("mix", Json::Arr(mix.iter().map(|&v| Json::num(v)).collect())),
+            ("noise_std", Json::num(0.0)),
+        ]);
+        let mut a = TelemetryGen::from_spec(&spec, 1).expect("spec");
+        let mut b = TelemetryGen::from_spec(&Json::parse(&spec.to_string()).unwrap(), 2)
+            .expect("spec roundtrip");
+        // Zero noise ⇒ identical streams regardless of seed.
+        assert_eq!(a.benign_window(16).data, b.benign_window(16).data);
+    });
+}
