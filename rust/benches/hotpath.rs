@@ -1,27 +1,94 @@
 //! Microbenchmarks of the hot paths — the §Perf baseline/tracking bench.
 //!
 //! Covers: the dataflow simulator (events/s), the analytical model, the
-//! Q8.24 datapath (cell step, dot product, PWL eval), workload generation,
-//! and server throughput through the quant backend.
+//! Q8.24 datapath (cell step, dot product, PWL eval), the temporal-pipeline
+//! execution engine vs the sequential scorer on deep models, workload
+//! generation, and server throughput through the quant backend.
+//!
+//! Every result is also written to `BENCH_hotpath.json` next to
+//! `Cargo.toml` (name → ns/iter + optional items/s) so the perf
+//! trajectory is machine-comparable across PRs; EXPERIMENTS.md §Perf
+//! records the interpretation.
 //!
 //! ```bash
 //! cargo bench --bench hotpath
 //! ```
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use lstm_ae_accel::accel::dataflow::DataflowSim;
 use lstm_ae_accel::accel::latency::LatencyModel;
 use lstm_ae_accel::accel::reuse::BalancedConfig;
 use lstm_ae_accel::activations::Pwl;
+use lstm_ae_accel::engine::{BatchEngine, TemporalPipeline};
 use lstm_ae_accel::fixed::{dot_q, Q8_24};
-use lstm_ae_accel::model::lstm::{QuantLstmCell, QuantLstmState};
+use lstm_ae_accel::model::lstm::{QuantLstmCell, QuantLstmState, StepScratch};
 use lstm_ae_accel::model::{LstmAutoencoder, Topology};
 use lstm_ae_accel::server::{AnomalyServer, QuantBackend, ServerConfig};
-use lstm_ae_accel::util::timer::{bench, bench_auto, black_box};
+use lstm_ae_accel::util::json::Json;
+use lstm_ae_accel::util::timer::{bench, bench_auto, black_box, BenchResult};
 use lstm_ae_accel::workload::TelemetryGen;
 
+/// Accumulates results and flushes them as `BENCH_hotpath.json`.
+struct Recorder {
+    results: BTreeMap<String, Json>,
+}
+
+impl Recorder {
+    fn new() -> Recorder {
+        Recorder { results: BTreeMap::new() }
+    }
+
+    /// Record a timed result; `items_per_iter`, when given, also derives
+    /// a throughput (items/s) so cross-PR comparisons survive batch-size
+    /// tweaks.
+    fn add(&mut self, r: &BenchResult, items_per_iter: Option<f64>) {
+        let mut entry = vec![
+            ("ns_per_iter".to_string(), Json::num(r.per_iter.mean * 1e9)),
+            ("p50_ns".to_string(), Json::num(r.per_iter.p50 * 1e9)),
+            ("p95_ns".to_string(), Json::num(r.per_iter.p95 * 1e9)),
+            ("iters".to_string(), Json::num(r.iters as f64)),
+        ];
+        if let Some(items) = items_per_iter {
+            entry.push((
+                "throughput_per_s".to_string(),
+                Json::num(items / r.per_iter.mean),
+            ));
+        }
+        self.results.insert(r.name.clone(), Json::Obj(entry.into_iter().collect()));
+    }
+
+    /// Record a raw throughput-only measurement (e.g. the closed-loop
+    /// server run, which is not a per-iteration bench).
+    fn add_throughput(&mut self, name: &str, items: f64, seconds: f64) {
+        let entry: BTreeMap<String, Json> = [
+            ("ns_per_iter".to_string(), Json::num(seconds / items * 1e9)),
+            ("throughput_per_s".to_string(), Json::num(items / seconds)),
+        ]
+        .into_iter()
+        .collect();
+        self.results.insert(name.to_string(), Json::Obj(entry));
+    }
+
+    fn flush(&self) {
+        let doc = Json::obj(vec![
+            ("schema", Json::str("hotpath/v1")),
+            ("bench", Json::str("benches/hotpath.rs")),
+            ("results", Json::Obj(self.results.clone())),
+        ]);
+        let path =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json");
+        match std::fs::write(&path, doc.to_string_pretty()) {
+            Ok(()) => println!("\nwrote {}", path.display()),
+            Err(e) => eprintln!("\nWARN: could not write {}: {e}", path.display()),
+        }
+    }
+}
+
 fn main() {
+    let mut rec = Recorder::new();
+
     println!("## Simulator & analytical model");
     let topo = Topology::from_name("F64-D6").unwrap();
     let cfg = BalancedConfig::paper_config(&topo);
@@ -36,16 +103,19 @@ fn main() {
             r.report(),
             events / r.per_iter.mean / 1e6
         );
+        rec.add(&r, Some(events));
     }
     let lm = LatencyModel::of(&cfg);
     let r = bench_auto("analytical Eq1 eval", 20, || {
         black_box(lm.acc_lat(black_box(64)));
     });
     println!("{}", r.report());
+    rec.add(&r, None);
     let r = bench_auto("balance(F64-D6, 8)", 20, || {
         black_box(BalancedConfig::balance(&topo, 8));
     });
     println!("{}", r.report());
+    rec.add(&r, None);
 
     println!("\n## Q8.24 datapath");
     let pwl = Pwl::tanh();
@@ -58,6 +128,7 @@ fn main() {
         black_box(acc);
     });
     println!("{}   ({:.1} M evals/s)", r.report(), 1024.0 / r.per_iter.mean / 1e6);
+    rec.add(&r, Some(1024.0));
 
     let a: Vec<Q8_24> = (0..256).map(|i| Q8_24::from_f64((i as f64 * 0.013).sin())).collect();
     let b: Vec<Q8_24> = (0..256).map(|i| Q8_24::from_f64((i as f64 * 0.007).cos())).collect();
@@ -65,6 +136,7 @@ fn main() {
         black_box(dot_q(black_box(&a), black_box(&b)));
     });
     println!("{}   ({:.1} M MAC/s)", r.report(), 256.0 / r.per_iter.mean / 1e6);
+    rec.add(&r, Some(256.0));
 
     let w = lstm_ae_accel::model::weights::LayerWeights::random(
         lstm_ae_accel::model::topology::LayerDims { lx: 64, lh: 64 },
@@ -73,11 +145,21 @@ fn main() {
     let cell = QuantLstmCell::new(&w);
     let state = QuantLstmState::zeros(64);
     let x: Vec<Q8_24> = (0..64).map(|i| Q8_24::from_f64(i as f64 * 0.01)).collect();
-    let r = bench_auto("quant LSTM cell step 64x64", 20, || {
+    let macs = 4.0 * 64.0 * (64.0 + 64.0);
+    let r = bench_auto("quant LSTM cell step 64x64 (alloc)", 20, || {
         black_box(cell.step(black_box(&state), black_box(&x)));
     });
-    let macs = 4.0 * 64.0 * (64.0 + 64.0);
     println!("{}   ({:.1} M MAC/s)", r.report(), macs / r.per_iter.mean / 1e6);
+    rec.add(&r, Some(macs));
+    // The zero-alloc scratch variant the engine paths run on.
+    let mut st = QuantLstmState::zeros(64);
+    let mut scratch = StepScratch::new();
+    let r = bench_auto("quant LSTM cell step_into 64x64", 20, || {
+        cell.step_into(black_box(&mut st), black_box(&x), &mut scratch);
+        black_box(st.h[0]);
+    });
+    println!("{}   ({:.1} M MAC/s)", r.report(), macs / r.per_iter.mean / 1e6);
+    rec.add(&r, Some(macs));
 
     println!("\n## Model forward (bit-accurate FPGA datapath, F32-D2, T=16)");
     let ae = LstmAutoencoder::random(Topology::from_name("F32-D2").unwrap(), 3);
@@ -87,16 +169,83 @@ fn main() {
         black_box(ae.score_quant(black_box(&win.data)));
     });
     println!("{}", r.report());
+    rec.add(&r, Some(1.0));
     let r = bench_auto("score_f32 F32-D2 T=16", 20, || {
         black_box(ae.score_f32(black_box(&win.data)));
     });
     println!("{}", r.report());
+    rec.add(&r, None);
+
+    println!("\n## Temporal-pipeline engine vs sequential (F64-D6 deep model)");
+    // The paper's architectural claim in software: per-layer workers
+    // overlapping timesteps (pipelined) and weight-reuse batching (MMM)
+    // against the layer-at-a-time sequential scorer. All three produce
+    // bit-identical scores (asserted below before timing).
+    let deep = Arc::new(LstmAutoencoder::random(
+        Topology::from_name("F64-D6").unwrap(),
+        17,
+    ));
+    let mut gen64 = TelemetryGen::new(64, 21);
+    const ENGINE_B: usize = 16;
+    const ENGINE_T: usize = 64;
+    let batch_windows: Vec<_> = (0..ENGINE_B).map(|_| gen64.benign_window(ENGINE_T)).collect();
+    let refs: Vec<&[Vec<f32>]> = batch_windows.iter().map(|w| w.data.as_slice()).collect();
+    let pipeline = TemporalPipeline::new(deep.clone());
+    let batch_engine = BatchEngine::new(deep.clone());
+    {
+        let seq: Vec<f64> = refs.iter().map(|w| deep.score_quant(w)).collect();
+        assert_eq!(seq, pipeline.score_batch(&refs), "pipelined != sequential");
+        assert_eq!(seq, batch_engine.score_batch(&refs), "batched != sequential");
+    }
+    let r = bench_auto(
+        &format!("engine F64-D6 T={ENGINE_T} B={ENGINE_B} sequential"),
+        20,
+        || {
+            let s: f64 = refs.iter().map(|w| deep.score_quant(black_box(w))).sum();
+            black_box(s);
+        },
+    );
+    println!("{}   ({:.1} windows/s)", r.report(), ENGINE_B as f64 / r.per_iter.mean);
+    rec.add(&r, Some(ENGINE_B as f64));
+    let r = bench_auto(
+        &format!("engine F64-D6 T={ENGINE_T} B={ENGINE_B} pipelined"),
+        20,
+        || {
+            let s: f64 = pipeline.score_batch(black_box(&refs)).iter().sum();
+            black_box(s);
+        },
+    );
+    println!("{}   ({:.1} windows/s)", r.report(), ENGINE_B as f64 / r.per_iter.mean);
+    rec.add(&r, Some(ENGINE_B as f64));
+    let r = bench_auto(
+        &format!("engine F64-D6 T={ENGINE_T} B={ENGINE_B} batched"),
+        20,
+        || {
+            let s: f64 = batch_engine.score_batch(black_box(&refs)).iter().sum();
+            black_box(s);
+        },
+    );
+    println!("{}   ({:.1} windows/s)", r.report(), ENGINE_B as f64 / r.per_iter.mean);
+    rec.add(&r, Some(ENGINE_B as f64));
+    // Single-window latency view (the pipeline's home turf).
+    let one = &batch_windows[0].data;
+    let r = bench_auto("engine F64-D6 T=64 B=1 sequential", 20, || {
+        black_box(deep.score_quant(black_box(one)));
+    });
+    println!("{}", r.report());
+    rec.add(&r, Some(1.0));
+    let r = bench_auto("engine F64-D6 T=64 B=1 pipelined", 20, || {
+        black_box(pipeline.score(black_box(one)));
+    });
+    println!("{}", r.report());
+    rec.add(&r, Some(1.0));
 
     println!("\n## Workload generation");
     let r = bench_auto("benign_window T=16 F=32", 20, || {
         black_box(gen.benign_window(16));
     });
     println!("{}", r.report());
+    rec.add(&r, None);
 
     println!("\n## PJRT dispatch (needs artifacts; skipped otherwise)");
     if let Ok(rt) = lstm_ae_accel::runtime::Runtime::open(
@@ -115,10 +264,12 @@ fn main() {
             black_box(rt.infer("F32-D2", 16, black_box(&one)).unwrap());
         });
         println!("{}   ({:.0} windows/s)", r.report(), 1.0 / r.per_iter.mean);
+        rec.add(&r, Some(1.0));
         let r = bench_auto("pjrt infer_batch F32-D2 T=16 B=8", 20, || {
             black_box(rt.infer_batch("F32-D2", 16, 8, black_box(&eight)).unwrap());
         });
         println!("{}   ({:.0} windows/s)", r.report(), 8.0 / r.per_iter.mean);
+        rec.add(&r, Some(8.0));
     } else {
         println!("(no artifacts)");
     }
@@ -151,5 +302,8 @@ fn main() {
         512.0 / dt,
         srv.metrics().report()
     );
+    rec.add_throughput("server closed-loop F32-D2 T=16 (512 windows)", 512.0, dt);
     srv.shutdown();
+
+    rec.flush();
 }

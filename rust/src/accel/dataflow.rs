@@ -21,8 +21,7 @@
 //! the paper's Eq 1 exactly (integration-tested).
 
 use super::reuse::BalancedConfig;
-use crate::fixed::Q8_24;
-use crate::model::lstm::{QuantLstmCell, QuantLstmState};
+use crate::model::lstm::QuantLstmCell;
 use crate::model::ModelWeights;
 
 /// Simulation options.
@@ -203,25 +202,15 @@ impl DataflowSim {
         let timing = self.run_sequence(x.len());
         // Functional pass: module-by-module streaming, same order the
         // hardware computes (timing and function are independent — the
-        // datapath is data-oblivious).
+        // datapath is data-oblivious). Runs on the engine's scratch path:
+        // the original per-step `state.h.clone()` churn is gone, rows are
+        // rewritten in place with reused state/pre-activation buffers
+        // (EXPERIMENTS.md §Perf), and the output is bit-identical.
         let cells: Vec<QuantLstmCell> =
             weights.layers.iter().map(QuantLstmCell::new).collect();
-        let mut seq: Vec<Vec<Q8_24>> = x
-            .iter()
-            .map(|row| row.iter().map(|&v| Q8_24::from_f32(v)).collect())
-            .collect();
-        for cell in &cells {
-            let mut state = QuantLstmState::zeros(cell.w.dims.lh);
-            for xt in seq.iter_mut() {
-                state = cell.step(&state, xt);
-                *xt = state.h.clone();
-            }
-        }
-        let out = seq
-            .into_iter()
-            .map(|row| row.iter().map(|q| q.to_f32()).collect())
-            .collect();
-        (timing, out)
+        let mut seq = crate::engine::quantize_window(x);
+        crate::engine::forward_in_place(&cells, &mut seq);
+        (timing, crate::engine::dequantize_window(seq))
     }
 }
 

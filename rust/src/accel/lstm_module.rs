@@ -10,7 +10,7 @@
 use super::mvm::MvmSpec;
 use super::reuse::LayerHw;
 use crate::fixed::Q8_24;
-use crate::model::lstm::{QuantLstmCell, QuantLstmState};
+use crate::model::lstm::{QuantLstmCell, QuantLstmState, StepScratch};
 use crate::model::weights::LayerWeights;
 
 /// An instantiated module: hardware shape + (optionally) weights for
@@ -21,6 +21,7 @@ pub struct LstmModule {
     pub mvm_h: MvmSpec,
     cell: Option<QuantLstmCell>,
     state: QuantLstmState,
+    scratch: StepScratch,
 }
 
 impl LstmModule {
@@ -32,6 +33,7 @@ impl LstmModule {
             mvm_h: MvmSpec::with_multipliers(hw.lh, hw.lh, hw.mh),
             cell: None,
             state: QuantLstmState::zeros(hw.lh),
+            scratch: StepScratch::new(),
         }
     }
 
@@ -59,13 +61,15 @@ impl LstmModule {
 
     /// Reset recurrent state (start of a new sequence).
     pub fn reset(&mut self) {
-        self.state = QuantLstmState::zeros(self.hw.lh);
+        self.state.reset(self.hw.lh);
     }
 
     /// Process one timestep functionally; panics on timing-only modules.
+    /// Runs the zero-alloc scratch kernel on the module-owned state, so
+    /// the only allocation per step is the returned `h` snapshot.
     pub fn step(&mut self, x: &[Q8_24]) -> Vec<Q8_24> {
         let cell = self.cell.as_ref().expect("module has no weights loaded");
-        self.state = cell.step(&self.state, x);
+        cell.step_into(&mut self.state, x, &mut self.scratch);
         self.state.h.clone()
     }
 

@@ -1,0 +1,183 @@
+//! Batched MMM execution: `B` same-length windows advance through the
+//! layer stack together, so each weight matrix streams through the cache
+//! **once per timestep** instead of once per window — the MVM → MMM
+//! restructure of the serving throughput path (see [`super`] module docs
+//! for when the server picks this over the pipeline).
+//!
+//! Memory discipline: two flat `[T][B][width]` buffers are double-buffered
+//! across layers and two flat `[B][LH]` state buffers are reset per layer;
+//! nothing is allocated per timestep. All per-window arithmetic is
+//! [`crate::model::lstm::QuantLstmCell::step_batch_into`], which is bit-identical to the
+//! sequential cell step, so batched scores equal
+//! [`LstmAutoencoder::score_quant`] exactly.
+
+use std::sync::Arc;
+
+use crate::fixed::Q8_24;
+use crate::model::lstm::StepScratch;
+use crate::model::LstmAutoencoder;
+
+/// Batched scorer over one model. Cheap to construct (shares the model's
+/// quantized cells via `Arc`); holds no threads and no state between
+/// calls, so it is freely shared across server workers.
+pub struct BatchEngine {
+    ae: Arc<LstmAutoencoder>,
+}
+
+impl BatchEngine {
+    pub fn new(ae: Arc<LstmAutoencoder>) -> BatchEngine {
+        BatchEngine { ae }
+    }
+
+    /// The model this engine executes.
+    pub fn model(&self) -> &LstmAutoencoder {
+        &self.ae
+    }
+
+    /// Forward a batch of windows that all share the same sequence
+    /// length `T` (asserted). Returns per-window reconstructions,
+    /// bit-identical to running [`LstmAutoencoder::forward_quant`] on
+    /// each window alone. Callers with mixed lengths group by `T` first
+    /// (`QuantBackend` does).
+    pub fn forward_batch(&self, windows: &[&[Vec<f32>]]) -> Vec<Vec<Vec<f32>>> {
+        let b = windows.len();
+        if b == 0 {
+            return Vec::new();
+        }
+        let t = windows[0].len();
+        for w in windows {
+            assert_eq!(w.len(), t, "batched windows must share T");
+        }
+        let f = self.ae.topo.features;
+        if t == 0 {
+            return vec![Vec::new(); b];
+        }
+        // Quantize into the flat [T][B][F] input buffer (timestep-major,
+        // window-minor: one timestep's batch is contiguous for the MMM).
+        let mut cur: Vec<Q8_24> = Vec::with_capacity(t * b * f);
+        for ts in 0..t {
+            for w in windows {
+                let row = &w[ts];
+                assert_eq!(row.len(), f, "window feature width matches the model");
+                cur.extend(row.iter().map(|&v| Q8_24::from_f32(v)));
+            }
+        }
+        let mut next: Vec<Q8_24> = Vec::new();
+        let mut h: Vec<Q8_24> = Vec::new();
+        let mut c: Vec<Q8_24> = Vec::new();
+        let mut scratch = StepScratch::new();
+        for cell in self.ae.quant_cells() {
+            let lx = cell.w.dims.lx;
+            let lh = cell.w.dims.lh;
+            h.clear();
+            h.resize(b * lh, Q8_24::ZERO);
+            c.clear();
+            c.resize(b * lh, Q8_24::ZERO);
+            next.clear();
+            next.resize(t * b * lh, Q8_24::ZERO);
+            for ts in 0..t {
+                let x = &cur[ts * b * lx..(ts + 1) * b * lx];
+                cell.step_batch_into(b, &mut h, &mut c, x, &mut scratch);
+                next[ts * b * lh..(ts + 1) * b * lh].copy_from_slice(&h);
+            }
+            std::mem::swap(&mut cur, &mut next);
+        }
+        // Last layer's width is the feature width (topology invariant);
+        // scatter back to [B][T][F] and dequantize.
+        (0..b)
+            .map(|wi| {
+                (0..t)
+                    .map(|ts| {
+                        cur[(ts * b + wi) * f..(ts * b + wi + 1) * f]
+                            .iter()
+                            .map(|q| q.to_f32())
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Batched anomaly scores — bit-identical to
+    /// [`LstmAutoencoder::score_quant`] per window.
+    pub fn score_batch(&self, windows: &[&[Vec<f32>]]) -> Vec<f64> {
+        let recons = self.forward_batch(windows);
+        windows.iter().zip(&recons).map(|(w, r)| LstmAutoencoder::mse(w, r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Topology;
+    use crate::util::prop::props;
+    use crate::util::rng::Xoshiro256;
+
+    fn window(t: usize, f: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut r = Xoshiro256::seeded(seed);
+        (0..t).map(|_| (0..f).map(|_| r.uniform(-1.0, 1.0) as f32).collect()).collect()
+    }
+
+    #[test]
+    fn batch_matches_per_window_forward() {
+        let topo = Topology::from_name("F64-D6").unwrap();
+        let ae = Arc::new(LstmAutoencoder::random(topo, 11));
+        let eng = BatchEngine::new(ae.clone());
+        let wins: Vec<Vec<Vec<f32>>> = (0..5).map(|i| window(9, 64, 100 + i)).collect();
+        let refs: Vec<&[Vec<f32>]> = wins.iter().map(|w| w.as_slice()).collect();
+        let got = eng.forward_batch(&refs);
+        for (i, w) in wins.iter().enumerate() {
+            assert_eq!(got[i], ae.forward_quant(w), "window {i}");
+        }
+    }
+
+    #[test]
+    fn batch_of_one_and_t_of_one() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let ae = Arc::new(LstmAutoencoder::random(topo, 2));
+        let eng = BatchEngine::new(ae.clone());
+        let w = window(1, 32, 3);
+        let got = eng.forward_batch(&[&w]);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0], ae.forward_quant(&w));
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let eng = BatchEngine::new(Arc::new(LstmAutoencoder::random(topo, 1)));
+        assert!(eng.forward_batch(&[]).is_empty());
+        assert!(eng.score_batch(&[]).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "share T")]
+    fn mixed_lengths_rejected() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let eng = BatchEngine::new(Arc::new(LstmAutoencoder::random(topo, 1)));
+        let a = window(4, 32, 1);
+        let b = window(5, 32, 2);
+        eng.forward_batch(&[&a, &b]);
+    }
+
+    #[test]
+    fn scores_bit_identical_to_sequential() {
+        props("batch_scores", 16, |g| {
+            let f = 1usize << g.usize_in(3, 5);
+            let d = 2 * g.usize_in(1, 3);
+            let Ok(topo) = Topology::new(f, d) else { return };
+            let ae = Arc::new(LstmAutoencoder::random(topo, g.case as u64 + 40));
+            let eng = BatchEngine::new(ae.clone());
+            let t = g.usize_in(1, 10);
+            let b = g.usize_in(1, 6);
+            let wins: Vec<Vec<Vec<f32>>> = (0..b)
+                .map(|_| (0..t).map(|_| g.vec_f32(f, -1.5, 1.5)).collect())
+                .collect();
+            let refs: Vec<&[Vec<f32>]> = wins.iter().map(|w| w.as_slice()).collect();
+            let scores = eng.score_batch(&refs);
+            for (i, w) in wins.iter().enumerate() {
+                assert_eq!(scores[i].to_bits(), ae.score_quant(w).to_bits(), "window {i}");
+            }
+        });
+    }
+}

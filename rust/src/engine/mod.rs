@@ -1,0 +1,177 @@
+//! Temporal-pipeline execution engine — the paper's §3.1 dataflow,
+//! realized in software for the serving hot path.
+//!
+//! The accelerator architecture is `DataReader → LSTM_0 → … → LSTM_{N−1}
+//! → DataWriter`, every arrow a bounded FIFO of timestep-vector tokens,
+//! and every module always running: in steady state module *i* processes
+//! timestep *t − i* while its neighbours work on adjacent timesteps.
+//! [`crate::accel::dataflow`] simulates that structure cycle-accurately;
+//! this module **executes** it in wall-clock terms:
+//!
+//! ```text
+//!  caller (DataReader)      worker threads, one per LSTM layer      caller (DataWriter)
+//!  quantize x_t  ──sync_channel──► LSTM_0 ──sync_channel──► … ──channel──► collect h_t
+//!                  (bounded FIFO)           (bounded FIFO)    (drain side)
+//! ```
+//!
+//! Three execution paths, all **bit-identical** to
+//! [`crate::model::LstmAutoencoder::forward_quant`] (property-tested across random
+//! topologies, seeds, and sequence lengths):
+//!
+//! - [`forward_in_place`] — the sequential scratch path: layer-at-a-time
+//!   over the sequence like the original scorer, but with zero per-step
+//!   allocation ([`QuantLstmCell::step_into`] + one [`StepScratch`] and
+//!   in-place row reuse). This is what `forward_quant` and
+//!   `DataflowSim::run_with_data` now run on.
+//! - [`TemporalPipeline`] — one worker thread per LSTM layer connected by
+//!   bounded SPSC channels (`std::sync::mpsc::sync_channel`), so layer
+//!   *i* processes timestep *t* while layer *i+1* processes *t−1*. Wins
+//!   on deep models (F32-D6/F64-D6), where per-layer work is large enough
+//!   to amortize the channel hop; windows fed back-to-back keep every
+//!   layer busy across window boundaries (no drain between windows).
+//! - [`BatchEngine`] — the MVM → MMM restructure for throughput scoring:
+//!   all `B` same-length windows advance together and each weight matrix
+//!   row is streamed once per timestep across the whole batch
+//!   ([`QuantLstmCell::step_batch_into`]), converting the matrix-vector
+//!   products into matrix-matrix products with `B`-fold weight reuse.
+//!
+//! ## How the server picks a path
+//!
+//! [`crate::server::QuantBackend`] defaults to [`ExecMode::Auto`]:
+//! batches of `B > 1` windows go to the [`BatchEngine`] (grouped by
+//! sequence length — batched stepping requires uniform `T`, with
+//! singleton length-groups of deep models routed through the pipeline);
+//! single windows go to the [`TemporalPipeline`] when the model is deep
+//! (`depth ≥ PIPELINE_MIN_DEPTH`), else to the sequential scratch path
+//! (shallow models don't amortize the per-token channel hop). The other
+//! modes pin one path for deterministic routing. The engine-vs-sequential
+//! comparison in `benches/hotpath.rs` (tracked in `BENCH_hotpath.json`
+//! and EXPERIMENTS.md §Perf) pins paths one level lower, driving
+//! [`TemporalPipeline`] and [`BatchEngine`] directly against the
+//! sequential scorer.
+//!
+//! Note the regime split this encodes: `B == 1` reaches the backend only
+//! when the batcher found nothing to coalesce — light load, where
+//! per-request latency is the objective and the pipeline's layer overlap
+//! shortens it. Under heavy load the batcher forms `B > 1` batches and
+//! Auto switches to the batched kernel, whose weight reuse maximizes
+//! throughput; worker threads serializing on the single shared pipeline
+//! is therefore confined to the regime where the server is not
+//! throughput-bound anyway.
+
+pub mod batch;
+pub mod pipeline;
+
+pub use batch::BatchEngine;
+pub use pipeline::TemporalPipeline;
+
+use crate::fixed::Q8_24;
+use crate::model::lstm::{QuantLstmCell, QuantLstmState, StepScratch};
+
+/// Minimum model depth at which [`ExecMode::Auto`] routes single-window
+/// scoring through the [`TemporalPipeline`]: with fewer layers the
+/// pipeline has too few stages for the channel-hop overhead to pay off.
+pub const PIPELINE_MIN_DEPTH: usize = 4;
+
+/// Which execution path [`crate::server::QuantBackend`] uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// `B > 1` → batched, deep single windows → pipelined, else
+    /// sequential (see module docs).
+    Auto,
+    /// Layer-at-a-time scratch path for every window (the pre-engine
+    /// behaviour, kept as the comparison baseline).
+    Sequential,
+    /// Per-layer worker pipeline for every request.
+    Pipelined,
+    /// Batched MMM kernel for every request (single windows degenerate
+    /// to the sequential path — a batch of one has no weight reuse).
+    Batched,
+}
+
+/// Quantize a `[T][F]` window onto the Q8.24 grid — the DataReader
+/// boundary of every engine path.
+pub fn quantize_window(x: &[Vec<f32>]) -> Vec<Vec<Q8_24>> {
+    x.iter().map(|row| row.iter().map(|&v| Q8_24::from_f32(v)).collect()).collect()
+}
+
+/// Dequantize a `[T][F]` quantized sequence back to f32 — the DataWriter
+/// boundary.
+pub fn dequantize_window(seq: Vec<Vec<Q8_24>>) -> Vec<Vec<f32>> {
+    seq.into_iter().map(|row| row.iter().map(|q| q.to_f32()).collect()).collect()
+}
+
+/// Stream a quantized `[T][·]` sequence through the layer stack **in
+/// place** with zero per-step allocation: one state and one scratch are
+/// reused across all timesteps and layers, and each row's buffer is
+/// rewritten with the layer's hidden output (row capacity is `F` from
+/// the input and every layer width in the chain is ≤ `F`, so rewrites
+/// never reallocate). Bit-identical to the original
+/// layer-at-a-time/step-at-a-time scorer — same per-element arithmetic
+/// in the same order.
+pub fn forward_in_place(cells: &[QuantLstmCell], seq: &mut [Vec<Q8_24>]) {
+    let mut state = QuantLstmState::zeros(0);
+    let mut scratch = StepScratch::new();
+    for cell in cells {
+        state.reset(cell.w.dims.lh);
+        for xt in seq.iter_mut() {
+            cell.step_into(&mut state, xt, &mut scratch);
+            xt.clear();
+            xt.extend_from_slice(&state.h);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{LstmAutoencoder, Topology};
+    use crate::util::rng::Xoshiro256;
+
+    fn window(t: usize, f: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut r = Xoshiro256::seeded(seed);
+        (0..t).map(|_| (0..f).map(|_| r.uniform(-1.0, 1.0) as f32).collect()).collect()
+    }
+
+    #[test]
+    fn in_place_path_matches_step_by_step_reference() {
+        // Reference: the original allocating recurrence, written out
+        // longhand so this test does not depend on forward_quant's
+        // implementation (which itself now calls forward_in_place).
+        let topo = Topology::from_name("F32-D6").unwrap();
+        let ae = LstmAutoencoder::random(topo, 42);
+        let x = window(7, 32, 43);
+        let mut seq = quantize_window(&x);
+        forward_in_place(ae.quant_cells(), &mut seq);
+
+        let mut want = quantize_window(&x);
+        for cell in ae.quant_cells() {
+            let mut state = QuantLstmState::zeros(cell.w.dims.lh);
+            let mut out = Vec::new();
+            for xt in &want {
+                state = cell.step(&state, xt);
+                out.push(state.h.clone());
+            }
+            want = out;
+        }
+        assert_eq!(seq, want);
+    }
+
+    #[test]
+    fn quantize_dequantize_roundtrip_on_grid() {
+        let x = window(3, 8, 7);
+        let q = quantize_window(&x);
+        let back = dequantize_window(q.clone());
+        // Dequantized values must re-quantize to the same grid points.
+        assert_eq!(quantize_window(&back), q);
+    }
+
+    #[test]
+    fn empty_sequence_is_a_no_op() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let ae = LstmAutoencoder::random(topo, 1);
+        let mut seq: Vec<Vec<Q8_24>> = Vec::new();
+        forward_in_place(ae.quant_cells(), &mut seq);
+        assert!(seq.is_empty());
+    }
+}

@@ -1,0 +1,319 @@
+//! The temporal pipeline: one worker thread per LSTM layer, bounded SPSC
+//! channels between them — the software realization of the paper's §3.1
+//! module graph (see [`super`] for the architecture diagram).
+//!
+//! Protocol on every channel, in order per window:
+//! `Begin(T)` (reset layer state, forwarded downstream), then `T` ×
+//! `Step(x_t)` (compute `h_t`, forward it), with `Stop` propagated once
+//! at teardown. Because each worker consumes tokens in FIFO order and
+//! the arithmetic per token is [`QuantLstmCell::step_into`], the output
+//! is bit-identical to the sequential scorer regardless of thread
+//! scheduling — timing and function are independent, exactly as in the
+//! hardware dataflow.
+//!
+//! Deadlock freedom: the inter-layer channels are bounded (the FIFOs),
+//! but the final hop into the collector is unbounded, so every worker's
+//! send eventually succeeds and the feeding caller always makes
+//! progress even when it enqueues an entire batch before collecting.
+
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::fixed::Q8_24;
+use crate::model::lstm::{QuantLstmCell, QuantLstmState, StepScratch};
+use crate::model::LstmAutoencoder;
+
+/// Default capacity, in timestep tokens, of each inter-layer FIFO.
+/// Mirrors the simulator's `SimOptions::fifo_capacity` role; a little
+/// deeper than the hardware's 2 to absorb OS scheduling jitter.
+pub const DEFAULT_FIFO_CAPACITY: usize = 8;
+
+enum Token {
+    /// A new window of `T` timesteps begins: reset layer state.
+    Begin(usize),
+    /// One timestep vector.
+    Step(Vec<Q8_24>),
+    /// Teardown; forwarded downstream so the whole chain unwinds.
+    Stop,
+}
+
+/// A worker's downstream edge: bounded FIFO between layers, unbounded
+/// into the collector.
+enum Downstream {
+    Fifo(SyncSender<Token>),
+    Sink(Sender<Token>),
+}
+
+impl Downstream {
+    fn send(&self, tok: Token) -> Result<(), ()> {
+        match self {
+            Downstream::Fifo(tx) => tx.send(tok).map_err(|_| ()),
+            Downstream::Sink(tx) => tx.send(tok).map_err(|_| ()),
+        }
+    }
+}
+
+/// The caller-side endpoints (DataReader feed + DataWriter drain). Held
+/// under one lock so concurrent `forward_*` calls serialize per window
+/// batch while the layer workers themselves stay concurrent.
+struct Io {
+    tx: SyncSender<Token>,
+    rx: Receiver<Token>,
+}
+
+/// A running per-layer worker pipeline over one model's quantized cells.
+///
+/// Construction spawns `depth` threads; they live until the pipeline is
+/// dropped. `forward_batch` feeds windows back-to-back, so consecutive
+/// windows overlap inside the pipe the same way consecutive timesteps
+/// do — the serving analog of the accelerator never draining between
+/// sequences.
+pub struct TemporalPipeline {
+    ae: Arc<LstmAutoencoder>,
+    io: Mutex<Io>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl TemporalPipeline {
+    pub fn new(ae: Arc<LstmAutoencoder>) -> TemporalPipeline {
+        Self::with_capacity(ae, DEFAULT_FIFO_CAPACITY)
+    }
+
+    /// Build with an explicit inter-layer FIFO capacity (≥ 1).
+    pub fn with_capacity(ae: Arc<LstmAutoencoder>, fifo_capacity: usize) -> TemporalPipeline {
+        let cap = fifo_capacity.max(1);
+        let depth = ae.topo.depth;
+        assert!(depth >= 1, "pipeline needs at least one layer");
+        let (in_tx, in_rx) = sync_channel::<Token>(cap);
+        let (sink_tx, sink_rx) = channel::<Token>();
+        let mut workers = Vec::with_capacity(depth);
+        let mut rx_opt = Some(in_rx);
+        for layer in 0..depth {
+            let rx = rx_opt.take().expect("one receiver per layer");
+            let down = if layer + 1 == depth {
+                Downstream::Sink(sink_tx.clone())
+            } else {
+                let (tx, next_rx) = sync_channel::<Token>(cap);
+                rx_opt = Some(next_rx);
+                Downstream::Fifo(tx)
+            };
+            let ae_ref = ae.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("lstm-pipe-{layer}"))
+                    .spawn(move || worker_loop(&ae_ref, layer, rx, down))
+                    .expect("spawn pipeline worker"),
+            );
+        }
+        drop(sink_tx); // the last worker holds the only remaining clone
+        TemporalPipeline { ae, io: Mutex::new(Io { tx: in_tx, rx: sink_rx }), workers }
+    }
+
+    /// The model this pipeline executes.
+    pub fn model(&self) -> &LstmAutoencoder {
+        &self.ae
+    }
+
+    /// Run one window through the pipeline; bit-identical to
+    /// [`LstmAutoencoder::forward_quant`].
+    pub fn forward_quant(&self, x: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        self.forward_batch(&[x]).pop().expect("one window in, one out")
+    }
+
+    /// Run a batch of windows back-to-back through the pipeline (windows
+    /// may have different lengths). Feeding is decoupled from collection
+    /// by the unbounded drain channel, so the whole batch is enqueued
+    /// first and window *k+1* streams in while *k* is still in flight.
+    ///
+    /// Panics on malformed input (row width ≠ model feature width) —
+    /// checked *before* anything is fed or the endpoint lock is taken, so
+    /// a bad window kills only the calling thread and the shared pipeline
+    /// stays healthy for every other caller.
+    pub fn forward_batch(&self, windows: &[&[Vec<f32>]]) -> Vec<Vec<Vec<f32>>> {
+        let f = self.ae.topo.features;
+        for (wi, w) in windows.iter().enumerate() {
+            for row in w.iter() {
+                assert_eq!(row.len(), f, "window {wi} feature width matches the model");
+            }
+        }
+        let io = self.io.lock().expect("pipeline lock");
+        for w in windows {
+            io.tx.send(Token::Begin(w.len())).expect("pipeline alive");
+            for row in w.iter() {
+                let xq: Vec<Q8_24> = row.iter().map(|&v| Q8_24::from_f32(v)).collect();
+                io.tx.send(Token::Step(xq)).expect("pipeline alive");
+            }
+        }
+        let mut out = Vec::with_capacity(windows.len());
+        for _ in windows {
+            let t = match io.rx.recv().expect("pipeline alive") {
+                Token::Begin(t) => t,
+                _ => unreachable!("protocol: Begin precedes steps"),
+            };
+            let mut recon = Vec::with_capacity(t);
+            for _ in 0..t {
+                match io.rx.recv().expect("pipeline alive") {
+                    Token::Step(h) => recon.push(h.iter().map(|q| q.to_f32()).collect()),
+                    _ => unreachable!("protocol: {t} steps follow Begin"),
+                }
+            }
+            out.push(recon);
+        }
+        out
+    }
+
+    /// Anomaly score (reconstruction MSE) of one window through the
+    /// pipeline — bit-identical to [`LstmAutoencoder::score_quant`].
+    pub fn score(&self, x: &[Vec<f32>]) -> f64 {
+        LstmAutoencoder::mse(x, &self.forward_quant(x))
+    }
+
+    /// Scores for a batch of windows, pipelined back-to-back.
+    pub fn score_batch(&self, windows: &[&[Vec<f32>]]) -> Vec<f64> {
+        let recons = self.forward_batch(windows);
+        windows.iter().zip(&recons).map(|(w, r)| LstmAutoencoder::mse(w, r)).collect()
+    }
+}
+
+impl Drop for TemporalPipeline {
+    fn drop(&mut self) {
+        // Recover the endpoints even from a poisoned lock so teardown
+        // always reaches the workers.
+        let io = match self.io.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let _ = io.tx.send(Token::Stop);
+        drop(io);
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(ae: &LstmAutoencoder, layer: usize, rx: Receiver<Token>, down: Downstream) {
+    let cell: &QuantLstmCell = &ae.quant_cells()[layer];
+    let lh = cell.w.dims.lh;
+    let mut state = QuantLstmState::zeros(lh);
+    let mut scratch = StepScratch::new();
+    while let Ok(tok) = rx.recv() {
+        let out = match tok {
+            Token::Begin(t) => {
+                state.reset(lh);
+                Token::Begin(t)
+            }
+            Token::Step(x) => {
+                cell.step_into(&mut state, &x, &mut scratch);
+                Token::Step(state.h.clone())
+            }
+            Token::Stop => {
+                let _ = down.send(Token::Stop);
+                return;
+            }
+        };
+        if down.send(out).is_err() {
+            return;
+        }
+    }
+    // Upstream hung up without an explicit Stop (teardown race): make
+    // sure downstream unwinds too.
+    let _ = down.send(Token::Stop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Topology;
+    use crate::util::prop::props;
+    use crate::util::rng::Xoshiro256;
+
+    fn window(t: usize, f: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut r = Xoshiro256::seeded(seed);
+        (0..t).map(|_| (0..f).map(|_| r.uniform(-1.0, 1.0) as f32).collect()).collect()
+    }
+
+    #[test]
+    fn matches_forward_quant_on_deep_model() {
+        let topo = Topology::from_name("F64-D6").unwrap();
+        let ae = Arc::new(LstmAutoencoder::random(topo, 5));
+        let pipe = TemporalPipeline::new(ae.clone());
+        for t in [1usize, 2, 9, 33] {
+            let x = window(t, 64, t as u64 + 10);
+            assert_eq!(pipe.forward_quant(&x), ae.forward_quant(&x), "T={t}");
+        }
+    }
+
+    #[test]
+    fn back_to_back_windows_do_not_leak_state() {
+        // Scoring the same window twice with a different window between
+        // must give identical results — Begin resets every layer.
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let ae = Arc::new(LstmAutoencoder::random(topo, 9));
+        let pipe = TemporalPipeline::new(ae.clone());
+        let a = window(6, 32, 1);
+        let b = window(4, 32, 2);
+        let refs: Vec<&[Vec<f32>]> = vec![&a, &b, &a];
+        let out = pipe.forward_batch(&refs);
+        assert_eq!(out[0], out[2]);
+        assert_eq!(out[0], ae.forward_quant(&a));
+        assert_eq!(out[1], ae.forward_quant(&b));
+    }
+
+    #[test]
+    fn variable_length_batches_collect_in_order() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let ae = Arc::new(LstmAutoencoder::random(topo, 3));
+        let pipe = TemporalPipeline::new(ae.clone());
+        let wins: Vec<Vec<Vec<f32>>> =
+            (0..5).map(|i| window(1 + i, 32, 50 + i as u64)).collect();
+        let refs: Vec<&[Vec<f32>]> = wins.iter().map(|w| w.as_slice()).collect();
+        let out = pipe.forward_batch(&refs);
+        for (i, w) in wins.iter().enumerate() {
+            assert_eq!(out[i].len(), w.len());
+            assert_eq!(out[i], ae.forward_quant(w), "window {i}");
+        }
+    }
+
+    #[test]
+    fn long_sequence_exceeding_fifo_depth_completes() {
+        // T far beyond total FIFO capacity: the unbounded drain prevents
+        // feed/collect deadlock.
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let ae = Arc::new(LstmAutoencoder::random(topo, 4));
+        let pipe = TemporalPipeline::with_capacity(ae.clone(), 1);
+        let x = window(200, 32, 77);
+        assert_eq!(pipe.forward_quant(&x), ae.forward_quant(&x));
+    }
+
+    #[test]
+    fn malformed_window_does_not_poison_the_pipeline() {
+        // A wrong-width window must panic only its caller; the shared
+        // pipeline keeps serving other callers (no poisoned lock, no
+        // broken token protocol).
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let ae = Arc::new(LstmAutoencoder::random(topo, 6));
+        let pipe = Arc::new(TemporalPipeline::new(ae.clone()));
+        let bad = window(3, 31, 1); // 31 features instead of 32
+        let p2 = pipe.clone();
+        let joined = std::thread::spawn(move || p2.forward_quant(&bad)).join();
+        assert!(joined.is_err(), "malformed window must panic its caller");
+        let good = window(4, 32, 2);
+        assert_eq!(pipe.forward_quant(&good), ae.forward_quant(&good));
+    }
+
+    #[test]
+    fn scores_match_sequential_scorer_bitwise() {
+        props("pipeline_scores", 12, |g| {
+            let f = 1usize << g.usize_in(3, 5);
+            let d = 2 * g.usize_in(1, 3);
+            let Ok(topo) = Topology::new(f, d) else { return };
+            let ae = Arc::new(LstmAutoencoder::random(topo, g.case as u64));
+            let pipe = TemporalPipeline::new(ae.clone());
+            let t = g.usize_in(1, 12);
+            let x: Vec<Vec<f32>> =
+                (0..t).map(|_| g.vec_f32(f, -1.5, 1.5)).collect();
+            assert_eq!(pipe.score(&x).to_bits(), ae.score_quant(&x).to_bits());
+        });
+    }
+}

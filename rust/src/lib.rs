@@ -12,7 +12,10 @@
 //!   layers ([`accel::dataflow`]), the **dataflow-balancing methodology** via
 //!   hardware reuse factors ([`accel::reuse`], paper Eqs 5–8), an analytical
 //!   latency model ([`accel::latency`], Eqs 1–4), FPGA resource and energy
-//!   models ([`accel::resources`], [`accel::energy`]), CPU/GPU baselines
+//!   models ([`accel::resources`], [`accel::energy`]), a **temporal-pipeline
+//!   execution engine** that runs the §3.1 dataflow in software — per-layer
+//!   worker threads over bounded FIFOs plus zero-alloc batched Q8.24
+//!   kernels ([`engine`]), CPU/GPU baselines
 //!   ([`baselines`]), a PJRT runtime that executes the AOT artifacts
 //!   ([`runtime`]), and an end-to-end anomaly-detection service ([`server`]).
 //!
@@ -38,6 +41,7 @@ pub mod util;
 pub mod fixed;
 pub mod activations;
 pub mod model;
+pub mod engine;
 pub mod accel;
 pub mod baselines;
 pub mod runtime;

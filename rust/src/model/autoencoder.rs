@@ -8,10 +8,9 @@
 
 use anyhow::Result;
 
-use super::lstm::{lstm_step_f32, LstmState, QuantLstmCell, QuantLstmState};
+use super::lstm::{lstm_step_f32, LstmState, QuantLstmCell};
 use super::topology::Topology;
 use super::weights::ModelWeights;
-use crate::fixed::Q8_24;
 
 /// An LSTM autoencoder with both f32 and quantized (Q8.24 + PWL) forward
 /// paths over the same weights.
@@ -53,22 +52,20 @@ impl LstmAutoencoder {
 
     /// Quantized forward — bit-accurate to the FPGA datapath. Input is
     /// quantized onto the Q8.24 grid at the DataReader boundary, exactly
-    /// like the accelerator's DMA path.
+    /// like the accelerator's DMA path. Runs on the engine's zero-alloc
+    /// scratch path ([`crate::engine::forward_in_place`]); per-element
+    /// arithmetic and ordering are unchanged from the original
+    /// layer-at-a-time recurrence, so outputs are bit-identical to it.
     pub fn forward_quant(&self, x: &[Vec<f32>]) -> Vec<Vec<f32>> {
-        let mut seq: Vec<Vec<Q8_24>> = x
-            .iter()
-            .map(|row| row.iter().map(|&v| Q8_24::from_f32(v)).collect())
-            .collect();
-        for cell in &self.quant_cells {
-            let mut state = QuantLstmState::zeros(cell.w.dims.lh);
-            let mut out = Vec::with_capacity(seq.len());
-            for xt in &seq {
-                state = cell.step(&state, xt);
-                out.push(state.h.clone());
-            }
-            seq = out;
-        }
-        seq.into_iter().map(|row| row.iter().map(|q| q.to_f32()).collect()).collect()
+        let mut seq = crate::engine::quantize_window(x);
+        crate::engine::forward_in_place(&self.quant_cells, &mut seq);
+        crate::engine::dequantize_window(seq)
+    }
+
+    /// The per-layer quantized cells (Q8.24 weights + shared PWL tables),
+    /// in layer order — what the execution engines run on.
+    pub fn quant_cells(&self) -> &[QuantLstmCell] {
+        &self.quant_cells
     }
 
     /// Mean squared reconstruction error over the window — the anomaly

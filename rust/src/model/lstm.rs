@@ -79,8 +79,41 @@ impl QuantLstmState {
         QuantLstmState { h: vec![Q8_24::ZERO; lh], c: vec![Q8_24::ZERO; lh] }
     }
 
+    /// Re-zero in place for a new sequence (or a new layer width),
+    /// reusing the allocations — the t=0 reset of the engine hot path.
+    pub fn reset(&mut self, lh: usize) {
+        self.h.clear();
+        self.h.resize(lh, Q8_24::ZERO);
+        self.c.clear();
+        self.c.resize(lh, Q8_24::ZERO);
+    }
+
     pub fn h_f32(&self) -> Vec<f32> {
         self.h.iter().map(|q| q.to_f32()).collect()
+    }
+}
+
+/// Caller-owned scratch for the allocation-free step paths
+/// ([`QuantLstmCell::step_into`] / [`QuantLstmCell::step_batch_into`]):
+/// holds the `4·LH` (or `B·4·LH`) gate pre-activation buffer so repeated
+/// timesteps reuse one allocation. Construct once per worker/stream and
+/// pass to every step; it grows to the largest layer it has seen and
+/// never shrinks.
+#[derive(Default)]
+pub struct StepScratch {
+    pre: Vec<Q8_24>,
+}
+
+impl StepScratch {
+    pub fn new() -> StepScratch {
+        StepScratch { pre: Vec::new() }
+    }
+
+    /// The pre-activation buffer, cleared and sized to `n` entries.
+    fn pre(&mut self, n: usize) -> &mut [Q8_24] {
+        self.pre.clear();
+        self.pre.resize(n, Q8_24::ZERO);
+        &mut self.pre
     }
 }
 
@@ -101,16 +134,35 @@ impl QuantLstmCell {
     /// (2^48 scale) with a single rounding per dot product — matching the
     /// DSP cascade in the MVM units — and all element-wise ops saturate.
     ///
+    /// Allocating convenience wrapper over [`Self::step_into`]; the
+    /// serving hot paths (engine, simulator functional pass) use
+    /// `step_into` directly with reused buffers.
+    pub fn step(&self, state: &QuantLstmState, x: &[Q8_24]) -> QuantLstmState {
+        let mut next = state.clone();
+        let mut scratch = StepScratch::new();
+        self.step_into(&mut next, x, &mut scratch);
+        next
+    }
+
+    /// One timestep, in place and allocation-free: updates `state.h` /
+    /// `state.c` directly using the caller-owned `scratch` for the gate
+    /// pre-activations. Bit-identical to [`Self::step`] (which delegates
+    /// here): the MVM phase reads `state.h` to completion before the
+    /// element-wise phase overwrites it, and `c[j]` is read before
+    /// written within each element — the same read/write discipline the
+    /// FPGA datapath has between its MVM and activation stages.
+    ///
     /// Row dot products run over contiguous slices with iterator zips so
     /// LLVM can elide bounds checks and vectorize the i32×i32→i64 MACs
     /// (≈1.9x over the original indexed loops; EXPERIMENTS.md §Perf).
-    pub fn step(&self, state: &QuantLstmState, x: &[Q8_24]) -> QuantLstmState {
+    pub fn step_into(&self, state: &mut QuantLstmState, x: &[Q8_24], scratch: &mut StepScratch) {
         let lh = self.w.dims.lh;
         let lx = self.w.dims.lx;
         assert_eq!(x.len(), lx);
         assert_eq!(state.h.len(), lh);
+        assert_eq!(state.c.len(), lh);
         // Gate pre-activations for all 4·LH rows, row-contiguous.
-        let mut pre = vec![Q8_24::ZERO; 4 * lh];
+        let pre = scratch.pre(4 * lh);
         for (row, p) in pre.iter_mut().enumerate() {
             let wx_row = &self.w.wx[row * lx..(row + 1) * lx];
             let acc_x: i64 =
@@ -124,17 +176,72 @@ impl QuantLstmCell {
             let mh = Q8_24::from_wide(acc_h).add(self.w.bh[row]);
             *p = mx.add(mh);
         }
-        let mut h = vec![Q8_24::ZERO; lh];
-        let mut c = vec![Q8_24::ZERO; lh];
         for j in 0..lh {
             let i = self.sigmoid.eval_q(pre[j]);
             let f = self.sigmoid.eval_q(pre[lh + j]);
             let g = self.tanh.eval_q(pre[2 * lh + j]);
             let o = self.sigmoid.eval_q(pre[3 * lh + j]);
-            c[j] = f.mul(state.c[j]).add(i.mul(g));
-            h[j] = o.mul(self.tanh.eval_q(c[j]));
+            state.c[j] = f.mul(state.c[j]).add(i.mul(g));
+            state.h[j] = o.mul(self.tanh.eval_q(state.c[j]));
         }
-        QuantLstmState { h, c }
+    }
+
+    /// `B` independent windows stepped through this layer at once — the
+    /// MVM → MMM restructure of the throughput path. Each of the `4·LH`
+    /// weight rows is streamed **once** across the whole batch (the row
+    /// stays L1-resident over the inner loop), instead of `B` times as
+    /// repeated [`Self::step_into`] calls would; arithmetic per window is
+    /// exactly that of `step_into`, so results are bit-identical.
+    ///
+    /// Layout: `x` is `[B][LX]` row-major, `h`/`c` are `[B][LH]` row-major
+    /// and are updated in place.
+    pub fn step_batch_into(
+        &self,
+        b: usize,
+        h: &mut [Q8_24],
+        c: &mut [Q8_24],
+        x: &[Q8_24],
+        scratch: &mut StepScratch,
+    ) {
+        let lh = self.w.dims.lh;
+        let lx = self.w.dims.lx;
+        assert_eq!(x.len(), b * lx);
+        assert_eq!(h.len(), b * lh);
+        assert_eq!(c.len(), b * lh);
+        let g4 = 4 * lh;
+        // Pre-activations, `[B][4·LH]` row-major so the element-wise
+        // phase walks each window contiguously.
+        let pre = scratch.pre(b * g4);
+        for row in 0..g4 {
+            let wx_row = &self.w.wx[row * lx..(row + 1) * lx];
+            let wh_row = &self.w.wh[row * lh..(row + 1) * lh];
+            let bx = self.w.bx[row];
+            let bh = self.w.bh[row];
+            for wi in 0..b {
+                let xw = &x[wi * lx..(wi + 1) * lx];
+                let hw = &h[wi * lh..(wi + 1) * lh];
+                let acc_x: i64 =
+                    wx_row.iter().zip(xw).map(|(w, v)| w.0 as i64 * v.0 as i64).sum();
+                let acc_h: i64 =
+                    wh_row.iter().zip(hw).map(|(w, v)| w.0 as i64 * v.0 as i64).sum();
+                let mx = Q8_24::from_wide(acc_x).add(bx);
+                let mh = Q8_24::from_wide(acc_h).add(bh);
+                pre[wi * g4 + row] = mx.add(mh);
+            }
+        }
+        for wi in 0..b {
+            let pre_w = &pre[wi * g4..(wi + 1) * g4];
+            let hw = &mut h[wi * lh..(wi + 1) * lh];
+            let cw = &mut c[wi * lh..(wi + 1) * lh];
+            for j in 0..lh {
+                let i = self.sigmoid.eval_q(pre_w[j]);
+                let f = self.sigmoid.eval_q(pre_w[lh + j]);
+                let g = self.tanh.eval_q(pre_w[2 * lh + j]);
+                let o = self.sigmoid.eval_q(pre_w[3 * lh + j]);
+                cw[j] = f.mul(cw[j]).add(i.mul(g));
+                hw[j] = o.mul(self.tanh.eval_q(cw[j]));
+            }
+        }
     }
 }
 
@@ -214,6 +321,85 @@ mod tests {
         let b = cell.step(&QuantLstmState::zeros(8), &x);
         assert_eq!(a.h, b.h);
         assert_eq!(a.c, b.c);
+    }
+
+    #[test]
+    fn step_into_bit_identical_to_step() {
+        // The scratch path must be the same arithmetic, not merely close.
+        props("step_into_exact", 48, |g| {
+            let lx = 1 + g.usize_in(0, 16);
+            let lh = 1 + g.usize_in(0, 16);
+            let w = mk(lx, lh, g.case as u64 + 900);
+            let cell = QuantLstmCell::new(&w);
+            let mut state = QuantLstmState::zeros(lh);
+            let mut scratch = StepScratch::new();
+            for step_i in 0..4 {
+                let x: Vec<Q8_24> =
+                    (0..lx).map(|_| Q8_24::from_f64(g.f64_in(-2.0, 2.0))).collect();
+                let want = cell.step(&state, &x);
+                cell.step_into(&mut state, &x, &mut scratch);
+                assert_eq!(state.h, want.h, "h diverged at step {step_i}");
+                assert_eq!(state.c, want.c, "c diverged at step {step_i}");
+            }
+        });
+    }
+
+    #[test]
+    fn step_batch_into_bit_identical_per_window() {
+        props("step_batch_exact", 32, |g| {
+            let lx = 1 + g.usize_in(0, 12);
+            let lh = 1 + g.usize_in(0, 12);
+            let b = 1 + g.usize_in(0, 5);
+            let w = mk(lx, lh, g.case as u64 + 1700);
+            let cell = QuantLstmCell::new(&w);
+            // Per-window golden states driven by repeated single steps.
+            let mut golden: Vec<QuantLstmState> =
+                (0..b).map(|_| QuantLstmState::zeros(lh)).collect();
+            let mut h = vec![Q8_24::ZERO; b * lh];
+            let mut c = vec![Q8_24::ZERO; b * lh];
+            let mut scratch = StepScratch::new();
+            for _ in 0..3 {
+                let xs: Vec<Vec<Q8_24>> = (0..b)
+                    .map(|_| (0..lx).map(|_| Q8_24::from_f64(g.f64_in(-2.0, 2.0))).collect())
+                    .collect();
+                let flat: Vec<Q8_24> = xs.iter().flatten().copied().collect();
+                cell.step_batch_into(b, &mut h, &mut c, &flat, &mut scratch);
+                for (wi, gs) in golden.iter_mut().enumerate() {
+                    *gs = cell.step(gs, &xs[wi]);
+                    assert_eq!(&h[wi * lh..(wi + 1) * lh], &gs.h[..], "window {wi} h");
+                    assert_eq!(&c[wi * lh..(wi + 1) * lh], &gs.c[..], "window {wi} c");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn scratch_reuse_across_layer_widths() {
+        // One scratch serves layers of different widths back to back.
+        let small = mk(4, 4, 21);
+        let big = mk(8, 8, 22);
+        let cs = QuantLstmCell::new(&small);
+        let cb = QuantLstmCell::new(&big);
+        let mut scratch = StepScratch::new();
+        let mut ss = QuantLstmState::zeros(4);
+        let mut sb = QuantLstmState::zeros(8);
+        let xs: Vec<Q8_24> = (0..4).map(|i| Q8_24::from_f64(0.1 * i as f64)).collect();
+        let xb: Vec<Q8_24> = (0..8).map(|i| Q8_24::from_f64(0.05 * i as f64)).collect();
+        cb.step_into(&mut sb, &xb, &mut scratch);
+        cs.step_into(&mut ss, &xs, &mut scratch); // shrink after grow
+        assert_eq!(ss.h, cs.step(&QuantLstmState::zeros(4), &xs).h);
+    }
+
+    #[test]
+    fn state_reset_rezeros_and_resizes() {
+        let mut s = QuantLstmState::zeros(4);
+        s.h[1] = Q8_24::ONE;
+        s.c[2] = Q8_24::ONE;
+        s.reset(6);
+        assert_eq!(s.h, vec![Q8_24::ZERO; 6]);
+        assert_eq!(s.c, vec![Q8_24::ZERO; 6]);
+        s.reset(2);
+        assert_eq!(s.h.len(), 2);
     }
 
     #[test]

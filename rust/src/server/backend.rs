@@ -1,8 +1,10 @@
 //! Scoring backends for the anomaly server.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
+use crate::engine::{BatchEngine, ExecMode, TemporalPipeline, PIPELINE_MIN_DEPTH};
 use crate::model::LstmAutoencoder;
 use crate::runtime::Runtime;
 use crate::workload::Window;
@@ -132,13 +134,92 @@ impl Backend for PjrtBackend {
 /// arithmetic the FPGA datapath performs (used to validate that
 /// quantization does not change detection decisions, and as the
 /// artifact-free fallback).
+///
+/// Execution is routed through the temporal-pipeline engine
+/// ([`crate::engine`]): multi-window batches run on the batched MMM
+/// kernel (grouped by sequence length), single windows of deep models
+/// run on the per-layer worker pipeline, and everything degenerates to
+/// the sequential zero-alloc scratch path otherwise. All paths are
+/// bit-identical, so the chosen [`ExecMode`] changes throughput, never
+/// scores.
 pub struct QuantBackend {
-    ae: LstmAutoencoder,
+    ae: Arc<LstmAutoencoder>,
+    mode: ExecMode,
+    /// Spawned only when the mode can route to it (threads per layer).
+    pipeline: Option<TemporalPipeline>,
+    batch: BatchEngine,
 }
 
 impl QuantBackend {
+    /// Backend with [`ExecMode::Auto`] routing (the serving default).
     pub fn new(ae: LstmAutoencoder) -> QuantBackend {
-        QuantBackend { ae }
+        Self::with_mode(ae, ExecMode::Auto)
+    }
+
+    /// Backend pinned to one execution path, for operators who want
+    /// deterministic routing (and for the mode-agreement tests below;
+    /// `benches/hotpath.rs` compares the underlying engines directly).
+    pub fn with_mode(ae: LstmAutoencoder, mode: ExecMode) -> QuantBackend {
+        let ae = Arc::new(ae);
+        let wants_pipeline = match mode {
+            ExecMode::Pipelined => true,
+            ExecMode::Auto => ae.topo.depth >= PIPELINE_MIN_DEPTH,
+            ExecMode::Sequential | ExecMode::Batched => false,
+        };
+        let pipeline = if wants_pipeline { Some(TemporalPipeline::new(ae.clone())) } else { None };
+        let batch = BatchEngine::new(ae.clone());
+        QuantBackend { ae, mode, pipeline, batch }
+    }
+
+    /// The execution mode this backend routes through.
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// Batched scoring with windows grouped by sequence length (the MMM
+    /// kernel requires uniform `T` within a batch). Singleton groups go
+    /// through the pipeline when this mode constructed one (deep models
+    /// under [`ExecMode::Auto`]), else the sequential scratch path — so
+    /// mixed-length deep-model batches are never slower than submitting
+    /// the same windows individually.
+    fn score_grouped(&self, windows: &[&Window]) -> Vec<f64> {
+        let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, w) in windows.iter().enumerate() {
+            groups.entry(w.data.len()).or_default().push(i);
+        }
+        let mut scores = vec![0.0f64; windows.len()];
+        let mut singles: Vec<usize> = Vec::new();
+        for idxs in groups.values() {
+            if let [i] = idxs[..] {
+                singles.push(i);
+            } else {
+                let group: Vec<&[Vec<f32>]> =
+                    idxs.iter().map(|&i| windows[i].data.as_slice()).collect();
+                for (&i, s) in idxs.iter().zip(self.batch.score_batch(&group)) {
+                    scores[i] = s;
+                }
+            }
+        }
+        if !singles.is_empty() {
+            match &self.pipeline {
+                // One back-to-back pipeline pass over all the odd-length
+                // windows — layers stay busy across window boundaries
+                // instead of filling and draining per window.
+                Some(pipe) => {
+                    let group: Vec<&[Vec<f32>]> =
+                        singles.iter().map(|&i| windows[i].data.as_slice()).collect();
+                    for (&i, s) in singles.iter().zip(pipe.score_batch(&group)) {
+                        scores[i] = s;
+                    }
+                }
+                None => {
+                    for &i in &singles {
+                        scores[i] = self.ae.score_quant(&windows[i].data);
+                    }
+                }
+            }
+        }
+        scores
     }
 }
 
@@ -148,7 +229,25 @@ impl Backend for QuantBackend {
     }
 
     fn score_batch(&self, windows: &[&Window]) -> Vec<f64> {
-        windows.iter().map(|w| self.ae.score_quant(&w.data)).collect()
+        match self.mode {
+            ExecMode::Sequential => {
+                windows.iter().map(|w| self.ae.score_quant(&w.data)).collect()
+            }
+            ExecMode::Pipelined => {
+                let wins: Vec<&[Vec<f32>]> =
+                    windows.iter().map(|w| w.data.as_slice()).collect();
+                self.pipeline
+                    .as_ref()
+                    .expect("pipelined backend always constructs its pipeline")
+                    .score_batch(&wins)
+            }
+            ExecMode::Batched => self.score_grouped(windows),
+            ExecMode::Auto => match (windows, &self.pipeline) {
+                ([w], Some(pipe)) => vec![pipe.score(&w.data)],
+                ([w], None) => vec![self.ae.score_quant(&w.data)],
+                _ => self.score_grouped(windows),
+            },
+        }
     }
 }
 
@@ -186,5 +285,54 @@ mod tests {
     fn pjrt_backend_fails_cleanly_without_artifacts() {
         let err = PjrtBackend::new(std::path::PathBuf::from("/nonexistent"), "F32-D2", 4);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn all_exec_modes_agree_bitwise() {
+        // Mixed-length batch through every mode of both a shallow and a
+        // deep model: scores must be identical to the last bit — the
+        // engine may only change speed, never results.
+        for name in ["F32-D2", "F32-D6"] {
+            let topo = Topology::from_name(name).unwrap();
+            let mut gen = TelemetryGen::new(topo.features, 13);
+            let windows: Vec<Window> = [8usize, 4, 8, 8, 4, 1]
+                .iter()
+                .map(|&t| gen.benign_window(t))
+                .collect();
+            let refs: Vec<&Window> = windows.iter().collect();
+            let mk = |mode| {
+                QuantBackend::with_mode(
+                    LstmAutoencoder::random(Topology::from_name(name).unwrap(), 77),
+                    mode,
+                )
+            };
+            let golden = mk(crate::engine::ExecMode::Sequential).score_batch(&refs);
+            for mode in [
+                crate::engine::ExecMode::Auto,
+                crate::engine::ExecMode::Pipelined,
+                crate::engine::ExecMode::Batched,
+            ] {
+                let got = mk(mode).score_batch(&refs);
+                let same = golden
+                    .iter()
+                    .zip(&got)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "{name} {mode:?}: {golden:?} vs {got:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_mode_single_window_agrees_on_deep_model() {
+        // Deep model + single window exercises the pipeline branch of
+        // Auto. One model instance, one window: score sequentially first,
+        // then hand the same model to the backend.
+        let topo = Topology::from_name("F64-D6").unwrap();
+        let ae = LstmAutoencoder::random(topo, 5);
+        let w = TelemetryGen::new(64, 3).benign_window(6);
+        let want = ae.score_quant(&w.data);
+        let backend = QuantBackend::new(ae);
+        let got = backend.score_batch(&[&w])[0];
+        assert_eq!(got.to_bits(), want.to_bits());
     }
 }

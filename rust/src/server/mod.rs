@@ -15,7 +15,12 @@
 //!   serving analog of the paper's throughput scenario.
 //! - [`backend`] — scoring backends: the AOT PJRT artifact (real
 //!   numerics, Python-free) and the bit-accurate quantized golden model
-//!   (the FPGA datapath in software).
+//!   (the FPGA datapath in software). The quant backend executes on the
+//!   temporal-pipeline engine ([`crate::engine`]): batches formed by the
+//!   batcher hit the batched MMM kernel (each weight matrix streamed once
+//!   across the batch), lone deep-model windows hit the per-layer worker
+//!   pipeline, and both are bit-identical to the sequential scorer — see
+//!   the engine docs for the exact routing rules.
 //! - [`metrics`] — latency histograms + throughput counters.
 
 pub mod backend;

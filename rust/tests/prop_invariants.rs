@@ -1,14 +1,17 @@
 //! Cross-module property-test battery: invariants that span modules, run
 //! at higher case counts than the in-module unit tests.
 
+use std::sync::Arc;
+
 use lstm_ae_accel::accel::dataflow::{DataflowSim, SimOptions};
 use lstm_ae_accel::accel::latency::LatencyModel;
 use lstm_ae_accel::accel::multi::run_batch;
 use lstm_ae_accel::accel::optimizer::{evaluate, optimize, Objective};
 use lstm_ae_accel::accel::platform::FpgaDevice;
 use lstm_ae_accel::accel::reuse::BalancedConfig;
+use lstm_ae_accel::engine::{BatchEngine, TemporalPipeline};
 use lstm_ae_accel::fixed::Q8_24;
-use lstm_ae_accel::model::{LstmAutoencoder, Topology};
+use lstm_ae_accel::model::{LstmAutoencoder, ModelWeights, Topology};
 use lstm_ae_accel::util::json::Json;
 use lstm_ae_accel::util::prop::props;
 use lstm_ae_accel::util::rng::Xoshiro256;
@@ -99,6 +102,60 @@ fn quant_forward_bounded_outputs() {
                 assert!(v.abs() <= 1.0 + 1e-6, "output {v} out of gate bound");
             }
         }
+    });
+}
+
+#[test]
+fn engine_paths_bit_identical_to_forward_quant() {
+    // The tentpole invariant: every engine execution path — per-layer
+    // worker pipeline and batched MMM kernel — reproduces
+    // forward_quant to the bit across random topologies, seeds, sequence
+    // lengths (including T=1), and batch sizes (including B=1).
+    props("engine_bit_identical", 20, |g| {
+        let Some(topo) = random_topo(g) else { return };
+        let f = topo.features;
+        let ae = Arc::new(LstmAutoencoder::random(topo, g.case as u64 + 7));
+        let t = *g.choose(&[1usize, 2, 3, 8, 17]);
+        let b = g.usize_in(1, 5);
+        let windows: Vec<Vec<Vec<f32>>> = (0..b)
+            .map(|_| (0..t).map(|_| g.vec_f32(f, -2.0, 2.0)).collect())
+            .collect();
+        let refs: Vec<&[Vec<f32>]> = windows.iter().map(|w| w.as_slice()).collect();
+        let golden: Vec<Vec<Vec<f32>>> =
+            windows.iter().map(|w| ae.forward_quant(w)).collect();
+
+        let batch = BatchEngine::new(ae.clone());
+        assert_eq!(batch.forward_batch(&refs), golden, "batched MMM path");
+
+        let pipe = TemporalPipeline::new(ae.clone());
+        assert_eq!(pipe.forward_batch(&refs), golden, "pipelined path");
+
+        // Scores too (the serving contract), down to the f64 bit.
+        let batch_scores = batch.score_batch(&refs);
+        for (i, w) in windows.iter().enumerate() {
+            let want = ae.score_quant(w).to_bits();
+            assert_eq!(pipe.score(w).to_bits(), want, "pipeline score {i}");
+            assert_eq!(batch_scores[i].to_bits(), want, "batch score {i}");
+        }
+    });
+}
+
+#[test]
+fn engine_agrees_with_dataflow_sim_functional_output() {
+    // Sim functional pass (now also on the engine scratch path), the
+    // pipeline, and the golden model must all coincide exactly.
+    props("engine_vs_sim", 12, |g| {
+        let Some(topo) = random_topo(g) else { return };
+        let f = topo.features;
+        let weights = ModelWeights::random(&topo, g.case as u64 + 31);
+        let cfg = BalancedConfig::balance(&topo, g.u64_below(4) + 1);
+        let t = g.usize_in(1, 10);
+        let x: Vec<Vec<f32>> = (0..t).map(|_| g.vec_f32(f, -1.0, 1.0)).collect();
+        let (_, sim_out) = DataflowSim::new(&cfg).run_with_data(&weights, &x);
+        let ae = Arc::new(LstmAutoencoder::new(topo, weights).unwrap());
+        assert_eq!(sim_out, ae.forward_quant(&x), "sim vs golden");
+        let pipe = TemporalPipeline::new(ae.clone());
+        assert_eq!(sim_out, pipe.forward_quant(&x), "sim vs pipeline");
     });
 }
 

@@ -1,0 +1,135 @@
+//! Offline stub of the `xla` (xla-rs) PJRT API surface used by
+//! `lstm_ae_accel::runtime`.
+//!
+//! The real crate wraps `xla_extension` shared objects that are not part
+//! of this offline image. This stub keeps the crate **compiling and
+//! testable** with identical signatures: every entry point that would
+//! touch PJRT returns an [`Error`] stating the runtime is unavailable.
+//! All runtime-dependent code paths in the workspace already handle that
+//! gracefully (tests skip when artifacts are missing, benches print
+//! "(no artifacts)", the server falls back to the bit-accurate Q8.24
+//! backend), so swapping in the real vendored crate re-enables PJRT
+//! execution with no source changes.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error`'s role: printable, `std::error::Error`,
+/// convertible into `anyhow::Error` by `?`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "PJRT unavailable: {what} (offline xla stub — vendor the real xla crate \
+         and its xla_extension libraries to enable artifact execution)"
+    ))
+}
+
+/// PJRT client handle. The stub cannot construct one: `cpu()` always
+/// errors, which is the single gate keeping every downstream method
+/// unreachable in practice.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer returned by `execute`.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Parsed HLO module (text interchange).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Host literal (tensor) handle.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_cleanly() {
+        let err = PjRtClient::cpu().err().expect("stub must refuse");
+        assert!(err.to_string().contains("PJRT unavailable"));
+    }
+}
