@@ -101,6 +101,7 @@ fn main() {
         max_batch: args.get_usize("max-batch", 8),
         max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us", 400)),
         workers: args.get_usize("workers", 2),
+        queue_capacity: args.get_usize("queue", 1024),
         threshold,
     };
     let srv = AnomalyServer::start(backend, cfg);
@@ -109,13 +110,22 @@ fn main() {
     println!("replaying {n} requests at {rate:.0} rps (anomaly rate {anomaly_rate}) ...");
     let start = std::time::Instant::now();
     let mut inflight = Vec::with_capacity(n);
+    let mut shed = 0u64;
     for req in trace {
         let target = std::time::Duration::from_secs_f64(req.at_s);
         if let Some(sleep) = target.checked_sub(start.elapsed()) {
             std::thread::sleep(sleep);
         }
         let truth = req.window.anomaly.map(|k| k);
-        inflight.push((srv.submit(req.window), truth));
+        match srv.submit(req.window) {
+            Ok(rx) => inflight.push((rx, truth)),
+            // Bounded admission: over-capacity traffic is shed with an
+            // explicit error instead of queuing unboundedly.
+            Err(e) => {
+                assert!(matches!(e, lstm_ae_accel::server::SubmitError::Overloaded), "{e}");
+                shed += 1;
+            }
+        }
     }
     let mut per_kind: std::collections::BTreeMap<String, (u64, u64)> = Default::default();
     let (mut tp, mut fp, mut fneg, mut tn) = (0u64, 0u64, 0u64, 0u64);
@@ -139,6 +149,9 @@ fn main() {
     // ---- report -----------------------------------------------------------
     println!("\n{}", srv.metrics().report());
     println!("wall time {wall:.2}s → {:.0} windows/s sustained", n as f64 / wall);
+    if shed > 0 {
+        println!("load shed at admission: {shed} (raise --queue or lower --rate)");
+    }
     let precision = tp as f64 / (tp + fp).max(1) as f64;
     let recall = tp as f64 / (tp + fneg).max(1) as f64;
     let f1 = 2.0 * precision * recall / (precision + recall).max(1e-9);

@@ -1,0 +1,134 @@
+//! MULTI-MODEL SERVING FABRIC: the four paper topologies (F32/F64 ×
+//! D2/D6, §4.1) served concurrently from one process — the serving
+//! analog of SHARP-style configuration-adaptive RNN acceleration.
+//!
+//! Each model gets its own **lane**: a bounded admission queue (full →
+//! explicit `Overloaded` load shedding, never unbounded buffering), a
+//! dynamic batcher with a per-model policy (the deep F64-D6 lane holds
+//! windows up to 2 ms to form big MMM batches; the shallow F32-D2 lane
+//! flushes at 200 µs for latency), a worker pool, and metrics. Deep
+//! lanes score lone windows on a pool of temporal-pipeline replicas, so
+//! workers don't serialize on one pipeline. Per-lane metrics roll up
+//! into a fleet report.
+//!
+//! ```bash
+//! cargo run --release --example multi_model_serving
+//! ```
+//! (quantized golden-model backends — no artifacts needed.)
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lstm_ae_accel::engine::{ExecMode, PIPELINE_MIN_DEPTH};
+use lstm_ae_accel::model::{LstmAutoencoder, Topology};
+use lstm_ae_accel::server::{
+    calibrate_threshold, Backend, ModelRegistry, QuantBackend, ServerConfig, SubmitError,
+};
+use lstm_ae_accel::util::cli::Args;
+use lstm_ae_accel::workload::{trace::merged_poisson, TelemetryGen};
+
+fn main() {
+    let args = Args::from_env();
+    let t = args.get_usize("timesteps", 16);
+    let n = args.get_usize("requests", 2000);
+    let rate = args.get_f64("rate", 4000.0);
+    let anomaly_rate = args.get_f64("anomaly-rate", 0.15);
+    let replicas = args.get_usize("replicas", 2);
+
+    // ---- assemble the fleet: backend + calibrated threshold per model --
+    let mut registry = ModelRegistry::new();
+    let mut backends: Vec<(String, Arc<QuantBackend>)> = Vec::new();
+    for (i, topo) in Topology::paper_models().into_iter().enumerate() {
+        let deep = topo.depth >= PIPELINE_MIN_DEPTH;
+        let backend = Arc::new(QuantBackend::with_options(
+            LstmAutoencoder::random(topo.clone(), 7 + i as u64),
+            ExecMode::Auto,
+            replicas,
+        ));
+        // Calibrate each model's threshold on its own benign traffic.
+        let mut gen = TelemetryGen::new(topo.features, 21 + i as u64);
+        let benign: Vec<f64> = (0..64)
+            .map(|_| backend.score_batch(&[&gen.benign_window(t)])[0])
+            .collect();
+        let threshold = calibrate_threshold(&benign, 0.99);
+        // The paper-fleet lane policy (deep models trade deadline for
+        // batch size), with this run's threshold and queue bound.
+        let cfg = ServerConfig {
+            queue_capacity: args.get_usize("queue", 1024),
+            threshold,
+            ..ModelRegistry::paper_lane_config(&topo, replicas)
+        };
+        println!(
+            "lane {:<16} threshold {threshold:.6} | max_batch {:>2}, max_wait {:>4} µs, \
+             {} workers{}",
+            topo.name,
+            cfg.max_batch,
+            cfg.max_wait.as_micros(),
+            cfg.workers,
+            if deep { format!(", {replicas} pipeline replicas") } else { String::new() },
+        );
+        registry.register(&topo.name, backend.clone() as Arc<dyn Backend>, cfg);
+        backends.push((topo.name, backend));
+    }
+
+    // ---- mixed open-loop Poisson traffic across all lanes at once -----
+    let models: Vec<String> = registry.models().map(String::from).collect();
+    let topos: Vec<Topology> = models
+        .iter()
+        .map(|m| Topology::from_name(m).expect("registered names are canonical"))
+        .collect();
+    let merged = merged_poisson(&topos, 55, rate, n, t, anomaly_rate);
+    println!(
+        "\nreplaying {} requests across {} lanes at {rate:.0} rps aggregate ...",
+        merged.len(),
+        models.len()
+    );
+
+    let start = Instant::now();
+    let mut inflight = Vec::with_capacity(merged.len());
+    let mut shed = 0u64;
+    for (mi, req) in merged {
+        let target = Duration::from_secs_f64(req.at_s);
+        if let Some(sleep) = target.checked_sub(start.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        let truth = req.window.anomaly.is_some();
+        match registry.submit(&models[mi], req.window) {
+            Ok(rx) => inflight.push((mi, rx, truth)),
+            Err(SubmitError::Overloaded) => shed += 1, // bounded queue: shed, don't buffer
+            Err(e) => panic!("submit to {}: {e}", models[mi]),
+        }
+    }
+    let mut per_model = vec![(0u64, 0u64); models.len()]; // (tp, fn)
+    for (mi, rx, truth) in inflight {
+        let r = rx.recv().expect("accepted work completes");
+        if truth {
+            if r.is_anomaly {
+                per_model[mi].0 += 1;
+            } else {
+                per_model[mi].1 += 1;
+            }
+        }
+    }
+    let wall = start.elapsed().as_secs_f64();
+
+    // ---- fleet report --------------------------------------------------
+    println!();
+    print!("{}", registry.fleet_report());
+    println!("wall {wall:.2}s | {shed} shed at admission");
+    for (mi, name) in models.iter().enumerate() {
+        let (tp, fneg) = per_model[mi];
+        let recall = tp as f64 / (tp + fneg).max(1) as f64;
+        print!("{name}: recall {recall:.2}  ");
+    }
+    println!();
+    // Cumulative across calibration + serving (calibration alone already
+    // rotates through the pool; the serving-path guarantee of ≥ 2
+    // replicas in use is asserted by `tests/integration_fabric.rs`).
+    for (name, backend) in &backends {
+        if let Some((total, used)) = backend.replica_stats() {
+            println!("{name}: {used}/{total} pipeline replicas exercised");
+        }
+    }
+    registry.shutdown();
+}

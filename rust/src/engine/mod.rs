@@ -55,15 +55,20 @@
 //! per-request latency is the objective and the pipeline's layer overlap
 //! shortens it. Under heavy load the batcher forms `B > 1` batches and
 //! Auto switches to the batched kernel, whose weight reuse maximizes
-//! throughput; worker threads serializing on the single shared pipeline
-//! is therefore confined to the regime where the server is not
-//! throughput-bound anyway.
+//! throughput. When several server workers do score single windows
+//! concurrently (many independent lanes, `max_batch == 1` operators),
+//! they no longer serialize on one pipeline's endpoint lock: the backend
+//! checks replicas out of a [`PipelinePool`] — N independent pipelines
+//! over the same cells, least-loaded first — so the only remaining
+//! serialization is within one replica, by construction.
 
 pub mod batch;
 pub mod pipeline;
+pub mod pool;
 
 pub use batch::BatchEngine;
 pub use pipeline::TemporalPipeline;
+pub use pool::{PipelinePool, PooledPipeline};
 
 use crate::fixed::Q8_24;
 use crate::model::lstm::{QuantLstmCell, QuantLstmState, StepScratch};
@@ -87,6 +92,21 @@ pub enum ExecMode {
     /// Batched MMM kernel for every request (single windows degenerate
     /// to the sequential path — a batch of one has no weight reuse).
     Batched,
+}
+
+impl ExecMode {
+    /// Parse an operator-facing mode name (CLI `--mode` flag). Accepts
+    /// the canonical names plus common short forms; `None` on anything
+    /// else so callers can report the valid set.
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(ExecMode::Auto),
+            "sequential" | "seq" => Some(ExecMode::Sequential),
+            "pipelined" | "pipeline" | "pipe" => Some(ExecMode::Pipelined),
+            "batched" | "batch" => Some(ExecMode::Batched),
+            _ => None,
+        }
+    }
 }
 
 /// Quantize a `[T][F]` window onto the Q8.24 grid — the DataReader

@@ -1,0 +1,223 @@
+//! Engine replica pool: N independent [`TemporalPipeline`]s over one
+//! model, checked out per batch so concurrent server workers stop
+//! serializing on a single pipeline's endpoint lock.
+//!
+//! A [`TemporalPipeline`] keeps its feed/drain endpoints under one mutex —
+//! correct for a single caller, but a worker pool scoring deep
+//! single-window batches through `ExecMode::Auto` would serialize there,
+//! idling every core but one while per-layer threads of one replica do
+//! all the work. The pool owns `replicas` fully independent pipelines
+//! (each with its own per-layer worker threads and FIFOs) and hands one
+//! out per checkout: least-loaded wins, with a rotating scan start so
+//! back-to-back checkouts spread across replicas even without
+//! concurrency.
+//!
+//! Every replica runs the same quantized cells in the same order, so
+//! scores are bit-identical regardless of which replica serves a batch —
+//! the pool changes timing, never results (the same function/timing
+//! independence the hardware dataflow guarantees).
+
+use std::ops::Deref;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::pipeline::TemporalPipeline;
+use crate::model::LstmAutoencoder;
+
+struct Slot {
+    pipe: TemporalPipeline,
+    /// Checkouts currently holding this replica.
+    inflight: AtomicUsize,
+    /// Total checkouts ever served (observability; lets tests assert the
+    /// hot path really spreads across replicas).
+    uses: AtomicU64,
+}
+
+/// A pool of interchangeable [`TemporalPipeline`] replicas over one model.
+pub struct PipelinePool {
+    slots: Vec<Slot>,
+    /// Rotating scan start for checkout, so equal-load ties resolve
+    /// round-robin instead of always picking replica 0.
+    cursor: AtomicUsize,
+}
+
+/// A checked-out replica; derefs to the pipeline and returns the replica
+/// to the pool (decrements its load) on drop.
+pub struct PooledPipeline<'a> {
+    slot: &'a Slot,
+}
+
+impl Deref for PooledPipeline<'_> {
+    type Target = TemporalPipeline;
+
+    fn deref(&self) -> &TemporalPipeline {
+        &self.slot.pipe
+    }
+}
+
+impl Drop for PooledPipeline<'_> {
+    fn drop(&mut self) {
+        self.slot.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl PipelinePool {
+    /// Pool of `replicas` pipelines (≥ 1) with the default FIFO capacity.
+    pub fn new(ae: Arc<LstmAutoencoder>, replicas: usize) -> PipelinePool {
+        Self::with_capacity(ae, replicas, super::pipeline::DEFAULT_FIFO_CAPACITY)
+    }
+
+    /// Pool with an explicit inter-layer FIFO capacity per replica.
+    pub fn with_capacity(
+        ae: Arc<LstmAutoencoder>,
+        replicas: usize,
+        fifo_capacity: usize,
+    ) -> PipelinePool {
+        let slots = (0..replicas.max(1))
+            .map(|_| Slot {
+                pipe: TemporalPipeline::with_capacity(ae.clone(), fifo_capacity),
+                inflight: AtomicUsize::new(0),
+                uses: AtomicU64::new(0),
+            })
+            .collect();
+        PipelinePool { slots, cursor: AtomicUsize::new(0) }
+    }
+
+    /// The model every replica executes.
+    pub fn model(&self) -> &LstmAutoencoder {
+        self.slots[0].pipe.model()
+    }
+
+    /// Number of replicas in the pool.
+    pub fn replicas(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// How many distinct replicas have served at least one checkout.
+    pub fn used_replicas(&self) -> usize {
+        self.slots.iter().filter(|s| s.uses.load(Ordering::Relaxed) > 0).count()
+    }
+
+    /// Check out the least-loaded replica (rotating scan start breaks
+    /// ties round-robin). The load accounting is advisory — a stale read
+    /// picks a busier replica, which costs latency, never correctness.
+    pub fn checkout(&self) -> PooledPipeline<'_> {
+        let n = self.slots.len();
+        let start = self.cursor.fetch_add(1, Ordering::Relaxed) % n;
+        let mut best = start;
+        let mut best_load = usize::MAX;
+        for k in 0..n {
+            let i = (start + k) % n;
+            let load = self.slots[i].inflight.load(Ordering::Relaxed);
+            if load < best_load {
+                best = i;
+                best_load = load;
+                if load == 0 {
+                    break;
+                }
+            }
+        }
+        let slot = &self.slots[best];
+        slot.inflight.fetch_add(1, Ordering::Relaxed);
+        slot.uses.fetch_add(1, Ordering::Relaxed);
+        PooledPipeline { slot }
+    }
+
+    /// Score one window on a checked-out replica — bit-identical to
+    /// [`LstmAutoencoder::score_quant`].
+    pub fn score(&self, x: &[Vec<f32>]) -> f64 {
+        self.checkout().score(x)
+    }
+
+    /// Score a batch back-to-back on one checked-out replica.
+    pub fn score_batch(&self, windows: &[&[Vec<f32>]]) -> Vec<f64> {
+        self.checkout().score_batch(windows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Topology;
+    use crate::util::rng::Xoshiro256;
+
+    fn window(t: usize, f: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut r = Xoshiro256::seeded(seed);
+        (0..t).map(|_| (0..f).map(|_| r.uniform(-1.0, 1.0) as f32).collect()).collect()
+    }
+
+    #[test]
+    fn replicas_are_bit_identical_to_sequential() {
+        let topo = Topology::from_name("F64-D6").unwrap();
+        let ae = Arc::new(LstmAutoencoder::random(topo, 3));
+        let pool = PipelinePool::new(ae.clone(), 3);
+        let x = window(9, 64, 7);
+        let want = ae.score_quant(&x).to_bits();
+        // Enough checkouts to cycle through every replica.
+        for _ in 0..6 {
+            assert_eq!(pool.score(&x).to_bits(), want);
+        }
+        assert_eq!(pool.used_replicas(), 3, "rotating checkout visits all replicas");
+    }
+
+    #[test]
+    fn sequential_checkouts_rotate_across_replicas() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let pool = PipelinePool::new(Arc::new(LstmAutoencoder::random(topo, 1)), 2);
+        let x = window(2, 32, 1);
+        let _ = pool.score(&x);
+        let _ = pool.score(&x);
+        // Even with zero concurrency the cursor spreads load: two calls
+        // must not pile onto one replica.
+        assert_eq!(pool.used_replicas(), 2);
+    }
+
+    #[test]
+    fn checkout_prefers_idle_replicas() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let pool = PipelinePool::new(Arc::new(LstmAutoencoder::random(topo, 2)), 2);
+        let a = pool.checkout();
+        let b = pool.checkout();
+        // With one replica held, the second checkout must take the other.
+        assert!(!std::ptr::eq(&*a as *const _, &*b as *const _));
+        drop(a);
+        drop(b);
+        let c = pool.checkout();
+        drop(c);
+        assert_eq!(pool.used_replicas(), 2);
+    }
+
+    #[test]
+    fn concurrent_scoring_stays_correct_and_uses_multiple_replicas() {
+        let topo = Topology::from_name("F64-D6").unwrap();
+        let ae = Arc::new(LstmAutoencoder::random(topo, 5));
+        let pool = Arc::new(PipelinePool::new(ae.clone(), 4));
+        let wins: Vec<Vec<Vec<f32>>> = (0..4).map(|i| window(6, 64, 20 + i)).collect();
+        let want: Vec<u64> = wins.iter().map(|w| ae.score_quant(w).to_bits()).collect();
+        let mut handles = Vec::new();
+        for tid in 0..4usize {
+            let pool = pool.clone();
+            let wins = wins.clone();
+            let want = want.clone();
+            handles.push(std::thread::spawn(move || {
+                for rep in 0..8 {
+                    let i = (tid + rep) % wins.len();
+                    assert_eq!(pool.score(&wins[i]).to_bits(), want[i]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(pool.used_replicas() >= 2, "used {}", pool.used_replicas());
+    }
+
+    #[test]
+    fn zero_replicas_clamps_to_one() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let pool = PipelinePool::new(Arc::new(LstmAutoencoder::random(topo, 9)), 0);
+        assert_eq!(pool.replicas(), 1);
+        let x = window(3, 32, 2);
+        assert!(pool.score(&x).is_finite());
+    }
+}

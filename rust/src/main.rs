@@ -13,6 +13,8 @@
 //!   infer     --model F32-D2 --timesteps 16        one PJRT inference
 //!   measure   --model F32-D2 --timesteps 16 --reps 1000   CPU baseline
 //!   serve     --model F32-D2 --timesteps 16 --requests 1000 --rate 2000
+//!   fleet     --requests 2000 --rate 4000 [--replicas 2] [--mode auto] [--queue 1024]
+//!             serve all four paper topologies concurrently (mixed Poisson traffic)
 //!   checks                         run the paper-shape checks
 //! ```
 
@@ -29,10 +31,15 @@ use lstm_ae_accel::baselines::cpu as cpu_baseline;
 use lstm_ae_accel::model::Topology;
 use lstm_ae_accel::report;
 use lstm_ae_accel::runtime::Runtime;
-use lstm_ae_accel::server::{self, AnomalyServer, Backend, PjrtBackend, QuantBackend, ServerConfig};
+use lstm_ae_accel::engine::ExecMode;
+use lstm_ae_accel::server::{
+    self, AnomalyServer, Backend, ModelRegistry, PjrtBackend, QuantBackend, ServerConfig,
+    SubmitError,
+};
 use lstm_ae_accel::util::cli::Args;
 use lstm_ae_accel::util::table::Table;
-use lstm_ae_accel::workload::{trace::poisson_trace, TelemetryGen};
+use lstm_ae_accel::workload::trace::{merged_poisson, poisson_trace};
+use lstm_ae_accel::workload::TelemetryGen;
 use lstm_ae_accel::model::LstmAutoencoder;
 
 fn main() {
@@ -62,6 +69,7 @@ fn main() {
         "infer" => cmd_infer(&args),
         "measure" => cmd_measure(&args),
         "serve" => cmd_serve(&args),
+        "fleet" => cmd_fleet(&args),
         "checks" => cmd_checks(),
         _ => {
             print_help();
@@ -77,7 +85,7 @@ fn main() {
 fn print_help() {
     println!("lstm-ae-accel — temporal-parallel LSTM-AE accelerator (paper reproduction)");
     println!("commands: models balance simulate table1 table2 table3 figures resources");
-    println!("          infer measure serve checks   (see --help strings in main.rs)");
+    println!("          infer measure serve fleet checks   (see --help strings in main.rs)");
 }
 
 fn topo_from(args: &Args) -> Result<Topology> {
@@ -354,6 +362,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch: args.get_usize("max-batch", 8),
         max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us", 500)),
         workers: args.get_usize("workers", 2),
+        queue_capacity: args.get_usize("queue", 1024),
         threshold: args.get_f64("threshold", 0.0), // calibrated below
     };
 
@@ -396,13 +405,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let trace = poisson_trace(&mut gen, 17, rate, n, t, anomaly_rate);
     let start = std::time::Instant::now();
     let mut inflight = Vec::with_capacity(n);
+    let mut shed = 0u64;
     for req in trace {
         let target = std::time::Duration::from_secs_f64(req.at_s);
         if let Some(sleep) = target.checked_sub(start.elapsed()) {
             std::thread::sleep(sleep);
         }
         let is_anomaly = req.window.anomaly.is_some();
-        inflight.push((srv.submit(req.window), is_anomaly));
+        match srv.submit(req.window) {
+            Ok(rx) => inflight.push((rx, is_anomaly)),
+            Err(SubmitError::Overloaded) => shed += 1,
+            Err(e) => return Err(anyhow!("submit: {e}")),
+        }
     }
     let mut tp = 0u64;
     let mut fp = 0u64;
@@ -418,12 +432,70 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     println!("{}", srv.metrics().report());
+    if shed > 0 {
+        println!("load shed at admission: {shed} requests (raise --queue or lower --rate)");
+    }
     let precision = tp as f64 / (tp + fp).max(1) as f64;
     let recall = tp as f64 / (tp + fneg).max(1) as f64;
     println!(
         "detection: TP {tp} FP {fp} FN {fneg} TN {tn} | precision {precision:.3} recall {recall:.3}"
     );
     srv.shutdown();
+    Ok(())
+}
+
+/// Serve all four paper topologies concurrently through the multi-model
+/// fabric under mixed open-loop Poisson traffic, then print the rolled-up
+/// fleet report (per-lane counters, shed, latency percentiles).
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let t = args.get_usize("timesteps", 16);
+    let n = args.get_usize("requests", 2000);
+    let rate = args.get_f64("rate", 4000.0);
+    let anomaly_rate = args.get_f64("anomaly-rate", 0.1);
+    let replicas = args.get_usize("replicas", 2);
+    let mode = ExecMode::parse(args.get_or("mode", "auto"))
+        .ok_or_else(|| anyhow!("unknown --mode (want auto|sequential|pipelined|batched)"))?;
+    let seed = args.get_u64("seed", 7);
+    let registry = ModelRegistry::paper_fleet(seed, mode, replicas);
+    let models: Vec<String> = registry.models().map(String::from).collect();
+
+    // One independent Poisson stream per model at rate/N each, merged
+    // into a single arrival-ordered schedule. The trace seed derives
+    // from --seed too, so different seeds draw different traffic, not
+    // just different weights.
+    let topos = models
+        .iter()
+        .map(|m| Topology::from_name(m))
+        .collect::<Result<Vec<_>>>()?;
+    let merged = merged_poisson(&topos, seed.wrapping_add(40), rate, n, t, anomaly_rate);
+    println!(
+        "fleet: {} requests over {} lanes @ {rate:.0} rps aggregate \
+         (T={t}, mode {mode:?}, {replicas} replicas on deep lanes)",
+        merged.len(),
+        models.len()
+    );
+
+    let start = std::time::Instant::now();
+    let mut inflight = Vec::with_capacity(merged.len());
+    let mut shed = 0u64;
+    for (mi, req) in merged {
+        let target = std::time::Duration::from_secs_f64(req.at_s);
+        if let Some(sleep) = target.checked_sub(start.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        match registry.submit(&models[mi], req.window) {
+            Ok(rx) => inflight.push(rx),
+            Err(SubmitError::Overloaded) => shed += 1,
+            Err(e) => return Err(anyhow!("submit to {}: {e}", models[mi])),
+        }
+    }
+    for rx in inflight {
+        let _ = rx.recv();
+    }
+    let wall = start.elapsed().as_secs_f64();
+    print!("{}", registry.fleet_report());
+    println!("wall {wall:.2}s | {shed} shed at admission");
+    registry.shutdown();
     Ok(())
 }
 

@@ -4,7 +4,7 @@ use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 
-use crate::engine::{BatchEngine, ExecMode, TemporalPipeline, PIPELINE_MIN_DEPTH};
+use crate::engine::{BatchEngine, ExecMode, PipelinePool, PIPELINE_MIN_DEPTH};
 use crate::model::LstmAutoencoder;
 use crate::runtime::Runtime;
 use crate::workload::Window;
@@ -145,35 +145,58 @@ impl Backend for PjrtBackend {
 pub struct QuantBackend {
     ae: Arc<LstmAutoencoder>,
     mode: ExecMode,
-    /// Spawned only when the mode can route to it (threads per layer).
-    pipeline: Option<TemporalPipeline>,
+    /// Spawned only when the mode can route to it (threads per layer per
+    /// replica); replicas are checked out per batch so concurrent server
+    /// workers don't serialize on one pipeline's endpoint lock.
+    pool: Option<PipelinePool>,
     batch: BatchEngine,
 }
 
 impl QuantBackend {
-    /// Backend with [`ExecMode::Auto`] routing (the serving default).
+    /// Backend with [`ExecMode::Auto`] routing and a single pipeline
+    /// replica (the single-lane serving default).
     pub fn new(ae: LstmAutoencoder) -> QuantBackend {
-        Self::with_mode(ae, ExecMode::Auto)
+        Self::with_options(ae, ExecMode::Auto, 1)
     }
 
     /// Backend pinned to one execution path, for operators who want
     /// deterministic routing (and for the mode-agreement tests below;
     /// `benches/hotpath.rs` compares the underlying engines directly).
     pub fn with_mode(ae: LstmAutoencoder, mode: ExecMode) -> QuantBackend {
+        Self::with_options(ae, mode, 1)
+    }
+
+    /// Backend with an explicit pipeline replica count. `replicas` only
+    /// matters for modes that can route to the pipeline (`Auto` on deep
+    /// models, `Pipelined`); lanes with several workers should size it to
+    /// the worker count so pipelined scoring runs worker-parallel.
+    pub fn with_options(ae: LstmAutoencoder, mode: ExecMode, replicas: usize) -> QuantBackend {
         let ae = Arc::new(ae);
         let wants_pipeline = match mode {
             ExecMode::Pipelined => true,
             ExecMode::Auto => ae.topo.depth >= PIPELINE_MIN_DEPTH,
             ExecMode::Sequential | ExecMode::Batched => false,
         };
-        let pipeline = if wants_pipeline { Some(TemporalPipeline::new(ae.clone())) } else { None };
+        let pool = if wants_pipeline {
+            Some(PipelinePool::new(ae.clone(), replicas))
+        } else {
+            None
+        };
         let batch = BatchEngine::new(ae.clone());
-        QuantBackend { ae, mode, pipeline, batch }
+        QuantBackend { ae, mode, pool, batch }
     }
 
     /// The execution mode this backend routes through.
     pub fn mode(&self) -> ExecMode {
         self.mode
+    }
+
+    /// `(replicas, distinct replicas used so far)` of the pipeline pool,
+    /// or `None` when this mode never routes to the pipeline. Lets
+    /// operators and tests verify pipelined scoring really spreads
+    /// across replicas instead of serializing on one.
+    pub fn replica_stats(&self) -> Option<(usize, usize)> {
+        self.pool.as_ref().map(|p| (p.replicas(), p.used_replicas()))
     }
 
     /// Batched scoring with windows grouped by sequence length (the MMM
@@ -201,14 +224,15 @@ impl QuantBackend {
             }
         }
         if !singles.is_empty() {
-            match &self.pipeline {
-                // One back-to-back pipeline pass over all the odd-length
-                // windows — layers stay busy across window boundaries
-                // instead of filling and draining per window.
-                Some(pipe) => {
+            match &self.pool {
+                // One back-to-back pass over all the odd-length windows
+                // on a checked-out replica — layers stay busy across
+                // window boundaries instead of filling and draining per
+                // window.
+                Some(pool) => {
                     let group: Vec<&[Vec<f32>]> =
                         singles.iter().map(|&i| windows[i].data.as_slice()).collect();
-                    for (&i, s) in singles.iter().zip(pipe.score_batch(&group)) {
+                    for (&i, s) in singles.iter().zip(pool.score_batch(&group)) {
                         scores[i] = s;
                     }
                 }
@@ -236,14 +260,14 @@ impl Backend for QuantBackend {
             ExecMode::Pipelined => {
                 let wins: Vec<&[Vec<f32>]> =
                     windows.iter().map(|w| w.data.as_slice()).collect();
-                self.pipeline
+                self.pool
                     .as_ref()
-                    .expect("pipelined backend always constructs its pipeline")
+                    .expect("pipelined backend always constructs its pool")
                     .score_batch(&wins)
             }
             ExecMode::Batched => self.score_grouped(windows),
-            ExecMode::Auto => match (windows, &self.pipeline) {
-                ([w], Some(pipe)) => vec![pipe.score(&w.data)],
+            ExecMode::Auto => match (windows, &self.pool) {
+                ([w], Some(pool)) => vec![pool.score(&w.data)],
                 ([w], None) => vec![self.ae.score_quant(&w.data)],
                 _ => self.score_grouped(windows),
             },
@@ -320,6 +344,31 @@ mod tests {
                 assert!(same, "{name} {mode:?}: {golden:?} vs {got:?}");
             }
         }
+    }
+
+    #[test]
+    fn multi_replica_backend_is_bit_identical_and_spreads_load() {
+        let topo = Topology::from_name("F64-D6").unwrap();
+        let ae = LstmAutoencoder::random(topo.clone(), 8);
+        let reference = LstmAutoencoder::random(topo, 8);
+        let backend = QuantBackend::with_options(ae, ExecMode::Auto, 3);
+        assert_eq!(backend.replica_stats(), Some((3, 0)));
+        let mut gen = TelemetryGen::new(64, 4);
+        for i in 0..6 {
+            let w = gen.benign_window(3 + i % 3);
+            let got = backend.score_batch(&[&w])[0];
+            assert_eq!(got.to_bits(), reference.score_quant(&w.data).to_bits());
+        }
+        let (replicas, used) = backend.replica_stats().unwrap();
+        assert_eq!(replicas, 3);
+        assert_eq!(used, 3, "rotating checkout must visit every replica");
+        // Shallow models never construct a pool, whatever the count.
+        let shallow = QuantBackend::with_options(
+            LstmAutoencoder::random(Topology::from_name("F32-D2").unwrap(), 1),
+            ExecMode::Auto,
+            4,
+        );
+        assert_eq!(shallow.replica_stats(), None);
     }
 
     #[test]

@@ -2,52 +2,168 @@
 //! `max_batch` windows or when the oldest queued request has waited
 //! `max_wait` — the classic size-or-deadline policy serving systems use
 //! to trade throughput against tail latency.
+//!
+//! The wait logic is split by state so the idle wait is independent of
+//! flush deadlines: with no batch open there is nothing to flush, so the
+//! batcher blocks on `recv()` until traffic or shutdown wakes it (no
+//! timeout floor, no spurious wakeups); with a batch open it waits only
+//! for the remainder of that batch's deadline. Downstream dispatch is a
+//! bounded `sync_channel`, so when every worker is busy the flush blocks,
+//! the admission queue fills, and the lane sheds — backpressure instead
+//! of unbounded buffering.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::time::Instant;
 
 use super::{Batch, Msg, ServerConfig};
 
-pub(crate) fn run_batcher(rx: Receiver<Msg>, out: Sender<Batch>, cfg: ServerConfig) {
+pub(crate) fn run_batcher(rx: Receiver<Msg>, out: SyncSender<Batch>, cfg: ServerConfig) {
     let mut pending: Batch = Vec::with_capacity(cfg.max_batch);
-    let mut oldest: Option<Instant> = None;
+    // Meaningful only while `pending` is non-empty: arrival time of the
+    // open batch's first request.
+    let mut oldest = Instant::now();
     loop {
-        // How long may we keep waiting before flushing?
-        let timeout = match oldest {
-            Some(t0) => cfg.max_wait.saturating_sub(t0.elapsed()),
-            None => cfg.max_wait.max(std::time::Duration::from_millis(50)),
-        };
-        match rx.recv_timeout(timeout) {
-            Ok(Msg::Req(req)) => {
-                if pending.is_empty() {
-                    oldest = Some(Instant::now());
+        if pending.is_empty() {
+            // Idle: no deadline armed — block until traffic or shutdown.
+            match rx.recv() {
+                Ok(Msg::Req(req)) => {
+                    oldest = Instant::now();
+                    pending.push(req);
+                    if pending.len() >= cfg.max_batch {
+                        flush(&mut pending, &out);
+                    }
                 }
-                pending.push(req);
-                if pending.len() >= cfg.max_batch {
-                    flush(&mut pending, &mut oldest, &out);
+                Ok(Msg::Shutdown) | Err(_) => return,
+            }
+        } else {
+            // A batch is open: wait only for the rest of its deadline.
+            let remaining = cfg.max_wait.saturating_sub(oldest.elapsed());
+            if remaining.is_zero() {
+                flush(&mut pending, &out);
+                continue;
+            }
+            match rx.recv_timeout(remaining) {
+                Ok(Msg::Req(req)) => {
+                    pending.push(req);
+                    if pending.len() >= cfg.max_batch {
+                        flush(&mut pending, &out);
+                    }
                 }
-            }
-            Ok(Msg::Shutdown) => {
-                flush(&mut pending, &mut oldest, &out);
-                return; // dropping `out` stops the workers
-            }
-            Err(RecvTimeoutError::Timeout) => {
-                if oldest.map(|t0| t0.elapsed() >= cfg.max_wait).unwrap_or(false) {
-                    flush(&mut pending, &mut oldest, &out);
+                Ok(Msg::Shutdown) => {
+                    flush(&mut pending, &out);
+                    return; // dropping `out` stops the workers
                 }
-            }
-            Err(RecvTimeoutError::Disconnected) => {
-                flush(&mut pending, &mut oldest, &out);
-                return;
+                Err(RecvTimeoutError::Timeout) => flush(&mut pending, &out),
+                Err(RecvTimeoutError::Disconnected) => {
+                    flush(&mut pending, &out);
+                    return;
+                }
             }
         }
     }
 }
 
-fn flush(pending: &mut Batch, oldest: &mut Option<Instant>, out: &Sender<Batch>) {
+fn flush(pending: &mut Batch, out: &SyncSender<Batch>) {
     if !pending.is_empty() {
-        let batch = std::mem::take(pending);
-        let _ = out.send(batch);
+        // Blocking send: a full batch queue is the backpressure signal.
+        let _ = out.send(std::mem::take(pending));
     }
-    *oldest = None;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{BatcherMsg, Request, Response};
+    use super::*;
+    use crate::workload::Window;
+    use std::sync::mpsc::{channel, sync_channel, Sender};
+    use std::time::Duration;
+
+    fn req(id: u64) -> (Request, std::sync::mpsc::Receiver<Response>) {
+        let (reply, rx): (Sender<Response>, _) = channel();
+        let window = Window { data: vec![vec![0.0f32]], anomaly: None };
+        (Request { id, window, submitted: Instant::now(), reply }, rx)
+    }
+
+    fn spawn_batcher(
+        cfg: ServerConfig,
+    ) -> (Sender<BatcherMsg>, std::sync::mpsc::Receiver<Batch>, std::thread::JoinHandle<()>) {
+        let (tx, rx) = channel::<BatcherMsg>();
+        let (out_tx, out_rx) = sync_channel::<Batch>(16);
+        let h = std::thread::spawn(move || run_batcher(rx, out_tx, cfg));
+        (tx, out_rx, h)
+    }
+
+    #[test]
+    fn first_request_after_idle_honors_its_own_deadline() {
+        // Regression guard for the idle-timeout floor: the flush deadline
+        // of the first request after an idle stretch is max_wait alone —
+        // no 50 ms idle floor may leak into it.
+        let cfg = ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let (tx, out_rx, h) = spawn_batcher(cfg);
+        std::thread::sleep(Duration::from_millis(30)); // idle stretch
+        let (r, _reply) = req(0);
+        let sent = Instant::now();
+        tx.send(BatcherMsg::Req(r)).unwrap();
+        let batch = out_rx.recv().unwrap();
+        let waited = sent.elapsed();
+        assert_eq!(batch.len(), 1);
+        assert!(waited < Duration::from_millis(40), "flush took {waited:?}");
+        tx.send(BatcherMsg::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn size_flush_ignores_a_long_deadline() {
+        let cfg = ServerConfig {
+            max_batch: 3,
+            max_wait: Duration::from_secs(30),
+            ..Default::default()
+        };
+        let (tx, out_rx, h) = spawn_batcher(cfg);
+        let mut replies = Vec::new();
+        let sent = Instant::now();
+        for id in 0..3 {
+            let (r, reply) = req(id);
+            replies.push(reply);
+            tx.send(BatcherMsg::Req(r)).unwrap();
+        }
+        let batch = out_rx.recv().unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(sent.elapsed() < Duration::from_secs(5), "size flush must not wait the deadline");
+        tx.send(BatcherMsg::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_from_idle_returns_promptly_and_drains_nothing() {
+        let cfg = ServerConfig { max_wait: Duration::from_secs(30), ..Default::default() };
+        let (tx, out_rx, h) = spawn_batcher(cfg);
+        std::thread::sleep(Duration::from_millis(5));
+        let sent = Instant::now();
+        tx.send(BatcherMsg::Shutdown).unwrap();
+        h.join().unwrap();
+        assert!(sent.elapsed() < Duration::from_secs(5));
+        assert!(out_rx.recv().is_err(), "no batch was open");
+    }
+
+    #[test]
+    fn shutdown_flushes_the_open_batch() {
+        let cfg = ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_secs(30),
+            ..Default::default()
+        };
+        let (tx, out_rx, h) = spawn_batcher(cfg);
+        let (r, _reply) = req(7);
+        tx.send(BatcherMsg::Req(r)).unwrap();
+        tx.send(BatcherMsg::Shutdown).unwrap();
+        let batch = out_rx.recv().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 7);
+        h.join().unwrap();
+    }
 }

@@ -1,0 +1,512 @@
+//! The multi-model serving fabric: named batching lanes over scoring
+//! backends, bounded admission queues with explicit load shedding, and
+//! per-model metrics that roll up into a fleet report.
+//!
+//! ```text
+//! clients ──submit("LSTM-AE-F64-D6", window)──► ModelRegistry
+//!                                                   │ name lookup
+//!        ┌──────────────────────────────────────────┴───────────┐
+//!        ▼                                                      ▼
+//!  Lane "LSTM-AE-F32-D2"                            Lane "LSTM-AE-F64-D6"
+//!  bounded admission queue ── try_send full? ──► SubmitError::Overloaded
+//!        │
+//!  [batcher thread]  per-lane size-or-deadline policy
+//!        │           (a deep lane can hold a longer max_wait than a
+//!  bounded batch q    latency-sensitive shallow lane)
+//!        │
+//!  [worker pool] ──► Backend (QuantBackend checks pipeline replicas
+//!                    out of an engine PipelinePool per batch)
+//! ```
+//!
+//! Backpressure is end to end: admission is a bounded `sync_channel`
+//! (`try_send` → [`SubmitError::Overloaded`]) and the batcher→worker hop
+//! is bounded too, so a slow backend fills the batch queue, then the
+//! admission queue, then sheds — no unbounded buffering anywhere on the
+//! request path. [`super::AnomalyServer`] is a single-lane compatibility
+//! wrapper over exactly this machinery.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, TrySendError};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::engine::{ExecMode, PIPELINE_MIN_DEPTH};
+use crate::model::{LstmAutoencoder, Topology};
+use crate::util::table::Table;
+use crate::workload::Window;
+
+use super::{
+    batcher, Backend, BatcherMsg, QuantBackend, Request, Response, ServerConfig, ServerMetrics,
+};
+
+/// Why a submission was rejected at admission.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The lane's bounded admission queue is full — the request was shed.
+    /// Back off and retry; accepted work is unaffected.
+    Overloaded,
+    /// The lane (or its reply path) has shut down; no work is accepted.
+    Closed,
+    /// The registry serves no model by that name.
+    UnknownModel(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded => write!(f, "admission queue full (load shed)"),
+            SubmitError::Closed => write!(f, "lane is shut down"),
+            SubmitError::UnknownModel(m) => write!(f, "unknown model {m:?}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// One model's serving lane: bounded admission queue → batcher thread →
+/// worker pool over a scoring backend, with its own metrics and
+/// batching policy.
+pub struct Lane {
+    name: String,
+    tx: std::sync::mpsc::SyncSender<BatcherMsg>,
+    metrics: Arc<ServerMetrics>,
+    threshold: f64,
+    next_id: AtomicU64,
+    /// Admission gate. An RwLock (not an atomic) so shutdown can close
+    /// admission and enqueue `Shutdown` under the write lock: every
+    /// submitter that saw the gate open finished its send under the read
+    /// lock, i.e. strictly before `Shutdown` in the queue — an accepted
+    /// request is therefore always drained, never silently dropped.
+    accepting: RwLock<bool>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Lane {
+    /// Spawn the lane's batcher and workers over a scoring backend.
+    pub fn start(name: impl Into<String>, backend: Arc<dyn Backend>, cfg: ServerConfig) -> Lane {
+        let name = name.into();
+        assert!(cfg.workers >= 1 && cfg.max_batch >= 1);
+        let metrics = Arc::new(ServerMetrics::new());
+        let (tx, rx) = sync_channel::<BatcherMsg>(cfg.queue_capacity.max(1));
+        // Bounded dispatch too: when every worker is busy the batcher's
+        // flush blocks, admission fills, and try_submit sheds.
+        let (batch_tx, batch_rx) = sync_channel::<Vec<Request>>(cfg.workers * 2);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        let mut threads = Vec::new();
+        {
+            let cfg2 = cfg.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("bat:{name}"))
+                    .spawn(move || batcher::run_batcher(rx, batch_tx, cfg2))
+                    .expect("spawn batcher"),
+            );
+        }
+        for wid in 0..cfg.workers {
+            let backend = backend.clone();
+            let rx = batch_rx.clone();
+            let metrics = metrics.clone();
+            let threshold = cfg.threshold;
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("scr{wid}:{name}"))
+                    .spawn(move || worker_loop(backend, rx, metrics, threshold))
+                    .expect("spawn worker"),
+            );
+        }
+        Lane {
+            name,
+            tx,
+            metrics,
+            threshold: cfg.threshold,
+            next_id: AtomicU64::new(0),
+            accepting: RwLock::new(true),
+            threads: Mutex::new(threads),
+        }
+    }
+
+    /// The model name this lane serves.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn metrics(&self) -> &ServerMetrics {
+        &self.metrics
+    }
+
+    pub fn threshold(&self) -> f64 {
+        self.threshold
+    }
+
+    /// Submit a window. Fails fast with [`SubmitError::Overloaded`] when
+    /// the bounded admission queue is full (the load-shedding path) and
+    /// [`SubmitError::Closed`] after shutdown — never blocks, never
+    /// queues unboundedly.
+    pub fn try_submit(&self, window: Window) -> Result<Receiver<Response>, SubmitError> {
+        // Held across the send so a concurrent shutdown cannot slot its
+        // `Shutdown` message between our gate check and our enqueue.
+        // `try_read`, not `read`: while shutdown holds the write lock
+        // (draining a backlogged queue), submit must fail fast as Closed,
+        // not stall for the drain.
+        let Ok(accepting) = self.accepting.try_read() else {
+            return Err(SubmitError::Closed);
+        };
+        if !*accepting {
+            return Err(SubmitError::Closed);
+        }
+        let (reply, rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request { id, window, submitted: Instant::now(), reply };
+        match self.tx.try_send(BatcherMsg::Req(req)) {
+            Ok(()) => {
+                self.metrics.on_submit();
+                Ok(rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.on_shed();
+                Err(SubmitError::Overloaded)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Submit and wait. A lane torn down while the request is in flight
+    /// yields [`SubmitError::Closed`] instead of a panic.
+    pub fn score_blocking(&self, window: Window) -> Result<Response, SubmitError> {
+        self.try_submit(window)?.recv().map_err(|_| SubmitError::Closed)
+    }
+
+    /// Graceful shutdown: stop admitting, drain in-flight work, join all
+    /// lane threads. Idempotent.
+    pub fn shutdown(&self) {
+        {
+            let mut accepting = self.accepting.write().unwrap();
+            if *accepting {
+                *accepting = false;
+                // Blocking send under the write lock: the batcher is
+                // still draining, and every accepted request already
+                // sits ahead of this marker in the queue.
+                let _ = self.tx.send(BatcherMsg::Shutdown);
+            }
+        }
+        for t in self.threads.lock().unwrap().drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Lane {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(
+    backend: Arc<dyn Backend>,
+    rx: Arc<Mutex<Receiver<Vec<Request>>>>,
+    metrics: Arc<ServerMetrics>,
+    threshold: f64,
+) {
+    loop {
+        let batch = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(batch) = batch else { return };
+        if batch.is_empty() {
+            continue;
+        }
+        let dispatch = Instant::now();
+        let windows: Vec<&Window> = batch.iter().map(|r| &r.window).collect();
+        let scores = backend.score_batch(&windows);
+        let service_us = dispatch.elapsed().as_secs_f64() * 1e6;
+        metrics.on_batch(batch.len(), service_us);
+        for (req, score) in batch.into_iter().zip(scores) {
+            let e2e_us = req.submitted.elapsed().as_secs_f64() * 1e6;
+            let queue_us = e2e_us - service_us;
+            let resp = Response {
+                id: req.id,
+                score,
+                is_anomaly: score > threshold,
+                queue_us: queue_us.max(0.0),
+                service_us,
+                e2e_us,
+            };
+            metrics.on_response(&resp);
+            let _ = req.reply.send(resp);
+        }
+    }
+}
+
+/// A registry of concurrently-served models: one [`Lane`] per model name,
+/// each with its own backend, batching policy, bounded queue, and
+/// metrics.
+pub struct ModelRegistry {
+    lanes: BTreeMap<String, Lane>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry { lanes: BTreeMap::new() }
+    }
+
+    /// Register a model under `name` and spawn its lane. Panics on a
+    /// duplicate name — two backends for one model is a config error.
+    pub fn register(&mut self, name: &str, backend: Arc<dyn Backend>, cfg: ServerConfig) {
+        assert!(!self.lanes.contains_key(name), "model {name:?} already registered");
+        self.lanes.insert(name.to_string(), Lane::start(name, backend, cfg));
+    }
+
+    /// Look up a lane by registered name, falling back to the canonical
+    /// topology name so `"F64-D6"` finds `"LSTM-AE-F64-D6"`.
+    pub fn lane(&self, model: &str) -> Option<&Lane> {
+        if let Some(l) = self.lanes.get(model) {
+            return Some(l);
+        }
+        let canon = Topology::from_name(model).ok()?.name;
+        self.lanes.get(&canon)
+    }
+
+    /// Registered model names, in registry (lexicographic) order.
+    pub fn models(&self) -> impl Iterator<Item = &str> {
+        self.lanes.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+
+    /// Submit a window to a model's lane (see [`Lane::try_submit`]).
+    pub fn submit(&self, model: &str, window: Window) -> Result<Receiver<Response>, SubmitError> {
+        self.lane(model)
+            .ok_or_else(|| SubmitError::UnknownModel(model.to_string()))?
+            .try_submit(window)
+    }
+
+    /// Submit to a model's lane and wait for the response.
+    pub fn score_blocking(&self, model: &str, window: Window) -> Result<Response, SubmitError> {
+        self.lane(model)
+            .ok_or_else(|| SubmitError::UnknownModel(model.to_string()))?
+            .score_blocking(window)
+    }
+
+    /// Per-model metrics rolled up into one fleet report.
+    pub fn fleet_report(&self) -> String {
+        let mut t = Table::new("Fleet report (per-model lanes)").header(&[
+            "Model",
+            "submitted",
+            "shed",
+            "completed",
+            "flagged",
+            "mean batch",
+            "p50 µs",
+            "p95 µs",
+            "rps",
+        ]);
+        let (mut sub, mut shed, mut comp, mut anom) = (0u64, 0u64, 0u64, 0u64);
+        for lane in self.lanes.values() {
+            let m = lane.metrics();
+            let (p50, p95, _) = m.e2e_percentiles_us();
+            t.row(vec![
+                lane.name().to_string(),
+                m.submitted().to_string(),
+                m.shed().to_string(),
+                m.completed().to_string(),
+                m.anomalies().to_string(),
+                format!("{:.2}", m.mean_batch_size()),
+                format!("{p50:.0}"),
+                format!("{p95:.0}"),
+                format!("{:.0}", m.throughput_rps()),
+            ]);
+            sub += m.submitted();
+            shed += m.shed();
+            comp += m.completed();
+            anom += m.anomalies();
+        }
+        format!(
+            "{}fleet: {sub} submitted, {shed} shed, {comp} completed, {anom} flagged \
+             across {} lanes\n",
+            t.render(),
+            self.lanes.len()
+        )
+    }
+
+    /// Shut every lane down (graceful, idempotent).
+    pub fn shutdown(&self) {
+        for lane in self.lanes.values() {
+            lane.shutdown();
+        }
+    }
+
+    /// A registry serving all four paper topologies (§4.1) concurrently
+    /// on quantized golden-model backends. Deterministic seeding: model
+    /// `i` in Table-1 order uses `base_seed + i`, so tests can rebuild
+    /// bit-identical reference models. Deep (D6) lanes hold a longer
+    /// batching deadline, a larger `max_batch`, and `replicas` pipeline
+    /// replicas; shallow (D2) lanes stay latency-tight.
+    pub fn paper_fleet(base_seed: u64, mode: ExecMode, replicas: usize) -> ModelRegistry {
+        let mut reg = ModelRegistry::new();
+        for (i, topo) in Topology::paper_models().into_iter().enumerate() {
+            let ae = LstmAutoencoder::random(topo.clone(), base_seed + i as u64);
+            // `replicas` is passed unconditionally: `with_options` only
+            // builds the pool when `mode` can route to the pipeline, so
+            // shallow Auto lanes stay pool-free while Pipelined mode
+            // gets its replicas at every depth.
+            let backend = Arc::new(QuantBackend::with_options(ae, mode, replicas));
+            let cfg = Self::paper_lane_config(&topo, replicas);
+            reg.register(&topo.name, backend, cfg);
+        }
+        reg
+    }
+
+    /// The per-model lane policy [`Self::paper_fleet`] applies (exported
+    /// so tests/examples stay in sync with it): deep models
+    /// (`depth ≥ PIPELINE_MIN_DEPTH`) trade deadline for batch size and
+    /// get replica-sized worker pools; shallow models stay latency-tight.
+    pub fn paper_lane_config(topo: &Topology, replicas: usize) -> ServerConfig {
+        let deep = topo.depth >= PIPELINE_MIN_DEPTH;
+        ServerConfig {
+            max_batch: if deep { 16 } else { 8 },
+            max_wait: Duration::from_micros(if deep { 2000 } else { 300 }),
+            workers: if deep { replicas.max(2) } else { 2 },
+            queue_capacity: 1024,
+            threshold: 0.05,
+        }
+    }
+
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for ModelRegistry {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TelemetryGen;
+
+    /// Backend whose scoring blocks until the test's gate sender is
+    /// dropped — makes queue-full conditions deterministic.
+    struct GatedBackend {
+        gate: Mutex<Receiver<()>>,
+    }
+
+    impl Backend for GatedBackend {
+        fn name(&self) -> String {
+            "gated".into()
+        }
+
+        fn score_batch(&self, windows: &[&Window]) -> Vec<f64> {
+            // Blocks until the test releases (drops) the gate sender;
+            // afterwards recv fails fast and scoring is immediate.
+            let _ = self.gate.lock().unwrap().recv();
+            vec![0.0; windows.len()]
+        }
+    }
+
+    fn tiny_window() -> Window {
+        Window { data: vec![vec![0.0f32]], anomaly: None }
+    }
+
+    #[test]
+    fn bounded_lane_sheds_when_backend_stalls_and_recovers() {
+        let (gate_tx, gate_rx) = channel::<()>();
+        let backend = Arc::new(GatedBackend { gate: Mutex::new(gate_rx) });
+        let cfg = ServerConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(1),
+            workers: 1,
+            queue_capacity: 2,
+            threshold: 1.0,
+        };
+        let lane = Lane::start("gated", backend, cfg);
+        // Worker blocks on the first batch; the batch queue (cap 2), the
+        // batcher's open flush, and the admission queue (cap 2) fill
+        // behind it — within a bounded number of submissions one MUST be
+        // shed. 32 is far above that bound.
+        let mut accepted = Vec::new();
+        let mut shed = 0u64;
+        for _ in 0..32 {
+            match lane.try_submit(tiny_window()) {
+                Ok(rx) => accepted.push(rx),
+                Err(SubmitError::Overloaded) => shed += 1,
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(shed > 0, "bounded queues must shed under a stalled backend");
+        assert!(!accepted.is_empty());
+        assert_eq!(lane.metrics().shed(), shed);
+        assert_eq!(lane.metrics().submitted(), accepted.len() as u64);
+        // Release the gate: every accepted request completes (recovery).
+        drop(gate_tx);
+        for rx in accepted {
+            let r = rx.recv().expect("accepted work survives overload");
+            assert_eq!(r.score, 0.0);
+        }
+        // And the lane accepts fresh traffic again.
+        assert!(lane.score_blocking(tiny_window()).is_ok());
+        lane.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_closed_not_a_panic() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let backend = Arc::new(QuantBackend::new(LstmAutoencoder::random(topo, 1)));
+        let lane = Lane::start("m", backend, ServerConfig::default());
+        let mut gen = TelemetryGen::new(32, 1);
+        assert!(lane.score_blocking(gen.benign_window(4)).is_ok());
+        lane.shutdown();
+        assert_eq!(lane.try_submit(gen.benign_window(4)).unwrap_err(), SubmitError::Closed);
+        assert_eq!(lane.score_blocking(gen.benign_window(4)).unwrap_err(), SubmitError::Closed);
+    }
+
+    #[test]
+    fn registry_routes_by_name_with_canonical_fallback() {
+        let mut reg = ModelRegistry::new();
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let backend = Arc::new(QuantBackend::new(LstmAutoencoder::random(topo.clone(), 2)));
+        reg.register(&topo.name, backend, ServerConfig::default());
+        let mut gen = TelemetryGen::new(32, 2);
+        // Canonical and short names hit the same lane.
+        assert!(reg.score_blocking("LSTM-AE-F32-D2", gen.benign_window(4)).is_ok());
+        assert!(reg.score_blocking("F32-D2", gen.benign_window(4)).is_ok());
+        assert_eq!(reg.lane("F32-D2").unwrap().metrics().completed(), 2);
+        match reg.submit("F64-D6", gen.benign_window(4)) {
+            Err(SubmitError::UnknownModel(m)) => assert_eq!(m, "F64-D6"),
+            other => panic!("want UnknownModel, got {other:?}"),
+        }
+        reg.shutdown();
+    }
+
+    #[test]
+    fn paper_fleet_serves_all_four_topologies() {
+        let reg = ModelRegistry::paper_fleet(11, ExecMode::Auto, 2);
+        assert_eq!(reg.len(), 4);
+        let names: Vec<String> = reg.models().map(String::from).collect();
+        for topo in Topology::paper_models() {
+            assert!(names.contains(&topo.name), "missing {}", topo.name);
+            let mut gen = TelemetryGen::new(topo.features, 3);
+            let r = reg.score_blocking(&topo.name, gen.benign_window(6)).unwrap();
+            assert!(r.score.is_finite() && r.score >= 0.0);
+        }
+        let report = reg.fleet_report();
+        assert!(report.contains("LSTM-AE-F64-D6"), "{report}");
+        assert!(report.contains("4 lanes"), "{report}");
+        reg.shutdown();
+    }
+}

@@ -11,6 +11,8 @@ use super::Response;
 /// Thread-safe metrics sink shared by workers.
 pub struct ServerMetrics {
     submitted: AtomicU64,
+    /// Submissions rejected at admission (bounded queue full).
+    shed: AtomicU64,
     completed: AtomicU64,
     anomalies: AtomicU64,
     batches: AtomicU64,
@@ -26,6 +28,7 @@ impl ServerMetrics {
     pub fn new() -> ServerMetrics {
         ServerMetrics {
             submitted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             anomalies: AtomicU64::new(0),
             batches: AtomicU64::new(0),
@@ -40,6 +43,11 @@ impl ServerMetrics {
 
     pub fn on_submit(&self) {
         self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A submission was rejected at admission (queue full — load shed).
+    pub fn on_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn on_batch(&self, size: usize, service_us: f64) {
@@ -60,6 +68,10 @@ impl ServerMetrics {
 
     pub fn submitted(&self) -> u64 {
         self.submitted.load(Ordering::Relaxed)
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
     }
 
     pub fn completed(&self) -> u64 {
@@ -102,11 +114,12 @@ impl ServerMetrics {
     pub fn report(&self) -> String {
         let (p50, p95, p99) = self.e2e_percentiles_us();
         format!(
-            "requests: {} submitted, {} completed, {} flagged | \
+            "requests: {} submitted, {} shed, {} completed, {} flagged | \
              batches: mean size {:.2}, max {} | \
              e2e latency µs: p50 {:.0}, p95 {:.0}, p99 {:.0} | \
              throughput {:.0} rps",
             self.submitted(),
+            self.shed(),
             self.completed(),
             self.anomalies(),
             self.mean_batch_size(),
@@ -134,6 +147,7 @@ mod tests {
         let m = ServerMetrics::new();
         m.on_submit();
         m.on_submit();
+        m.on_shed();
         m.on_batch(2, 100.0);
         for (id, anomaly) in [(0u64, false), (1, true)] {
             m.on_response(&Response {
@@ -146,6 +160,7 @@ mod tests {
             });
         }
         assert_eq!(m.submitted(), 2);
+        assert_eq!(m.shed(), 1);
         assert_eq!(m.completed(), 2);
         assert_eq!(m.anomalies(), 1);
         assert_eq!(m.max_batch_seen(), 2);

@@ -5,12 +5,21 @@
 //! and a blocking pool is the right shape for a compute-bound scorer):
 //!
 //! ```text
-//! clients ──submit──► [batcher thread] ──batches──► [worker pool]
-//!                      dynamic batching:             score via Backend
-//!                      max_batch / max_wait          (PJRT artifact or
-//!                                                     bit-accurate Q8.24)
+//! clients ──submit──► [ModelRegistry] ──► per-model Lane:
+//!                      name → lane        bounded admission queue
+//!                                          │ full → SubmitError::Overloaded
+//!                                         [batcher thread]
+//!                                          per-lane max_batch / max_wait
+//!                                          │ (bounded)
+//!                                         [worker pool] ──► Backend
 //! ```
 //!
+//! - [`fabric`] — the multi-model serving fabric: [`ModelRegistry`] owns
+//!   one [`Lane`] per served model (the paper evaluates four topologies
+//!   concurrently); every lane has its own batching policy, bounded
+//!   admission queue (explicit load shedding instead of unbounded
+//!   buffering), worker pool, and metrics. [`AnomalyServer`] is the
+//!   single-model compatibility wrapper over one lane.
 //! - [`batcher`] — dynamic batching policy (size + deadline), the L3
 //!   serving analog of the paper's throughput scenario.
 //! - [`backend`] — scoring backends: the AOT PJRT artifact (real
@@ -18,27 +27,30 @@
 //!   (the FPGA datapath in software). The quant backend executes on the
 //!   temporal-pipeline engine ([`crate::engine`]): batches formed by the
 //!   batcher hit the batched MMM kernel (each weight matrix streamed once
-//!   across the batch), lone deep-model windows hit the per-layer worker
-//!   pipeline, and both are bit-identical to the sequential scorer — see
-//!   the engine docs for the exact routing rules.
-//! - [`metrics`] — latency histograms + throughput counters.
+//!   across the batch), lone deep-model windows check a pipeline replica
+//!   out of an engine [`crate::engine::PipelinePool`] (so concurrent
+//!   workers don't serialize on one pipeline), and all paths are
+//!   bit-identical to the sequential scorer — see the engine docs for the
+//!   exact routing rules.
+//! - [`metrics`] — per-lane latency histograms + throughput counters,
+//!   rolled up by [`ModelRegistry::fleet_report`].
 
 pub mod backend;
 pub mod batcher;
+pub mod fabric;
 pub mod metrics;
 
 pub use backend::{Backend, PjrtBackend, QuantBackend};
+pub use fabric::{Lane, ModelRegistry, SubmitError};
 pub use metrics::ServerMetrics;
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::workload::Window;
 
-/// Server configuration.
+/// Per-lane server configuration (one per served model in the fabric).
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Max windows per dispatched batch.
@@ -47,6 +59,10 @@ pub struct ServerConfig {
     pub max_wait: Duration,
     /// Worker threads.
     pub workers: usize,
+    /// Bounded admission-queue capacity, in requests. A full queue fails
+    /// `submit` fast with [`SubmitError::Overloaded`] (load shedding)
+    /// instead of queuing unboundedly.
+    pub queue_capacity: usize,
     /// Anomaly threshold on the reconstruction-error score
     /// (calibrate via [`calibrate_threshold`]).
     pub threshold: f64,
@@ -58,6 +74,7 @@ impl Default for ServerConfig {
             max_batch: 8,
             max_wait: Duration::from_micros(500),
             workers: 2,
+            queue_capacity: 1024,
             threshold: 0.05,
         }
     }
@@ -89,150 +106,65 @@ pub(crate) enum BatcherMsg {
     Shutdown,
 }
 
-/// Handle to a running server.
+// Re-exported for the batcher module.
+pub(crate) use BatcherMsg as Msg;
+pub(crate) type Batch = Vec<Request>;
+
+/// Handle to a running single-model server — the compatibility wrapper
+/// over one fabric [`Lane`]. Multi-model deployments use
+/// [`ModelRegistry`] directly; both run exactly the same lane machinery
+/// (bounded admission, per-lane batcher, worker pool).
 pub struct AnomalyServer {
-    tx: Sender<BatcherMsg>,
-    metrics: Arc<ServerMetrics>,
-    threshold: f64,
-    next_id: AtomicU64,
-    threads: Mutex<Vec<JoinHandle<()>>>,
-    running: Arc<AtomicBool>,
+    lane: fabric::Lane,
 }
 
 impl AnomalyServer {
     /// Start batcher + workers over a scoring backend.
     pub fn start(backend: Arc<dyn Backend>, cfg: ServerConfig) -> AnomalyServer {
-        assert!(cfg.workers >= 1 && cfg.max_batch >= 1);
-        let metrics = Arc::new(ServerMetrics::new());
-        let running = Arc::new(AtomicBool::new(true));
-        let (tx, rx) = channel::<BatcherMsg>();
-        let (batch_tx, batch_rx) = channel::<Vec<Request>>();
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
-
-        let mut threads = Vec::new();
-        // Batcher.
-        {
-            let cfg2 = cfg.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name("batcher".into())
-                    .spawn(move || batcher::run_batcher(rx, batch_tx, cfg2))
-                    .expect("spawn batcher"),
-            );
-        }
-        // Workers.
-        for wid in 0..cfg.workers {
-            let backend = backend.clone();
-            let rx = batch_rx.clone();
-            let metrics = metrics.clone();
-            let threshold = cfg.threshold;
-            threads.push(
-                std::thread::Builder::new()
-                    .name(format!("scorer-{wid}"))
-                    .spawn(move || worker_loop(backend, rx, metrics, threshold))
-                    .expect("spawn worker"),
-            );
-        }
-        AnomalyServer {
-            tx,
-            metrics,
-            threshold: cfg.threshold,
-            next_id: AtomicU64::new(0),
-            threads: Mutex::new(threads),
-            running,
-        }
+        let name = backend.name();
+        AnomalyServer { lane: fabric::Lane::start(name, backend, cfg) }
     }
 
-    /// Submit a window; returns a receiver for the response.
-    pub fn submit(&self, window: Window) -> Receiver<Response> {
-        let (reply, rx) = channel();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.metrics.on_submit();
-        let _ = self.tx.send(BatcherMsg::Req(Request {
-            id,
-            window,
-            submitted: Instant::now(),
-            reply,
-        }));
-        rx
+    /// Submit a window; returns a receiver for the response, or an error
+    /// when the bounded queue is full ([`SubmitError::Overloaded`]) or
+    /// the server has shut down ([`SubmitError::Closed`]).
+    pub fn submit(&self, window: Window) -> Result<Receiver<Response>, SubmitError> {
+        self.lane.try_submit(window)
     }
 
     /// Submit and wait (convenience for tests/examples).
-    pub fn score_blocking(&self, window: Window) -> Response {
-        self.submit(window).recv().expect("server alive")
+    pub fn score_blocking(&self, window: Window) -> Result<Response, SubmitError> {
+        self.lane.score_blocking(window)
     }
 
     pub fn metrics(&self) -> &ServerMetrics {
-        &self.metrics
+        self.lane.metrics()
     }
 
     pub fn threshold(&self) -> f64 {
-        self.threshold
+        self.lane.threshold()
     }
 
-    /// Graceful shutdown: drains in-flight work.
+    /// Graceful shutdown: drains in-flight work. Idempotent; later
+    /// submissions return [`SubmitError::Closed`].
     pub fn shutdown(&self) {
-        if self.running.swap(false, Ordering::SeqCst) {
-            let _ = self.tx.send(BatcherMsg::Shutdown);
-            for t in self.threads.lock().unwrap().drain(..) {
-                let _ = t.join();
-            }
-        }
+        self.lane.shutdown()
     }
 }
-
-impl Drop for AnomalyServer {
-    fn drop(&mut self) {
-        self.shutdown();
-    }
-}
-
-fn worker_loop(
-    backend: Arc<dyn Backend>,
-    rx: Arc<Mutex<Receiver<Vec<Request>>>>,
-    metrics: Arc<ServerMetrics>,
-    threshold: f64,
-) {
-    loop {
-        let batch = {
-            let guard = rx.lock().unwrap();
-            guard.recv()
-        };
-        let Ok(batch) = batch else { return };
-        if batch.is_empty() {
-            continue;
-        }
-        let dispatch = Instant::now();
-        let windows: Vec<&Window> = batch.iter().map(|r| &r.window).collect();
-        let scores = backend.score_batch(&windows);
-        let service_us = dispatch.elapsed().as_secs_f64() * 1e6;
-        metrics.on_batch(batch.len(), service_us);
-        for (req, score) in batch.into_iter().zip(scores) {
-            let e2e_us = req.submitted.elapsed().as_secs_f64() * 1e6;
-            let queue_us = e2e_us - service_us;
-            let resp = Response {
-                id: req.id,
-                score,
-                is_anomaly: score > threshold,
-                queue_us: queue_us.max(0.0),
-                service_us,
-                e2e_us,
-            };
-            metrics.on_response(&resp);
-            let _ = req.reply.send(resp);
-        }
-    }
-}
-
-// Re-exported for the batcher module.
-pub(crate) use BatcherMsg as Msg;
-pub(crate) type Batch = Vec<Request>;
 
 /// Calibrate the anomaly threshold as the `q`-quantile of benign scores
 /// plus a small margin (the standard LSTM-AE deployment recipe).
+///
+/// Robust to degenerate inputs: NaN scores (a poisoned backend result)
+/// are ignored, and when nothing usable remains the threshold is
+/// `f64::INFINITY` — an uncalibrated detector flags nothing, rather than
+/// panicking or flagging everything.
 pub fn calibrate_threshold(scores: &[f64], q: f64) -> f64 {
-    let mut s = scores.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut s: Vec<f64> = scores.iter().copied().filter(|v| !v.is_nan()).collect();
+    if s.is_empty() {
+        return f64::INFINITY;
+    }
+    s.sort_by(|a, b| a.total_cmp(b));
     let p = crate::util::stats::percentile_sorted(&s, q);
     p * 1.25
 }
@@ -255,7 +187,7 @@ mod tests {
         let (srv, mut gen) = quant_server(ServerConfig::default());
         let mut responses = Vec::new();
         for _ in 0..20 {
-            responses.push(srv.submit(gen.benign_window(8)));
+            responses.push(srv.submit(gen.benign_window(8)).expect("admitted"));
         }
         for rx in responses {
             let r = rx.recv().unwrap();
@@ -270,7 +202,9 @@ mod tests {
     fn batching_respects_max_batch() {
         let cfg = ServerConfig { max_batch: 4, ..Default::default() };
         let (srv, mut gen) = quant_server(cfg);
-        let rxs: Vec<_> = (0..32).map(|_| srv.submit(gen.benign_window(8))).collect();
+        let rxs: Vec<_> = (0..32)
+            .map(|_| srv.submit(gen.benign_window(8)).expect("admitted"))
+            .collect();
         for rx in rxs {
             rx.recv().unwrap();
         }
@@ -281,10 +215,21 @@ mod tests {
     #[test]
     fn shutdown_is_idempotent() {
         let (srv, mut gen) = quant_server(ServerConfig::default());
-        let r = srv.score_blocking(gen.benign_window(4));
+        let r = srv.score_blocking(gen.benign_window(4)).unwrap();
         assert!(r.score >= 0.0);
         srv.shutdown();
         srv.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_returns_closed() {
+        let (srv, mut gen) = quant_server(ServerConfig::default());
+        srv.score_blocking(gen.benign_window(4)).unwrap();
+        srv.shutdown();
+        // The old behaviour silently dropped the request and then
+        // panicked in score_blocking's recv(); now both error cleanly.
+        assert!(matches!(srv.submit(gen.benign_window(4)), Err(SubmitError::Closed)));
+        assert!(matches!(srv.score_blocking(gen.benign_window(4)), Err(SubmitError::Closed)));
     }
 
     #[test]
@@ -294,7 +239,7 @@ mod tests {
         // even with random weights (bigger inputs → bigger residuals).
         let (srv, mut gen) = quant_server(ServerConfig::default());
         let benign: f64 = (0..10)
-            .map(|_| srv.score_blocking(gen.benign_window(16)).score)
+            .map(|_| srv.score_blocking(gen.benign_window(16)).unwrap().score)
             .sum::<f64>()
             / 10.0;
         let spiky: f64 = (0..10)
@@ -302,6 +247,7 @@ mod tests {
                 srv.score_blocking(
                     gen.anomalous_window(16, crate::workload::AnomalyKind::Spike),
                 )
+                .unwrap()
                 .score
             })
             .sum::<f64>()
@@ -316,5 +262,15 @@ mod tests {
         let th = calibrate_threshold(&scores, 0.99);
         let below = scores.iter().filter(|&&s| s <= th).count();
         assert!(below >= 99);
+    }
+
+    #[test]
+    fn calibrate_threshold_ignores_nan_and_defines_empty() {
+        assert_eq!(calibrate_threshold(&[], 0.99), f64::INFINITY);
+        assert_eq!(calibrate_threshold(&[f64::NAN, f64::NAN], 0.5), f64::INFINITY);
+        let clean = calibrate_threshold(&[0.3, 0.1, 0.2], 0.5);
+        let noisy = calibrate_threshold(&[0.3, f64::NAN, 0.1, 0.2, f64::NAN], 0.5);
+        assert!(clean.is_finite());
+        assert_eq!(clean.to_bits(), noisy.to_bits(), "NaNs must not shift the quantile");
     }
 }

@@ -1,7 +1,9 @@
 //! Request traces for the serving experiments: Poisson (open-loop) and
-//! closed-loop arrival processes over telemetry windows.
+//! closed-loop arrival processes over telemetry windows, plus the
+//! multi-model merge used by the fleet driver.
 
 use super::{TelemetryGen, Window};
+use crate::model::Topology;
 use crate::util::rng::Xoshiro256;
 
 /// One timed request.
@@ -41,6 +43,37 @@ pub fn poisson_trace(
         .collect()
 }
 
+/// One independent Poisson stream per model — `total_rate` split evenly,
+/// `total_n` divided per lane (at least one request each) — merged into a
+/// single arrival-ordered schedule of `(model index, request)`. Windows
+/// for model `i` are drawn at that model's feature width with seeds
+/// derived from `base_seed + i`, so the schedule is deterministic.
+///
+/// Shared by the `fleet` CLI subcommand and the multi-model example so
+/// the mixed-traffic recipe lives in one place.
+pub fn merged_poisson(
+    models: &[Topology],
+    base_seed: u64,
+    total_rate: f64,
+    total_n: usize,
+    t: usize,
+    anomaly_rate: f64,
+) -> Vec<(usize, TimedRequest)> {
+    assert!(!models.is_empty(), "merged_poisson needs at least one model");
+    let per_rate = total_rate / models.len() as f64;
+    let per_n = (total_n / models.len()).max(1);
+    let mut merged = Vec::with_capacity(per_n * models.len());
+    for (mi, topo) in models.iter().enumerate() {
+        let mut gen = TelemetryGen::new(topo.features, base_seed + mi as u64);
+        let seed = base_seed.wrapping_add(1000) + mi as u64;
+        for req in poisson_trace(&mut gen, seed, per_rate, per_n, t, anomaly_rate) {
+            merged.push((mi, req));
+        }
+    }
+    merged.sort_by(|a, b| a.1.at_s.total_cmp(&b.1.at_s));
+    merged
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -64,5 +97,30 @@ mod tests {
         let trace = poisson_trace(&mut g, 3, 100.0, 1000, 4, 0.25);
         let anomalous = trace.iter().filter(|r| r.window.anomaly.is_some()).count();
         assert!((180..320).contains(&anomalous), "{anomalous}");
+    }
+
+    #[test]
+    fn merged_poisson_is_arrival_ordered_and_covers_every_model() {
+        let models = Topology::paper_models();
+        let merged = merged_poisson(&models, 5, 4000.0, 200, 4, 0.1);
+        assert_eq!(merged.len(), 200 / models.len() * models.len());
+        for w in merged.windows(2) {
+            assert!(w[1].1.at_s >= w[0].1.at_s, "arrivals must be sorted");
+        }
+        for (mi, topo) in models.iter().enumerate() {
+            let cnt = merged.iter().filter(|(i, _)| *i == mi).count();
+            assert_eq!(cnt, 200 / models.len(), "{}", topo.name);
+            // Windows carry that model's feature width.
+            let (_, req) = merged.iter().find(|(i, _)| *i == mi).unwrap();
+            assert_eq!(req.window.data[0].len(), topo.features);
+        }
+    }
+
+    #[test]
+    fn merged_poisson_gives_every_model_at_least_one_request() {
+        let models = Topology::paper_models();
+        // total_n below the model count must not produce empty lanes.
+        let merged = merged_poisson(&models, 1, 100.0, 1, 2, 0.0);
+        assert_eq!(merged.len(), models.len());
     }
 }

@@ -1,0 +1,236 @@
+//! Integration: the multi-model serving fabric — all four paper
+//! topologies served concurrently with bit-identical scores, pipeline
+//! replica-pool utilization, Poisson-overload shedding + recovery, and
+//! per-model metrics isolation.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lstm_ae_accel::engine::{ExecMode, PIPELINE_MIN_DEPTH};
+use lstm_ae_accel::model::{LstmAutoencoder, Topology};
+use lstm_ae_accel::server::{
+    Backend, ModelRegistry, QuantBackend, ServerConfig, SubmitError,
+};
+use lstm_ae_accel::workload::{trace::poisson_trace, TelemetryGen, Window};
+
+/// Registry over the four paper models plus per-model reference scorers
+/// built from the same seeds — the reference path is pure
+/// `ExecMode::Sequential` arithmetic (`score_quant`), so any fabric
+/// response can be checked for bit-identity.
+fn paper_registry_with_references(
+    replicas: usize,
+) -> (ModelRegistry, Vec<(String, LstmAutoencoder, TelemetryGen)>) {
+    let mut registry = ModelRegistry::new();
+    let mut refs = Vec::new();
+    for (i, topo) in Topology::paper_models().into_iter().enumerate() {
+        let seed = 100 + i as u64;
+        let backend = Arc::new(QuantBackend::with_options(
+            LstmAutoencoder::random(topo.clone(), seed),
+            ExecMode::Auto,
+            replicas,
+        ));
+        // The fleet's per-model batching policy (the deep F64-D6 lane
+        // holds a longer max_wait than the latency-sensitive F32-D2
+        // lane), with a queue sized so this test never sheds.
+        let cfg = ServerConfig {
+            queue_capacity: 4096,
+            ..ModelRegistry::paper_lane_config(&topo, replicas)
+        };
+        registry.register(&topo.name, backend, cfg);
+        let reference = LstmAutoencoder::random(topo.clone(), seed);
+        let gen = TelemetryGen::new(topo.features, 200 + i as u64);
+        refs.push((topo.name, reference, gen));
+    }
+    (registry, refs)
+}
+
+#[test]
+fn mixed_traffic_is_bit_identical_to_sequential_scoring() {
+    let (registry, mut refs) = paper_registry_with_references(2);
+    // Interleaved mixed-length traffic across all four lanes at once, so
+    // every lane sees multi-window batches (batched MMM kernel), lone
+    // windows (pipeline/sequential), and mixed-T groups.
+    let mut inflight = Vec::new();
+    for round in 0..30usize {
+        for (mi, (name, reference, gen)) in refs.iter_mut().enumerate() {
+            let t = [4usize, 8, 8, 6, 1][(round + mi) % 5];
+            let w = gen.benign_window(t);
+            let want = reference.score_quant(&w.data);
+            let rx = registry.submit(name, w).expect("queue sized for the test");
+            inflight.push((name.clone(), rx, want));
+        }
+    }
+    for (name, rx, want) in inflight {
+        let r = rx.recv().expect("response");
+        assert_eq!(
+            r.score.to_bits(),
+            want.to_bits(),
+            "{name}: fabric score must be bit-identical to sequential"
+        );
+    }
+    // Every lane really saw its own traffic.
+    for (name, _, _) in &refs {
+        assert_eq!(registry.lane(name).unwrap().metrics().completed(), 30, "{name}");
+    }
+    registry.shutdown();
+}
+
+#[test]
+fn deep_lane_workers_use_multiple_pipeline_replicas() {
+    // max_batch = 1 forces singleton batches, so Auto routes every window
+    // through the pipeline pool; the rotating least-loaded checkout must
+    // spread them across ≥ 2 replicas (no global pipeline lock on the
+    // hot path).
+    let topo = Topology::from_name("F64-D6").unwrap();
+    assert!(topo.depth >= PIPELINE_MIN_DEPTH, "test needs a pipeline-routed model");
+    let seed = 7u64;
+    let backend = Arc::new(QuantBackend::with_options(
+        LstmAutoencoder::random(topo.clone(), seed),
+        ExecMode::Auto,
+        3,
+    ));
+    let reference = LstmAutoencoder::random(topo.clone(), seed);
+    let mut registry = ModelRegistry::new();
+    let cfg = ServerConfig {
+        max_batch: 1,
+        max_wait: Duration::from_micros(50),
+        workers: 3,
+        queue_capacity: 4096,
+        threshold: 0.05,
+    };
+    registry.register(&topo.name, backend.clone() as Arc<dyn Backend>, cfg);
+    let mut gen = TelemetryGen::new(topo.features, 9);
+    let mut inflight = Vec::new();
+    for _ in 0..48 {
+        let w = gen.benign_window(8);
+        let want = reference.score_quant(&w.data);
+        inflight.push((registry.submit(&topo.name, w).expect("admitted"), want));
+    }
+    for (rx, want) in inflight {
+        let r = rx.recv().expect("response");
+        assert_eq!(r.score.to_bits(), want.to_bits(), "replica scores must be bit-identical");
+    }
+    let (replicas, used) = backend.replica_stats().expect("deep Auto backend has a pool");
+    assert_eq!(replicas, 3);
+    assert!(used >= 2, "expected ≥ 2 replicas in use, saw {used}");
+    registry.shutdown();
+}
+
+/// Deterministically slow backend: a fixed floor per scored batch makes
+/// over-capacity arrival rates overwhelm the lane regardless of host
+/// speed.
+struct SlowBackend {
+    floor: Duration,
+}
+
+impl Backend for SlowBackend {
+    fn name(&self) -> String {
+        "slow".into()
+    }
+
+    fn score_batch(&self, windows: &[&Window]) -> Vec<f64> {
+        std::thread::sleep(self.floor);
+        vec![0.0; windows.len()]
+    }
+}
+
+#[test]
+fn poisson_overload_sheds_then_recovers() {
+    // Lane capacity ≈ 500 batches/s (2 ms per singleton batch, 1 worker);
+    // the open-loop Poisson trace arrives at ~50k rps — two orders of
+    // magnitude over capacity — so the bounded queue must shed.
+    let mut registry = ModelRegistry::new();
+    let cfg = ServerConfig {
+        max_batch: 1,
+        max_wait: Duration::from_micros(1),
+        workers: 1,
+        queue_capacity: 4,
+        threshold: 1.0,
+    };
+    registry.register(
+        "slow-model",
+        Arc::new(SlowBackend { floor: Duration::from_millis(2) }),
+        cfg,
+    );
+    let mut gen = TelemetryGen::new(8, 3);
+    let trace = poisson_trace(&mut gen, 17, 50_000.0, 300, 2, 0.0);
+    let start = Instant::now();
+    let mut accepted = Vec::new();
+    let mut shed = 0u64;
+    for req in trace {
+        // Open loop: honor arrival times, never wait for responses.
+        let target = Duration::from_secs_f64(req.at_s);
+        if let Some(sleep) = target.checked_sub(start.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        match registry.submit("slow-model", req.window) {
+            Ok(rx) => accepted.push(rx),
+            Err(SubmitError::Overloaded) => shed += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(shed > 0, "over-capacity arrivals must shed");
+    assert!(!accepted.is_empty(), "the queue still admits up to its bound");
+    let m = registry.lane("slow-model").unwrap().metrics();
+    assert_eq!(m.shed(), shed);
+    assert_eq!(m.submitted(), accepted.len() as u64);
+    // Every accepted request completes: shedding protects admitted work.
+    for rx in accepted {
+        let r = rx.recv().expect("accepted work completes");
+        assert_eq!(r.score, 0.0);
+    }
+    // Recovery: once the backlog drains, sub-capacity traffic flows again.
+    for _ in 0..3 {
+        let r = registry
+            .score_blocking("slow-model", gen.benign_window(2))
+            .expect("lane recovers after overload");
+        assert_eq!(r.score, 0.0);
+    }
+    assert_eq!(m.shed(), shed, "recovered traffic must not shed");
+    registry.shutdown();
+}
+
+#[test]
+fn per_model_metrics_are_isolated() {
+    let mk = |name: &str, seed: u64| {
+        Arc::new(QuantBackend::new(LstmAutoencoder::random(
+            Topology::from_name(name).unwrap(),
+            seed,
+        )))
+    };
+    let mut registry = ModelRegistry::new();
+    registry.register("LSTM-AE-F32-D2", mk("F32-D2", 1), ServerConfig::default());
+    registry.register("LSTM-AE-F64-D2", mk("F64-D2", 2), ServerConfig::default());
+    let mut gen32 = TelemetryGen::new(32, 5);
+    let mut gen64 = TelemetryGen::new(64, 6);
+
+    // Traffic to A only: B's counters must stay untouched.
+    for _ in 0..25 {
+        registry.score_blocking("F32-D2", gen32.benign_window(6)).unwrap();
+    }
+    let a = registry.lane("F32-D2").unwrap().metrics();
+    let b = registry.lane("F64-D2").unwrap().metrics();
+    assert_eq!(a.submitted(), 25);
+    assert_eq!(a.completed(), 25);
+    assert_eq!((b.submitted(), b.completed(), b.shed()), (0, 0, 0));
+
+    // Then traffic to B: A's counters must not move.
+    for _ in 0..10 {
+        registry.score_blocking("F64-D2", gen64.benign_window(6)).unwrap();
+    }
+    assert_eq!((a.submitted(), a.completed()), (25, 25));
+    assert_eq!((b.submitted(), b.completed()), (10, 10));
+    registry.shutdown();
+}
+
+#[test]
+fn registry_shutdown_closes_every_lane() {
+    let (registry, mut refs) = paper_registry_with_references(2);
+    registry.shutdown();
+    for (name, _, gen) in refs.iter_mut() {
+        assert!(matches!(
+            registry.submit(name, gen.benign_window(4)),
+            Err(SubmitError::Closed)
+        ));
+    }
+}

@@ -31,6 +31,7 @@ fn serve_trace(
         max_batch: 4,
         max_wait: std::time::Duration::from_micros(300),
         workers: 2,
+        queue_capacity: 1024,
         threshold,
     };
     let srv = AnomalyServer::start(backend, cfg);
@@ -39,7 +40,7 @@ fn serve_trace(
     let mut inflight = Vec::new();
     for req in trace {
         let truth = req.window.anomaly.is_some();
-        inflight.push((srv.submit(req.window), truth));
+        inflight.push((srv.submit(req.window).expect("queue sized for the trace"), truth));
     }
     let (mut tp, mut fp, mut fneg, mut tn) = (0u64, 0u64, 0u64, 0u64);
     for (rx, truth) in inflight {
@@ -97,12 +98,15 @@ fn batcher_amortizes_under_burst() {
         max_batch: 8,
         max_wait: std::time::Duration::from_millis(2),
         workers: 1,
+        queue_capacity: 1024,
         threshold: 1.0,
     };
     let srv = AnomalyServer::start(backend, cfg);
     let mut gen = TelemetryGen::new(32, 8);
     // Burst of 64 requests at once → batches should form.
-    let rxs: Vec<_> = (0..64).map(|_| srv.submit(gen.benign_window(8))).collect();
+    let rxs: Vec<_> = (0..64)
+        .map(|_| srv.submit(gen.benign_window(8)).expect("queue sized for the burst"))
+        .collect();
     for rx in rxs {
         rx.recv().unwrap();
     }
