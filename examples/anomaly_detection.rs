@@ -103,6 +103,7 @@ fn main() {
         workers: args.get_usize("workers", 2),
         queue_capacity: args.get_usize("queue", 1024),
         threshold,
+        autoscale: None,
     };
     let srv = AnomalyServer::start(backend, cfg);
     let mut gen = mk_gen(55);

@@ -13,8 +13,12 @@
 //!
 //! ```bash
 //! cargo run --release --example multi_model_serving
+//! cargo run --release --example multi_model_serving -- --autoscale
 //! ```
-//! (quantized golden-model backends — no artifacts needed.)
+//! (quantized golden-model backends — no artifacts needed. With
+//! `--autoscale`, each lane carries an `AutoscalePolicy` and a fleet
+//! autoscaler resizes worker pools and pipeline-replica pools from the
+//! per-lane metrics while the trace replays.)
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -22,7 +26,8 @@ use std::time::{Duration, Instant};
 use lstm_ae_accel::engine::{ExecMode, PIPELINE_MIN_DEPTH};
 use lstm_ae_accel::model::{LstmAutoencoder, Topology};
 use lstm_ae_accel::server::{
-    calibrate_threshold, Backend, ModelRegistry, QuantBackend, ServerConfig, SubmitError,
+    calibrate_threshold, AutoscalePolicy, Backend, ModelRegistry, QuantBackend, ServerConfig,
+    SubmitError,
 };
 use lstm_ae_accel::util::cli::Args;
 use lstm_ae_accel::workload::{trace::merged_poisson, TelemetryGen};
@@ -34,6 +39,7 @@ fn main() {
     let rate = args.get_f64("rate", 4000.0);
     let anomaly_rate = args.get_f64("anomaly-rate", 0.15);
     let replicas = args.get_usize("replicas", 2);
+    let autoscale = args.has("autoscale");
 
     // ---- assemble the fleet: backend + calibrated threshold per model --
     let mut registry = ModelRegistry::new();
@@ -56,6 +62,8 @@ fn main() {
         let cfg = ServerConfig {
             queue_capacity: args.get_usize("queue", 1024),
             threshold,
+            autoscale: autoscale
+                .then(|| AutoscalePolicy { up_ticks: 1, down_ticks: 5, ..Default::default() }),
             ..ModelRegistry::paper_lane_config(&topo, replicas)
         };
         println!(
@@ -72,6 +80,10 @@ fn main() {
     }
 
     // ---- mixed open-loop Poisson traffic across all lanes at once -----
+    if autoscale {
+        let watched = registry.start_autoscaler(Duration::from_millis(20), None);
+        println!("\nautoscaler running over {watched} lanes (tick 20 ms)");
+    }
     let models: Vec<String> = registry.models().map(String::from).collect();
     let topos: Vec<Topology> = models
         .iter()
@@ -128,6 +140,16 @@ fn main() {
     for (name, backend) in &backends {
         if let Some((total, used)) = backend.replica_stats() {
             println!("{name}: {used}/{total} pipeline replicas exercised");
+        }
+    }
+    if autoscale {
+        for name in &models {
+            let lane = registry.lane(name).expect("registered");
+            let (ups, downs) = lane.scale_counts();
+            println!(
+                "{name}: {} workers now, scaled up {ups}× / down {downs}×",
+                lane.workers()
+            );
         }
     }
     registry.shutdown();

@@ -25,9 +25,12 @@ use lstm_ae_accel::engine::{BatchEngine, PipelinePool, TemporalPipeline};
 use lstm_ae_accel::fixed::{dot_q, Q8_24};
 use lstm_ae_accel::model::lstm::{QuantLstmCell, QuantLstmState, StepScratch};
 use lstm_ae_accel::model::{LstmAutoencoder, Topology};
-use lstm_ae_accel::server::{AnomalyServer, QuantBackend, ServerConfig};
+use lstm_ae_accel::server::{
+    AnomalyServer, AutoscalePolicy, ModelRegistry, QuantBackend, ServerConfig, ThrottledBackend,
+};
 use lstm_ae_accel::util::json::Json;
 use lstm_ae_accel::util::timer::{bench, bench_auto, black_box, BenchResult};
+use lstm_ae_accel::workload::trace::rotating_hot_poisson;
 use lstm_ae_accel::workload::TelemetryGen;
 
 /// Accumulates results and flushes them as `BENCH_hotpath.json`.
@@ -68,6 +71,14 @@ impl Recorder {
         ]
         .into_iter()
         .collect();
+        self.results.insert(name.to_string(), Json::Obj(entry));
+    }
+
+    /// Record arbitrary named scalars (e.g. shed counts of the
+    /// autoscaler comparison, which is a scenario, not a timing loop).
+    fn add_scalars(&mut self, name: &str, pairs: &[(&str, f64)]) {
+        let entry: BTreeMap<String, Json> =
+            pairs.iter().map(|(k, v)| (k.to_string(), Json::num(*v))).collect();
         self.results.insert(name.to_string(), Json::Obj(entry));
     }
 
@@ -330,6 +341,7 @@ fn main() {
             workers: 4,
             queue_capacity: 1024, // 512 in flight: sized to never shed
             threshold: 0.1,
+            autoscale: None,
         },
     );
     let mut gen = TelemetryGen::new(32, 11);
@@ -350,5 +362,84 @@ fn main() {
     rec.add_throughput("server closed-loop F32-D2 T=16 (512 windows)", 512.0, dt);
     srv.shutdown();
 
+    println!("\n## Autoscaler: static vs adaptive lanes, rotating hot model");
+    // Two lanes over a deterministically throttled backend (1 ms floor
+    // per singleton batch → 1000 windows/s per worker on any host); all
+    // traffic hits one lane at a time and the hot lane rotates. Static:
+    // 2 + 2 workers pinned. Autoscaled: same total budget (4), min 1 /
+    // max 3 per lane, so threads follow the heat. EXPERIMENTS.md §Perf
+    // entry 7 tracks the shed counts these rows record.
+    for autoscaled in [false, true] {
+        let topos = [
+            Topology::from_name("F32-D2").unwrap(),
+            Topology::from_name("F64-D2").unwrap(),
+        ];
+        let policy = autoscaled.then(|| AutoscalePolicy {
+            min_workers: 1,
+            max_workers: 3,
+            up_queue_frac: 0.3,
+            up_ticks: 1,
+            down_idle_frac: 0.5,
+            down_ticks: 2,
+            ..Default::default()
+        });
+        let mut registry = ModelRegistry::new();
+        for topo in &topos {
+            registry.register(
+                &topo.name,
+                Arc::new(ThrottledBackend::zeros(std::time::Duration::from_millis(1))),
+                ServerConfig {
+                    max_batch: 1,
+                    max_wait: std::time::Duration::from_micros(50),
+                    workers: 2,
+                    queue_capacity: 16,
+                    threshold: 1.0,
+                    autoscale: policy.clone(),
+                },
+            );
+        }
+        if autoscaled {
+            registry.start_autoscaler(std::time::Duration::from_millis(10), Some(4));
+        }
+        let trace = rotating_hot_poisson(&topos, 42, 2400.0, 2880, 4, 0.0, 1.0, 960);
+        let start = std::time::Instant::now();
+        let mut inflight = Vec::new();
+        let mut shed = 0u64;
+        for (mi, req) in trace {
+            let target = std::time::Duration::from_secs_f64(req.at_s);
+            if let Some(sleep) = target.checked_sub(start.elapsed()) {
+                std::thread::sleep(sleep);
+            }
+            match registry.submit(&topos[mi].name, req.window) {
+                Ok(rx) => inflight.push(rx),
+                Err(_) => shed += 1,
+            }
+        }
+        let accepted = inflight.len();
+        for rx in inflight {
+            let _ = rx.recv();
+        }
+        let wall = start.elapsed().as_secs_f64();
+        let name = format!(
+            "fleet rotating-hot 2400rps budget=4 {}",
+            if autoscaled { "autoscaled" } else { "static" }
+        );
+        println!(
+            "{name}: {accepted} completed, {shed} shed in {wall:.2}s ({:.0} completed/s)",
+            accepted as f64 / wall
+        );
+        rec.add_scalars(
+            &name,
+            &[
+                ("shed", shed as f64),
+                ("completed", accepted as f64),
+                ("throughput_per_s", accepted as f64 / wall),
+                ("wall_s", wall),
+            ],
+        );
+        registry.shutdown();
+    }
+
     rec.flush();
 }
+

@@ -16,10 +16,17 @@
 //! scores are bit-identical regardless of which replica serves a batch —
 //! the pool changes timing, never results (the same function/timing
 //! independence the hardware dataflow guarantees).
+//!
+//! The pool is resizable at runtime ([`PipelinePool::set_replicas`], the
+//! autoscaler's replica knob): growth spawns fresh replicas under the
+//! pool's write lock; shrinkage truncates the slot list, and a removed
+//! replica's per-layer threads wind down as soon as the last in-flight
+//! checkout holding it drops — checkouts hold an `Arc` to their slot, so
+//! resizing never invalidates work already dispatched.
 
 use std::ops::Deref;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 use super::pipeline::TemporalPipeline;
 use crate::model::LstmAutoencoder;
@@ -33,21 +40,40 @@ struct Slot {
     uses: AtomicU64,
 }
 
-/// A pool of interchangeable [`TemporalPipeline`] replicas over one model.
+impl Slot {
+    fn fresh(ae: Arc<LstmAutoencoder>, fifo_capacity: usize) -> Arc<Slot> {
+        Arc::new(Slot {
+            pipe: TemporalPipeline::with_capacity(ae, fifo_capacity),
+            inflight: AtomicUsize::new(0),
+            uses: AtomicU64::new(0),
+        })
+    }
+}
+
+/// A pool of interchangeable [`TemporalPipeline`] replicas over one
+/// model, resizable at runtime.
 pub struct PipelinePool {
-    slots: Vec<Slot>,
+    /// The model every replica executes (kept so growth can build more).
+    ae: Arc<LstmAutoencoder>,
+    fifo_capacity: usize,
+    /// Current replica set. Checkout takes the read lock; resizing takes
+    /// the write lock, so a resize waits out in-progress checkouts (the
+    /// scan, not the scoring — scoring happens after the lock drops).
+    slots: RwLock<Vec<Arc<Slot>>>,
     /// Rotating scan start for checkout, so equal-load ties resolve
     /// round-robin instead of always picking replica 0.
     cursor: AtomicUsize,
 }
 
 /// A checked-out replica; derefs to the pipeline and returns the replica
-/// to the pool (decrements its load) on drop.
-pub struct PooledPipeline<'a> {
-    slot: &'a Slot,
+/// to the pool (decrements its load) on drop. Holds its slot by `Arc`,
+/// so a replica removed by [`PipelinePool::set_replicas`] mid-checkout
+/// stays alive (and correct) until this handle drops.
+pub struct PooledPipeline {
+    slot: Arc<Slot>,
 }
 
-impl Deref for PooledPipeline<'_> {
+impl Deref for PooledPipeline {
     type Target = TemporalPipeline;
 
     fn deref(&self) -> &TemporalPipeline {
@@ -55,7 +81,7 @@ impl Deref for PooledPipeline<'_> {
     }
 }
 
-impl Drop for PooledPipeline<'_> {
+impl Drop for PooledPipeline {
     fn drop(&mut self) {
         self.slot.inflight.fetch_sub(1, Ordering::Relaxed);
     }
@@ -73,42 +99,58 @@ impl PipelinePool {
         replicas: usize,
         fifo_capacity: usize,
     ) -> PipelinePool {
-        let slots = (0..replicas.max(1))
-            .map(|_| Slot {
-                pipe: TemporalPipeline::with_capacity(ae.clone(), fifo_capacity),
-                inflight: AtomicUsize::new(0),
-                uses: AtomicU64::new(0),
-            })
-            .collect();
-        PipelinePool { slots, cursor: AtomicUsize::new(0) }
+        let slots = (0..replicas.max(1)).map(|_| Slot::fresh(ae.clone(), fifo_capacity)).collect();
+        PipelinePool { ae, fifo_capacity, slots: RwLock::new(slots), cursor: AtomicUsize::new(0) }
     }
 
     /// The model every replica executes.
     pub fn model(&self) -> &LstmAutoencoder {
-        self.slots[0].pipe.model()
+        &self.ae
     }
 
-    /// Number of replicas in the pool.
+    /// Number of replicas currently in the pool.
     pub fn replicas(&self) -> usize {
-        self.slots.len()
+        self.slots.read().unwrap().len()
     }
 
-    /// How many distinct replicas have served at least one checkout.
+    /// How many of the current replicas have served at least one
+    /// checkout.
     pub fn used_replicas(&self) -> usize {
-        self.slots.iter().filter(|s| s.uses.load(Ordering::Relaxed) > 0).count()
+        self.slots
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|s| s.uses.load(Ordering::Relaxed) > 0)
+            .count()
+    }
+
+    /// Resize the pool to `replicas` pipelines (clamped to ≥ 1), the
+    /// autoscaler's replica knob. Growth spawns fresh replicas; shrinkage
+    /// drops slots from the scan — replicas still held by in-flight
+    /// checkouts finish their work and wind down when released. Returns
+    /// the new size.
+    pub fn set_replicas(&self, replicas: usize) -> usize {
+        let want = replicas.max(1);
+        let mut slots = self.slots.write().unwrap();
+        while slots.len() < want {
+            slots.push(Slot::fresh(self.ae.clone(), self.fifo_capacity));
+        }
+        slots.truncate(want);
+        slots.len()
     }
 
     /// Check out the least-loaded replica (rotating scan start breaks
     /// ties round-robin). The load accounting is advisory — a stale read
     /// picks a busier replica, which costs latency, never correctness.
-    pub fn checkout(&self) -> PooledPipeline<'_> {
-        let n = self.slots.len();
+    pub fn checkout(&self) -> PooledPipeline {
+        let slots = self.slots.read().unwrap();
+        let n = slots.len();
         let start = self.cursor.fetch_add(1, Ordering::Relaxed) % n;
         let mut best = start;
         let mut best_load = usize::MAX;
         for k in 0..n {
             let i = (start + k) % n;
-            let load = self.slots[i].inflight.load(Ordering::Relaxed);
+            let load = slots[i].inflight.load(Ordering::Relaxed);
             if load < best_load {
                 best = i;
                 best_load = load;
@@ -117,7 +159,7 @@ impl PipelinePool {
                 }
             }
         }
-        let slot = &self.slots[best];
+        let slot = slots[best].clone();
         slot.inflight.fetch_add(1, Ordering::Relaxed);
         slot.uses.fetch_add(1, Ordering::Relaxed);
         PooledPipeline { slot }
@@ -210,6 +252,38 @@ mod tests {
             h.join().unwrap();
         }
         assert!(pool.used_replicas() >= 2, "used {}", pool.used_replicas());
+    }
+
+    #[test]
+    fn resize_preserves_bit_identity_and_inflight_checkouts() {
+        let topo = Topology::from_name("F64-D6").unwrap();
+        let ae = Arc::new(LstmAutoencoder::random(topo, 11));
+        let pool = PipelinePool::new(ae.clone(), 2);
+        let x = window(5, 64, 3);
+        let want = ae.score_quant(&x).to_bits();
+
+        // Hold a checkout across a shrink: the held replica must stay
+        // alive and bit-exact even after it leaves the scan. (The first
+        // checkout lands on slot 0 and is released; the second lands on
+        // slot 1 — exactly the slot the truncate below removes.)
+        drop(pool.checkout());
+        let held = pool.checkout();
+        assert_eq!(pool.set_replicas(1), 1);
+        assert_eq!(held.score(&x).to_bits(), want, "held replica survives shrink");
+        drop(held);
+        assert_eq!(pool.score(&x).to_bits(), want);
+
+        // Grow: fresh replicas run the same cells, same results.
+        assert_eq!(pool.set_replicas(3), 3);
+        assert_eq!(pool.replicas(), 3);
+        for _ in 0..6 {
+            assert_eq!(pool.score(&x).to_bits(), want);
+        }
+        assert_eq!(pool.used_replicas(), 3, "rotation reaches the grown replicas");
+
+        // Shrink clamps at one — a pool never goes empty.
+        assert_eq!(pool.set_replicas(0), 1);
+        assert_eq!(pool.score(&x).to_bits(), want);
     }
 
     #[test]

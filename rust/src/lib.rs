@@ -17,7 +17,9 @@
 //!   worker threads over bounded FIFOs plus zero-alloc batched Q8.24
 //!   kernels ([`engine`]), CPU/GPU baselines
 //!   ([`baselines`]), a PJRT runtime that executes the AOT artifacts
-//!   ([`runtime`]), and an end-to-end anomaly-detection service ([`server`]).
+//!   ([`runtime`]), and an end-to-end anomaly-detection service ([`server`])
+//!   — a multi-model fabric with bounded admission, dynamic batching, and
+//!   metrics-driven per-lane autoscaling ([`server::autoscale`]).
 //!
 //! ## Quick start
 //!
@@ -34,8 +36,13 @@
 //! println!("latency = {:.3} ms", run.total_ms(300.0e6));
 //! ```
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `README.md` for the repo tour, `ARCHITECTURE.md` for the serving
+//! dataflow diagram, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+// The docs CI job runs `cargo doc --no-deps` with `-D warnings`; broken
+// intra-doc links are denied outright so the documented serving surface
+// (README → rustdoc pointers) cannot silently rot.
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod util;
 pub mod fixed;

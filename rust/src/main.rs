@@ -15,6 +15,10 @@
 //!   serve     --model F32-D2 --timesteps 16 --requests 1000 --rate 2000
 //!   fleet     --requests 2000 --rate 4000 [--replicas 2] [--mode auto] [--queue 1024]
 //!             serve all four paper topologies concurrently (mixed Poisson traffic)
+//!             [--rotate N] shifting trace: the hot model rotates every N requests
+//!             ([--hot-frac 0.85] of traffic to the hot lane)
+//!             [--autoscale] metrics-driven per-lane scaling
+//!             ([--min-workers 1] [--max-workers 6] [--budget N] [--tick-ms 20])
 //!   checks                         run the paper-shape checks
 //! ```
 
@@ -33,12 +37,12 @@ use lstm_ae_accel::report;
 use lstm_ae_accel::runtime::Runtime;
 use lstm_ae_accel::engine::ExecMode;
 use lstm_ae_accel::server::{
-    self, AnomalyServer, Backend, ModelRegistry, PjrtBackend, QuantBackend, ServerConfig,
-    SubmitError,
+    self, AnomalyServer, AutoscalePolicy, Backend, ModelRegistry, PjrtBackend, QuantBackend,
+    ServerConfig, SubmitError,
 };
 use lstm_ae_accel::util::cli::Args;
 use lstm_ae_accel::util::table::Table;
-use lstm_ae_accel::workload::trace::{merged_poisson, poisson_trace};
+use lstm_ae_accel::workload::trace::{merged_poisson, poisson_trace, rotating_hot_poisson};
 use lstm_ae_accel::workload::TelemetryGen;
 use lstm_ae_accel::model::LstmAutoencoder;
 
@@ -364,6 +368,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: args.get_usize("workers", 2),
         queue_capacity: args.get_usize("queue", 1024),
         threshold: args.get_f64("threshold", 0.0), // calibrated below
+        autoscale: None,
     };
 
     // Backend: PJRT artifact if available, else quantized golden model.
@@ -445,8 +450,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 /// Serve all four paper topologies concurrently through the multi-model
-/// fabric under mixed open-loop Poisson traffic, then print the rolled-up
-/// fleet report (per-lane counters, shed, latency percentiles).
+/// fabric under open-loop Poisson traffic — mixed by default, or a
+/// shifting rotating-hot-model trace with `--rotate N` — optionally with
+/// the metrics-driven per-lane autoscaler (`--autoscale`), then print
+/// the rolled-up fleet report (per-lane counters, shed, latency
+/// percentiles, worker/replica counts, scaling decisions).
 fn cmd_fleet(args: &Args) -> Result<()> {
     let t = args.get_usize("timesteps", 16);
     let n = args.get_usize("requests", 2000);
@@ -456,23 +464,65 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let mode = ExecMode::parse(args.get_or("mode", "auto"))
         .ok_or_else(|| anyhow!("unknown --mode (want auto|sequential|pipelined|batched)"))?;
     let seed = args.get_u64("seed", 7);
-    let registry = ModelRegistry::paper_fleet(seed, mode, replicas);
-    let models: Vec<String> = registry.models().map(String::from).collect();
+    let rotate = args.get_usize("rotate", 0);
+    let hot_frac = args.get_f64("hot-frac", 0.85).clamp(0.0, 1.0);
+    let autoscale = args.has("autoscale");
 
-    // One independent Poisson stream per model at rate/N each, merged
-    // into a single arrival-ordered schedule. The trace seed derives
-    // from --seed too, so different seeds draw different traffic, not
-    // just different weights.
+    let policy = autoscale.then(|| AutoscalePolicy {
+        up_ticks: 1,
+        down_ticks: 5,
+        ..AutoscalePolicy::bounded(
+            args.get_usize("min-workers", 1),
+            args.get_usize("max-workers", 6),
+        )
+    });
+    let registry = ModelRegistry::paper_fleet_with(seed, mode, replicas, policy);
+    let models: Vec<String> = registry.models().map(String::from).collect();
+    if autoscale {
+        let budget = args.get_usize("budget", 0);
+        let tick = std::time::Duration::from_millis(args.get_u64("tick-ms", 20));
+        let watched =
+            registry.start_autoscaler(tick, (budget > 0).then_some(budget));
+        println!(
+            "autoscaler: {watched} lanes under control (tick {tick:?}{})",
+            if budget > 0 { format!(", worker budget {budget}") } else { String::new() }
+        );
+    }
+
+    // Mixed traffic: one independent Poisson stream per model at rate/N
+    // each, merged into a single arrival-ordered schedule. With
+    // --rotate N: one global stream whose hot model shifts every N
+    // requests (the autoscaling workload). The trace seed derives from
+    // --seed too, so different seeds draw different traffic, not just
+    // different weights.
     let topos = models
         .iter()
         .map(|m| Topology::from_name(m))
         .collect::<Result<Vec<_>>>()?;
-    let merged = merged_poisson(&topos, seed.wrapping_add(40), rate, n, t, anomaly_rate);
+    let merged = if rotate > 0 {
+        rotating_hot_poisson(
+            &topos,
+            seed.wrapping_add(40),
+            rate,
+            n,
+            t,
+            anomaly_rate,
+            hot_frac,
+            rotate,
+        )
+    } else {
+        merged_poisson(&topos, seed.wrapping_add(40), rate, n, t, anomaly_rate)
+    };
     println!(
         "fleet: {} requests over {} lanes @ {rate:.0} rps aggregate \
-         (T={t}, mode {mode:?}, {replicas} replicas on deep lanes)",
+         (T={t}, mode {mode:?}, {replicas} replicas on deep lanes{})",
         merged.len(),
-        models.len()
+        models.len(),
+        if rotate > 0 {
+            format!(", hot model rotates every {rotate} requests")
+        } else {
+            String::new()
+        }
     );
 
     let start = std::time::Instant::now();

@@ -1,0 +1,528 @@
+//! Metrics-driven per-lane autoscaling for the serving fabric.
+//!
+//! The paper's architectural argument is that a dataflow design keeping
+//! every stage busy wins as depth grows; the serving-fabric analogue is
+//! keeping every *thread* busy as traffic shifts. Static per-lane worker
+//! and replica counts (PR 2) waste exactly that parallelism when the hot
+//! model rotates: one lane sheds while its neighbours idle. This module
+//! closes the loop — SHARP-style workload-adaptive resource allocation,
+//! in software:
+//!
+//! ```text
+//!            every `tick`
+//!  ┌──────────────────────────────────────────────────────────┐
+//!  │ for each watched Lane:                                   │
+//!  │   sample   queue depth, shed Δ, batch occupancy Δ,       │
+//!  │            worker idle/busy Δ        (ServerMetrics)     │
+//!  │   decide   pressure → Up, sustained quiet → Down,        │
+//!  │            else Hold             (hysteresis streaks)    │
+//!  │   apply    Up:   Lane::add_worker (fleet budget          │
+//!  │                  permitting) + one more pipeline replica │
+//!  │            Down: Lane::retire_worker (graceful poison    │
+//!  │                  message) + one fewer pipeline replica   │
+//!  └──────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Decisions are deliberately conservative: one worker and one replica
+//! per lane per tick, scale-up only after [`AutoscalePolicy::up_ticks`]
+//! consecutive pressure samples, scale-down only after
+//! [`AutoscalePolicy::down_ticks`] consecutive quiet samples. Scaling
+//! changes *capacity*, never *results*: every worker and every pipeline
+//! replica runs the same bit-exact Q8.24 arithmetic, so responses stay
+//! bit-identical to [`crate::engine::ExecMode::Sequential`] regardless
+//! of how many threads served them (asserted by
+//! `tests/integration_autoscale.rs`).
+
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::fabric::Lane;
+use super::ServerMetrics;
+
+/// Per-lane autoscaling bounds and hysteresis knobs (carried by
+/// [`super::ServerConfig::autoscale`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutoscalePolicy {
+    /// Never retire below this many lane workers.
+    pub min_workers: usize,
+    /// Never grow beyond this many lane workers.
+    pub max_workers: usize,
+    /// Never shrink the backend's pipeline-replica pool below this.
+    pub min_replicas: usize,
+    /// Never grow the backend's pipeline-replica pool beyond this.
+    pub max_replicas: usize,
+    /// Queue pressure threshold: a tick counts toward scale-up when
+    /// `queue_depth / queue_capacity` reaches this fraction (or any
+    /// request was shed since the last tick).
+    pub up_queue_frac: f64,
+    /// Consecutive pressure ticks required before one scale-up step.
+    pub up_ticks: u32,
+    /// Idle threshold: a tick counts toward scale-down only when the
+    /// queue is empty, nothing was shed, and the workers' idle fraction
+    /// over the tick is at least this.
+    pub down_idle_frac: f64,
+    /// Consecutive quiet ticks required before one scale-down step.
+    pub down_ticks: u32,
+}
+
+impl Default for AutoscalePolicy {
+    fn default() -> Self {
+        AutoscalePolicy {
+            min_workers: 1,
+            max_workers: 8,
+            min_replicas: 1,
+            max_replicas: 4,
+            up_queue_frac: 0.5,
+            up_ticks: 2,
+            down_idle_frac: 0.9,
+            down_ticks: 20,
+        }
+    }
+}
+
+impl AutoscalePolicy {
+    /// A policy bounded to `min..=max` workers (replica bounds follow the
+    /// same range, clamped to the default replica ceiling).
+    pub fn bounded(min: usize, max: usize) -> AutoscalePolicy {
+        let d = AutoscalePolicy::default();
+        AutoscalePolicy {
+            min_workers: min.max(1),
+            max_workers: max.max(min.max(1)),
+            min_replicas: d.min_replicas,
+            max_replicas: d.max_replicas.min(max.max(1)).max(d.min_replicas),
+            ..d
+        }
+    }
+}
+
+/// One tick's sampled view of a lane (deltas are since the previous
+/// tick).
+#[derive(Clone, Copy, Debug)]
+pub struct LaneSample {
+    /// Requests waiting in the bounded admission queue right now.
+    pub queue_depth: usize,
+    /// The queue's capacity (denominator of the pressure fraction).
+    pub queue_capacity: usize,
+    /// Requests shed at admission since the last tick.
+    pub shed_delta: u64,
+    /// Requests completed since the last tick.
+    pub completed_delta: u64,
+    /// Mean batch occupancy (windows per dispatched batch) over the tick;
+    /// 0 when no batch was dispatched.
+    pub occupancy: f64,
+    /// Fraction of worker time spent idle over the tick, in `[0, 1]`;
+    /// 1.0 when workers recorded no activity at all.
+    pub idle_frac: f64,
+}
+
+/// What one tick concluded for one lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Sustained pressure: add capacity (one worker, one replica).
+    Up,
+    /// Sustained quiet: remove capacity (one worker, one replica).
+    Down,
+    /// Neither streak is complete; leave the lane as it is.
+    Hold,
+}
+
+/// Per-lane controller memory: previous counter values and the
+/// hysteresis streaks.
+#[derive(Debug, Default)]
+struct LaneTrack {
+    last_shed: u64,
+    last_completed: u64,
+    last_batches: u64,
+    last_batched_windows: u64,
+    last_idle_ns: u64,
+    last_busy_ns: u64,
+    up_streak: u32,
+    down_streak: u32,
+}
+
+impl LaneTrack {
+    /// Read the lane's metrics, fold them into deltas against the last
+    /// tick, and remember the new absolutes.
+    fn sample(&mut self, metrics: &ServerMetrics, queue_capacity: usize) -> LaneSample {
+        let shed = metrics.shed();
+        let completed = metrics.completed();
+        let batches = metrics.batches();
+        let batched_windows = metrics.batched_windows();
+        let idle_ns = metrics.worker_idle_ns();
+        let busy_ns = metrics.worker_busy_ns();
+
+        let batch_delta = batches - self.last_batches;
+        let window_delta = batched_windows - self.last_batched_windows;
+        let idle_delta = idle_ns - self.last_idle_ns;
+        let busy_delta = busy_ns - self.last_busy_ns;
+        let sample = LaneSample {
+            queue_depth: metrics.queue_depth(),
+            queue_capacity,
+            shed_delta: shed - self.last_shed,
+            completed_delta: completed - self.last_completed,
+            occupancy: if batch_delta == 0 {
+                0.0
+            } else {
+                window_delta as f64 / batch_delta as f64
+            },
+            idle_frac: if idle_delta + busy_delta == 0 {
+                1.0
+            } else {
+                idle_delta as f64 / (idle_delta + busy_delta) as f64
+            },
+        };
+        self.last_shed = shed;
+        self.last_completed = completed;
+        self.last_batches = batches;
+        self.last_batched_windows = batched_windows;
+        self.last_idle_ns = idle_ns;
+        self.last_busy_ns = busy_ns;
+        sample
+    }
+}
+
+/// The pure decision function: fold one sample into the hysteresis
+/// streaks and report whether capacity should move. Streaks reset after
+/// an emitted decision (one step per completed streak) and whenever the
+/// lane is neither pressured nor quiet.
+fn decide(policy: &AutoscalePolicy, sample: &LaneSample, track: &mut LaneTrack) -> ScaleDecision {
+    let pressure = sample.shed_delta > 0
+        || sample.queue_depth as f64 >= policy.up_queue_frac * sample.queue_capacity as f64;
+    let quiet =
+        sample.shed_delta == 0 && sample.queue_depth == 0 && sample.idle_frac >= policy.down_idle_frac;
+    if pressure {
+        track.down_streak = 0;
+        track.up_streak += 1;
+        if track.up_streak >= policy.up_ticks {
+            track.up_streak = 0;
+            return ScaleDecision::Up;
+        }
+    } else if quiet {
+        track.up_streak = 0;
+        track.down_streak += 1;
+        if track.down_streak >= policy.down_ticks {
+            track.down_streak = 0;
+            return ScaleDecision::Down;
+        }
+    } else {
+        track.up_streak = 0;
+        track.down_streak = 0;
+    }
+    ScaleDecision::Hold
+}
+
+/// Apply a decision to a lane within the policy bounds. `budget_room`
+/// is how many more workers the fleet-wide budget allows (`usize::MAX`
+/// when unlimited). Returns whether anything changed.
+fn apply(
+    lane: &Lane,
+    policy: &AutoscalePolicy,
+    decision: ScaleDecision,
+    budget_room: usize,
+) -> bool {
+    match decision {
+        ScaleDecision::Hold => false,
+        ScaleDecision::Up => {
+            let mut acted = false;
+            if lane.workers() < policy.max_workers && budget_room > 0 {
+                lane.add_worker();
+                // Replicas ride along with a *budgeted* worker add (each
+                // replica spawns depth threads of its own, so growing the
+                // pool while the budget blocks worker adds would bypass
+                // the fleet's fixed thread total).
+                if let Some(r) = lane.pipeline_replicas() {
+                    if r < policy.max_replicas {
+                        lane.set_pipeline_replicas(r + 1);
+                    }
+                }
+                acted = true;
+            }
+            if acted {
+                lane.record_scale(true);
+            }
+            acted
+        }
+        ScaleDecision::Down => {
+            let mut acted = false;
+            if lane.workers() > policy.min_workers && lane.retire_worker() {
+                acted = true;
+            }
+            if let Some(r) = lane.pipeline_replicas() {
+                if r > policy.min_replicas {
+                    lane.set_pipeline_replicas(r - 1);
+                    acted = true;
+                }
+            }
+            if acted {
+                lane.record_scale(false);
+            }
+            acted
+        }
+    }
+}
+
+/// The fleet controller: one background thread sampling every watched
+/// lane on a fixed tick and resizing worker pools / replica pools within
+/// each lane's [`AutoscalePolicy`], optionally under a fleet-wide worker
+/// budget. Start via [`crate::server::ModelRegistry::start_autoscaler`]
+/// (or [`Autoscaler::start`] directly for hand-built lanes); stopping is
+/// idempotent and also happens on drop.
+pub struct Autoscaler {
+    stop_tx: Sender<()>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Autoscaler {
+    /// Spawn the controller over `lanes` (each must carry a policy —
+    /// lanes without one are skipped), ticking every `tick`.
+    /// `worker_budget` caps the *sum* of watched lanes' worker counts:
+    /// scale-ups that would exceed it are skipped, so a shifting
+    /// workload redistributes a fixed thread budget instead of growing
+    /// it.
+    pub fn start(
+        lanes: Vec<Arc<Lane>>,
+        tick: Duration,
+        worker_budget: Option<usize>,
+    ) -> Autoscaler {
+        let (stop_tx, stop_rx) = channel::<()>();
+        let handle = std::thread::Builder::new()
+            .name("autoscaler".into())
+            .spawn(move || {
+                let mut watched: Vec<(Arc<Lane>, AutoscalePolicy, LaneTrack)> = lanes
+                    .into_iter()
+                    .filter_map(|l| {
+                        let policy = l.autoscale_policy()?.clone();
+                        let mut track = LaneTrack::default();
+                        // Prime against the lane's current counters so the
+                        // first tick sees only activity since start — not
+                        // the lane's lifetime shed/idle history (which
+                        // would fire a spurious scale decision on start or
+                        // restart).
+                        let _ = track.sample(l.metrics(), l.queue_capacity());
+                        Some((l, policy, track))
+                    })
+                    .collect();
+                loop {
+                    match stop_rx.recv_timeout(tick) {
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Ok(()) | Err(RecvTimeoutError::Disconnected) => return,
+                    }
+                    // Fleet-wide worker total, kept current across this
+                    // tick's per-lane actions so the budget holds even
+                    // when several lanes want to grow at once.
+                    let mut total: usize = watched.iter().map(|(l, _, _)| l.workers()).sum();
+                    for (lane, policy, track) in watched.iter_mut() {
+                        let lane: &Lane = lane.as_ref();
+                        let sample = track.sample(lane.metrics(), lane.queue_capacity());
+                        let decision = decide(policy, &sample, track);
+                        let room = worker_budget.map_or(usize::MAX, |b| b.saturating_sub(total));
+                        let before = lane.workers();
+                        apply(lane, policy, decision, room);
+                        let after = lane.workers();
+                        total = total.saturating_sub(before) + after;
+                    }
+                }
+            })
+            .expect("spawn autoscaler");
+        Autoscaler { stop_tx, handle: Mutex::new(Some(handle)) }
+    }
+
+    /// Stop the controller and join its thread (idempotent).
+    pub fn stop(&self) {
+        let _ = self.stop_tx.send(());
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Autoscaler {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ServerConfig, ThrottledBackend};
+    use super::*;
+    use crate::workload::Window;
+    use std::time::Instant;
+
+    fn sample(depth: usize, cap: usize, shed: u64, idle: f64) -> LaneSample {
+        LaneSample {
+            queue_depth: depth,
+            queue_capacity: cap,
+            shed_delta: shed,
+            completed_delta: 0,
+            occupancy: 0.0,
+            idle_frac: idle,
+        }
+    }
+
+    #[test]
+    fn scale_up_requires_sustained_pressure() {
+        let policy = AutoscalePolicy { up_ticks: 3, ..Default::default() };
+        let mut track = LaneTrack::default();
+        // Two pressured ticks, one calm, two pressured: no Up yet — the
+        // calm tick resets the streak.
+        assert_eq!(decide(&policy, &sample(600, 1024, 0, 0.2), &mut track), ScaleDecision::Hold);
+        assert_eq!(decide(&policy, &sample(600, 1024, 0, 0.2), &mut track), ScaleDecision::Hold);
+        assert_eq!(decide(&policy, &sample(0, 1024, 0, 0.5), &mut track), ScaleDecision::Hold);
+        assert_eq!(decide(&policy, &sample(600, 1024, 0, 0.2), &mut track), ScaleDecision::Hold);
+        assert_eq!(decide(&policy, &sample(600, 1024, 0, 0.2), &mut track), ScaleDecision::Hold);
+        // Third consecutive pressured tick fires, then the streak resets.
+        assert_eq!(decide(&policy, &sample(600, 1024, 0, 0.2), &mut track), ScaleDecision::Up);
+        assert_eq!(decide(&policy, &sample(600, 1024, 0, 0.2), &mut track), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn shed_counts_as_pressure_regardless_of_depth() {
+        let policy = AutoscalePolicy { up_ticks: 1, ..Default::default() };
+        let mut track = LaneTrack::default();
+        assert_eq!(decide(&policy, &sample(0, 1024, 5, 0.9), &mut track), ScaleDecision::Up);
+    }
+
+    #[test]
+    fn scale_down_requires_sustained_quiet() {
+        let policy = AutoscalePolicy { down_ticks: 3, down_idle_frac: 0.8, ..Default::default() };
+        let mut track = LaneTrack::default();
+        assert_eq!(decide(&policy, &sample(0, 1024, 0, 0.95), &mut track), ScaleDecision::Hold);
+        assert_eq!(decide(&policy, &sample(0, 1024, 0, 0.95), &mut track), ScaleDecision::Hold);
+        assert_eq!(decide(&policy, &sample(0, 1024, 0, 0.95), &mut track), ScaleDecision::Down);
+        // A busy tick (low idle fraction) breaks the quiet streak.
+        assert_eq!(decide(&policy, &sample(0, 1024, 0, 0.95), &mut track), ScaleDecision::Hold);
+        assert_eq!(decide(&policy, &sample(0, 1024, 0, 0.3), &mut track), ScaleDecision::Hold);
+        assert_eq!(decide(&policy, &sample(0, 1024, 0, 0.95), &mut track), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn deltas_are_per_tick_not_cumulative() {
+        let metrics = ServerMetrics::new();
+        let mut track = LaneTrack::default();
+        metrics.on_shed();
+        metrics.on_shed();
+        let s1 = track.sample(&metrics, 64);
+        assert_eq!(s1.shed_delta, 2);
+        // No new sheds: the next tick must see zero, not the running total.
+        let s2 = track.sample(&metrics, 64);
+        assert_eq!(s2.shed_delta, 0);
+        metrics.on_shed();
+        assert_eq!(track.sample(&metrics, 64).shed_delta, 1);
+    }
+
+    fn tiny_window() -> Window {
+        Window { data: vec![vec![0.0f32]], anomaly: None }
+    }
+
+    #[test]
+    fn controller_scales_a_pressured_lane_up_and_an_idle_lane_down() {
+        let policy = AutoscalePolicy {
+            min_workers: 1,
+            max_workers: 3,
+            up_queue_frac: 0.25,
+            up_ticks: 1,
+            down_idle_frac: 0.5,
+            down_ticks: 2,
+            ..Default::default()
+        };
+        let cfg = ServerConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(1),
+            workers: 2,
+            queue_capacity: 64,
+            threshold: 1.0,
+            autoscale: Some(policy),
+        };
+        let lane = Arc::new(Lane::start(
+            "hot",
+            Arc::new(ThrottledBackend::zeros(Duration::from_millis(2))),
+            cfg,
+        ));
+        let scaler = Autoscaler::start(vec![lane.clone()], Duration::from_millis(5), None);
+
+        // Saturate: 2 ms per singleton batch per worker, offered far
+        // above capacity, so the queue stays deep until workers grow.
+        let mut inflight = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while lane.workers() < 3 && Instant::now() < deadline {
+            for _ in 0..8 {
+                if let Ok(rx) = lane.try_submit(tiny_window()) {
+                    inflight.push(rx);
+                }
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(lane.workers(), 3, "sustained pressure must reach max_workers");
+        let (ups, _) = lane.scale_counts();
+        assert!(ups >= 1);
+        for rx in inflight {
+            let _ = rx.recv();
+        }
+
+        // Then go quiet: sustained idle must walk workers back to min.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while lane.workers() > 1 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(lane.workers(), 1, "sustained idle must reach min_workers");
+        let (_, downs) = lane.scale_counts();
+        assert!(downs >= 1);
+        scaler.stop();
+        lane.shutdown();
+    }
+
+    #[test]
+    fn budget_caps_fleet_wide_scale_up() {
+        let policy = AutoscalePolicy {
+            min_workers: 1,
+            max_workers: 4,
+            up_queue_frac: 0.1,
+            up_ticks: 1,
+            down_ticks: 1000, // effectively never scale down in this test
+            ..Default::default()
+        };
+        let mk_lane = |name: &str| {
+            Arc::new(Lane::start(
+                name,
+                Arc::new(ThrottledBackend::zeros(Duration::from_millis(2))),
+                ServerConfig {
+                    max_batch: 1,
+                    max_wait: Duration::from_micros(1),
+                    workers: 1,
+                    queue_capacity: 64,
+                    threshold: 1.0,
+                    autoscale: Some(policy.clone()),
+                },
+            ))
+        };
+        let a = mk_lane("a");
+        let b = mk_lane("b");
+        // Budget 3 across two lanes starting at 1+1: at most one
+        // additional worker may ever be added fleet-wide.
+        let scaler =
+            Autoscaler::start(vec![a.clone(), b.clone()], Duration::from_millis(5), Some(3));
+        let mut inflight = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while Instant::now() < deadline && a.workers() + b.workers() < 3 {
+            for lane in [&a, &b] {
+                for _ in 0..4 {
+                    if let Ok(rx) = lane.try_submit(tiny_window()) {
+                        inflight.push(rx);
+                    }
+                }
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // Give the controller a few more ticks to (incorrectly) overshoot.
+        std::thread::sleep(Duration::from_millis(40));
+        let total = a.workers() + b.workers();
+        assert!(total <= 3, "budget 3 exceeded: {total}");
+        scaler.stop();
+        drop(inflight);
+        a.shutdown();
+        b.shutdown();
+    }
+}

@@ -15,6 +15,17 @@ pub trait Backend: Send + Sync {
     fn name(&self) -> String;
     /// Score each window (mean squared reconstruction error).
     fn score_batch(&self, windows: &[&Window]) -> Vec<f64>;
+    /// Pipeline replicas currently backing this scorer, when it executes
+    /// on a resizable replica pool ([`crate::engine::PipelinePool`]);
+    /// `None` when replica scaling does not apply to this backend. The
+    /// autoscaler samples this before resizing.
+    fn pipeline_replicas(&self) -> Option<usize> {
+        None
+    }
+    /// Resize the backing replica pool, when one exists — the
+    /// autoscaler's replica knob. The default is a no-op so backends
+    /// without replica parallelism (PJRT, test doubles) ignore scaling.
+    fn set_pipeline_replicas(&self, _replicas: usize) {}
 }
 
 /// Scores through the AOT-compiled PJRT artifact — real numerics,
@@ -252,6 +263,16 @@ impl Backend for QuantBackend {
         format!("quant:{}", self.ae.topo.name)
     }
 
+    fn pipeline_replicas(&self) -> Option<usize> {
+        self.pool.as_ref().map(|p| p.replicas())
+    }
+
+    fn set_pipeline_replicas(&self, replicas: usize) {
+        if let Some(pool) = &self.pool {
+            pool.set_replicas(replicas);
+        }
+    }
+
     fn score_batch(&self, windows: &[&Window]) -> Vec<f64> {
         match self.mode {
             ExecMode::Sequential => {
@@ -271,6 +292,49 @@ impl Backend for QuantBackend {
                 ([w], None) => vec![self.ae.score_quant(&w.data)],
                 _ => self.score_grouped(windows),
             },
+        }
+    }
+}
+
+/// Deterministically throttled scorer for capacity experiments: a fixed
+/// service-time floor per batch makes lane capacity a pure function of
+/// worker count on any host (≈ `workers / floor` batches per second).
+/// With a model attached ([`Self::scoring`]), windows are scored through
+/// the bit-exact sequential Q8.24 scorer after the floor elapses — so
+/// autoscaling experiments can assert bit-identity while saturating
+/// lanes; without one ([`Self::zeros`]) every score is `0.0`. Shared by
+/// the autoscaler tests, `tests/integration_autoscale.rs`, and the
+/// rotating-hot scenario in `benches/hotpath.rs`.
+pub struct ThrottledBackend {
+    floor: std::time::Duration,
+    scorer: Option<LstmAutoencoder>,
+}
+
+impl ThrottledBackend {
+    /// Floor-only backend: every score is `0.0`.
+    pub fn zeros(floor: std::time::Duration) -> ThrottledBackend {
+        ThrottledBackend { floor, scorer: None }
+    }
+
+    /// Floor plus bit-exact sequential scoring through `ae`.
+    pub fn scoring(ae: LstmAutoencoder, floor: std::time::Duration) -> ThrottledBackend {
+        ThrottledBackend { floor, scorer: Some(ae) }
+    }
+}
+
+impl Backend for ThrottledBackend {
+    fn name(&self) -> String {
+        match &self.scorer {
+            Some(ae) => format!("throttled:{}", ae.topo.name),
+            None => "throttled".into(),
+        }
+    }
+
+    fn score_batch(&self, windows: &[&Window]) -> Vec<f64> {
+        std::thread::sleep(self.floor);
+        match &self.scorer {
+            Some(ae) => windows.iter().map(|w| ae.score_quant(&w.data)).collect(),
+            None => vec![0.0; windows.len()],
         }
     }
 }

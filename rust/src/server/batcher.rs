@@ -13,11 +13,17 @@
 //! of unbounded buffering.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
 use std::time::Instant;
 
-use super::{Batch, Msg, ServerConfig};
+use super::{Batch, Msg, ServerConfig, ServerMetrics, WorkerMsg};
 
-pub(crate) fn run_batcher(rx: Receiver<Msg>, out: SyncSender<Batch>, cfg: ServerConfig) {
+pub(crate) fn run_batcher(
+    rx: Receiver<Msg>,
+    out: SyncSender<WorkerMsg>,
+    cfg: ServerConfig,
+    metrics: Arc<ServerMetrics>,
+) {
     let mut pending: Batch = Vec::with_capacity(cfg.max_batch);
     // Meaningful only while `pending` is non-empty: arrival time of the
     // open batch's first request.
@@ -27,6 +33,7 @@ pub(crate) fn run_batcher(rx: Receiver<Msg>, out: SyncSender<Batch>, cfg: Server
             // Idle: no deadline armed — block until traffic or shutdown.
             match rx.recv() {
                 Ok(Msg::Req(req)) => {
+                    metrics.on_dequeue();
                     oldest = Instant::now();
                     pending.push(req);
                     if pending.len() >= cfg.max_batch {
@@ -44,6 +51,7 @@ pub(crate) fn run_batcher(rx: Receiver<Msg>, out: SyncSender<Batch>, cfg: Server
             }
             match rx.recv_timeout(remaining) {
                 Ok(Msg::Req(req)) => {
+                    metrics.on_dequeue();
                     pending.push(req);
                     if pending.len() >= cfg.max_batch {
                         flush(&mut pending, &out);
@@ -63,19 +71,20 @@ pub(crate) fn run_batcher(rx: Receiver<Msg>, out: SyncSender<Batch>, cfg: Server
     }
 }
 
-fn flush(pending: &mut Batch, out: &SyncSender<Batch>) {
+fn flush(pending: &mut Batch, out: &SyncSender<WorkerMsg>) {
     if !pending.is_empty() {
         // Blocking send: a full batch queue is the backpressure signal.
-        let _ = out.send(std::mem::take(pending));
+        let _ = out.send(WorkerMsg::Batch(std::mem::take(pending)));
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::super::{BatcherMsg, Request, Response};
+    use super::super::{BatcherMsg, Request, Response, ServerMetrics, WorkerMsg};
     use super::*;
     use crate::workload::Window;
     use std::sync::mpsc::{channel, sync_channel, Sender};
+    use std::sync::Arc;
     use std::time::Duration;
 
     fn req(id: u64) -> (Request, std::sync::mpsc::Receiver<Response>) {
@@ -86,11 +95,22 @@ mod tests {
 
     fn spawn_batcher(
         cfg: ServerConfig,
-    ) -> (Sender<BatcherMsg>, std::sync::mpsc::Receiver<Batch>, std::thread::JoinHandle<()>) {
+    ) -> (Sender<BatcherMsg>, std::sync::mpsc::Receiver<WorkerMsg>, std::thread::JoinHandle<()>)
+    {
         let (tx, rx) = channel::<BatcherMsg>();
-        let (out_tx, out_rx) = sync_channel::<Batch>(16);
-        let h = std::thread::spawn(move || run_batcher(rx, out_tx, cfg));
+        let (out_tx, out_rx) = sync_channel::<WorkerMsg>(16);
+        let metrics = Arc::new(ServerMetrics::new());
+        let h = std::thread::spawn(move || run_batcher(rx, out_tx, cfg, metrics));
         (tx, out_rx, h)
+    }
+
+    /// Unwrap the batch a worker would score (tests never see `Retire`
+    /// from the batcher — only the autoscaler injects those).
+    fn batch_of(msg: WorkerMsg) -> Batch {
+        match msg {
+            WorkerMsg::Batch(b) => b,
+            WorkerMsg::Retire => panic!("batcher never emits Retire"),
+        }
     }
 
     #[test]
@@ -108,7 +128,7 @@ mod tests {
         let (r, _reply) = req(0);
         let sent = Instant::now();
         tx.send(BatcherMsg::Req(r)).unwrap();
-        let batch = out_rx.recv().unwrap();
+        let batch = batch_of(out_rx.recv().unwrap());
         let waited = sent.elapsed();
         assert_eq!(batch.len(), 1);
         assert!(waited < Duration::from_millis(40), "flush took {waited:?}");
@@ -131,7 +151,7 @@ mod tests {
             replies.push(reply);
             tx.send(BatcherMsg::Req(r)).unwrap();
         }
-        let batch = out_rx.recv().unwrap();
+        let batch = batch_of(out_rx.recv().unwrap());
         assert_eq!(batch.len(), 3);
         assert!(sent.elapsed() < Duration::from_secs(5), "size flush must not wait the deadline");
         tx.send(BatcherMsg::Shutdown).unwrap();
@@ -161,7 +181,7 @@ mod tests {
         let (r, _reply) = req(7);
         tx.send(BatcherMsg::Req(r)).unwrap();
         tx.send(BatcherMsg::Shutdown).unwrap();
-        let batch = out_rx.recv().unwrap();
+        let batch = batch_of(out_rx.recv().unwrap());
         assert_eq!(batch.len(), 1);
         assert_eq!(batch[0].id, 7);
         h.join().unwrap();

@@ -26,8 +26,8 @@
 //! wrapper over exactly this machinery.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, TrySendError};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -38,7 +38,8 @@ use crate::util::table::Table;
 use crate::workload::Window;
 
 use super::{
-    batcher, Backend, BatcherMsg, QuantBackend, Request, Response, ServerConfig, ServerMetrics,
+    batcher, Autoscaler, AutoscalePolicy, Backend, BatcherMsg, QuantBackend, Request, Response,
+    ServerConfig, ServerMetrics, WorkerMsg,
 };
 
 /// Why a submission was rejected at admission.
@@ -65,14 +66,115 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
-/// One model's serving lane: bounded admission queue → batcher thread →
-/// worker pool over a scoring backend, with its own metrics and
-/// batching policy.
-pub struct Lane {
-    name: String,
-    tx: std::sync::mpsc::SyncSender<BatcherMsg>,
+/// The dynamically resizable worker pool of one lane: worker threads
+/// consuming batches from the shared (bounded) batch queue, plus the
+/// machinery the autoscaler uses to grow and shrink it at runtime.
+///
+/// Growth spawns a fresh thread on the same queue. Shrinkage is
+/// graceful: a [`WorkerMsg::Retire`] poison message is enqueued behind
+/// any already-dispatched batches, and whichever worker consumes it
+/// exits after its current batch — accepted work is never dropped.
+struct WorkerSet {
+    lane: String,
+    backend: Arc<dyn Backend>,
     metrics: Arc<ServerMetrics>,
     threshold: f64,
+    /// Producer side of the batch queue, kept so retirement messages can
+    /// be injected behind the batcher's traffic. Dropped (`None`) at
+    /// shutdown so workers see a disconnected channel and exit.
+    batch_tx: Mutex<Option<SyncSender<WorkerMsg>>>,
+    batch_rx: Arc<Mutex<Receiver<WorkerMsg>>>,
+    /// Workers currently alive (incremented at spawn, decremented by the
+    /// worker itself on any exit path).
+    alive: Arc<AtomicUsize>,
+    /// Retirement messages sent but not yet consumed; effective worker
+    /// count is `alive - pending_retire`.
+    pending_retire: Arc<AtomicUsize>,
+    next_wid: AtomicUsize,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl WorkerSet {
+    /// Spawn one more worker on the shared batch queue.
+    fn spawn_worker(&self) {
+        let wid = self.next_wid.fetch_add(1, Ordering::Relaxed);
+        self.alive.fetch_add(1, Ordering::Relaxed);
+        let backend = self.backend.clone();
+        let rx = self.batch_rx.clone();
+        let metrics = self.metrics.clone();
+        let threshold = self.threshold;
+        let alive = self.alive.clone();
+        let pending_retire = self.pending_retire.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("scr{wid}:{}", self.lane))
+            .spawn(move || worker_loop(backend, rx, metrics, threshold, alive, pending_retire))
+            .expect("spawn worker");
+        let mut handles = self.handles.lock().unwrap();
+        // Reap handles of workers that already retired, so a lane that
+        // scales up and down for days doesn't accumulate dead handles.
+        let mut live = Vec::with_capacity(handles.len() + 1);
+        for h in handles.drain(..) {
+            if h.is_finished() {
+                let _ = h.join();
+            } else {
+                live.push(h);
+            }
+        }
+        live.push(handle);
+        *handles = live;
+    }
+
+    /// Ask one worker to retire after its current batch. Refuses to drop
+    /// below one effective worker (a lane must keep draining), and skips
+    /// (returns `false`) when the batch queue is full — a full queue
+    /// means the workers are saturated, which is never a scale-down
+    /// moment.
+    fn retire_worker(&self) -> bool {
+        if self.effective_workers() <= 1 {
+            return false;
+        }
+        let guard = self.batch_tx.lock().unwrap();
+        let Some(tx) = guard.as_ref() else { return false };
+        match tx.try_send(WorkerMsg::Retire) {
+            Ok(()) => {
+                self.pending_retire.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Workers serving the lane once in-flight retirements land.
+    fn effective_workers(&self) -> usize {
+        let alive = self.alive.load(Ordering::Relaxed);
+        alive.saturating_sub(self.pending_retire.load(Ordering::Relaxed))
+    }
+
+    /// Drop the retained producer endpoint and join every worker.
+    fn shutdown(&self) {
+        *self.batch_tx.lock().unwrap() = None;
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One model's serving lane: bounded admission queue → batcher thread →
+/// worker pool over a scoring backend, with its own metrics, batching
+/// policy, and (optionally) autoscaling bounds.
+///
+/// Worker threads and the backend's pipeline-replica pool are resizable
+/// at runtime via [`Lane::add_worker`] / [`Lane::retire_worker`] /
+/// [`Lane::set_pipeline_replicas`]; a registry [`Autoscaler`] drives
+/// those from the lane's own metrics when the lane's
+/// [`ServerConfig::autoscale`] policy is set.
+pub struct Lane {
+    name: String,
+    tx: SyncSender<BatcherMsg>,
+    metrics: Arc<ServerMetrics>,
+    threshold: f64,
+    queue_capacity: usize,
+    policy: Option<AutoscalePolicy>,
     next_id: AtomicU64,
     /// Admission gate. An RwLock (not an atomic) so shutdown can close
     /// admission and enqueue `Shutdown` under the write lock: every
@@ -80,7 +182,11 @@ pub struct Lane {
     /// lock, i.e. strictly before `Shutdown` in the queue — an accepted
     /// request is therefore always drained, never silently dropped.
     accepting: RwLock<bool>,
-    threads: Mutex<Vec<JoinHandle<()>>>,
+    batcher: Mutex<Option<JoinHandle<()>>>,
+    workers: WorkerSet,
+    /// Autoscaling decisions applied to this lane (scale-ups, downs).
+    scale_ups: AtomicU64,
+    scale_downs: AtomicU64,
 }
 
 impl Lane {
@@ -91,40 +197,51 @@ impl Lane {
         let metrics = Arc::new(ServerMetrics::new());
         let (tx, rx) = sync_channel::<BatcherMsg>(cfg.queue_capacity.max(1));
         // Bounded dispatch too: when every worker is busy the batcher's
-        // flush blocks, admission fills, and try_submit sheds.
-        let (batch_tx, batch_rx) = sync_channel::<Vec<Request>>(cfg.workers * 2);
+        // flush blocks, admission fills, and try_submit sheds. Sized for
+        // the autoscaler's upper bound so scale-up isn't starved by a
+        // channel provisioned for the initial worker count.
+        let dispatch_workers =
+            cfg.autoscale.as_ref().map_or(cfg.workers, |p| p.max_workers.max(cfg.workers));
+        let (batch_tx, batch_rx) = sync_channel::<WorkerMsg>(dispatch_workers.max(1) * 2);
         let batch_rx = Arc::new(Mutex::new(batch_rx));
 
-        let mut threads = Vec::new();
-        {
+        let batcher = {
             let cfg2 = cfg.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name(format!("bat:{name}"))
-                    .spawn(move || batcher::run_batcher(rx, batch_tx, cfg2))
-                    .expect("spawn batcher"),
-            );
-        }
-        for wid in 0..cfg.workers {
-            let backend = backend.clone();
-            let rx = batch_rx.clone();
+            let out = batch_tx.clone();
             let metrics = metrics.clone();
-            let threshold = cfg.threshold;
-            threads.push(
-                std::thread::Builder::new()
-                    .name(format!("scr{wid}:{name}"))
-                    .spawn(move || worker_loop(backend, rx, metrics, threshold))
-                    .expect("spawn worker"),
-            );
+            std::thread::Builder::new()
+                .name(format!("bat:{name}"))
+                .spawn(move || batcher::run_batcher(rx, out, cfg2, metrics))
+                .expect("spawn batcher")
+        };
+        let workers = WorkerSet {
+            lane: name.clone(),
+            backend,
+            metrics: metrics.clone(),
+            threshold: cfg.threshold,
+            batch_tx: Mutex::new(Some(batch_tx)),
+            batch_rx,
+            alive: Arc::new(AtomicUsize::new(0)),
+            pending_retire: Arc::new(AtomicUsize::new(0)),
+            next_wid: AtomicUsize::new(0),
+            handles: Mutex::new(Vec::new()),
+        };
+        for _ in 0..cfg.workers {
+            workers.spawn_worker();
         }
         Lane {
             name,
             tx,
             metrics,
             threshold: cfg.threshold,
+            queue_capacity: cfg.queue_capacity.max(1),
+            policy: cfg.autoscale,
             next_id: AtomicU64::new(0),
             accepting: RwLock::new(true),
-            threads: Mutex::new(threads),
+            batcher: Mutex::new(Some(batcher)),
+            workers,
+            scale_ups: AtomicU64::new(0),
+            scale_downs: AtomicU64::new(0),
         }
     }
 
@@ -133,12 +250,72 @@ impl Lane {
         &self.name
     }
 
+    /// This lane's metrics sink (counters, histograms, autoscaler gauges).
     pub fn metrics(&self) -> &ServerMetrics {
         &self.metrics
     }
 
+    /// The anomaly threshold applied to this lane's scores.
     pub fn threshold(&self) -> f64 {
         self.threshold
+    }
+
+    /// Capacity of the bounded admission queue, in requests.
+    pub fn queue_capacity(&self) -> usize {
+        self.queue_capacity
+    }
+
+    /// The autoscaling policy this lane was configured with, if any.
+    pub fn autoscale_policy(&self) -> Option<&AutoscalePolicy> {
+        self.policy.as_ref()
+    }
+
+    /// Worker threads currently serving this lane (net of retirements
+    /// already requested but not yet consumed).
+    pub fn workers(&self) -> usize {
+        self.workers.effective_workers()
+    }
+
+    /// Grow the worker pool by one thread; returns the new effective
+    /// count. Safe (but pointless) after shutdown — the fresh worker
+    /// sees a disconnected queue and exits immediately.
+    pub fn add_worker(&self) -> usize {
+        self.workers.spawn_worker();
+        self.workers.effective_workers()
+    }
+
+    /// Gracefully retire one worker after its current batch. Refused
+    /// (returns `false`) when it would leave the lane below one worker,
+    /// or while the dispatch queue is full — saturation is never a
+    /// scale-down moment. Returns whether a retirement was issued.
+    pub fn retire_worker(&self) -> bool {
+        self.workers.retire_worker()
+    }
+
+    /// Pipeline replicas backing this lane's scorer, when the backend
+    /// executes on a replica pool ([`Backend::pipeline_replicas`]).
+    pub fn pipeline_replicas(&self) -> Option<usize> {
+        self.workers.backend.pipeline_replicas()
+    }
+
+    /// Resize the backend's pipeline-replica pool (no-op for backends
+    /// without one).
+    pub fn set_pipeline_replicas(&self, replicas: usize) {
+        self.workers.backend.set_pipeline_replicas(replicas);
+    }
+
+    /// `(scale-ups, scale-downs)` applied to this lane by an autoscaler.
+    pub fn scale_counts(&self) -> (u64, u64) {
+        (self.scale_ups.load(Ordering::Relaxed), self.scale_downs.load(Ordering::Relaxed))
+    }
+
+    /// Record an applied autoscaling decision (called by [`Autoscaler`]).
+    pub(crate) fn record_scale(&self, up: bool) {
+        if up {
+            self.scale_ups.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.scale_downs.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Submit a window. Fails fast with [`SubmitError::Overloaded`] when
@@ -180,7 +357,8 @@ impl Lane {
     }
 
     /// Graceful shutdown: stop admitting, drain in-flight work, join all
-    /// lane threads. Idempotent.
+    /// lane threads (batcher first, then every worker — including ones
+    /// added by an autoscaler). Idempotent.
     pub fn shutdown(&self) {
         {
             let mut accepting = self.accepting.write().unwrap();
@@ -192,9 +370,13 @@ impl Lane {
                 let _ = self.tx.send(BatcherMsg::Shutdown);
             }
         }
-        for t in self.threads.lock().unwrap().drain(..) {
-            let _ = t.join();
+        if let Some(h) = self.batcher.lock().unwrap().take() {
+            let _ = h.join();
         }
+        // With the batcher gone, dropping our retained producer endpoint
+        // disconnects the batch queue; every worker drains what was
+        // dispatched and exits.
+        self.workers.shutdown();
     }
 }
 
@@ -206,16 +388,27 @@ impl Drop for Lane {
 
 fn worker_loop(
     backend: Arc<dyn Backend>,
-    rx: Arc<Mutex<Receiver<Vec<Request>>>>,
+    rx: Arc<Mutex<Receiver<WorkerMsg>>>,
     metrics: Arc<ServerMetrics>,
     threshold: f64,
+    alive: Arc<AtomicUsize>,
+    pending_retire: Arc<AtomicUsize>,
 ) {
     loop {
-        let batch = {
+        let wait_start = Instant::now();
+        let msg = {
             let guard = rx.lock().unwrap();
             guard.recv()
         };
-        let Ok(batch) = batch else { return };
+        metrics.on_worker_idle(wait_start.elapsed().as_nanos() as u64);
+        let batch = match msg {
+            Ok(WorkerMsg::Batch(b)) => b,
+            Ok(WorkerMsg::Retire) => {
+                pending_retire.fetch_sub(1, Ordering::Relaxed);
+                break;
+            }
+            Err(_) => break,
+        };
         if batch.is_empty() {
             continue;
         }
@@ -239,35 +432,56 @@ fn worker_loop(
             let _ = req.reply.send(resp);
         }
     }
+    alive.fetch_sub(1, Ordering::Relaxed);
 }
 
 /// A registry of concurrently-served models: one [`Lane`] per model name,
 /// each with its own backend, batching policy, bounded queue, and
-/// metrics.
+/// metrics — plus an optional fleet [`Autoscaler`] driving lanes whose
+/// config carries an [`AutoscalePolicy`].
+///
+/// ```
+/// use std::sync::Arc;
+/// use lstm_ae_accel::model::{LstmAutoencoder, Topology};
+/// use lstm_ae_accel::server::{ModelRegistry, QuantBackend, ServerConfig};
+/// use lstm_ae_accel::workload::TelemetryGen;
+///
+/// let mut registry = ModelRegistry::new();
+/// let topo = Topology::from_name("F32-D2").unwrap();
+/// let backend = Arc::new(QuantBackend::new(LstmAutoencoder::random(topo.clone(), 1)));
+/// registry.register(&topo.name, backend, ServerConfig::default());
+///
+/// let mut gen = TelemetryGen::new(topo.features, 2);
+/// let response = registry.score_blocking("F32-D2", gen.benign_window(4)).unwrap();
+/// assert!(response.score.is_finite() && response.score >= 0.0);
+/// registry.shutdown();
+/// ```
 pub struct ModelRegistry {
-    lanes: BTreeMap<String, Lane>,
+    lanes: BTreeMap<String, Arc<Lane>>,
+    autoscaler: Mutex<Option<Autoscaler>>,
 }
 
 impl ModelRegistry {
+    /// An empty registry (no lanes, no autoscaler).
     pub fn new() -> ModelRegistry {
-        ModelRegistry { lanes: BTreeMap::new() }
+        ModelRegistry { lanes: BTreeMap::new(), autoscaler: Mutex::new(None) }
     }
 
     /// Register a model under `name` and spawn its lane. Panics on a
     /// duplicate name — two backends for one model is a config error.
     pub fn register(&mut self, name: &str, backend: Arc<dyn Backend>, cfg: ServerConfig) {
         assert!(!self.lanes.contains_key(name), "model {name:?} already registered");
-        self.lanes.insert(name.to_string(), Lane::start(name, backend, cfg));
+        self.lanes.insert(name.to_string(), Arc::new(Lane::start(name, backend, cfg)));
     }
 
     /// Look up a lane by registered name, falling back to the canonical
     /// topology name so `"F64-D6"` finds `"LSTM-AE-F64-D6"`.
     pub fn lane(&self, model: &str) -> Option<&Lane> {
         if let Some(l) = self.lanes.get(model) {
-            return Some(l);
+            return Some(l.as_ref());
         }
         let canon = Topology::from_name(model).ok()?.name;
-        self.lanes.get(&canon)
+        self.lanes.get(&canon).map(|l| l.as_ref())
     }
 
     /// Registered model names, in registry (lexicographic) order.
@@ -297,7 +511,9 @@ impl ModelRegistry {
             .score_blocking(window)
     }
 
-    /// Per-model metrics rolled up into one fleet report.
+    /// Per-model metrics rolled up into one fleet report, including each
+    /// lane's current worker count, pipeline replicas, and the scaling
+    /// decisions an [`Autoscaler`] has applied (`scale +/-`).
     pub fn fleet_report(&self) -> String {
         let mut t = Table::new("Fleet report (per-model lanes)").header(&[
             "Model",
@@ -309,11 +525,15 @@ impl ModelRegistry {
             "p50 µs",
             "p95 µs",
             "rps",
+            "workers",
+            "repl",
+            "scale +/-",
         ]);
         let (mut sub, mut shed, mut comp, mut anom) = (0u64, 0u64, 0u64, 0u64);
         for lane in self.lanes.values() {
             let m = lane.metrics();
             let (p50, p95, _) = m.e2e_percentiles_us();
+            let (ups, downs) = lane.scale_counts();
             t.row(vec![
                 lane.name().to_string(),
                 m.submitted().to_string(),
@@ -324,6 +544,9 @@ impl ModelRegistry {
                 format!("{p50:.0}"),
                 format!("{p95:.0}"),
                 format!("{:.0}", m.throughput_rps()),
+                lane.workers().to_string(),
+                lane.pipeline_replicas().map_or_else(|| "-".to_string(), |r| r.to_string()),
+                format!("{ups}/{downs}"),
             ]);
             sub += m.submitted();
             shed += m.shed();
@@ -338,8 +561,43 @@ impl ModelRegistry {
         )
     }
 
-    /// Shut every lane down (graceful, idempotent).
+    /// Start the fleet autoscaler over every lane whose config carries an
+    /// [`AutoscalePolicy`], sampling on `tick`. `worker_budget` caps the
+    /// fleet-wide worker-thread total (scale-ups are skipped at the cap),
+    /// so an adaptive fleet can be compared against a static one at equal
+    /// thread budget. Returns the number of lanes under control; 0 when
+    /// no lane has a policy or an autoscaler is already running.
+    pub fn start_autoscaler(&self, tick: Duration, worker_budget: Option<usize>) -> usize {
+        let watched: Vec<Arc<Lane>> = self
+            .lanes
+            .values()
+            .filter(|l| l.autoscale_policy().is_some())
+            .cloned()
+            .collect();
+        if watched.is_empty() {
+            return 0;
+        }
+        let mut guard = self.autoscaler.lock().unwrap();
+        if guard.is_some() {
+            return 0;
+        }
+        let n = watched.len();
+        *guard = Some(Autoscaler::start(watched, tick, worker_budget));
+        n
+    }
+
+    /// Stop the fleet autoscaler, if one is running (idempotent). Lane
+    /// worker/replica counts stay wherever the last tick left them.
+    pub fn stop_autoscaler(&self) {
+        if let Some(a) = self.autoscaler.lock().unwrap().take() {
+            a.stop();
+        }
+    }
+
+    /// Shut every lane down (graceful, idempotent). The autoscaler, if
+    /// running, is stopped first so it cannot resize lanes mid-teardown.
     pub fn shutdown(&self) {
+        self.stop_autoscaler();
         for lane in self.lanes.values() {
             lane.shutdown();
         }
@@ -352,6 +610,18 @@ impl ModelRegistry {
     /// batching deadline, a larger `max_batch`, and `replicas` pipeline
     /// replicas; shallow (D2) lanes stay latency-tight.
     pub fn paper_fleet(base_seed: u64, mode: ExecMode, replicas: usize) -> ModelRegistry {
+        Self::paper_fleet_with(base_seed, mode, replicas, None)
+    }
+
+    /// [`Self::paper_fleet`] with a per-lane autoscaling policy: every
+    /// lane gets a clone of `autoscale`, making the whole fleet eligible
+    /// for [`Self::start_autoscaler`].
+    pub fn paper_fleet_with(
+        base_seed: u64,
+        mode: ExecMode,
+        replicas: usize,
+        autoscale: Option<AutoscalePolicy>,
+    ) -> ModelRegistry {
         let mut reg = ModelRegistry::new();
         for (i, topo) in Topology::paper_models().into_iter().enumerate() {
             let ae = LstmAutoencoder::random(topo.clone(), base_seed + i as u64);
@@ -360,7 +630,10 @@ impl ModelRegistry {
             // shallow Auto lanes stay pool-free while Pipelined mode
             // gets its replicas at every depth.
             let backend = Arc::new(QuantBackend::with_options(ae, mode, replicas));
-            let cfg = Self::paper_lane_config(&topo, replicas);
+            let cfg = ServerConfig {
+                autoscale: autoscale.clone(),
+                ..Self::paper_lane_config(&topo, replicas)
+            };
             reg.register(&topo.name, backend, cfg);
         }
         reg
@@ -378,6 +651,7 @@ impl ModelRegistry {
             workers: if deep { replicas.max(2) } else { 2 },
             queue_capacity: 1024,
             threshold: 0.05,
+            autoscale: None,
         }
     }
 
@@ -433,6 +707,7 @@ mod tests {
             workers: 1,
             queue_capacity: 2,
             threshold: 1.0,
+            autoscale: None,
         };
         let lane = Lane::start("gated", backend, cfg);
         // Worker blocks on the first batch; the batch queue (cap 2), the
@@ -491,6 +766,50 @@ mod tests {
             other => panic!("want UnknownModel, got {other:?}"),
         }
         reg.shutdown();
+    }
+
+    #[test]
+    fn metrics_stay_correct_across_worker_churn() {
+        // Scale the worker pool up and down while traffic flows: every
+        // accepted request completes exactly once, the shed counter stays
+        // zero, occupancy respects max_batch, and the queue-depth gauge
+        // returns to zero when the lane drains.
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let backend = Arc::new(QuantBackend::new(LstmAutoencoder::random(topo, 4)));
+        let cfg = ServerConfig { max_batch: 4, queue_capacity: 4096, ..Default::default() };
+        let lane = Lane::start("churn", backend, cfg);
+        let mut gen = TelemetryGen::new(32, 7);
+        assert_eq!(lane.workers(), 2);
+
+        let mut drain = |n: usize| {
+            let rxs: Vec<_> = (0..n)
+                .map(|_| lane.try_submit(gen.benign_window(4)).expect("queue sized"))
+                .collect();
+            for rx in rxs {
+                rx.recv().expect("accepted work completes");
+            }
+        };
+        drain(50);
+        assert_eq!(lane.add_worker(), 3);
+        drain(50);
+        assert!(lane.retire_worker(), "3 workers → retirement must be issued");
+        assert_eq!(lane.workers(), 2);
+        drain(50);
+        // Retiring down to the floor is refused: a lane keeps draining.
+        assert!(lane.retire_worker());
+        assert!(!lane.retire_worker(), "must never retire the last worker");
+        drain(25);
+
+        let m = lane.metrics();
+        assert_eq!(m.submitted(), 175);
+        assert_eq!(m.completed(), 175);
+        assert_eq!(m.shed(), 0);
+        assert_eq!(m.queue_depth(), 0, "drained lane has an empty admission queue");
+        assert!(m.max_batch_seen() <= 4);
+        assert!(m.batched_windows() == 175, "every window dispatched exactly once");
+        assert!(m.worker_idle_ns() > 0, "workers waited between batches");
+        lane.shutdown();
+        assert_eq!(lane.metrics().completed(), 175, "shutdown drains, never drops");
     }
 
     #[test]

@@ -1,6 +1,8 @@
-//! Serving metrics: thread-safe counters + latency histograms.
+//! Serving metrics: thread-safe counters, latency histograms, and the
+//! gauges the per-lane autoscaler samples (admission-queue depth, worker
+//! idle/busy time) — see [`crate::server::autoscale`].
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -18,6 +20,16 @@ pub struct ServerMetrics {
     batches: AtomicU64,
     batched_windows: AtomicU64,
     max_batch: AtomicUsize,
+    /// Requests currently sitting in the bounded admission queue:
+    /// incremented on accepted submit, decremented when the batcher pops
+    /// the request into an open batch. Signed because the two updates
+    /// race (the batcher can pop before the submitter increments); reads
+    /// clamp at zero.
+    queue_depth: AtomicI64,
+    /// Cumulative nanoseconds workers spent waiting for a batch.
+    worker_idle_ns: AtomicU64,
+    /// Cumulative nanoseconds workers spent scoring batches.
+    worker_busy_ns: AtomicU64,
     e2e_us: Mutex<LogHistogram>,
     queue_us: Mutex<LogHistogram>,
     service_us: Mutex<LogHistogram>,
@@ -34,6 +46,9 @@ impl ServerMetrics {
             batches: AtomicU64::new(0),
             batched_windows: AtomicU64::new(0),
             max_batch: AtomicUsize::new(0),
+            queue_depth: AtomicI64::new(0),
+            worker_idle_ns: AtomicU64::new(0),
+            worker_busy_ns: AtomicU64::new(0),
             e2e_us: Mutex::new(LogHistogram::for_latency()),
             queue_us: Mutex::new(LogHistogram::for_latency()),
             service_us: Mutex::new(LogHistogram::for_latency()),
@@ -43,6 +58,7 @@ impl ServerMetrics {
 
     pub fn on_submit(&self) {
         self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
     }
 
     /// A submission was rejected at admission (queue full — load shed).
@@ -50,10 +66,22 @@ impl ServerMetrics {
         self.shed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// The batcher popped one request out of the admission queue.
+    pub fn on_dequeue(&self) {
+        self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// A worker finished waiting for work (`ns` spent idle on the batch
+    /// queue). Idle-fraction deltas drive autoscaler scale-down.
+    pub fn on_worker_idle(&self, ns: u64) {
+        self.worker_idle_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
     pub fn on_batch(&self, size: usize, service_us: f64) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_windows.fetch_add(size as u64, Ordering::Relaxed);
         self.max_batch.fetch_max(size, Ordering::Relaxed);
+        self.worker_busy_ns.fetch_add((service_us * 1e3) as u64, Ordering::Relaxed);
         self.service_us.lock().unwrap().record(service_us * 1e-6);
     }
 
@@ -84,6 +112,34 @@ impl ServerMetrics {
 
     pub fn max_batch_seen(&self) -> usize {
         self.max_batch.load(Ordering::Relaxed)
+    }
+
+    /// Requests currently waiting in the bounded admission queue
+    /// (clamped at zero — see the field note on update racing).
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::Relaxed).max(0) as usize
+    }
+
+    /// Batches dispatched so far (the denominator of
+    /// [`Self::mean_batch_size`]; windowed occupancy = delta of
+    /// [`Self::batched_windows`] over delta of this).
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Windows dispatched inside batches so far.
+    pub fn batched_windows(&self) -> u64 {
+        self.batched_windows.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative worker idle time (waiting on the batch queue), ns.
+    pub fn worker_idle_ns(&self) -> u64 {
+        self.worker_idle_ns.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative worker busy time (scoring batches), ns.
+    pub fn worker_busy_ns(&self) -> u64 {
+        self.worker_busy_ns.load(Ordering::Relaxed)
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -168,5 +224,35 @@ mod tests {
         let (p50, _, _) = m.e2e_percentiles_us();
         assert!(p50 > 100.0 && p50 < 250.0, "p50 {p50}");
         assert!(m.report().contains("2 completed"));
+    }
+
+    #[test]
+    fn queue_depth_gauge_tracks_submit_and_dequeue() {
+        let m = ServerMetrics::new();
+        assert_eq!(m.queue_depth(), 0);
+        m.on_submit();
+        m.on_submit();
+        assert_eq!(m.queue_depth(), 2);
+        m.on_dequeue();
+        assert_eq!(m.queue_depth(), 1);
+        m.on_dequeue();
+        // The batcher can pop before the submitter's increment lands;
+        // the extra dequeue must clamp, not wrap.
+        m.on_dequeue();
+        assert_eq!(m.queue_depth(), 0);
+        m.on_submit();
+        assert!(m.queue_depth() <= 1, "clamped reads must stay sane");
+    }
+
+    #[test]
+    fn worker_time_accumulates() {
+        let m = ServerMetrics::new();
+        m.on_worker_idle(1_000);
+        m.on_worker_idle(500);
+        m.on_batch(4, 2.0); // 2 µs of service = 2000 ns busy
+        assert_eq!(m.worker_idle_ns(), 1_500);
+        assert_eq!(m.worker_busy_ns(), 2_000);
+        assert_eq!(m.batches(), 1);
+        assert_eq!(m.batched_windows(), 4);
     }
 }

@@ -32,15 +32,23 @@
 //!   workers don't serialize on one pipeline), and all paths are
 //!   bit-identical to the sequential scorer — see the engine docs for the
 //!   exact routing rules.
-//! - [`metrics`] — per-lane latency histograms + throughput counters,
+//! - [`metrics`] — per-lane latency histograms + throughput counters and
+//!   the autoscaler's sensor gauges (queue depth, worker idle/busy time),
 //!   rolled up by [`ModelRegistry::fleet_report`].
+//! - [`autoscale`] — the metrics-driven per-lane autoscaler: a controller
+//!   thread samples every lane on a tick and resizes lane worker pools
+//!   and engine pipeline-replica pools between configured bounds with
+//!   hysteresis (the software analogue of SHARP-style workload-adaptive
+//!   resource allocation). See `ARCHITECTURE.md` for the control loop.
 
+pub mod autoscale;
 pub mod backend;
 pub mod batcher;
 pub mod fabric;
 pub mod metrics;
 
-pub use backend::{Backend, PjrtBackend, QuantBackend};
+pub use autoscale::{Autoscaler, AutoscalePolicy, ScaleDecision};
+pub use backend::{Backend, PjrtBackend, QuantBackend, ThrottledBackend};
 pub use fabric::{Lane, ModelRegistry, SubmitError};
 pub use metrics::ServerMetrics;
 
@@ -66,6 +74,12 @@ pub struct ServerConfig {
     /// Anomaly threshold on the reconstruction-error score
     /// (calibrate via [`calibrate_threshold`]).
     pub threshold: f64,
+    /// Per-lane autoscaling policy. `None` (the default) pins the lane to
+    /// its static `workers` count; `Some` makes the lane eligible for a
+    /// registry [`Autoscaler`], which resizes the worker pool (and the
+    /// backend's pipeline-replica pool, where one exists) between the
+    /// policy's bounds. See [`autoscale`].
+    pub autoscale: Option<AutoscalePolicy>,
 }
 
 impl Default for ServerConfig {
@@ -76,6 +90,7 @@ impl Default for ServerConfig {
             workers: 2,
             queue_capacity: 1024,
             threshold: 0.05,
+            autoscale: None,
         }
     }
 }
@@ -104,6 +119,15 @@ pub(crate) struct Request {
 pub(crate) enum BatcherMsg {
     Req(Request),
     Shutdown,
+}
+
+/// What the batcher→worker channel carries: formed batches, plus the
+/// autoscaler's graceful-retirement poison message (any one worker
+/// consumes a `Retire` and exits its loop after finishing its current
+/// batch — in-flight work is never abandoned).
+pub(crate) enum WorkerMsg {
+    Batch(Batch),
+    Retire,
 }
 
 // Re-exported for the batcher module.

@@ -74,6 +74,62 @@ pub fn merged_poisson(
     merged
 }
 
+/// A shifting-Poisson trace for autoscaling experiments: one global
+/// Poisson arrival stream at `rate_rps`, with a **hot model** that
+/// rotates every `rotate_every` requests. Each arrival goes to the
+/// current hot model with probability `hot_frac`, else uniformly to one
+/// of the others — so the aggregate rate is constant while the per-lane
+/// load shifts phase by phase, the workload a static per-lane allocation
+/// wastes threads on and an autoscaler can follow.
+///
+/// Deterministic for a given `base_seed` (arrivals, model choices, and
+/// windows all derive from it). Windows for model `i` are drawn at that
+/// model's feature width.
+pub fn rotating_hot_poisson(
+    models: &[Topology],
+    base_seed: u64,
+    rate_rps: f64,
+    n: usize,
+    t: usize,
+    anomaly_rate: f64,
+    hot_frac: f64,
+    rotate_every: usize,
+) -> Vec<(usize, TimedRequest)> {
+    assert!(!models.is_empty(), "rotating_hot_poisson needs at least one model");
+    assert!(rate_rps > 0.0);
+    let mut rng = Xoshiro256::seeded(base_seed.wrapping_add(2000));
+    let mut gens: Vec<TelemetryGen> = models
+        .iter()
+        .enumerate()
+        .map(|(i, m)| TelemetryGen::new(m.features, base_seed + i as u64))
+        .collect();
+    let kinds = super::AnomalyKind::all();
+    let period = rotate_every.max(1);
+    let mut at = 0.0f64;
+    (0..n)
+        .map(|i| {
+            at += rng.exponential(rate_rps);
+            let hot = (i / period) % models.len();
+            let mi = if models.len() == 1 || rng.next_f64() < hot_frac {
+                hot
+            } else {
+                // Uniform over the non-hot models.
+                let mut j = rng.below(models.len() as u64 - 1) as usize;
+                if j >= hot {
+                    j += 1;
+                }
+                j
+            };
+            let window = if rng.next_f64() < anomaly_rate {
+                gens[mi].anomalous_window(t, kinds[rng.below(4) as usize])
+            } else {
+                gens[mi].benign_window(t)
+            };
+            (mi, TimedRequest { at_s: at, window, id: i as u64 })
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,6 +170,42 @@ mod tests {
             let (_, req) = merged.iter().find(|(i, _)| *i == mi).unwrap();
             assert_eq!(req.window.data[0].len(), topo.features);
         }
+    }
+
+    #[test]
+    fn rotating_hot_trace_shifts_the_hot_model_each_phase() {
+        let models = Topology::paper_models();
+        let n = 800;
+        let rotate = 200;
+        let trace = rotating_hot_poisson(&models, 9, 1000.0, n, 4, 0.0, 0.8, rotate);
+        assert_eq!(trace.len(), n);
+        // Arrival-ordered (single global stream).
+        for w in trace.windows(2) {
+            assert!(w[1].1.at_s >= w[0].1.at_s);
+        }
+        // In each phase the hot model dominates, and the hot model is a
+        // different lane each phase.
+        for phase in 0..n / rotate {
+            let hot = phase % models.len();
+            let slice = &trace[phase * rotate..(phase + 1) * rotate];
+            let hot_cnt = slice.iter().filter(|(mi, _)| *mi == hot).count();
+            assert!(
+                hot_cnt > rotate / 2,
+                "phase {phase}: hot lane {hot} got {hot_cnt}/{rotate}"
+            );
+        }
+        // Windows carry each model's feature width.
+        for (mi, req) in &trace {
+            assert_eq!(req.window.data[0].len(), models[*mi].features);
+        }
+    }
+
+    #[test]
+    fn rotating_hot_trace_with_full_hot_fraction_is_single_lane_per_phase() {
+        let models = Topology::paper_models();
+        let trace = rotating_hot_poisson(&models, 3, 500.0, 100, 2, 0.0, 1.0, 50);
+        assert!(trace[..50].iter().all(|(mi, _)| *mi == 0));
+        assert!(trace[50..].iter().all(|(mi, _)| *mi == 1));
     }
 
     #[test]
