@@ -14,11 +14,16 @@
 //! ```bash
 //! cargo run --release --example multi_model_serving
 //! cargo run --release --example multi_model_serving -- --autoscale
+//! cargo run --release --example multi_model_serving -- --async
 //! ```
 //! (quantized golden-model backends — no artifacts needed. With
 //! `--autoscale`, each lane carries an `AutoscalePolicy` and a fleet
 //! autoscaler resizes worker pools and pipeline-replica pools from the
-//! per-lane metrics while the trace replays.)
+//! per-lane metrics while the trace replays. With `--async`, the
+//! open-loop replay is swapped for a closed-loop driver over the async
+//! ticket front: a handful of client threads keep thousands of requests
+//! outstanding through `CompletionSet`s instead of parking one OS thread
+//! per in-flight request.)
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -30,7 +35,10 @@ use lstm_ae_accel::server::{
     SubmitError,
 };
 use lstm_ae_accel::util::cli::Args;
-use lstm_ae_accel::workload::{trace::merged_poisson, TelemetryGen};
+use lstm_ae_accel::workload::{
+    trace::{closed_loop_async, merged_poisson},
+    TelemetryGen,
+};
 
 fn main() {
     let args = Args::from_env();
@@ -85,6 +93,13 @@ fn main() {
         println!("\nautoscaler running over {watched} lanes (tick 20 ms)");
     }
     let models: Vec<String> = registry.models().map(String::from).collect();
+
+    if args.has("async") {
+        run_async_closed_loop(&registry, &models, &args, n, t);
+        registry.shutdown();
+        return;
+    }
+
     let topos: Vec<Topology> = models
         .iter()
         .map(|m| Topology::from_name(m).expect("registered names are canonical"))
@@ -153,4 +168,55 @@ fn main() {
         }
     }
     registry.shutdown();
+}
+
+/// Closed-loop serving through the async ticket front: first one ticket's
+/// callback lifecycle in miniature, then a handful of client threads
+/// sustaining thousands of outstanding requests via `CompletionSet`s —
+/// outstanding work the blocking surface could only hold with one parked
+/// OS thread per request.
+fn run_async_closed_loop(
+    registry: &ModelRegistry,
+    models: &[String],
+    args: &Args,
+    n: usize,
+    t: usize,
+) {
+    // Submit, register a callback, drop the ticket: the lane's completion
+    // router runs the callback at delivery — fire-and-forget.
+    let topo = Topology::from_name(&models[0]).expect("registered names are canonical");
+    let mut gen = TelemetryGen::new(topo.features, 77);
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    registry
+        .submit_async(&models[0], gen.benign_window(t))
+        .expect("admitted")
+        .on_complete(move |outcome| {
+            let r = outcome.expect("accepted work completes");
+            let _ = done_tx.send(format!(
+                "callback: request {} scored {:.6} ({} µs end to end)",
+                r.id, r.score, r.e2e_us as u64
+            ));
+        });
+    println!("\n{}", done_rx.recv().expect("router delivers the callback"));
+
+    let clients = args.get_usize("clients", 4).max(1);
+    let outstanding = args.get_usize("outstanding", 2048);
+    let per_client = (outstanding / clients).max(1);
+    println!(
+        "closed loop: {clients} client threads × {per_client} outstanding tickets each, \
+         {n} requests total ..."
+    );
+    let stats = closed_loop_async(registry, models, clients, per_client, n, t, 91);
+    println!();
+    print!("{}", registry.fleet_report());
+    let wall = stats.wall.as_secs_f64().max(1e-9);
+    println!(
+        "wall {wall:.2}s | {} completed ({:.0}/s) | peak outstanding {} across {clients} \
+         threads (blocking surface: {clients}) | {} shed retries | {} failed",
+        stats.completed,
+        stats.completed as f64 / wall,
+        stats.max_outstanding,
+        stats.shed_retries,
+        stats.failed
+    );
 }

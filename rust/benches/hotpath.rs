@@ -30,7 +30,9 @@ use lstm_ae_accel::server::{
 };
 use lstm_ae_accel::util::json::Json;
 use lstm_ae_accel::util::timer::{bench, bench_auto, black_box, BenchResult};
-use lstm_ae_accel::workload::trace::rotating_hot_poisson;
+use lstm_ae_accel::workload::trace::{
+    closed_loop_async, closed_loop_blocking, rotating_hot_poisson,
+};
 use lstm_ae_accel::workload::TelemetryGen;
 
 /// Accumulates results and flushes them as `BENCH_hotpath.json`.
@@ -361,6 +363,68 @@ fn main() {
     );
     rec.add_throughput("server closed-loop F32-D2 T=16 (512 windows)", 512.0, dt);
     srv.shutdown();
+
+    println!("\n## Async front: closed-loop blocking vs tickets (equal client threads)");
+    // The process-edge comparison the async front exists for: at the SAME
+    // client-thread count, the blocking driver can hold exactly one
+    // request in flight per thread (its thread parks on recv()), while
+    // the ticket driver holds 64 per thread through a CompletionSet. The
+    // acceptance bar (EXPERIMENTS.md §Perf): ≥ 4× the outstanding count
+    // without raising the shed rate — the queue is sized so neither
+    // driver sheds, and the `shed` field records it.
+    {
+        let clients = 4usize;
+        let per_client_outstanding = 64usize; // 64× the blocking driver
+        let total = 4096usize;
+        for asynchronous in [false, true] {
+            let mut registry = ModelRegistry::new();
+            registry.register(
+                "LSTM-AE-F32-D2",
+                Arc::new(QuantBackend::new(LstmAutoencoder::random(
+                    Topology::from_name("F32-D2").unwrap(),
+                    15,
+                ))),
+                ServerConfig {
+                    max_batch: 16,
+                    max_wait: std::time::Duration::from_micros(200),
+                    workers: 4,
+                    queue_capacity: 1024,
+                    threshold: 0.1,
+                    autoscale: None,
+                },
+            );
+            let models = vec!["LSTM-AE-F32-D2".to_string()];
+            let stats = if asynchronous {
+                closed_loop_async(&registry, &models, clients, per_client_outstanding, total, 16, 19)
+            } else {
+                closed_loop_blocking(&registry, &models, clients, total, 16, 19)
+            };
+            let lane_shed = registry.lane("F32-D2").map_or(0, |l| l.metrics().shed());
+            let wall = stats.wall.as_secs_f64().max(1e-9);
+            let name = format!(
+                "front closed-loop F32-D2 T=16 clients=4 {}",
+                if asynchronous { "async out=256" } else { "blocking out=4" }
+            );
+            println!(
+                "{name}: {} completed in {wall:.3}s ({:.0}/s) | peak outstanding {} | \
+                 shed {lane_shed}",
+                stats.completed,
+                stats.completed as f64 / wall,
+                stats.max_outstanding
+            );
+            rec.add_scalars(
+                &name,
+                &[
+                    ("outstanding", stats.max_outstanding as f64),
+                    ("shed", lane_shed as f64),
+                    ("completed", stats.completed as f64),
+                    ("throughput_per_s", stats.completed as f64 / wall),
+                    ("wall_s", wall),
+                ],
+            );
+            registry.shutdown();
+        }
+    }
 
     println!("\n## Autoscaler: static vs adaptive lanes, rotating hot model");
     // Two lanes over a deterministically throttled backend (1 ms floor

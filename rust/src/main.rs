@@ -19,6 +19,9 @@
 //!             ([--hot-frac 0.85] of traffic to the hot lane)
 //!             [--autoscale] metrics-driven per-lane scaling
 //!             ([--min-workers 1] [--max-workers 6] [--budget N] [--tick-ms 20])
+//!             [--async] closed-loop driver through the async ticket front:
+//!             a handful of client threads sustain thousands of outstanding
+//!             requests ([--clients 4] [--outstanding 1024])
 //!   checks                         run the paper-shape checks
 //! ```
 
@@ -42,7 +45,9 @@ use lstm_ae_accel::server::{
 };
 use lstm_ae_accel::util::cli::Args;
 use lstm_ae_accel::util::table::Table;
-use lstm_ae_accel::workload::trace::{merged_poisson, poisson_trace, rotating_hot_poisson};
+use lstm_ae_accel::workload::trace::{
+    closed_loop_async, merged_poisson, poisson_trace, rotating_hot_poisson,
+};
 use lstm_ae_accel::workload::TelemetryGen;
 use lstm_ae_accel::model::LstmAutoencoder;
 
@@ -487,6 +492,43 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             "autoscaler: {watched} lanes under control (tick {tick:?}{})",
             if budget > 0 { format!(", worker budget {budget}") } else { String::new() }
         );
+    }
+
+    if args.has("async") {
+        // Closed-loop driver through the async ticket front: each client
+        // thread keeps its share of `--outstanding` tickets in flight via
+        // a CompletionSet — the blocking surface would need one parked OS
+        // thread per outstanding request to do the same.
+        let clients = args.get_usize("clients", 4).max(1);
+        let outstanding = args.get_usize("outstanding", 1024);
+        let per_client = (outstanding / clients).max(1);
+        println!(
+            "fleet (async closed loop): {n} requests over {} lanes, {clients} client \
+             threads × {per_client} outstanding each (T={t}, mode {mode:?})",
+            models.len()
+        );
+        let stats = closed_loop_async(
+            &registry,
+            &models,
+            clients,
+            per_client,
+            n,
+            t,
+            seed.wrapping_add(80),
+        );
+        print!("{}", registry.fleet_report());
+        let wall = stats.wall.as_secs_f64().max(1e-9);
+        println!(
+            "wall {wall:.2}s | {} completed ({:.0}/s) | peak outstanding {} \
+             (vs {clients} for the blocking driver) | {} shed retries | {} failed",
+            stats.completed,
+            stats.completed as f64 / wall,
+            stats.max_outstanding,
+            stats.shed_retries,
+            stats.failed
+        );
+        registry.shutdown();
+        return Ok(());
     }
 
     // Mixed traffic: one independent Poisson stream per model at rate/N

@@ -25,8 +25,11 @@ pub(crate) fn run_batcher(
     metrics: Arc<ServerMetrics>,
 ) {
     let mut pending: Batch = Vec::with_capacity(cfg.max_batch);
-    // Meaningful only while `pending` is non-empty: arrival time of the
-    // open batch's first request.
+    // Meaningful only while `pending` is non-empty: *submit* time of the
+    // open batch's first request. Anchoring the flush deadline at submit
+    // (not dequeue) means time spent waiting in the admission queue
+    // counts against `max_wait` — a request that already waited there
+    // flushes immediately instead of paying queue-wait + max_wait.
     let mut oldest = Instant::now();
     loop {
         if pending.is_empty() {
@@ -34,7 +37,7 @@ pub(crate) fn run_batcher(
             match rx.recv() {
                 Ok(Msg::Req(req)) => {
                     metrics.on_dequeue();
-                    oldest = Instant::now();
+                    oldest = req.submitted;
                     pending.push(req);
                     if pending.len() >= cfg.max_batch {
                         flush(&mut pending, &out);
@@ -46,6 +49,26 @@ pub(crate) fn run_batcher(
             // A batch is open: wait only for the rest of its deadline.
             let remaining = cfg.max_wait.saturating_sub(oldest.elapsed());
             if remaining.is_zero() {
+                // Deadline already spent — usually a request whose
+                // max_wait budget went to *queue* wait under backlog.
+                // Greedily absorb whatever else is already queued (up to
+                // max_batch) before flushing: under sustained overload
+                // every dequeued request is overdue, and flushing each
+                // one alone would collapse batching to singletons exactly
+                // when the throughput of big batches matters most.
+                while pending.len() < cfg.max_batch {
+                    match rx.try_recv() {
+                        Ok(Msg::Req(req)) => {
+                            metrics.on_dequeue();
+                            pending.push(req);
+                        }
+                        Ok(Msg::Shutdown) => {
+                            flush(&mut pending, &out);
+                            return;
+                        }
+                        Err(_) => break,
+                    }
+                }
                 flush(&mut pending, &out);
                 continue;
             }
@@ -132,6 +155,71 @@ mod tests {
         let waited = sent.elapsed();
         assert_eq!(batch.len(), 1);
         assert!(waited < Duration::from_millis(40), "flush took {waited:?}");
+        tx.send(BatcherMsg::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn flush_deadline_anchors_at_submit_time_not_dequeue() {
+        // Regression guard: a request that sat in the admission queue
+        // past its whole `max_wait` budget must flush immediately at
+        // dequeue. The old behaviour re-anchored the deadline at dequeue
+        // (`oldest = Instant::now()`), silently granting such requests
+        // queue-wait + max_wait worst-case latency.
+        let cfg = ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(100),
+            ..Default::default()
+        };
+        let (tx, out_rx, h) = spawn_batcher(cfg);
+        let (r, _reply) = req(0); // `submitted` stamped now...
+        std::thread::sleep(Duration::from_millis(150)); // ...then it "waits in the queue"
+        let sent = Instant::now();
+        tx.send(BatcherMsg::Req(r)).unwrap();
+        let batch = batch_of(out_rx.recv().unwrap());
+        let waited = sent.elapsed();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            waited < Duration::from_millis(80),
+            "overdue request must flush at dequeue, not wait another max_wait ({waited:?})"
+        );
+        tx.send(BatcherMsg::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn overdue_backlog_coalesces_instead_of_flushing_singletons() {
+        // Under backlog every dequeued request is already past its
+        // submit-anchored deadline; the batcher must absorb the queued
+        // requests behind it into one batch, not flush one singleton per
+        // overdue request (which would kill batching exactly under load).
+        let cfg = ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(20),
+            ..Default::default()
+        };
+        let (tx, rx) = channel::<BatcherMsg>();
+        // Rendezvous dispatch: the batcher parks in flush until this test
+        // accepts the batch, so the backlog below is queued before the
+        // batcher can look at it.
+        let (out_tx, out_rx) = sync_channel::<WorkerMsg>(0);
+        let metrics = Arc::new(ServerMetrics::new());
+        let h = std::thread::spawn(move || run_batcher(rx, out_tx, cfg, metrics));
+        let (r1, _k1) = req(1);
+        let (r2, _k2) = req(2);
+        let (r3, _k3) = req(3);
+        std::thread::sleep(Duration::from_millis(40)); // all three overdue
+        tx.send(BatcherMsg::Req(r1)).unwrap();
+        tx.send(BatcherMsg::Req(r2)).unwrap();
+        tx.send(BatcherMsg::Req(r3)).unwrap();
+        // All three are queued before the first batch is accepted, so at
+        // most the head request can end up alone — the rest must coalesce.
+        let mut sizes = vec![batch_of(out_rx.recv().unwrap()).len()];
+        while sizes.iter().sum::<usize>() < 3 {
+            sizes.push(batch_of(out_rx.recv().unwrap()).len());
+        }
+        assert_eq!(sizes.iter().sum::<usize>(), 3);
+        assert!(sizes.len() <= 2, "overdue backlog must coalesce, got {sizes:?}");
         tx.send(BatcherMsg::Shutdown).unwrap();
         h.join().unwrap();
     }

@@ -37,9 +37,10 @@ use crate::model::{LstmAutoencoder, Topology};
 use crate::util::table::Table;
 use crate::workload::Window;
 
+use super::front::CompletionRouter;
 use super::{
     batcher, Autoscaler, AutoscalePolicy, Backend, BatcherMsg, QuantBackend, Request, Response,
-    ServerConfig, ServerMetrics, WorkerMsg,
+    ServerConfig, ServerMetrics, Ticket, WorkerMsg,
 };
 
 /// Why a submission was rejected at admission.
@@ -184,6 +185,9 @@ pub struct Lane {
     accepting: RwLock<bool>,
     batcher: Mutex<Option<JoinHandle<()>>>,
     workers: WorkerSet,
+    /// The async front's completion router: one thread multiplexing every
+    /// [`Lane::submit_async`] reply on this lane (see [`super::front`]).
+    front: CompletionRouter,
     /// Autoscaling decisions applied to this lane (scale-ups, downs).
     scale_ups: AtomicU64,
     scale_downs: AtomicU64,
@@ -229,6 +233,7 @@ impl Lane {
         for _ in 0..cfg.workers {
             workers.spawn_worker();
         }
+        let front = CompletionRouter::start(&name);
         Lane {
             name,
             tx,
@@ -240,6 +245,7 @@ impl Lane {
             accepting: RwLock::new(true),
             batcher: Mutex::new(Some(batcher)),
             workers,
+            front,
             scale_ups: AtomicU64::new(0),
             scale_downs: AtomicU64::new(0),
         }
@@ -318,36 +324,95 @@ impl Lane {
         }
     }
 
-    /// Submit a window. Fails fast with [`SubmitError::Overloaded`] when
-    /// the bounded admission queue is full (the load-shedding path) and
-    /// [`SubmitError::Closed`] after shutdown — never blocks, never
-    /// queues unboundedly.
-    pub fn try_submit(&self, window: Window) -> Result<Receiver<Response>, SubmitError> {
+    /// The shared admission path of both submit surfaces: gate check,
+    /// bounded enqueue, and the accounting that makes every call land in
+    /// exactly one of `submitted` / `shed` / `rejected_closed`.
+    fn submit_inner(
+        &self,
+        id: u64,
+        window: Window,
+        reply: std::sync::mpsc::Sender<Response>,
+    ) -> Result<(), SubmitError> {
         // Held across the send so a concurrent shutdown cannot slot its
         // `Shutdown` message between our gate check and our enqueue.
         // `try_read`, not `read`: while shutdown holds the write lock
         // (draining a backlogged queue), submit must fail fast as Closed,
         // not stall for the drain.
         let Ok(accepting) = self.accepting.try_read() else {
+            self.metrics.on_rejected_closed();
             return Err(SubmitError::Closed);
         };
         if !*accepting {
+            self.metrics.on_rejected_closed();
             return Err(SubmitError::Closed);
         }
-        let (reply, rx) = channel();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = Request { id, window, submitted: Instant::now(), reply };
         match self.tx.try_send(BatcherMsg::Req(req)) {
             Ok(()) => {
                 self.metrics.on_submit();
-                Ok(rx)
+                Ok(())
             }
             Err(TrySendError::Full(_)) => {
                 self.metrics.on_shed();
                 Err(SubmitError::Overloaded)
             }
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+            Err(TrySendError::Disconnected(_)) => {
+                // Teardown race (batcher already gone): count it, so
+                // requests turned away here don't vanish from the
+                // submitted/shed accounting.
+                self.metrics.on_rejected_closed();
+                Err(SubmitError::Closed)
+            }
         }
+    }
+
+    /// Submit a window. Fails fast with [`SubmitError::Overloaded`] when
+    /// the bounded admission queue is full (the load-shedding path) and
+    /// [`SubmitError::Closed`] after shutdown — never blocks, never
+    /// queues unboundedly.
+    pub fn try_submit(&self, window: Window) -> Result<Receiver<Response>, SubmitError> {
+        let (reply, rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.submit_inner(id, window, reply)?;
+        Ok(rx)
+    }
+
+    /// Nonblocking submit: returns a [`Ticket`] immediately instead of a
+    /// `Receiver` the caller must park a thread on. Admission, batching,
+    /// backpressure, and shedding are byte-for-byte the blocking path
+    /// ([`Lane::try_submit`]) — a shed submission fails `Overloaded`
+    /// before any ticket is issued — but completion is delivered by the
+    /// lane's single router thread into the ticket's shared slot, so one
+    /// client thread can hold thousands of requests in flight. See
+    /// [`super::front`] for the ticket lifecycle.
+    pub fn submit_async(&self, window: Window) -> Result<Ticket, SubmitError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        // Register the completion slot before the request can enter the
+        // queue, so the reply can never beat the registration.
+        let (ticket, reply) = match self.front.issue(id) {
+            Ok(pair) => pair,
+            Err(e) => {
+                // Router already shut down: same accounting as the
+                // gate-closed path.
+                self.metrics.on_rejected_closed();
+                return Err(e);
+            }
+        };
+        match self.submit_inner(id, window, reply) {
+            Ok(()) => Ok(ticket),
+            Err(e) => {
+                self.front.revoke(id);
+                Err(e)
+            }
+        }
+    }
+
+    /// Async submissions currently in flight through the completion
+    /// router (accepted via [`Lane::submit_async`], reply not yet
+    /// delivered). Dropped tickets still count until their response
+    /// arrives — the router forgets a slot at delivery, never leaks it.
+    pub fn async_inflight(&self) -> usize {
+        self.front.inflight()
     }
 
     /// Submit and wait. A lane torn down while the request is in flight
@@ -377,12 +442,36 @@ impl Lane {
         // disconnects the batch queue; every worker drains what was
         // dispatched and exits.
         self.workers.shutdown();
+        // Workers drained ⇒ every async reply is already in the router's
+        // channel; the router routes them all, poisons any slot whose
+        // request died with a panicking worker, and exits.
+        self.front.shutdown();
     }
 }
 
 impl Drop for Lane {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+/// Decrements the lane's alive count on *any* worker exit — return,
+/// retirement, or a panic unwinding out of `Backend::score_batch`. Before
+/// this guard, a panicking backend left `alive` stuck high forever:
+/// `effective_workers` over-counted and the autoscaler kept sizing a
+/// phantom pool. Panic exits are additionally surfaced through the
+/// [`ServerMetrics::worker_panics`] counter.
+struct WorkerExitGuard {
+    alive: Arc<AtomicUsize>,
+    metrics: Arc<ServerMetrics>,
+}
+
+impl Drop for WorkerExitGuard {
+    fn drop(&mut self) {
+        self.alive.fetch_sub(1, Ordering::Relaxed);
+        if std::thread::panicking() {
+            self.metrics.on_worker_panic();
+        }
     }
 }
 
@@ -394,6 +483,7 @@ fn worker_loop(
     alive: Arc<AtomicUsize>,
     pending_retire: Arc<AtomicUsize>,
 ) {
+    let _exit = WorkerExitGuard { alive, metrics: metrics.clone() };
     loop {
         let wait_start = Instant::now();
         let msg = {
@@ -432,7 +522,6 @@ fn worker_loop(
             let _ = req.reply.send(resp);
         }
     }
-    alive.fetch_sub(1, Ordering::Relaxed);
 }
 
 /// A registry of concurrently-served models: one [`Lane`] per model name,
@@ -502,6 +591,16 @@ impl ModelRegistry {
         self.lane(model)
             .ok_or_else(|| SubmitError::UnknownModel(model.to_string()))?
             .try_submit(window)
+    }
+
+    /// Nonblocking submit to a model's lane through the async front (see
+    /// [`Lane::submit_async`]): returns a [`Ticket`] immediately; combine
+    /// tickets across lanes with a [`super::CompletionSet`] for
+    /// first-of-N fan-in.
+    pub fn submit_async(&self, model: &str, window: Window) -> Result<Ticket, SubmitError> {
+        self.lane(model)
+            .ok_or_else(|| SubmitError::UnknownModel(model.to_string()))?
+            .submit_async(window)
     }
 
     /// Submit to a model's lane and wait for the response.
@@ -736,6 +835,157 @@ mod tests {
         // And the lane accepts fresh traffic again.
         assert!(lane.score_blocking(tiny_window()).is_ok());
         lane.shutdown();
+    }
+
+    /// Panics when handed the poison marker window (`data[0][0] == 666`),
+    /// scores 0.0 otherwise — the injected backend failure for the
+    /// worker-panic regression tests.
+    struct PanickingBackend;
+
+    impl Backend for PanickingBackend {
+        fn name(&self) -> String {
+            "panicking".into()
+        }
+
+        fn score_batch(&self, windows: &[&Window]) -> Vec<f64> {
+            if windows.iter().any(|w| w.data[0][0] == 666.0) {
+                panic!("injected backend failure (expected by the worker-panic tests)");
+            }
+            vec![0.0; windows.len()]
+        }
+    }
+
+    fn poison_window() -> Window {
+        Window { data: vec![vec![666.0f32]], anomaly: None }
+    }
+
+    /// Spin until `cond` holds or ~5 s elapse (worker exit and metric
+    /// updates land asynchronously with the test thread).
+    fn wait_for(mut cond: impl FnMut() -> bool) -> bool {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !cond() {
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        true
+    }
+
+    #[test]
+    fn worker_panic_decrements_alive_and_is_counted() {
+        // Regression guard: a backend panic used to unwind worker_loop
+        // past its alive-count decrement, so effective_workers
+        // over-counted forever and the autoscaler sized a phantom pool.
+        let cfg = ServerConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(1),
+            workers: 2,
+            queue_capacity: 64,
+            threshold: 1.0,
+            autoscale: None,
+        };
+        let lane = Lane::start("panicky", Arc::new(PanickingBackend), cfg);
+        assert_eq!(lane.workers(), 2);
+        let rx = lane.try_submit(poison_window()).expect("admitted");
+        // The panicking worker dies without replying; its requests are
+        // dropped, so the blocking receiver errors rather than hanging.
+        assert!(rx.recv().is_err(), "poisoned request never gets a response");
+        assert!(
+            wait_for(|| lane.workers() == 1 && lane.metrics().worker_panics() == 1),
+            "panicked worker must leave the alive count and be counted \
+             (workers {}, panics {})",
+            lane.workers(),
+            lane.metrics().worker_panics(),
+        );
+        // The surviving worker keeps the lane serving.
+        let r = lane.score_blocking(tiny_window()).expect("lane survives a worker panic");
+        assert_eq!(r.score, 0.0);
+        lane.shutdown();
+        assert_eq!(lane.metrics().worker_panics(), 1);
+    }
+
+    #[test]
+    fn admission_accounting_conserves_across_shed_drain_and_shutdown() {
+        // Every submit call lands in exactly one of submitted / shed /
+        // rejected_closed, and after a full drain submitted == completed
+        // (conservation: nothing vanishes, not even during teardown).
+        let (gate_tx, gate_rx) = channel::<()>();
+        let backend = Arc::new(GatedBackend { gate: Mutex::new(gate_rx) });
+        let cfg = ServerConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(1),
+            workers: 1,
+            queue_capacity: 2,
+            threshold: 1.0,
+            autoscale: None,
+        };
+        let lane = Lane::start("conserve", backend, cfg);
+        let attempts = 16u64;
+        let mut accepted = Vec::new();
+        let mut shed = 0u64;
+        for _ in 0..attempts {
+            match lane.try_submit(tiny_window()) {
+                Ok(rx) => accepted.push(rx),
+                Err(SubmitError::Overloaded) => shed += 1,
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert_eq!(lane.metrics().rejected_closed(), 0, "no teardown yet");
+        drop(gate_tx);
+        for rx in &accepted {
+            rx.recv().expect("accepted work completes");
+        }
+        lane.shutdown();
+        let closed_attempts = 5u64;
+        for _ in 0..closed_attempts {
+            assert_eq!(lane.try_submit(tiny_window()).unwrap_err(), SubmitError::Closed);
+        }
+        let m = lane.metrics();
+        assert_eq!(m.submitted(), accepted.len() as u64);
+        assert_eq!(m.shed(), shed);
+        assert_eq!(
+            m.rejected_closed(),
+            closed_attempts,
+            "requests rejected during/after teardown must be counted, not vanish"
+        );
+        assert_eq!(
+            m.submitted() + m.shed() + m.rejected_closed(),
+            attempts + closed_attempts,
+            "every admission attempt lands in exactly one bucket"
+        );
+        assert_eq!(m.completed(), m.submitted(), "drained lane: in-flight is zero");
+    }
+
+    #[test]
+    fn async_submit_scores_like_blocking_and_clears_router_slots() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let backend = Arc::new(QuantBackend::new(LstmAutoencoder::random(topo.clone(), 3)));
+        let reference = LstmAutoencoder::random(topo, 3);
+        let lane = Lane::start("async", backend, ServerConfig::default());
+        let mut gen = TelemetryGen::new(32, 9);
+        let mut tickets = Vec::new();
+        let mut wants = Vec::new();
+        for _ in 0..12 {
+            let w = gen.benign_window(6);
+            wants.push(reference.score_quant(&w.data));
+            tickets.push(lane.submit_async(w).expect("admitted"));
+        }
+        assert!(lane.async_inflight() <= 12);
+        for (t, want) in tickets.iter().zip(&wants) {
+            let r = t.wait().expect("accepted async work completes");
+            assert_eq!(r.score.to_bits(), want.to_bits(), "async == sequential bits");
+            assert_eq!(r.id, t.id());
+        }
+        assert!(
+            wait_for(|| lane.async_inflight() == 0),
+            "delivered slots must leave the router map"
+        );
+        assert_eq!(lane.metrics().completed(), 12);
+        lane.shutdown();
+        // Post-shutdown async submits are counted Closed rejections.
+        assert_eq!(lane.submit_async(gen.benign_window(4)).unwrap_err(), SubmitError::Closed);
+        assert_eq!(lane.metrics().rejected_closed(), 1);
     }
 
     #[test]

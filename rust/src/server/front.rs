@@ -1,0 +1,552 @@
+//! The async submission front: nonblocking [`Ticket`]s over the lanes.
+//!
+//! The blocking surface ([`crate::server::Lane::try_submit`]) hands every
+//! caller a private `Receiver<Response>`; holding a thousand requests in
+//! flight therefore pins a thousand parked OS threads on `recv()` — the
+//! process-edge analogue of the idle silicon the paper's temporal
+//! pipeline exists to eliminate. This module replaces the parked thread
+//! per request with **one completion router thread per lane**:
+//!
+//! ```text
+//! client ── Lane::submit_async(window) ──► Ticket   (returns immediately)
+//!                 │ registers slot (id → shared state)
+//!                 ▼
+//!   admission ► batcher ► workers ──(shared completion channel)──►
+//!                                         [completion router thread]
+//!                                           id → slot lookup; fills the
+//!                                           slot, wakes waiters, runs the
+//!                                           registered callback, feeds
+//!                                           any attached CompletionSet
+//! ```
+//!
+//! All of a lane's async replies multiplex over a single channel (the
+//! worker hot path is unchanged — it still just sends a `Response`), the
+//! router owns the only parked thread, and a [`Ticket`] is plain shared
+//! slot state: [`Ticket::poll`] is a lock-and-look, [`Ticket::wait`] /
+//! [`Ticket::wait_timeout`] park on a condvar, [`Ticket::on_complete`]
+//! registers a callback the router invokes on delivery. A
+//! [`CompletionSet`] fans in tickets from any number of lanes for
+//! select-style "first of N" consumption — the primitive the closed-loop
+//! drivers (`fleet --async`, `workload::trace::closed_loop_async`) use to
+//! keep thousands of requests outstanding from a handful of threads.
+//!
+//! Semantics are deliberately identical to the blocking path everywhere
+//! else: admission, batching, backpressure, and shedding are the same
+//! code ([`SubmitError::Overloaded`] fails the submit before a ticket is
+//! issued), and scores stay bit-identical to `ExecMode::Sequential`
+//! (`tests/integration_front.rs` pins both down).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::{Response, SubmitError};
+
+/// What a completed ticket resolves to: the scored [`Response`], or
+/// [`SubmitError::Closed`] when the lane shut down before the request
+/// could be answered (only possible when a worker died mid-batch — a
+/// graceful shutdown drains accepted work).
+pub type Completion = Result<Response, SubmitError>;
+
+type Callback = Box<dyn FnOnce(Completion) + Send + 'static>;
+
+/// Hook installed by [`CompletionSet::add`]: on completion the router
+/// pushes `(key, outcome)` into the set's ready queue.
+struct SetHook {
+    key: u64,
+    set: Arc<SetShared>,
+}
+
+#[derive(Default)]
+struct TicketState {
+    outcome: Option<Completion>,
+    callback: Option<Callback>,
+    hook: Option<SetHook>,
+}
+
+/// The slot shared between a [`Ticket`] and its lane's completion
+/// router: outcome + condvar for waiters, plus the optional callback and
+/// completion-set hook consumed at delivery.
+struct TicketShared {
+    state: Mutex<TicketState>,
+    cond: Condvar,
+}
+
+impl TicketShared {
+    fn new() -> TicketShared {
+        TicketShared { state: Mutex::new(TicketState::default()), cond: Condvar::new() }
+    }
+
+    /// Resolve the slot. Called exactly once per ticket — by the router
+    /// on delivery, or by the router's exit drain with `Err(Closed)`.
+    fn complete(&self, outcome: Completion) {
+        let (callback, hook) = {
+            let mut st = self.state.lock().unwrap();
+            debug_assert!(st.outcome.is_none(), "a ticket completes exactly once");
+            st.outcome = Some(outcome.clone());
+            (st.callback.take(), st.hook.take())
+        };
+        self.cond.notify_all();
+        if let Some(cb) = callback {
+            cb(outcome.clone());
+        }
+        if let Some(h) = hook {
+            h.set.push(h.key, outcome);
+        }
+    }
+}
+
+/// A pending async submission: shared slot state filled by the lane's
+/// completion router, never a parked thread.
+///
+/// Obtained from [`crate::server::Lane::submit_async`] /
+/// [`crate::server::ModelRegistry::submit_async`] — a ticket exists only
+/// for *accepted* requests (shed submissions fail before one is issued),
+/// so under normal operation every ticket resolves to `Ok(Response)`.
+/// Redeem it any way you like:
+///
+/// - [`Ticket::poll`] — non-blocking check (returns a clone, so polling
+///   is repeatable);
+/// - [`Ticket::wait`] / [`Ticket::wait_timeout`] — park on the slot's
+///   condvar;
+/// - [`Ticket::on_complete`] — register a callback the router thread
+///   runs at delivery (fire-and-forget: it consumes the ticket and fires
+///   even if nothing else is held);
+/// - [`CompletionSet::add`] — fan in with tickets from other lanes.
+///
+/// Dropping an unredeemed ticket is free: the router still removes the
+/// slot when the response arrives (or at lane shutdown), so abandoned
+/// tickets never leak router slots or block shutdown —
+/// `tests/integration_front.rs` pins that down.
+pub struct Ticket {
+    id: u64,
+    /// Shared with the router — no per-submit allocation for the name.
+    lane: Arc<str>,
+    shared: Arc<TicketShared>,
+}
+
+impl Ticket {
+    /// The lane-local request id this ticket redeems (matches
+    /// [`Response::id`]).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Name of the lane the request was submitted to.
+    pub fn lane(&self) -> &str {
+        &self.lane
+    }
+
+    /// Non-blocking completion check: `None` while in flight, a clone of
+    /// the outcome once delivered (repeatable — polling never consumes).
+    pub fn poll(&self) -> Option<Completion> {
+        self.shared.state.lock().unwrap().outcome.clone()
+    }
+
+    /// Whether the router has delivered this ticket's outcome.
+    pub fn is_complete(&self) -> bool {
+        self.shared.state.lock().unwrap().outcome.is_some()
+    }
+
+    /// Block until the outcome is delivered.
+    ///
+    /// An accepted request is normally always answered (shutdown drains
+    /// accepted work), but a worker that panics mid-batch takes its
+    /// requests with it — those tickets resolve to `Err(Closed)` at lane
+    /// shutdown. Prefer [`Ticket::wait_timeout`] when the backend isn't
+    /// trusted.
+    pub fn wait(&self) -> Completion {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(o) = st.outcome.clone() {
+                return o;
+            }
+            st = self.shared.cond.wait(st).unwrap();
+        }
+    }
+
+    /// [`Ticket::wait`] with a deadline: `None` on timeout, with the
+    /// ticket still live and redeemable by any other means.
+    pub fn wait_timeout(&self, dur: Duration) -> Option<Completion> {
+        let deadline = Instant::now() + dur;
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(o) = st.outcome.clone() {
+                return Some(o);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g, _) = self.shared.cond.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+        }
+    }
+
+    /// Register a completion callback and detach. The router thread runs
+    /// `f` at delivery (so keep it cheap — it shares the thread with
+    /// every other completion on the lane); if the outcome already
+    /// arrived, `f` runs immediately on the calling thread. Consuming
+    /// `self` makes this fire-and-forget: the callback fires even though
+    /// the ticket itself is gone.
+    pub fn on_complete<F>(self, f: F)
+    where
+        F: FnOnce(Completion) + Send + 'static,
+    {
+        let mut st = self.shared.state.lock().unwrap();
+        match st.outcome.clone() {
+            Some(outcome) => {
+                drop(st);
+                f(outcome);
+            }
+            None => st.callback = Some(Box::new(f)),
+        }
+    }
+}
+
+/// Per-lane completion router: the single thread that multiplexes every
+/// async reply on the lane. Workers send each [`Response`] over one
+/// shared channel; the router looks the id up in the slot map, removes
+/// the entry, and resolves the ticket's shared state. Owned by the lane;
+/// [`CompletionRouter::shutdown`] runs after the worker pool has drained,
+/// so the router sees every in-flight reply before its channel
+/// disconnects, then poisons whatever is left (requests lost to a worker
+/// panic) with `Err(Closed)`.
+pub(crate) struct CompletionRouter {
+    /// Lane name, shared into every ticket (`Arc<str>`: the submit hot
+    /// path allocates no string per request).
+    name: Arc<str>,
+    /// Retained producer endpoint, cloned into each async submission's
+    /// `Request.reply`. Dropped (`None`) at shutdown so the router's
+    /// `recv` disconnects once every in-flight clone is gone. The lock
+    /// is written exactly once (shutdown) and otherwise uncontended next
+    /// to the lane's admission `sync_channel`, which already serializes
+    /// submitters.
+    tx: Mutex<Option<Sender<Response>>>,
+    slots: Arc<Mutex<HashMap<u64, Arc<TicketShared>>>>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl CompletionRouter {
+    pub(crate) fn start(lane: &str) -> CompletionRouter {
+        let (tx, rx) = channel::<Response>();
+        let slots: Arc<Mutex<HashMap<u64, Arc<TicketShared>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let thread_slots = slots.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("cpl:{lane}"))
+            .spawn(move || route(rx, thread_slots))
+            .expect("spawn completion router");
+        CompletionRouter {
+            name: Arc::from(lane),
+            tx: Mutex::new(Some(tx)),
+            slots,
+            handle: Mutex::new(Some(handle)),
+        }
+    }
+
+    /// Issue a ticket for request `id`: registers the slot (before the
+    /// request can possibly complete) and returns the ticket plus the
+    /// reply sender to submit with. Fails `Closed` after shutdown.
+    pub(crate) fn issue(&self, id: u64) -> Result<(Ticket, Sender<Response>), SubmitError> {
+        let guard = self.tx.lock().unwrap();
+        let Some(tx) = guard.as_ref() else {
+            return Err(SubmitError::Closed);
+        };
+        let shared = Arc::new(TicketShared::new());
+        self.slots.lock().unwrap().insert(id, shared.clone());
+        Ok((Ticket { id, lane: self.name.clone(), shared }, tx.clone()))
+    }
+
+    /// Remove a slot whose submission was rejected (shed or closed) —
+    /// the ticket was never handed out.
+    pub(crate) fn revoke(&self, id: u64) {
+        self.slots.lock().unwrap().remove(&id);
+    }
+
+    /// Async submissions currently awaiting delivery (registered slots).
+    pub(crate) fn inflight(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    /// Drop the retained sender and join the router thread. Call only
+    /// after the lane's workers have drained: the channel then holds
+    /// every outstanding reply, the router routes them all, poisons any
+    /// slot that never got one, and exits. Idempotent.
+    pub(crate) fn shutdown(&self) {
+        *self.tx.lock().unwrap() = None;
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn route(rx: Receiver<Response>, slots: Arc<Mutex<HashMap<u64, Arc<TicketShared>>>>) {
+    while let Ok(resp) = rx.recv() {
+        // Remove-then-complete outside the map lock: callbacks run on
+        // this thread and must not hold the slot map hostage.
+        let slot = slots.lock().unwrap().remove(&resp.id);
+        if let Some(slot) = slot {
+            slot.complete(Ok(resp));
+        }
+        // A missing slot means the submission was revoked after the
+        // worker had already picked it up — nothing waits on it.
+    }
+    // Every producer endpoint is gone (lane shutdown, workers joined):
+    // any slot still registered belongs to a request that died with a
+    // panicking worker. Poison them so waiters wake instead of hanging.
+    let orphaned: Vec<Arc<TicketShared>> =
+        slots.lock().unwrap().drain().map(|(_, s)| s).collect();
+    for slot in orphaned {
+        slot.complete(Err(SubmitError::Closed));
+    }
+}
+
+struct SetShared {
+    ready: Mutex<VecDeque<(u64, Completion)>>,
+    cond: Condvar,
+}
+
+impl SetShared {
+    fn push(&self, key: u64, outcome: Completion) {
+        self.ready.lock().unwrap().push_back((key, outcome));
+        self.cond.notify_all();
+    }
+}
+
+/// Select-style fan-in over tickets from any number of lanes: add each
+/// [`Ticket`] under a caller-chosen key, then reap completions in
+/// *delivery* order — "first of N lanes" — without polling and without a
+/// thread per ticket. The closed-loop drivers use one set per client
+/// thread to keep hundreds of requests outstanding each.
+///
+/// ```no_run
+/// use lstm_ae_accel::engine::ExecMode;
+/// use lstm_ae_accel::server::{CompletionSet, ModelRegistry};
+/// use lstm_ae_accel::workload::TelemetryGen;
+///
+/// let registry = ModelRegistry::paper_fleet(7, ExecMode::Auto, 2);
+/// let mut set = CompletionSet::new();
+/// for (key, model) in registry.models().enumerate() {
+///     let features = lstm_ae_accel::model::Topology::from_name(model).unwrap().features;
+///     let window = TelemetryGen::new(features, 3).benign_window(8);
+///     set.add(key as u64, registry.submit_async(model, window).unwrap());
+/// }
+/// // First of the four lanes to score wins; reap all four.
+/// while let Some((key, outcome)) = set.wait() {
+///     println!("lane {key}: score {:.6}", outcome.unwrap().score);
+/// }
+/// registry.shutdown();
+/// ```
+pub struct CompletionSet {
+    shared: Arc<SetShared>,
+    /// Tickets added minus completions reaped; [`CompletionSet::wait`]
+    /// returns `None` exactly when this hits zero.
+    outstanding: usize,
+}
+
+impl CompletionSet {
+    pub fn new() -> CompletionSet {
+        CompletionSet {
+            shared: Arc::new(SetShared {
+                ready: Mutex::new(VecDeque::new()),
+                cond: Condvar::new(),
+            }),
+            outstanding: 0,
+        }
+    }
+
+    /// Attach a ticket under `key` (not required to be unique — e.g. a
+    /// lane index shared by many tickets). Already-completed tickets are
+    /// immediately reapable.
+    pub fn add(&mut self, key: u64, ticket: Ticket) {
+        self.outstanding += 1;
+        let mut st = ticket.shared.state.lock().unwrap();
+        match st.outcome.clone() {
+            Some(outcome) => {
+                drop(st);
+                self.shared.push(key, outcome);
+            }
+            None => st.hook = Some(SetHook { key, set: self.shared.clone() }),
+        }
+    }
+
+    /// Tickets added but not yet reaped (completed-but-unreaped included).
+    pub fn pending(&self) -> usize {
+        self.outstanding
+    }
+
+    /// Non-blocking reap of the next delivered completion, if any.
+    pub fn try_next(&mut self) -> Option<(u64, Completion)> {
+        let item = self.shared.ready.lock().unwrap().pop_front();
+        if item.is_some() {
+            self.outstanding -= 1;
+        }
+        item
+    }
+
+    /// Reap the next completion in delivery order, blocking while the set
+    /// has outstanding tickets; `None` once every added ticket has been
+    /// reaped (so `while let Some(..) = set.wait()` drains the set).
+    pub fn wait(&mut self) -> Option<(u64, Completion)> {
+        if self.outstanding == 0 {
+            return None;
+        }
+        let mut q = self.shared.ready.lock().unwrap();
+        loop {
+            if let Some(item) = q.pop_front() {
+                self.outstanding -= 1;
+                return Some(item);
+            }
+            q = self.shared.cond.wait(q).unwrap();
+        }
+    }
+
+    /// [`CompletionSet::wait`] with a deadline: `None` on timeout *or*
+    /// when the set is empty — check [`CompletionSet::pending`] to tell
+    /// the two apart.
+    pub fn wait_timeout(&mut self, dur: Duration) -> Option<(u64, Completion)> {
+        if self.outstanding == 0 {
+            return None;
+        }
+        let deadline = Instant::now() + dur;
+        let mut q = self.shared.ready.lock().unwrap();
+        loop {
+            if let Some(item) = q.pop_front() {
+                self.outstanding -= 1;
+                return Some(item);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g, _) = self.shared.cond.wait_timeout(q, deadline - now).unwrap();
+            q = g;
+        }
+    }
+}
+
+impl Default for CompletionSet {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(id: u64, score: f64) -> Response {
+        Response {
+            id,
+            score,
+            is_anomaly: false,
+            queue_us: 1.0,
+            service_us: 1.0,
+            e2e_us: 2.0,
+        }
+    }
+
+    fn ticket(id: u64) -> (Ticket, Arc<TicketShared>) {
+        let shared = Arc::new(TicketShared::new());
+        (Ticket { id, lane: Arc::from("t"), shared: shared.clone() }, shared)
+    }
+
+    #[test]
+    fn poll_wait_and_timeout_observe_one_completion() {
+        let (t, slot) = ticket(3);
+        assert!(t.poll().is_none());
+        assert!(!t.is_complete());
+        assert!(t.wait_timeout(Duration::from_millis(5)).is_none(), "times out in flight");
+        slot.complete(Ok(resp(3, 0.25)));
+        // Polling is repeatable; wait returns instantly once complete.
+        for _ in 0..2 {
+            assert_eq!(t.poll().unwrap().unwrap().score, 0.25);
+        }
+        assert!(t.is_complete());
+        assert_eq!(t.wait().unwrap().score, 0.25);
+        assert_eq!(t.wait_timeout(Duration::from_millis(1)).unwrap().unwrap().id, 3);
+    }
+
+    #[test]
+    fn wait_parks_until_the_router_delivers() {
+        let (t, slot) = ticket(9);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            slot.complete(Ok(resp(9, 1.5)));
+        });
+        assert_eq!(t.wait().unwrap().score, 1.5);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn callback_fires_on_delivery_and_immediately_when_late() {
+        use std::sync::mpsc::channel;
+        // Registered before completion: fires at delivery.
+        let (t, slot) = ticket(1);
+        let (tx, rx) = channel();
+        t.on_complete(move |o| tx.send(o.unwrap().score).unwrap());
+        slot.complete(Ok(resp(1, 0.5)));
+        assert_eq!(rx.recv().unwrap(), 0.5);
+        // Registered after completion: fires right away, on the caller.
+        let (t, slot) = ticket(2);
+        slot.complete(Err(SubmitError::Closed));
+        let (tx, rx) = channel();
+        t.on_complete(move |o| tx.send(o.is_err()).unwrap());
+        assert!(rx.try_recv().unwrap(), "late registration must fire synchronously");
+    }
+
+    #[test]
+    fn completion_set_reaps_in_delivery_order_then_drains_to_none() {
+        let (ta, sa) = ticket(10);
+        let (tb, sb) = ticket(11);
+        let (tc, sc) = ticket(12);
+        sc.complete(Ok(resp(12, 3.0))); // completed before being added
+        let mut set = CompletionSet::new();
+        set.add(0, ta);
+        set.add(1, tb);
+        set.add(2, tc);
+        assert_eq!(set.pending(), 3);
+        // The pre-completed ticket is reapable without blocking.
+        let (k, o) = set.try_next().expect("c already delivered");
+        assert_eq!((k, o.unwrap().score), (2, 3.0));
+        assert!(set.try_next().is_none());
+        // b then a complete: delivery order, not insertion order.
+        sb.complete(Ok(resp(11, 2.0)));
+        assert_eq!(set.wait().unwrap().0, 1);
+        assert!(set.wait_timeout(Duration::from_millis(5)).is_none(), "a still in flight");
+        sa.complete(Ok(resp(10, 1.0)));
+        assert_eq!(set.wait().unwrap().0, 0);
+        assert_eq!(set.pending(), 0);
+        assert!(set.wait().is_none(), "drained set must not block");
+    }
+
+    #[test]
+    fn router_routes_by_id_poisons_orphans_and_forgets_revoked() {
+        let router = CompletionRouter::start("test");
+        let (accepted, tx) = router.issue(0).unwrap();
+        let (orphan, tx2) = router.issue(1).unwrap();
+        let (revoked, tx3) = router.issue(2).unwrap();
+        router.revoke(2);
+        assert_eq!(router.inflight(), 2);
+        tx.send(resp(0, 0.75)).unwrap();
+        assert_eq!(accepted.wait().unwrap().score, 0.75);
+        assert_eq!(router.inflight(), 1, "delivered slot is removed");
+        // Every sender clone must be gone before shutdown, or the router
+        // never sees its channel disconnect (in the lane, worker drain
+        // guarantees this). Then shutdown poisons the orphan; the
+        // revoked ticket stays unresolved forever — nothing holds it.
+        drop(tx);
+        drop(tx2);
+        drop(tx3);
+        router.shutdown();
+        assert_eq!(orphan.wait().unwrap_err(), SubmitError::Closed);
+        assert!(revoked.poll().is_none());
+        assert_eq!(router.inflight(), 0);
+        // issue() after shutdown fails Closed.
+        assert!(matches!(router.issue(3), Err(SubmitError::Closed)));
+        router.shutdown(); // idempotent
+    }
+}

@@ -15,6 +15,17 @@ pub struct ServerMetrics {
     submitted: AtomicU64,
     /// Submissions rejected at admission (bounded queue full).
     shed: AtomicU64,
+    /// Submissions rejected because the lane was shut down (or mid
+    /// teardown) — kept separate from `shed` so requests turned away
+    /// during teardown don't vanish from the accounting: every
+    /// `try_submit`/`submit_async` call lands in exactly one of
+    /// `submitted`, `shed`, or `rejected_closed`.
+    rejected_closed: AtomicU64,
+    /// Worker threads that died unwinding a backend panic. A panicked
+    /// worker decrements the lane's alive count via a drop guard, so the
+    /// autoscaler never sizes a phantom pool; this counter is the
+    /// operator-visible trace that it happened.
+    worker_panics: AtomicU64,
     completed: AtomicU64,
     anomalies: AtomicU64,
     batches: AtomicU64,
@@ -41,6 +52,8 @@ impl ServerMetrics {
         ServerMetrics {
             submitted: AtomicU64::new(0),
             shed: AtomicU64::new(0),
+            rejected_closed: AtomicU64::new(0),
+            worker_panics: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             anomalies: AtomicU64::new(0),
             batches: AtomicU64::new(0),
@@ -64,6 +77,16 @@ impl ServerMetrics {
     /// A submission was rejected at admission (queue full — load shed).
     pub fn on_shed(&self) {
         self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A submission was rejected because the lane is (or is going) down.
+    pub fn on_rejected_closed(&self) {
+        self.rejected_closed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A worker thread died unwinding a backend panic.
+    pub fn on_worker_panic(&self) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
     }
 
     /// The batcher popped one request out of the admission queue.
@@ -100,6 +123,18 @@ impl ServerMetrics {
 
     pub fn shed(&self) -> u64 {
         self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Submissions rejected with [`crate::server::SubmitError::Closed`]
+    /// (lane down or mid-teardown) — the third leg of the admission
+    /// accounting: calls = `submitted` + `shed` + `rejected_closed`.
+    pub fn rejected_closed(&self) -> u64 {
+        self.rejected_closed.load(Ordering::Relaxed)
+    }
+
+    /// Worker threads lost to backend panics over this lane's lifetime.
+    pub fn worker_panics(&self) -> u64 {
+        self.worker_panics.load(Ordering::Relaxed)
     }
 
     pub fn completed(&self) -> u64 {
@@ -169,11 +204,18 @@ impl ServerMetrics {
 
     pub fn report(&self) -> String {
         let (p50, p95, p99) = self.e2e_percentiles_us();
+        let mut extra = String::new();
+        if self.rejected_closed() > 0 {
+            extra.push_str(&format!(" | {} rejected (closed)", self.rejected_closed()));
+        }
+        if self.worker_panics() > 0 {
+            extra.push_str(&format!(" | {} worker panics", self.worker_panics()));
+        }
         format!(
             "requests: {} submitted, {} shed, {} completed, {} flagged | \
              batches: mean size {:.2}, max {} | \
              e2e latency µs: p50 {:.0}, p95 {:.0}, p99 {:.0} | \
-             throughput {:.0} rps",
+             throughput {:.0} rps{extra}",
             self.submitted(),
             self.shed(),
             self.completed(),
@@ -242,6 +284,21 @@ mod tests {
         assert_eq!(m.queue_depth(), 0);
         m.on_submit();
         assert!(m.queue_depth() <= 1, "clamped reads must stay sane");
+    }
+
+    #[test]
+    fn closed_rejections_and_panics_are_counted() {
+        let m = ServerMetrics::new();
+        assert_eq!((m.rejected_closed(), m.worker_panics()), (0, 0));
+        assert!(!m.report().contains("rejected (closed)"));
+        m.on_rejected_closed();
+        m.on_rejected_closed();
+        m.on_worker_panic();
+        assert_eq!(m.rejected_closed(), 2);
+        assert_eq!(m.worker_panics(), 1);
+        let report = m.report();
+        assert!(report.contains("2 rejected (closed)"), "{report}");
+        assert!(report.contains("1 worker panics"), "{report}");
     }
 
     #[test]

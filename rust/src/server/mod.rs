@@ -20,6 +20,12 @@
 //!   admission queue (explicit load shedding instead of unbounded
 //!   buffering), worker pool, and metrics. [`AnomalyServer`] is the
 //!   single-model compatibility wrapper over one lane.
+//! - [`front`] — the async submission front: [`Lane::submit_async`]
+//!   returns a [`Ticket`] (poll / wait / callback) backed by one
+//!   completion-router thread per lane instead of a parked thread per
+//!   request, and a [`CompletionSet`] fans tickets from many lanes into
+//!   select-style "first of N" consumption. The blocking surface is a
+//!   thin wrapper over the same machinery.
 //! - [`batcher`] — dynamic batching policy (size + deadline), the L3
 //!   serving analog of the paper's throughput scenario.
 //! - [`backend`] — scoring backends: the AOT PJRT artifact (real
@@ -45,11 +51,13 @@ pub mod autoscale;
 pub mod backend;
 pub mod batcher;
 pub mod fabric;
+pub mod front;
 pub mod metrics;
 
 pub use autoscale::{Autoscaler, AutoscalePolicy, ScaleDecision};
 pub use backend::{Backend, PjrtBackend, QuantBackend, ThrottledBackend};
 pub use fabric::{Lane, ModelRegistry, SubmitError};
+pub use front::{Completion, CompletionSet, Ticket};
 pub use metrics::ServerMetrics;
 
 use std::sync::mpsc::{Receiver, Sender};
@@ -154,6 +162,14 @@ impl AnomalyServer {
     /// the server has shut down ([`SubmitError::Closed`]).
     pub fn submit(&self, window: Window) -> Result<Receiver<Response>, SubmitError> {
         self.lane.try_submit(window)
+    }
+
+    /// Nonblocking submit through the async front (see
+    /// [`Lane::submit_async`]): same admission, batching, and shedding
+    /// as [`Self::submit`], but completion is a [`Ticket`] instead of a
+    /// parked `Receiver`.
+    pub fn submit_async(&self, window: Window) -> Result<Ticket, SubmitError> {
+        self.lane.submit_async(window)
     }
 
     /// Submit and wait (convenience for tests/examples).

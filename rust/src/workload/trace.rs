@@ -1,9 +1,14 @@
 //! Request traces for the serving experiments: Poisson (open-loop) and
-//! closed-loop arrival processes over telemetry windows, plus the
-//! multi-model merge used by the fleet driver.
+//! closed-loop arrival processes over telemetry windows, the multi-model
+//! merge used by the fleet driver, and the replay drivers that push those
+//! traces through a [`ModelRegistry`] — blocking or through the async
+//! ticket front ([`replay_async`], [`closed_loop_async`]).
+
+use std::time::{Duration, Instant};
 
 use super::{TelemetryGen, Window};
 use crate::model::Topology;
+use crate::server::{CompletionSet, ModelRegistry, SubmitError};
 use crate::util::rng::Xoshiro256;
 
 /// One timed request.
@@ -85,6 +90,9 @@ pub fn merged_poisson(
 /// Deterministic for a given `base_seed` (arrivals, model choices, and
 /// windows all derive from it). Windows for model `i` are drawn at that
 /// model's feature width.
+// Eight knobs because the trace IS the experiment configuration; callers
+// pass literals at the call site, so a params struct would only add noise.
+#[allow(clippy::too_many_arguments)]
 pub fn rotating_hot_poisson(
     models: &[Topology],
     base_seed: u64,
@@ -128,6 +136,270 @@ pub fn rotating_hot_poisson(
             (mi, TimedRequest { at_s: at, window, id: i as u64 })
         })
         .collect()
+}
+
+/// Outcome of an open-loop async replay ([`replay_async`]). Admission
+/// accounting is exhaustive: `accepted + shed + rejected` equals the
+/// trace length, and after the trailing drain `completed + failed`
+/// equals `accepted`.
+#[derive(Clone, Debug, Default)]
+pub struct AsyncReplayStats {
+    /// Requests the lanes admitted (a ticket was issued).
+    pub accepted: u64,
+    /// Requests shed at admission ([`SubmitError::Overloaded`]).
+    pub shed: u64,
+    /// Requests rejected for any other reason (lane closed mid-replay).
+    pub rejected: u64,
+    /// Tickets that resolved to a scored response.
+    pub completed: u64,
+    /// Tickets poisoned `Closed` (possible only after worker loss).
+    pub failed: u64,
+    /// Responses flagged as anomalies.
+    pub flagged: u64,
+    /// Peak simultaneously-outstanding tickets — the figure a blocking
+    /// replay cannot exceed without one parked thread per request.
+    pub max_outstanding: usize,
+}
+
+fn reap_replay(stats: &mut AsyncReplayStats, outcome: crate::server::Completion) {
+    match outcome {
+        Ok(r) => {
+            stats.completed += 1;
+            if r.is_anomaly {
+                stats.flagged += 1;
+            }
+        }
+        Err(_) => stats.failed += 1,
+    }
+}
+
+/// Replay a merged trace (from [`merged_poisson`] /
+/// [`rotating_hot_poisson`]) open-loop through the async ticket front:
+/// one submitter thread honors every arrival time and never blocks on a
+/// response — completions drain opportunistically between arrivals
+/// through a [`CompletionSet`] and fully at the end. `models[i]` names
+/// the lane for model index `i` in the trace.
+///
+/// This is the process-edge analogue of the paper's always-busy pipeline
+/// stages: with the blocking surface, an open-loop replay needs a parked
+/// thread per in-flight request to keep submitting on time; through
+/// tickets the submitter alone sustains the entire backlog
+/// (`max_outstanding` reports how deep it got).
+pub fn replay_async(
+    registry: &ModelRegistry,
+    models: &[String],
+    trace: Vec<(usize, TimedRequest)>,
+) -> AsyncReplayStats {
+    assert!(!models.is_empty(), "replay_async needs at least one model");
+    let start = Instant::now();
+    let mut set = CompletionSet::new();
+    let mut stats = AsyncReplayStats::default();
+    for (mi, req) in trace {
+        let target = Duration::from_secs_f64(req.at_s);
+        if let Some(sleep) = target.checked_sub(start.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        // Open loop: drain whatever has completed, without blocking.
+        while let Some((_, outcome)) = set.try_next() {
+            reap_replay(&mut stats, outcome);
+        }
+        match registry.submit_async(&models[mi], req.window) {
+            Ok(ticket) => {
+                stats.accepted += 1;
+                set.add(mi as u64, ticket);
+                stats.max_outstanding = stats.max_outstanding.max(set.pending());
+            }
+            Err(SubmitError::Overloaded) => stats.shed += 1,
+            Err(_) => stats.rejected += 1,
+        }
+    }
+    while let Some((_, outcome)) = set.wait() {
+        reap_replay(&mut stats, outcome);
+    }
+    stats
+}
+
+/// Outcome of a closed-loop driver run ([`closed_loop_blocking`] /
+/// [`closed_loop_async`]).
+#[derive(Clone, Debug, Default)]
+pub struct ClosedLoopStats {
+    /// Requests that completed with a scored response.
+    pub completed: u64,
+    /// Tickets poisoned `Closed` (possible only after worker loss).
+    pub failed: u64,
+    /// Overloaded rejections the driver absorbed by backing off and
+    /// retrying (closed loop: shed work is re-offered, not lost).
+    pub shed_retries: u64,
+    /// Peak simultaneously-outstanding requests, summed across client
+    /// threads: `clients` for the blocking driver, up to
+    /// `clients × outstanding_per_client` for the async one.
+    pub max_outstanding: usize,
+    /// Wall-clock time of the whole run.
+    pub wall: Duration,
+}
+
+/// Per-client telemetry generators, one per model, deterministically
+/// seeded so driver runs are reproducible. The drivers draw windows at
+/// each model's feature width, so `models` must be canonical topology
+/// names (the [`ModelRegistry::paper_fleet`] convention) — a name the
+/// topology table doesn't know would silently generate wrong-width
+/// windows, so it panics instead.
+fn client_gens(models: &[String], client: usize, base_seed: u64) -> Vec<TelemetryGen> {
+    models
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            let features = Topology::from_name(m).map(|t| t.features).unwrap_or_else(|_| {
+                panic!(
+                    "closed-loop drivers need canonical topology lane names \
+                     (to size windows): unknown model {m:?}"
+                )
+            });
+            TelemetryGen::new(features, base_seed + (client * 131 + i) as u64)
+        })
+        .collect()
+}
+
+/// Closed-loop **blocking** driver: `clients` threads round-robin
+/// benign windows across `models` (canonical topology names), each
+/// holding exactly one request in flight (`score_blocking`), serving
+/// exactly `total` requests split evenly across threads (remainder to
+/// the first ones). The baseline the async driver is compared against
+/// at equal client-thread count.
+pub fn closed_loop_blocking(
+    registry: &ModelRegistry,
+    models: &[String],
+    clients: usize,
+    total: usize,
+    t: usize,
+    base_seed: u64,
+) -> ClosedLoopStats {
+    assert!(!models.is_empty(), "closed_loop_blocking needs at least one model");
+    let clients = clients.max(1);
+    // First `total % clients` threads take one extra request, so the run
+    // serves exactly `total` — no silently dropped remainder.
+    let (base, extra) = ((total / clients) as u64, total % clients);
+    let start = Instant::now();
+    let mut stats = ClosedLoopStats::default();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                s.spawn(move || {
+                    let quota = base + u64::from(c < extra);
+                    let mut gens = client_gens(models, c, base_seed);
+                    let (mut completed, mut shed) = (0u64, 0u64);
+                    for k in 0..quota as usize {
+                        let mi = (c + k) % models.len();
+                        loop {
+                            let w = gens[mi].benign_window(t);
+                            match registry.score_blocking(&models[mi], w) {
+                                Ok(_) => {
+                                    completed += 1;
+                                    break;
+                                }
+                                Err(SubmitError::Overloaded) => {
+                                    shed += 1;
+                                    std::thread::sleep(Duration::from_micros(200));
+                                }
+                                Err(e) => panic!("closed-loop submit: {e}"),
+                            }
+                        }
+                    }
+                    (completed, 0u64, shed, 1usize)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (c, f, sh, mo) = h.join().expect("client thread");
+            stats.completed += c;
+            stats.failed += f;
+            stats.shed_retries += sh;
+            stats.max_outstanding += mo;
+        }
+    });
+    stats.wall = start.elapsed();
+    stats
+}
+
+/// Closed-loop **async** driver: `clients` threads, each keeping up to
+/// `outstanding_per_client` tickets in flight through a
+/// [`CompletionSet`] (submit until the target is reached, reap one,
+/// submit again), serving exactly `total` requests split evenly across
+/// threads (remainder to the first ones). The same thread count as
+/// [`closed_loop_blocking`] therefore sustains
+/// `outstanding_per_client ×` the outstanding work — the fleet-scale
+/// property `fleet --async` demonstrates and `benches/hotpath.rs`
+/// tracks.
+pub fn closed_loop_async(
+    registry: &ModelRegistry,
+    models: &[String],
+    clients: usize,
+    outstanding_per_client: usize,
+    total: usize,
+    t: usize,
+    base_seed: u64,
+) -> ClosedLoopStats {
+    assert!(!models.is_empty(), "closed_loop_async needs at least one model");
+    let clients = clients.max(1);
+    let target = outstanding_per_client.max(1);
+    // First `total % clients` threads take one extra request, so the run
+    // serves exactly `total` — no silently dropped remainder.
+    let (base, extra) = ((total / clients) as u64, total % clients);
+    let start = Instant::now();
+    let mut stats = ClosedLoopStats::default();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                s.spawn(move || {
+                    let quota = base + u64::from(c < extra);
+                    let mut gens = client_gens(models, c, base_seed);
+                    let mut set = CompletionSet::new();
+                    let (mut submitted, mut completed, mut failed, mut shed) =
+                        (0u64, 0u64, 0u64, 0u64);
+                    let mut max_out = 0usize;
+                    let mut k = 0usize;
+                    while completed + failed < quota {
+                        while set.pending() < target && submitted < quota {
+                            let mi = (c + k) % models.len();
+                            let w = gens[mi].benign_window(t);
+                            match registry.submit_async(&models[mi], w) {
+                                Ok(ticket) => {
+                                    set.add(mi as u64, ticket);
+                                    submitted += 1;
+                                    k += 1;
+                                    max_out = max_out.max(set.pending());
+                                }
+                                Err(SubmitError::Overloaded) => {
+                                    // Back off into reaping: completions
+                                    // free queue slots.
+                                    shed += 1;
+                                    break;
+                                }
+                                Err(e) => panic!("closed-loop submit: {e}"),
+                            }
+                        }
+                        match set.wait() {
+                            Some((_, Ok(_))) => completed += 1,
+                            Some((_, Err(_))) => failed += 1,
+                            // Nothing in flight (every submit shed):
+                            // brief backoff before re-offering.
+                            None => std::thread::sleep(Duration::from_micros(200)),
+                        }
+                    }
+                    (completed, failed, shed, max_out)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (c, f, sh, mo) = h.join().expect("client thread");
+            stats.completed += c;
+            stats.failed += f;
+            stats.shed_retries += sh;
+            stats.max_outstanding += mo;
+        }
+    });
+    stats.wall = start.elapsed();
+    stats
 }
 
 #[cfg(test)]
@@ -214,5 +486,54 @@ mod tests {
         // total_n below the model count must not produce empty lanes.
         let merged = merged_poisson(&models, 1, 100.0, 1, 2, 0.0);
         assert_eq!(merged.len(), models.len());
+    }
+
+    fn one_lane_registry() -> (ModelRegistry, Vec<String>) {
+        use crate::model::LstmAutoencoder;
+        use crate::server::{QuantBackend, ServerConfig};
+        use std::sync::Arc;
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let mut reg = ModelRegistry::new();
+        reg.register(
+            &topo.name,
+            Arc::new(QuantBackend::new(LstmAutoencoder::random(topo.clone(), 5))),
+            ServerConfig::default(),
+        );
+        (reg, vec![topo.name])
+    }
+
+    #[test]
+    fn replay_async_accounts_for_every_trace_entry() {
+        let (reg, models) = one_lane_registry();
+        let mut gen = TelemetryGen::new(32, 7);
+        let trace: Vec<(usize, TimedRequest)> =
+            poisson_trace(&mut gen, 11, 5000.0, 60, 4, 0.2)
+                .into_iter()
+                .map(|r| (0usize, r))
+                .collect();
+        let n = trace.len() as u64;
+        let stats = replay_async(&reg, &models, trace);
+        assert_eq!(stats.accepted + stats.shed + stats.rejected, n);
+        assert_eq!(stats.completed + stats.failed, stats.accepted);
+        assert_eq!(stats.failed, 0, "healthy lane: every accepted ticket completes");
+        assert!(stats.max_outstanding >= 1);
+        reg.shutdown();
+    }
+
+    #[test]
+    fn closed_loop_drivers_complete_their_quota() {
+        let (reg, models) = one_lane_registry();
+        // 41 over 2 clients: the odd request must be served, not dropped.
+        let blocking = closed_loop_blocking(&reg, &models, 2, 41, 4, 3);
+        assert_eq!(blocking.completed, 41, "remainder requests are served");
+        assert_eq!(blocking.max_outstanding, 2, "one in flight per client");
+        let async_stats = closed_loop_async(&reg, &models, 2, 8, 41, 4, 3);
+        assert_eq!(async_stats.completed, 41, "remainder requests are served");
+        assert_eq!(async_stats.failed, 0);
+        assert!(
+            async_stats.max_outstanding > blocking.max_outstanding,
+            "tickets must hold more in flight than one-per-thread"
+        );
+        reg.shutdown();
     }
 }

@@ -1,0 +1,391 @@
+//! Integration: the async submission front — tickets are bit-identical
+//! to `ExecMode::Sequential` across all four paper topologies, shed and
+//! backpressure semantics are unchanged from the blocking surface,
+//! dropped tickets leak nothing, poisoned tickets wake instead of
+//! hanging, and the closed-loop ticket driver sustains ≥ 4× the
+//! outstanding work of the blocking driver at equal client-thread count
+//! without shedding.
+
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use lstm_ae_accel::engine::ExecMode;
+use lstm_ae_accel::model::{LstmAutoencoder, Topology};
+use lstm_ae_accel::server::{
+    Backend, CompletionSet, ModelRegistry, QuantBackend, ServerConfig, SubmitError,
+};
+use lstm_ae_accel::workload::trace::{
+    closed_loop_async, closed_loop_blocking, merged_poisson, replay_async,
+};
+use lstm_ae_accel::workload::{TelemetryGen, Window};
+
+/// Registry over the four paper models plus per-model reference scorers
+/// built from the same seeds — the reference path is pure
+/// `ExecMode::Sequential` arithmetic (`score_quant`), so any ticket can
+/// be checked for bit-identity.
+fn paper_registry_with_references(
+) -> (ModelRegistry, Vec<(String, LstmAutoencoder, TelemetryGen)>) {
+    let mut registry = ModelRegistry::new();
+    let mut refs = Vec::new();
+    for (i, topo) in Topology::paper_models().into_iter().enumerate() {
+        let seed = 300 + i as u64;
+        let backend = Arc::new(QuantBackend::with_options(
+            LstmAutoencoder::random(topo.clone(), seed),
+            ExecMode::Auto,
+            2,
+        ));
+        let cfg = ServerConfig {
+            queue_capacity: 4096,
+            ..ModelRegistry::paper_lane_config(&topo, 2)
+        };
+        registry.register(&topo.name, backend, cfg);
+        let reference = LstmAutoencoder::random(topo.clone(), seed);
+        let gen = TelemetryGen::new(topo.features, 400 + i as u64);
+        refs.push((topo.name, reference, gen));
+    }
+    (registry, refs)
+}
+
+fn wait_for(mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !cond() {
+        if Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    true
+}
+
+#[test]
+fn async_tickets_are_bit_identical_to_sequential_across_the_paper_fleet() {
+    let (registry, mut refs) = paper_registry_with_references();
+    // Mixed-length traffic across all four lanes, every redemption style
+    // in rotation: poll-spin, wait, wait_timeout, and a CompletionSet.
+    let mut tickets = Vec::new();
+    for round in 0..24usize {
+        for (mi, (name, reference, gen)) in refs.iter_mut().enumerate() {
+            let t = [4usize, 8, 8, 6, 1][(round + mi) % 5];
+            let w = gen.benign_window(t);
+            let want = reference.score_quant(&w.data);
+            let ticket = registry.submit_async(name, w).expect("queue sized for the test");
+            tickets.push((name.clone(), ticket, want));
+        }
+    }
+    let mut set = CompletionSet::new();
+    let mut set_wants = Vec::new();
+    for (i, (name, ticket, want)) in tickets.into_iter().enumerate() {
+        let got = match i % 4 {
+            0 => ticket.wait(),
+            1 => {
+                // Poll-spin (bounded): the nonblocking check eventually
+                // observes the completion the router delivered.
+                loop {
+                    if let Some(outcome) = ticket.poll() {
+                        break outcome;
+                    }
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+            2 => ticket
+                .wait_timeout(Duration::from_secs(30))
+                .expect("completes well inside the deadline"),
+            _ => {
+                set_wants.push(want);
+                set.add(set_wants.len() as u64 - 1, ticket);
+                continue;
+            }
+        };
+        let r = got.expect("accepted async work completes");
+        assert_eq!(
+            r.score.to_bits(),
+            want.to_bits(),
+            "{name}: async front must be bit-identical to sequential"
+        );
+    }
+    // The set fans the remaining quarter in, in delivery order.
+    while let Some((key, outcome)) = set.wait() {
+        let r = outcome.expect("accepted async work completes");
+        let want = set_wants[key as usize];
+        assert_eq!(r.score.to_bits(), want.to_bits(), "set-reaped ticket must match");
+    }
+    for (name, _, _) in &refs {
+        assert_eq!(registry.lane(name).unwrap().metrics().completed(), 24, "{name}");
+        assert!(
+            wait_for(|| registry.lane(name).unwrap().async_inflight() == 0),
+            "{name}: delivered slots must drain from the router"
+        );
+    }
+    registry.shutdown();
+}
+
+#[test]
+fn completion_set_fans_in_first_of_n_across_lanes() {
+    let (registry, mut refs) = paper_registry_with_references();
+    let mut set = CompletionSet::new();
+    let mut wants = Vec::new();
+    for (mi, (name, reference, gen)) in refs.iter_mut().enumerate() {
+        let w = gen.benign_window(6);
+        wants.push(reference.score_quant(&w.data));
+        set.add(mi as u64, registry.submit_async(name, w).expect("admitted"));
+    }
+    assert_eq!(set.pending(), refs.len());
+    // "First of N lanes": completions arrive in whatever order the lanes
+    // finish; every lane shows up exactly once and bits match per key.
+    let mut seen = vec![false; refs.len()];
+    while let Some((key, outcome)) = set.wait() {
+        let r = outcome.expect("accepted work completes");
+        assert!(!seen[key as usize], "each lane completes once");
+        seen[key as usize] = true;
+        assert_eq!(r.score.to_bits(), wants[key as usize].to_bits());
+    }
+    assert!(seen.iter().all(|&s| s), "all four lanes fan in");
+    assert_eq!(set.pending(), 0);
+    registry.shutdown();
+}
+
+/// Backend whose scoring blocks until the test drops the gate sender —
+/// makes queue-full conditions deterministic.
+struct GatedBackend {
+    gate: Mutex<Receiver<()>>,
+}
+
+impl Backend for GatedBackend {
+    fn name(&self) -> String {
+        "gated".into()
+    }
+
+    fn score_batch(&self, windows: &[&Window]) -> Vec<f64> {
+        let _ = self.gate.lock().unwrap().recv();
+        vec![0.0; windows.len()]
+    }
+}
+
+fn tiny_window() -> Window {
+    Window { data: vec![vec![0.0f32]], anomaly: None }
+}
+
+#[test]
+fn async_shed_and_backpressure_semantics_match_blocking() {
+    // Same stalled-backend setup as the blocking shed test in
+    // server/fabric.rs: bounded queues fill behind a gated worker, and
+    // the async surface must shed with Overloaded exactly where the
+    // blocking one does — before any ticket is issued — while accepted
+    // tickets survive the overload and complete after release.
+    let (gate_tx, gate_rx) = channel::<()>();
+    let backend = Arc::new(GatedBackend { gate: Mutex::new(gate_rx) });
+    let mut registry = ModelRegistry::new();
+    let cfg = ServerConfig {
+        max_batch: 1,
+        max_wait: Duration::from_micros(1),
+        workers: 1,
+        queue_capacity: 2,
+        threshold: 1.0,
+        autoscale: None,
+    };
+    registry.register("gated", backend, cfg);
+    let lane = registry.lane("gated").unwrap();
+    let attempts = 32u64;
+    let mut tickets = Vec::new();
+    let mut rxs = Vec::new();
+    let mut shed = 0u64;
+    for i in 0..attempts {
+        // Interleave the two surfaces: both feed the same bounded queue.
+        if i % 2 == 0 {
+            match registry.submit_async("gated", tiny_window()) {
+                Ok(t) => tickets.push(t),
+                Err(SubmitError::Overloaded) => shed += 1,
+                Err(e) => panic!("unexpected {e}"),
+            }
+        } else {
+            match registry.submit("gated", tiny_window()) {
+                Ok(rx) => rxs.push(rx),
+                Err(SubmitError::Overloaded) => shed += 1,
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+    }
+    let m = lane.metrics();
+    assert!(shed > 0, "bounded queues must shed under a stalled backend");
+    assert!(!tickets.is_empty());
+    assert_eq!(m.submitted() + m.shed() + m.rejected_closed(), attempts);
+    assert_eq!(m.shed(), shed);
+    assert_eq!(m.rejected_closed(), 0);
+    let inflight_before = lane.async_inflight();
+    assert_eq!(inflight_before, tickets.len(), "one router slot per accepted ticket");
+    // Release the gate: every accepted request completes (recovery)
+    // through whichever surface submitted it; the shed ones were never
+    // issued a ticket or a receiver at all.
+    drop(gate_tx);
+    for t in &tickets {
+        let r = t.wait().expect("accepted work survives overload");
+        assert_eq!(r.score, 0.0);
+    }
+    for rx in rxs {
+        let r = rx.recv().expect("accepted blocking work survives overload");
+        assert_eq!(r.score, 0.0);
+    }
+    // Conservation after drain: submitted == completed, in-flight == 0.
+    assert!(wait_for(|| m.completed() == m.submitted()));
+    assert!(wait_for(|| lane.async_inflight() == 0));
+    // Fresh traffic flows again through both surfaces.
+    assert!(registry.score_blocking("gated", tiny_window()).is_ok());
+    assert!(registry.submit_async("gated", tiny_window()).unwrap().wait().is_ok());
+    registry.shutdown();
+}
+
+#[test]
+fn dropped_tickets_leak_no_router_slots_and_never_block_shutdown() {
+    let topo = Topology::from_name("F32-D2").unwrap();
+    let backend = Arc::new(QuantBackend::new(LstmAutoencoder::random(topo.clone(), 21)));
+    let mut registry = ModelRegistry::new();
+    registry.register(&topo.name, backend, ServerConfig::default());
+    let lane = registry.lane("F32-D2").unwrap();
+    let mut gen = TelemetryGen::new(32, 23);
+    // Submit and immediately drop every ticket: the requests still run,
+    // the router still delivers, and the slots drain to zero — abandoned
+    // tickets cost nothing.
+    for _ in 0..20 {
+        let ticket = registry.submit_async("F32-D2", gen.benign_window(4)).expect("admitted");
+        drop(ticket);
+    }
+    assert!(
+        wait_for(|| lane.metrics().completed() == 20),
+        "dropped tickets must not cancel accepted work"
+    );
+    assert!(
+        wait_for(|| lane.async_inflight() == 0),
+        "slots of dropped tickets must drain, not leak \
+         (still {} in flight)",
+        lane.async_inflight()
+    );
+    // A callback registered before the drop is fire-and-forget: it runs
+    // even though nothing holds the ticket.
+    let (cb_tx, cb_rx) = channel();
+    registry
+        .submit_async("F32-D2", gen.benign_window(4))
+        .expect("admitted")
+        .on_complete(move |outcome| {
+            let _ = cb_tx.send(outcome.expect("completes").score);
+        });
+    let score = cb_rx.recv_timeout(Duration::from_secs(5)).expect("callback fires");
+    assert!(score.is_finite() && score >= 0.0);
+    // Shutdown with zero live tickets must not block.
+    registry.shutdown();
+    assert!(matches!(
+        registry.submit_async("F32-D2", gen.benign_window(4)),
+        Err(SubmitError::Closed)
+    ));
+}
+
+/// Panics on the marker window — kills its worker mid-batch.
+struct PanickingBackend;
+
+impl Backend for PanickingBackend {
+    fn name(&self) -> String {
+        "panicking".into()
+    }
+
+    fn score_batch(&self, windows: &[&Window]) -> Vec<f64> {
+        if windows.iter().any(|w| w.data[0][0] == 666.0) {
+            panic!("injected backend failure (expected by integration_front)");
+        }
+        vec![0.0; windows.len()]
+    }
+}
+
+#[test]
+fn shutdown_poisons_tickets_orphaned_by_a_worker_panic() {
+    let mut registry = ModelRegistry::new();
+    let cfg = ServerConfig {
+        max_batch: 1,
+        max_wait: Duration::from_micros(1),
+        workers: 1,
+        queue_capacity: 64,
+        threshold: 1.0,
+        autoscale: None,
+    };
+    registry.register("panicky", Arc::new(PanickingBackend), cfg);
+    let lane = registry.lane("panicky").unwrap();
+    let poison = Window { data: vec![vec![666.0f32]], anomaly: None };
+    let ticket = registry.submit_async("panicky", poison).expect("admitted");
+    // The worker dies without replying: the ticket stays in flight (a
+    // timeout-bounded wait returns None, ticket still live) ...
+    assert!(
+        wait_for(|| lane.metrics().worker_panics() == 1),
+        "panic must be counted"
+    );
+    assert!(ticket.wait_timeout(Duration::from_millis(50)).is_none());
+    assert_eq!(lane.async_inflight(), 1);
+    // ... until shutdown, whose router drain poisons the orphaned slot so
+    // waiters wake with Closed instead of hanging forever.
+    registry.shutdown();
+    assert_eq!(ticket.wait().unwrap_err(), SubmitError::Closed);
+    assert_eq!(lane.async_inflight(), 0);
+}
+
+#[test]
+fn async_driver_sustains_4x_outstanding_at_equal_threads_without_shedding() {
+    // The acceptance bar, deterministically: at the same client-thread
+    // count, the ticket driver holds ≥ 4× the outstanding requests of
+    // the blocking driver and the lanes shed nothing either way (peak
+    // outstanding is reached by construction — the driver fills its
+    // CompletionSet before reaping — so this does not depend on timing).
+    let clients = 4usize;
+    let per_client = 16usize; // 16× blocking per thread
+    for (name, seed) in [("F32-D2", 31u64), ("F64-D2", 32u64)] {
+        let topo = Topology::from_name(name).unwrap();
+        let backend = Arc::new(QuantBackend::new(LstmAutoencoder::random(topo.clone(), seed)));
+        let mut registry = ModelRegistry::new();
+        registry.register(
+            &topo.name,
+            backend,
+            ServerConfig { queue_capacity: 1024, ..ServerConfig::default() },
+        );
+        let models = vec![topo.name.clone()];
+        let blocking = closed_loop_blocking(&registry, &models, clients, 256, 4, 33);
+        let async_stats = closed_loop_async(&registry, &models, clients, per_client, 256, 4, 33);
+        assert_eq!(blocking.completed, 256);
+        assert_eq!(async_stats.completed, 256);
+        assert_eq!(async_stats.failed, 0);
+        assert_eq!(blocking.max_outstanding, clients, "blocking: one per thread");
+        assert!(
+            async_stats.max_outstanding >= 4 * blocking.max_outstanding,
+            "{name}: async outstanding {} must be ≥ 4× blocking {}",
+            async_stats.max_outstanding,
+            blocking.max_outstanding
+        );
+        let m = registry.lane(name).unwrap().metrics();
+        assert_eq!(m.shed(), 0, "{name}: equal shed rate (zero) for both drivers");
+        assert_eq!(async_stats.shed_retries + blocking.shed_retries, 0);
+        registry.shutdown();
+    }
+}
+
+#[test]
+fn open_loop_trace_replay_through_tickets_matches_blocking_accounting() {
+    // The same merged Poisson trace the fleet CLI replays, pushed through
+    // tickets by a single submitter thread: accounting is exhaustive and
+    // accepted work all completes — shed/backpressure semantics are the
+    // blocking replay's, with no thread parked per request.
+    let registry = ModelRegistry::paper_fleet(51, ExecMode::Auto, 2);
+    let models: Vec<String> = registry.models().map(String::from).collect();
+    let topos: Vec<Topology> = models
+        .iter()
+        .map(|m| Topology::from_name(m).unwrap())
+        .collect();
+    let trace = merged_poisson(&topos, 53, 8000.0, 400, 4, 0.1);
+    let n = trace.len() as u64;
+    let stats = replay_async(&registry, &models, trace);
+    assert_eq!(stats.accepted + stats.shed + stats.rejected, n);
+    assert_eq!(stats.rejected, 0, "no lane closed mid-replay");
+    assert_eq!(stats.completed + stats.failed, stats.accepted);
+    assert_eq!(stats.failed, 0, "healthy lanes complete every accepted ticket");
+    let completed: u64 = models
+        .iter()
+        .map(|m| registry.lane(m).unwrap().metrics().completed())
+        .sum();
+    assert_eq!(completed, stats.accepted);
+    registry.shutdown();
+}
