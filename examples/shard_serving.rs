@@ -1,0 +1,120 @@
+//! Shard-fabric walkthrough: the `submit(model, window)` surface
+//! stretched over TCP, inside one process for demonstration.
+//!
+//! Spins up **two shard servers** on ephemeral loopback ports (each a
+//! full paper fleet — the deployment `fleet serve` runs per host), wires
+//! a [`ShardRouter`] over both, and shows the three properties the wire
+//! fabric guarantees:
+//!
+//! 1. **Transparency** — tickets from a remote shard behave exactly like
+//!    local ones (`wait`/`poll`), and scores are bit-identical to the
+//!    sequential reference arithmetic.
+//! 2. **One surface, many shards** — submissions balance across shards
+//!    by power-of-two-choices on in-flight load.
+//! 3. **Failover** — killing a shard loses nothing: in-flight tickets
+//!    resolve `Err(Closed)`, re-offers route to the survivor, and
+//!    `shard_failovers` counts the reroutes.
+//!
+//! Run with `cargo run --release --example shard_serving`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use lstm_ae_accel::engine::ExecMode;
+use lstm_ae_accel::model::{LstmAutoencoder, Topology};
+use lstm_ae_accel::net::ShardServer;
+use lstm_ae_accel::server::{ModelRegistry, ShardRouter, SubmitError, SubmitSurface};
+use lstm_ae_accel::workload::TelemetryGen;
+
+fn main() {
+    let seed = 42;
+    // Two "hosts", identical model weights (the usual replicated-shard
+    // deployment): each is what `fleet serve --bind <addr>` runs.
+    let srv_a = ShardServer::bind(
+        "127.0.0.1:0",
+        Arc::new(ModelRegistry::paper_fleet(seed, ExecMode::Auto, 2)),
+    )
+    .expect("bind shard A");
+    let srv_b = ShardServer::bind(
+        "127.0.0.1:0",
+        Arc::new(ModelRegistry::paper_fleet(seed, ExecMode::Auto, 2)),
+    )
+    .expect("bind shard B");
+    let addrs = [srv_a.local_addr().to_string(), srv_b.local_addr().to_string()];
+    println!("shards up: {} and {}", addrs[0], addrs[1]);
+
+    // One router = one fleet-wide submission surface (`fleet connect`).
+    let router = ShardRouter::connect(&addrs).expect("connect both shards");
+
+    // 1) Remote tickets, bit-identical scores.
+    println!("\n— bit-identity over the wire —");
+    for (i, topo) in Topology::paper_models().into_iter().enumerate() {
+        let reference = LstmAutoencoder::random(topo.clone(), seed + i as u64);
+        let mut gen = TelemetryGen::new(topo.features, 7 + i as u64);
+        let w = gen.benign_window(8);
+        let want = reference.score_quant(&w.data);
+        let got = router.submit_async(&topo.name, w).expect("submitted").wait().expect("scored");
+        assert_eq!(got.score.to_bits(), want.to_bits());
+        println!("  {:<16} remote score {:.6} == sequential (bit-exact)", topo.name, got.score);
+    }
+
+    // 2) Load spreads over both shards.
+    println!("\n— balanced fan-out —");
+    let mut gen = TelemetryGen::new(32, 99);
+    let tickets: Vec<_> = (0..64)
+        .map(|_| router.submit_async("LSTM-AE-F32-D2", gen.benign_window(6)).expect("submitted"))
+        .collect();
+    let mid = (router.shard(0).inflight(), router.shard(1).inflight());
+    for t in tickets {
+        t.wait().expect("scored");
+    }
+    println!(
+        "  64 requests over {} shards, in-flight mid-burst: shard A {} / shard B {}",
+        router.len(),
+        mid.0,
+        mid.1
+    );
+    println!("  router metrics: {}", router.metrics().report());
+
+    // 3) Kill shard A mid-flight: zero loss.
+    println!("\n— failover —");
+    let mut pending = Vec::new();
+    for k in 0..40 {
+        let w = gen.benign_window(4);
+        pending.push((w.clone(), router.submit_async("LSTM-AE-F32-D2", w).expect("submitted")));
+        if k == 20 {
+            srv_a.shutdown();
+            // Wait for the router to observe the death so the re-offers
+            // below deterministically route to the survivor.
+            while router.live_shards() != 1 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            println!("  shard A killed with requests in flight");
+        }
+    }
+    let (mut completed, mut retried) = (0, 0);
+    for (w, t) in pending {
+        match t.wait() {
+            Ok(_) => completed += 1,
+            Err(SubmitError::Closed) => {
+                // Re-offer: the router routes around the dead shard.
+                let t2 = router.submit_async("LSTM-AE-F32-D2", w).expect("survivor accepts");
+                t2.wait().expect("retry scores");
+                retried += 1;
+                completed += 1;
+            }
+            Err(e) => panic!("unexpected {e}"),
+        }
+    }
+    println!(
+        "  40/40 completed ({completed} total, {retried} re-offered), \
+         {} of {} shards live, {} failovers counted",
+        router.live_shards(),
+        router.len(),
+        router.metrics().shard_failovers()
+    );
+
+    router.shutdown();
+    srv_b.shutdown();
+    println!("\nfleet serve --bind <addr> / fleet connect --shards <a,b,...> run this for real.");
+}

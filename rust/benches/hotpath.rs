@@ -25,8 +25,10 @@ use lstm_ae_accel::engine::{BatchEngine, PipelinePool, TemporalPipeline};
 use lstm_ae_accel::fixed::{dot_q, Q8_24};
 use lstm_ae_accel::model::lstm::{QuantLstmCell, QuantLstmState, StepScratch};
 use lstm_ae_accel::model::{LstmAutoencoder, Topology};
+use lstm_ae_accel::net::ShardServer;
 use lstm_ae_accel::server::{
-    AnomalyServer, AutoscalePolicy, ModelRegistry, QuantBackend, ServerConfig, ThrottledBackend,
+    AnomalyServer, AutoscalePolicy, ModelRegistry, QuantBackend, ServerConfig, ShardRouter,
+    ThrottledBackend,
 };
 use lstm_ae_accel::util::json::Json;
 use lstm_ae_accel::util::timer::{bench, bench_auto, black_box, BenchResult};
@@ -502,6 +504,90 @@ fn main() {
             ],
         );
         registry.shutdown();
+    }
+
+    println!("\n## Shard fabric: in-process registry vs loopback TCP (same async driver)");
+    // The wire tax, isolated: the identical closed-loop ticket driver
+    // against (a) the registry in-process and (b) the same registry
+    // behind a ShardServer on 127.0.0.1 through a ShardRouter — frame
+    // encode/decode, two socket hops, and the per-connection
+    // reader/writer pair are the only difference between the rows.
+    {
+        let clients = 4usize;
+        let per_client_outstanding = 64usize;
+        let total = 4096usize;
+        let models = vec!["LSTM-AE-F32-D2".to_string()];
+        let mk_registry = || {
+            let mut registry = ModelRegistry::new();
+            registry.register(
+                "LSTM-AE-F32-D2",
+                Arc::new(QuantBackend::new(LstmAutoencoder::random(
+                    Topology::from_name("F32-D2").unwrap(),
+                    15,
+                ))),
+                ServerConfig {
+                    max_batch: 16,
+                    max_wait: std::time::Duration::from_micros(200),
+                    workers: 4,
+                    queue_capacity: 4096,
+                    threshold: 0.1,
+                    autoscale: None,
+                },
+            );
+            registry
+        };
+        for remote in [false, true] {
+            let (stats, name) = if remote {
+                let server = ShardServer::bind("127.0.0.1:0", Arc::new(mk_registry()))
+                    .expect("bind loopback shard");
+                let router = ShardRouter::connect(&[server.local_addr().to_string()])
+                    .expect("connect loopback shard");
+                let stats = closed_loop_async(
+                    &router,
+                    &models,
+                    clients,
+                    per_client_outstanding,
+                    total,
+                    16,
+                    19,
+                );
+                router.shutdown();
+                server.shutdown();
+                (stats, "shard loopback closed-loop F32-D2 T=16 clients=4 out=256")
+            } else {
+                let registry = mk_registry();
+                let stats = closed_loop_async(
+                    &registry,
+                    &models,
+                    clients,
+                    per_client_outstanding,
+                    total,
+                    16,
+                    19,
+                );
+                registry.shutdown();
+                (stats, "shard in-process closed-loop F32-D2 T=16 clients=4 out=256")
+            };
+            let wall = stats.wall.as_secs_f64().max(1e-9);
+            println!(
+                "{name}: {} completed in {wall:.3}s ({:.0}/s) | peak outstanding {} | \
+                 {} shed retries",
+                stats.completed,
+                stats.completed as f64 / wall,
+                stats.max_outstanding,
+                stats.shed_retries
+            );
+            rec.add_scalars(
+                name,
+                &[
+                    ("completed", stats.completed as f64),
+                    ("throughput_per_s", stats.completed as f64 / wall),
+                    ("outstanding", stats.max_outstanding as f64),
+                    ("shed_retries", stats.shed_retries as f64),
+                    ("wall_s", wall),
+                ],
+            );
+        }
     }
 
     rec.flush();

@@ -18,8 +18,11 @@
 //!   kernels ([`engine`]), CPU/GPU baselines
 //!   ([`baselines`]), a PJRT runtime that executes the AOT artifacts
 //!   ([`runtime`]), and an end-to-end anomaly-detection service ([`server`])
-//!   — a multi-model fabric with bounded admission, dynamic batching, and
-//!   metrics-driven per-lane autoscaling ([`server::autoscale`]).
+//!   — a multi-model fabric with bounded admission, dynamic batching,
+//!   metrics-driven per-lane autoscaling ([`server::autoscale`]), and a
+//!   cross-process shard fabric ([`net`], [`server::shard`]) that
+//!   stretches the same `submit(model, window)` surface over TCP
+//!   (`fleet serve` / `fleet connect` in the CLI).
 //!
 //! ## Quick start
 //!
@@ -54,6 +57,7 @@ pub mod baselines;
 pub mod runtime;
 pub mod workload;
 pub mod server;
+pub mod net;
 pub mod report;
 
 /// Paper's target clock for the FPGA designs (§4.1): 300 MHz.

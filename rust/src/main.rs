@@ -22,6 +22,13 @@
 //!             [--async] closed-loop driver through the async ticket front:
 //!             a handful of client threads sustain thousands of outstanding
 //!             requests ([--clients 4] [--outstanding 1024])
+//!   fleet serve   --bind 127.0.0.1:7070 [--replicas 2] [--mode auto] [--seed 7]
+//!             [--autoscale ...] [--report-every-s N]
+//!             run this process as a network shard: all four paper topologies
+//!             behind the wire protocol, until killed
+//!   fleet connect --shards a1:p1,a2:p2 [--requests N] [--rate R] [--timesteps T]
+//!             [--seed 7] [--report] drive the Poisson trace across a shard
+//!             fleet; exits nonzero on accounting mismatch or lost requests
 //!   checks                         run the paper-shape checks
 //! ```
 
@@ -39,14 +46,15 @@ use lstm_ae_accel::model::Topology;
 use lstm_ae_accel::report;
 use lstm_ae_accel::runtime::Runtime;
 use lstm_ae_accel::engine::ExecMode;
+use lstm_ae_accel::net::{ShardServer, WIRE_VERSION};
 use lstm_ae_accel::server::{
     self, AnomalyServer, AutoscalePolicy, Backend, ModelRegistry, PjrtBackend, QuantBackend,
-    ServerConfig, SubmitError,
+    ServerConfig, ShardRouter, SubmitError,
 };
 use lstm_ae_accel::util::cli::Args;
 use lstm_ae_accel::util::table::Table;
 use lstm_ae_accel::workload::trace::{
-    closed_loop_async, merged_poisson, poisson_trace, rotating_hot_poisson,
+    closed_loop_async, merged_poisson, poisson_trace, replay_fleet, rotating_hot_poisson,
 };
 use lstm_ae_accel::workload::TelemetryGen;
 use lstm_ae_accel::model::LstmAutoencoder;
@@ -95,6 +103,7 @@ fn print_help() {
     println!("lstm-ae-accel — temporal-parallel LSTM-AE accelerator (paper reproduction)");
     println!("commands: models balance simulate table1 table2 table3 figures resources");
     println!("          infer measure serve fleet checks   (see --help strings in main.rs)");
+    println!("          fleet serve --bind A:P | fleet connect --shards A:P,...   shard fabric");
 }
 
 fn topo_from(args: &Args) -> Result<Topology> {
@@ -461,6 +470,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// the rolled-up fleet report (per-lane counters, shed, latency
 /// percentiles, worker/replica counts, scaling decisions).
 fn cmd_fleet(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("serve") => return cmd_fleet_serve(args),
+        Some("connect") => return cmd_fleet_connect(args),
+        Some(other) => return Err(anyhow!("unknown fleet subcommand {other:?}")),
+        None => {}
+    }
     let t = args.get_usize("timesteps", 16);
     let n = args.get_usize("requests", 2000);
     let rate = args.get_f64("rate", 4000.0);
@@ -588,6 +603,124 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     print!("{}", registry.fleet_report());
     println!("wall {wall:.2}s | {shed} shed at admission");
     registry.shutdown();
+    Ok(())
+}
+
+/// `fleet serve`: run this process as one network shard — the four paper
+/// topologies behind the wire protocol on `--bind`, until killed. The CI
+/// loopback-soak job runs exactly this against `fleet connect`.
+fn cmd_fleet_serve(args: &Args) -> Result<()> {
+    let bind = args.get_or("bind", "127.0.0.1:7070");
+    let seed = args.get_u64("seed", 7);
+    let replicas = args.get_usize("replicas", 2);
+    let mode = ExecMode::parse(args.get_or("mode", "auto"))
+        .ok_or_else(|| anyhow!("unknown --mode (want auto|sequential|pipelined|batched)"))?;
+    let autoscale = args.has("autoscale");
+    let policy = autoscale.then(|| AutoscalePolicy {
+        up_ticks: 1,
+        down_ticks: 5,
+        ..AutoscalePolicy::bounded(
+            args.get_usize("min-workers", 1),
+            args.get_usize("max-workers", 6),
+        )
+    });
+    let registry = Arc::new(ModelRegistry::paper_fleet_with(seed, mode, replicas, policy));
+    if autoscale {
+        let budget = args.get_usize("budget", 0);
+        let tick = std::time::Duration::from_millis(args.get_u64("tick-ms", 20));
+        registry.start_autoscaler(tick, (budget > 0).then_some(budget));
+    }
+    let server = ShardServer::bind(bind, registry.clone())
+        .map_err(|e| anyhow!("bind {bind}: {e}"))?;
+    println!(
+        "fleet shard: serving {} models on {} (wire v{WIRE_VERSION}, seed {seed}, \
+         mode {mode:?}, {replicas} replicas on deep lanes) — kill to stop",
+        registry.len(),
+        server.local_addr()
+    );
+    // stdout may be pipe-buffered (the soak job backgrounds this); make
+    // the banner visible before parking.
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+    let every = args.get_u64("report-every-s", 0);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(if every > 0 { every } else { 3600 }));
+        if every > 0 {
+            print!("{}", registry.fleet_report());
+            let _ = std::io::stdout().flush();
+        }
+    }
+}
+
+/// `fleet connect`: drive the mixed Poisson trace across a shard fleet
+/// through a [`ShardRouter`], then enforce the conservation law the CI
+/// soak gates on — every offered request terminates in exactly one of
+/// completed / shed / rejected_closed, and nothing is lost.
+fn cmd_fleet_connect(args: &Args) -> Result<()> {
+    let shards: Vec<String> = args
+        .get_or("shards", "127.0.0.1:7070")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let n = args.get_usize("requests", 2000);
+    let rate = args.get_f64("rate", 4000.0);
+    let timesteps = args.get_usize("timesteps", 16);
+    let anomaly_rate = args.get_f64("anomaly-rate", 0.1);
+    let seed = args.get_u64("seed", 7);
+    let router =
+        ShardRouter::connect(&shards).map_err(|e| anyhow!("connect {shards:?}: {e}"))?;
+    let topos = Topology::paper_models();
+    let models: Vec<String> = topos.iter().map(|m| m.name.clone()).collect();
+    let merged =
+        merged_poisson(&topos, seed.wrapping_add(40), rate, n, timesteps, anomaly_rate);
+    println!(
+        "fleet connect: {} requests over {} models @ {rate:.0} rps aggregate, \
+         T={timesteps}, {} shard(s)",
+        merged.len(),
+        models.len(),
+        router.len()
+    );
+    let stats = replay_fleet(&router, &models, merged, true);
+    let wall = stats.wall.as_secs_f64().max(1e-9);
+    println!(
+        "wall {wall:.2}s | offered {} | completed {} ({:.0}/s) | {} flagged | shed {} | \
+         rejected_closed {} | retried after shard loss {} | peak outstanding {} | \
+         shard failovers {} | {} of {} shards live",
+        stats.offered,
+        stats.completed,
+        stats.completed as f64 / wall,
+        stats.flagged,
+        stats.shed,
+        stats.rejected_closed,
+        stats.retried_closed,
+        stats.max_outstanding,
+        router.metrics().shard_failovers(),
+        router.live_shards(),
+        router.len()
+    );
+    if args.has("report") {
+        print!("{}", router.fleet_report());
+    }
+    router.shutdown();
+    if !stats.conserves() {
+        return Err(anyhow!(
+            "accounting mismatch: offered {} != completed {} + shed {} + rejected_closed {}",
+            stats.offered,
+            stats.completed,
+            stats.shed,
+            stats.rejected_closed
+        ));
+    }
+    if stats.completed == 0 {
+        return Err(anyhow!("no request completed — is the shard fleet up?"));
+    }
+    if stats.rejected_closed > 0 && !args.has("allow-loss") {
+        return Err(anyhow!(
+            "{} requests lost to closed shards (pass --allow-loss to tolerate)",
+            stats.rejected_closed
+        ));
+    }
     Ok(())
 }
 

@@ -1,0 +1,304 @@
+//! The client end of the shard fabric: a TCP connection to one
+//! [`crate::net::ShardServer`] that implements the same
+//! [`Ticket`] surface as a local lane.
+//!
+//! One reader thread per connection multiplexes every reply — the exact
+//! shape of the in-process completion router
+//! ([`crate::server::front`]), with the socket standing in for the
+//! workers' shared reply channel:
+//!
+//! ```text
+//! caller ── submit_async(model, window) ──► Ticket  (returns immediately)
+//!               │ registers slot (id → shared state)
+//!               │ writes one Submit frame (writer half, under a lock)
+//!               ▼
+//!        ┌──────socket──────┐
+//!        ▼                  │
+//!  [reader thread] ◄── Response{id}/Shed{id} frames
+//!    id → slot lookup; resolves the ticket (wait/poll/on_complete all
+//!    fire), removes the slot. Connection death poisons every in-flight
+//!    slot with Err(Closed) — a caller is never left hanging.
+//! ```
+//!
+//! Remote sheds arrive as `Shed` frames and resolve the ticket to
+//! `Err(`[`SubmitError::Overloaded`]`)` — the cross-shard backpressure
+//! signal — rather than failing the submit call, because admission
+//! happens on the shard, a round-trip away. [`ShardClient::submit_async`]
+//! itself only fails when the connection is down (`Err(Closed)`).
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::server::front::TicketShared;
+use crate::server::{Response, SubmitError, Ticket};
+use crate::workload::Window;
+
+use super::wire::{self, Frame, ShedReason, WireError};
+
+/// One-slot rendezvous for the synchronous fleet-report exchange.
+struct ReportSlot {
+    text: Mutex<Option<String>>,
+    cond: Condvar,
+}
+
+/// A connection to one shard process, speaking the [`super::wire`]
+/// protocol. Submissions return the same [`Ticket`] a local lane issues;
+/// completion is delivered by this connection's single reader thread.
+pub struct ShardClient {
+    addr: String,
+    /// Ticket lane name (`shard://<addr>`), shared — no per-submit
+    /// allocation.
+    lane: Arc<str>,
+    /// Writer half of the socket. `None` once the connection is dead or
+    /// shut down; writes are serialized by the lock so frames never
+    /// interleave.
+    writer: Mutex<Option<TcpStream>>,
+    /// In-flight submissions: id → ticket slot, resolved by the reader.
+    slots: Arc<Mutex<HashMap<u64, Arc<TicketShared>>>>,
+    next_id: AtomicU64,
+    /// Cleared by the reader thread on EOF/error and by write failures;
+    /// a dead client fails every submit fast with `Err(Closed)`.
+    alive: Arc<AtomicBool>,
+    reader: Mutex<Option<JoinHandle<()>>>,
+    report: Arc<ReportSlot>,
+}
+
+impl ShardClient {
+    /// Connect and run the version handshake. Refuses a peer speaking a
+    /// different [`super::WIRE_VERSION`] with [`WireError::BadVersion`].
+    pub fn connect(addr: &str) -> Result<ShardClient, WireError> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        // Deadline the handshake read: an accepting-but-silent endpoint
+        // (wrong port, non-protocol service) must fail fast, not hang
+        // connect() forever. Steady-state reads go back to blocking —
+        // idle connections are normal there.
+        stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+        wire::handshake(&mut stream)?;
+        stream.set_read_timeout(None)?;
+        let read_half = stream.try_clone()?;
+        let slots: Arc<Mutex<HashMap<u64, Arc<TicketShared>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let alive = Arc::new(AtomicBool::new(true));
+        let report = Arc::new(ReportSlot { text: Mutex::new(None), cond: Condvar::new() });
+        let reader = {
+            let slots = slots.clone();
+            let alive = alive.clone();
+            let report = report.clone();
+            std::thread::Builder::new()
+                .name(format!("shard-rx:{addr}"))
+                .spawn(move || reader_loop(read_half, slots, alive, report))
+                .expect("spawn shard reader")
+        };
+        Ok(ShardClient {
+            addr: addr.to_string(),
+            lane: Arc::from(format!("shard://{addr}")),
+            writer: Mutex::new(Some(stream)),
+            slots,
+            next_id: AtomicU64::new(0),
+            alive,
+            reader: Mutex::new(Some(reader)),
+            report,
+        })
+    }
+
+    /// The address this client connected to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Whether the connection is still up. A false here is sticky: a dead
+    /// client never comes back (the [`crate::server::ShardRouter`] routes
+    /// around it instead).
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Acquire)
+    }
+
+    /// Submissions awaiting a remote reply — the load signal the router's
+    /// power-of-two-choices pick compares.
+    pub fn inflight(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    /// Submit a window to the remote shard. Returns a [`Ticket`]
+    /// immediately; the outcome arrives over the socket:
+    ///
+    /// - `Ok(Response)` — scored (bit-identical to a local lane);
+    /// - `Err(Overloaded)` — the shard's lane shed it (backpressure);
+    /// - `Err(UnknownModel)`/`Err(Closed)` — remote rejection, or the
+    ///   connection died with the request in flight.
+    ///
+    /// Fails fast with `Err(Closed)` only when the connection is already
+    /// down. Remote tickets are not cancellable
+    /// ([`Ticket::cancel`] returns `false`): the queue holding the
+    /// request lives in another process.
+    ///
+    /// Takes the window by reference: the frame is serialized straight
+    /// off the borrow, so neither this client nor the
+    /// [`crate::server::ShardRouter`] above it ever deep-copies the
+    /// `T×F` samples — not even across failover retries.
+    pub fn submit_async(&self, model: &str, window: &Window) -> Result<Ticket, SubmitError> {
+        if !self.is_alive() {
+            return Err(SubmitError::Closed);
+        }
+        // Pre-flight representability gate: anything the wire cannot
+        // carry is rejected per-request, *before* it touches the socket.
+        // Without this, the encoded frame would panic the encoder (a
+        // model name past the u16 string limit) or trip the server's
+        // decoder and take the whole (healthy) connection down (an
+        // oversized or zero-width-row window).
+        let t = window.data.len();
+        let f = window.data.first().map_or(0, Vec::len);
+        let need = 1 + 8 + 2 + model.len() + 4 + 4 + t * f * 4;
+        if need > wire::MAX_FRAME_LEN
+            || model.len() > u16::MAX as usize
+            || (f == 0 && t != 0)
+            || window.data.iter().any(|row| row.len() != f)
+        {
+            return Err(SubmitError::TooLarge);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (ticket, shared) = Ticket::raw(id, self.lane.clone());
+        self.slots.lock().unwrap().insert(id, shared);
+        let bytes = wire::encode_submit(id, model, &window.data);
+        if let Err(e) = self.write_bytes(&bytes) {
+            // Never issued: retire the slot so nothing waits on it.
+            self.slots.lock().unwrap().remove(&id);
+            return Err(e);
+        }
+        // The reader may have died — and poison-drained the slot map —
+        // between our liveness check and our insert, leaving this slot
+        // behind with nothing to resolve it (a TCP write can still
+        // "succeed" into a dead socket's buffer). The slots mutex orders
+        // our insert against the drain, so a re-check here closes the
+        // hole: if the drain ran first, our slot is still in the map and
+        // we retire it; if it ran after, it already poisoned the ticket.
+        if !self.is_alive() {
+            self.slots.lock().unwrap().remove(&id);
+            return Err(SubmitError::Closed);
+        }
+        Ok(ticket)
+    }
+
+    /// Fetch the shard's rolled-up fleet report
+    /// ([`crate::server::ModelRegistry::fleet_report`]) over the wire.
+    pub fn fleet_report(&self, timeout: Duration) -> Result<String, SubmitError> {
+        self.write(&Frame::FleetReport { text: String::new() })?;
+        let deadline = Instant::now() + timeout;
+        let mut slot = self.report.text.lock().unwrap();
+        loop {
+            if let Some(text) = slot.take() {
+                return Ok(text);
+            }
+            if !self.is_alive() {
+                return Err(SubmitError::Closed);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(SubmitError::Closed);
+            }
+            let (g, _) = self.report.cond.wait_timeout(slot, deadline - now).unwrap();
+            slot = g;
+        }
+    }
+
+    fn write(&self, frame: &Frame) -> Result<(), SubmitError> {
+        self.write_bytes(&frame.encode())
+    }
+
+    fn write_bytes(&self, bytes: &[u8]) -> Result<(), SubmitError> {
+        let mut guard = self.writer.lock().unwrap();
+        let Some(stream) = guard.as_mut() else {
+            return Err(SubmitError::Closed);
+        };
+        if stream.write_all(bytes).is_err() {
+            // Half-dead socket: drop the writer and wake the reader so it
+            // poisons every in-flight slot.
+            let _ = stream.shutdown(Shutdown::Both);
+            *guard = None;
+            self.alive.store(false, Ordering::Release);
+            return Err(SubmitError::Closed);
+        }
+        Ok(())
+    }
+
+    /// Close the connection and join the reader. In-flight tickets
+    /// resolve `Err(Closed)` (the reader's exit drain). Idempotent.
+    pub fn shutdown(&self) {
+        if let Some(stream) = self.writer.lock().unwrap().take() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        self.alive.store(false, Ordering::Release);
+        if let Some(h) = self.reader.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ShardClient {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn shed_error(reason: ShedReason) -> SubmitError {
+    match reason {
+        ShedReason::Overloaded => SubmitError::Overloaded,
+        ShedReason::Closed => SubmitError::Closed,
+        // The shard doesn't echo the name back; the caller holds it.
+        ShedReason::UnknownModel => SubmitError::UnknownModel("(remote)".to_string()),
+    }
+}
+
+fn reader_loop(
+    mut stream: TcpStream,
+    slots: Arc<Mutex<HashMap<u64, Arc<TicketShared>>>>,
+    alive: Arc<AtomicBool>,
+    report: Arc<ReportSlot>,
+) {
+    loop {
+        match wire::read_frame(&mut stream) {
+            Ok(Some(Frame::Response { id, score, is_anomaly, queue_us, service_us, e2e_us })) => {
+                let slot = slots.lock().unwrap().remove(&id);
+                if let Some(slot) = slot {
+                    slot.complete(Ok(Response {
+                        id,
+                        score,
+                        is_anomaly,
+                        queue_us,
+                        service_us,
+                        e2e_us,
+                    }));
+                }
+            }
+            Ok(Some(Frame::Shed { id, reason })) => {
+                let slot = slots.lock().unwrap().remove(&id);
+                if let Some(slot) = slot {
+                    slot.complete(Err(shed_error(reason)));
+                }
+            }
+            Ok(Some(Frame::FleetReport { text })) => {
+                *report.text.lock().unwrap() = Some(text);
+                report.cond.notify_all();
+            }
+            // Anything else (clean EOF, truncation, a confused peer)
+            // ends the connection.
+            Ok(Some(_)) | Ok(None) | Err(_) => break,
+        }
+    }
+    // The connection is gone: fail fast from here on, wake the report
+    // waiters, and poison every in-flight ticket so no caller hangs.
+    alive.store(false, Ordering::Release);
+    let _ = stream.shutdown(Shutdown::Both);
+    report.cond.notify_all();
+    let orphaned: Vec<Arc<TicketShared>> =
+        slots.lock().unwrap().drain().map(|(_, s)| s).collect();
+    for slot in orphaned {
+        slot.complete(Err(SubmitError::Closed));
+    }
+}

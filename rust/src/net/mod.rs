@@ -1,0 +1,46 @@
+//! The network shard fabric: the serving stack's `submit(model, window)`
+//! surface stretched across processes and hosts.
+//!
+//! PR 2–4 built the in-process fabric (lanes → replica pools → async
+//! tickets); this module is the next scale step the ROADMAP names —
+//! sharding lanes across processes behind the *same* submission surface,
+//! with [`crate::server::SubmitError::Overloaded`] reused as the
+//! cross-shard backpressure signal:
+//!
+//! ```text
+//!  client process                         shard process (one per host)
+//! ┌───────────────────────┐   Submit    ┌────────────────────────────┐
+//! │ ShardRouter           │ ──frames──► │ ShardServer (TcpListener)  │
+//! │  static model map     │             │  conn reader ─ submit_async│
+//! │  + power-of-two picks │ ◄─frames──  │  ticket.on_complete ──►    │
+//! │  Ticket (same surface)│  Response/  │  conn writer (one thread)  │
+//! └───────────────────────┘  Shed       │  ModelRegistry lanes …     │
+//!                                       └────────────────────────────┘
+//! ```
+//!
+//! - [`wire`] — the versioned, length-prefixed frame protocol
+//!   (`Hello`/`Submit`/`Response`/`Shed`/`FleetReport`); every malformed
+//!   byte stream decodes to a clean error, never a panic.
+//! - [`ShardServer`] — a threaded `std::net::TcpListener` front over an
+//!   in-process [`crate::server::ModelRegistry`]: each connection gets a
+//!   reader thread that drains `Submit` frames into
+//!   [`crate::server::ModelRegistry::submit_async`] and one writer
+//!   thread that serializes completions back — the same
+//!   one-router-thread pattern the async front uses in-process.
+//! - [`ShardClient`] — the other end of the socket, implementing the
+//!   same [`crate::server::Ticket`] surface: `wait`/`poll`/`on_complete`
+//!   work transparently whether the lane is local or remote, and remote
+//!   scores stay **bit-identical** (f64 bits travel raw).
+//!
+//! [`crate::server::ShardRouter`] composes N [`ShardClient`]s into one
+//! fleet-wide submission surface with failover; `fleet serve` /
+//! `fleet connect` in the CLI play the two roles from one binary. All of
+//! it is `std` + the vendored shims — no tokio, no registry deps.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::ShardClient;
+pub use server::ShardServer;
+pub use wire::{Frame, ShedReason, WireError, MAX_FRAME_LEN, WIRE_VERSION};

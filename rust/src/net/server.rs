@@ -1,0 +1,297 @@
+//! The shard process: a threaded TCP front over an in-process
+//! [`ModelRegistry`], turning [`super::wire`] frames into
+//! [`ModelRegistry::submit_async`] calls and routing completions back
+//! over the socket.
+//!
+//! Per connection the server runs exactly two threads — the same
+//! one-router-thread discipline as the in-process async front, so a
+//! connection carrying thousands of in-flight requests costs two
+//! threads, not thousands:
+//!
+//! ```text
+//! [conn reader]  Submit{id} ──► registry.submit_async(model, window)
+//!                                 │ Ok(ticket): on_complete moves the
+//!                                 │ encoded Response/Shed frame into the
+//!                                 │ connection's outbound queue (the
+//!                                 │ callback runs on the lane's router
+//!                                 │ thread — cheap, just encode + send)
+//!                                 │ Err(e): Shed{id} queued directly
+//!                                 ▼
+//! [conn writer]  drains the outbound queue ──► socket
+//! ```
+//!
+//! Admission stays end-to-end bounded: the lanes' bounded queues shed
+//! exactly as they do in-process, and the shed surfaces to the client as
+//! a `Shed` frame — [`crate::server::SubmitError::Overloaded`] a hop
+//! later. The version handshake refuses mismatched peers before any
+//! other frame is parsed.
+
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::server::{ModelRegistry, SubmitError};
+use crate::workload::Window;
+
+use super::wire::{self, Frame, ShedReason};
+
+fn shed_reason(e: &SubmitError) -> ShedReason {
+    match e {
+        SubmitError::Overloaded => ShedReason::Overloaded,
+        SubmitError::UnknownModel(_) => ShedReason::UnknownModel,
+        // Cancelled and TooLarge can't reach a server-side ticket (one
+        // needs Ticket::cancel, the other is a client-side pre-flight);
+        // fold them with the teardown-shaped errors for completeness.
+        SubmitError::Closed | SubmitError::Cancelled | SubmitError::TooLarge => {
+            ShedReason::Closed
+        }
+    }
+}
+
+/// Encoded frames queued per connection for its writer thread. Bounded:
+/// a client that submits without reading its socket fills this and gets
+/// its connection closed, instead of growing server memory without bound
+/// (the shed path takes no lane slot, so this queue is its only bound).
+const OUTBOUND_QUEUE_FRAMES: usize = 4096;
+
+/// A live connection: a clone of its socket (so shutdown can unblock the
+/// reader) plus the handler thread's join handle. Reaped once the
+/// handler finishes, so a long-running shard doesn't accumulate dead
+/// fds and handles under connection churn.
+type Conn = (TcpStream, JoinHandle<()>);
+
+/// A serving shard: one [`ModelRegistry`] behind a `TcpListener`. Owns
+/// the accept loop and every connection's reader/writer thread pair;
+/// [`ShardServer::shutdown`] stops the lot (the registry itself belongs
+/// to the caller and is not shut down — it may be shared).
+pub struct ShardServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Mutex<Option<JoinHandle<()>>>,
+    conns: Arc<Mutex<Vec<Conn>>>,
+}
+
+impl ShardServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:7070"`, port 0 for ephemeral) and
+    /// start accepting shard-fabric connections over `registry`.
+    pub fn bind(addr: &str, registry: Arc<ModelRegistry>) -> std::io::Result<ShardServer> {
+        let listener = TcpListener::bind(addr)?;
+        // Nonblocking accept + a short poll keeps shutdown dependency-free
+        // (no self-connect tricks); 5 ms of accept latency is noise next
+        // to a connection's lifetime.
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<Conn>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new()
+                .name(format!("shard-accept:{addr}"))
+                .spawn(move || {
+                    accept_loop(listener, registry, stop, conns);
+                })
+                .expect("spawn accept loop")
+        };
+        Ok(ShardServer { addr, stop, accept: Mutex::new(Some(accept)), conns })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, close every connection, and join all server
+    /// threads. In-flight remote requests resolve on their lanes; their
+    /// responses are dropped with the closed sockets, and the clients'
+    /// reader drains poison the matching tickets with `Err(Closed)` —
+    /// exactly the failover signal [`crate::server::ShardRouter`]
+    /// re-routes on. Idempotent.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        let mut conns = self.conns.lock().unwrap();
+        // Unblock every connection reader first, then join the handlers.
+        for (stream, _) in conns.iter() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        for (_, handle) in conns.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for ShardServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Join and drop every connection whose handler already finished, so a
+/// long-running shard's fd/handle usage tracks *live* connections, not
+/// historical ones.
+fn reap_finished(conns: &Mutex<Vec<Conn>>) {
+    let mut guard = conns.lock().unwrap();
+    let mut live = Vec::with_capacity(guard.len());
+    for (stream, handle) in guard.drain(..) {
+        if handle.is_finished() {
+            let _ = handle.join();
+        } else {
+            live.push((stream, handle));
+        }
+    }
+    *guard = live;
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    registry: Arc<ModelRegistry>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<Conn>>>,
+) {
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                reap_finished(&conns);
+                let _ = stream.set_nodelay(true);
+                // The listener is nonblocking; accepted sockets must not
+                // inherit that (readers use blocking reads).
+                if stream.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                let Ok(clone) = stream.try_clone() else { continue };
+                let registry = registry.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("shard-conn:{peer}"))
+                    .spawn(move || handle_conn(stream, registry))
+                    .expect("spawn connection handler");
+                conns.lock().unwrap().push((clone, handle));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => {
+                // Transient accept failures are a fact of life on a busy
+                // listener (ECONNABORTED from a peer resetting
+                // mid-handshake, EMFILE under momentary fd exhaustion).
+                // Back off and keep accepting — a permanently broken
+                // listener just spins this slow loop until shutdown,
+                // which beats silently refusing all future connections
+                // while the process looks alive.
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, registry: Arc<ModelRegistry>) {
+    // Version gate before anything else: a mismatched (or non-protocol)
+    // peer is refused — our Hello goes out so the peer can diagnose the
+    // mismatch, then the connection closes without parsing another frame.
+    // The handshake read is deadlined so a silent peer (a port probe, a
+    // client that connected and stalled) cannot park this thread forever;
+    // after the handshake the socket returns to blocking reads.
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    if wire::handshake(&mut stream).is_err() {
+        let _ = stream.shutdown(Shutdown::Both);
+        return;
+    }
+    let _ = stream.set_read_timeout(None);
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    // Bounded outbound queue: the only per-connection buffer between the
+    // lanes and the socket. Overflow means the client is submitting but
+    // not reading (the writer is parked on a full TCP buffer); such a
+    // connection is killed rather than buffered without bound — the
+    // client-side reader then poisons its tickets with Err(Closed).
+    let (out_tx, out_rx) = sync_channel::<Vec<u8>>(OUTBOUND_QUEUE_FRAMES);
+    // Socket handle shared into completion callbacks so overflow can
+    // kill the connection from a lane router thread without blocking it.
+    let sock = Arc::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let writer = std::thread::Builder::new()
+        .name("shard-tx".to_string())
+        .spawn(move || writer_loop(write_half, out_rx))
+        .expect("spawn connection writer");
+
+    loop {
+        match wire::read_frame(&mut stream) {
+            Ok(Some(Frame::Submit { id, model, window })) => {
+                let window = Window { data: window, anomaly: None };
+                match registry.submit_async(&model, window) {
+                    Ok(ticket) => {
+                        let otx = out_tx.clone();
+                        let sock = sock.clone();
+                        // Runs on the lane's completion-router thread:
+                        // encode + try_send only — never a blocking send,
+                        // which would stall every other completion on the
+                        // lane behind one slow connection.
+                        ticket.on_complete(move |outcome| {
+                            let frame = match outcome {
+                                Ok(r) => Frame::Response {
+                                    id,
+                                    score: r.score,
+                                    is_anomaly: r.is_anomaly,
+                                    queue_us: r.queue_us,
+                                    service_us: r.service_us,
+                                    e2e_us: r.e2e_us,
+                                },
+                                Err(e) => Frame::Shed { id, reason: shed_reason(&e) },
+                            };
+                            if otx.try_send(frame.encode()).is_err() {
+                                // Queue full (or writer gone): the
+                                // connection is broken — close it so the
+                                // peer's reader fails everything over.
+                                let _ = sock.shutdown(Shutdown::Both);
+                            }
+                        });
+                    }
+                    Err(e) => {
+                        let frame = Frame::Shed { id, reason: shed_reason(&e) };
+                        if out_tx.try_send(frame.encode()).is_err() {
+                            break;
+                        }
+                    }
+                }
+            }
+            Ok(Some(Frame::FleetReport { .. })) => {
+                let frame = Frame::FleetReport { text: registry.fleet_report() };
+                if out_tx.try_send(frame.encode()).is_err() {
+                    break;
+                }
+            }
+            // A second Hello, or client-bound frames, are protocol
+            // violations; clean EOF and decode errors end the connection
+            // the same way.
+            Ok(Some(_)) | Ok(None) | Err(_) => break,
+        }
+    }
+    // Let in-flight completions drain: the writer exits once every
+    // on_complete clone of out_tx has fired (lanes always resolve
+    // accepted tickets) and the channel disconnects.
+    drop(out_tx);
+    let _ = writer.join();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+fn writer_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>) {
+    use std::io::Write;
+    while let Ok(buf) = rx.recv() {
+        if stream.write_all(&buf).is_err() {
+            break;
+        }
+    }
+    // Either every producer is gone (reader exited, completions drained)
+    // or the socket died under us; both ways the connection is over —
+    // shutting the read half unblocks the reader if it is still parked.
+    let _ = stream.shutdown(Shutdown::Both);
+}

@@ -1,0 +1,603 @@
+//! The shard fabric's wire protocol: versioned, length-prefixed binary
+//! frames over a byte stream.
+//!
+//! ```text
+//! ┌──────────────┬─────────┬──────────────────────────────┐
+//! │ len: u32 LE  │ tag: u8 │ payload (len - 1 bytes)      │
+//! └──────────────┴─────────┴──────────────────────────────┘
+//!   len counts tag + payload; len == 0 and len > MAX_FRAME_LEN are
+//!   rejected before any allocation, so a garbage prefix cannot make the
+//!   decoder reserve gigabytes or spin.
+//! ```
+//!
+//! Five frame kinds carry the whole protocol (see [`Frame`]):
+//!
+//! | tag | frame        | direction        | payload                        |
+//! |-----|--------------|------------------|--------------------------------|
+//! | 0   | `Hello`      | both, first      | `version: u16`                 |
+//! | 1   | `Submit`     | client → shard   | `id, model, T×F f32 window`    |
+//! | 2   | `Response`   | shard → client   | `id, score, flags, latencies`  |
+//! | 3   | `Shed`       | shard → client   | `id, reason: u8`               |
+//! | 4   | `FleetReport`| both             | `text` (empty = request)       |
+//!
+//! Integers and floats are little-endian; strings are `u16` length +
+//! UTF-8 bytes; the window is `T: u32, F: u32` then `T·F` `f32` samples
+//! row-major. Every decode error is a clean [`WireError`] — malformed
+//! input (truncated payloads, unknown tags, oversized or garbage length
+//! prefixes, invalid UTF-8) never panics, which the randomized round-trip
+//! and rejection tests below pin down.
+//!
+//! Versioning is a hard gate at the [`Frame::Hello`] handshake: both ends
+//! send their [`WIRE_VERSION`] first and refuse mismatches, so a frame is
+//! only ever parsed by a peer that speaks the same layout.
+
+use std::io::{Read, Write};
+
+/// Protocol version exchanged in [`Frame::Hello`]; both ends must match.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Upper bound on `len` (tag + payload bytes) accepted by the decoder.
+/// 16 MiB comfortably holds the largest real frame (a `Submit` carrying a
+/// long telemetry window) while rejecting garbage prefixes cheaply.
+pub const MAX_FRAME_LEN: usize = 1 << 24;
+
+/// Why a shard turned a submission away (the wire form of
+/// [`crate::server::SubmitError`], minus the model name).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The lane's bounded admission queue was full (load shed).
+    Overloaded,
+    /// The lane (or the whole shard) is shut down.
+    Closed,
+    /// The shard serves no model by the submitted name.
+    UnknownModel,
+}
+
+impl ShedReason {
+    fn to_byte(self) -> u8 {
+        match self {
+            ShedReason::Overloaded => 0,
+            ShedReason::Closed => 1,
+            ShedReason::UnknownModel => 2,
+        }
+    }
+
+    fn from_byte(b: u8) -> Result<ShedReason, WireError> {
+        match b {
+            0 => Ok(ShedReason::Overloaded),
+            1 => Ok(ShedReason::Closed),
+            2 => Ok(ShedReason::UnknownModel),
+            _ => Err(WireError::BadPayload("unknown shed reason")),
+        }
+    }
+}
+
+/// One protocol frame. See the module docs for the byte layout.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Handshake: first frame in each direction; carries the sender's
+    /// [`WIRE_VERSION`]. A mismatch refuses the connection.
+    Hello { version: u16 },
+    /// A scoring request: client-chosen `id` (echoed back in the matching
+    /// [`Frame::Response`] / [`Frame::Shed`]), model name, and the
+    /// telemetry window as `T` rows of `F` samples.
+    Submit { id: u64, model: String, window: Vec<Vec<f32>> },
+    /// A scored response for `Submit { id, .. }` — the wire form of
+    /// [`crate::server::Response`], bit-exact (`score` travels as raw
+    /// `f64` bits, so remote scores stay bit-identical to local ones).
+    Response { id: u64, score: f64, is_anomaly: bool, queue_us: f64, service_us: f64, e2e_us: f64 },
+    /// The shard turned `Submit { id, .. }` away; `reason` says why.
+    Shed { id: u64, reason: ShedReason },
+    /// Fleet-report exchange: an empty `text` asks the shard for its
+    /// rolled-up report; the shard answers with the report text.
+    FleetReport { text: String },
+}
+
+/// Decode/IO failure. Every malformed input maps here — the decoder has
+/// no panicking paths.
+#[derive(Debug)]
+pub enum WireError {
+    /// Underlying socket/stream error.
+    Io(std::io::Error),
+    /// The stream ended inside a frame (mid-prefix or mid-payload).
+    Truncated,
+    /// Length prefix exceeds [`MAX_FRAME_LEN`] (or is zero) — a garbage
+    /// or hostile prefix, rejected before any allocation.
+    BadLength(usize),
+    /// Unknown frame tag byte.
+    BadTag(u8),
+    /// Payload doesn't decode as the tagged frame (short fields, size
+    /// mismatch, bad enum byte, trailing bytes).
+    BadPayload(&'static str),
+    /// A string field wasn't valid UTF-8.
+    BadUtf8,
+    /// Handshake version mismatch (reported by the handshake helpers).
+    BadVersion { got: u16, want: u16 },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "io: {e}"),
+            WireError::Truncated => write!(f, "stream ended inside a frame"),
+            WireError::BadLength(n) => {
+                write!(f, "frame length {n} outside 1..={MAX_FRAME_LEN}")
+            }
+            WireError::BadTag(t) => write!(f, "unknown frame tag {t:#04x}"),
+            WireError::BadPayload(why) => write!(f, "malformed payload: {why}"),
+            WireError::BadUtf8 => write!(f, "string field is not valid UTF-8"),
+            WireError::BadVersion { got, want } => {
+                write!(f, "wire version mismatch: peer speaks v{got}, this end v{want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            WireError::Truncated
+        } else {
+            WireError::Io(e)
+        }
+    }
+}
+
+// ---- encoding ----------------------------------------------------------
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    assert!(bytes.len() <= u16::MAX as usize, "string field too long for the wire");
+    put_u16(buf, bytes.len() as u16);
+    buf.extend_from_slice(bytes);
+}
+
+impl Frame {
+    fn tag(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => 0,
+            Frame::Submit { .. } => 1,
+            Frame::Response { .. } => 2,
+            Frame::Shed { .. } => 3,
+            Frame::FleetReport { .. } => 4,
+        }
+    }
+
+    /// Serialize to a complete wire frame (length prefix included).
+    pub fn encode(&self) -> Vec<u8> {
+        if let Frame::Submit { id, model, window } = self {
+            return encode_submit(*id, model, window);
+        }
+        let mut body = Vec::with_capacity(64);
+        body.push(self.tag());
+        match self {
+            Frame::Hello { version } => put_u16(&mut body, *version),
+            Frame::Submit { .. } => unreachable!("delegated to encode_submit above"),
+            Frame::Response { id, score, is_anomaly, queue_us, service_us, e2e_us } => {
+                put_u64(&mut body, *id);
+                put_f64(&mut body, *score);
+                body.push(u8::from(*is_anomaly));
+                put_f64(&mut body, *queue_us);
+                put_f64(&mut body, *service_us);
+                put_f64(&mut body, *e2e_us);
+            }
+            Frame::Shed { id, reason } => {
+                put_u64(&mut body, *id);
+                body.push(reason.to_byte());
+            }
+            Frame::FleetReport { text } => {
+                assert!(text.len() <= u32::MAX as usize);
+                put_u32(&mut body, text.len() as u32);
+                body.extend_from_slice(text.as_bytes());
+            }
+        }
+        finish_frame(body)
+    }
+}
+
+/// Serialize a `Submit` frame directly from borrowed window rows —
+/// byte-identical to `Frame::Submit { .. }.encode()`, but the submit hot
+/// path ([`crate::net::ShardClient`]) can build it without cloning the
+/// window into a `Frame` first.
+pub fn encode_submit(id: u64, model: &str, rows: &[Vec<f32>]) -> Vec<u8> {
+    let t = rows.len();
+    let f = rows.first().map_or(0, Vec::len);
+    let mut body = Vec::with_capacity(32 + model.len() + t * f * 4);
+    body.push(1u8);
+    put_u64(&mut body, id);
+    put_str(&mut body, model);
+    put_u32(&mut body, t as u32);
+    put_u32(&mut body, f as u32);
+    for row in rows {
+        assert_eq!(row.len(), f, "ragged window rows cannot be framed");
+        for &v in row {
+            put_u32(&mut body, v.to_bits());
+        }
+    }
+    finish_frame(body)
+}
+
+/// Prefix an encoded body (tag + payload) with its length.
+fn finish_frame(body: Vec<u8>) -> Vec<u8> {
+    debug_assert!(body.len() <= MAX_FRAME_LEN, "encoder produced an oversized frame");
+    let mut out = Vec::with_capacity(4 + body.len());
+    put_u32(&mut out, body.len() as u32);
+    out.extend_from_slice(&body);
+    out
+}
+
+// ---- decoding ----------------------------------------------------------
+
+/// Bounds-checked cursor over one frame's payload bytes.
+struct Cur<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.off.checked_add(n).ok_or(WireError::BadPayload("length overflow"))?;
+        if end > self.buf.len() {
+            return Err(WireError::BadPayload("field past end of payload"));
+        }
+        let s = &self.buf[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn string(&mut self) -> Result<String, WireError> {
+        let n = self.u16()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::BadUtf8)
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        if self.off == self.buf.len() {
+            Ok(())
+        } else {
+            Err(WireError::BadPayload("trailing bytes after frame"))
+        }
+    }
+}
+
+/// Decode one frame from `tag` + `payload` (the bytes after the length
+/// prefix). Rejects anything malformed with a clean [`WireError`].
+pub fn decode_frame(tag: u8, payload: &[u8]) -> Result<Frame, WireError> {
+    let mut c = Cur { buf: payload, off: 0 };
+    let frame = match tag {
+        0 => Frame::Hello { version: c.u16()? },
+        1 => {
+            let id = c.u64()?;
+            let model = c.string()?;
+            let t = c.u32()? as usize;
+            let f = c.u32()? as usize;
+            // Zero-width rows would make the sample count 0 for ANY t,
+            // letting a ~22-byte frame demand a `t`-row allocation with
+            // nothing backing it (t = u32::MAX → a multi-GB reserve and
+            // an abort). With f ≥ 1 enforced, t is bounded by the
+            // payload length the length-prefix gate already capped.
+            if f == 0 && t != 0 {
+                return Err(WireError::BadPayload("zero-width window rows"));
+            }
+            let samples = t.checked_mul(f).ok_or(WireError::BadPayload("window size overflow"))?;
+            let need =
+                samples.checked_mul(4).ok_or(WireError::BadPayload("window size overflow"))?;
+            if need != payload.len() - c.off {
+                return Err(WireError::BadPayload("window size disagrees with payload"));
+            }
+            let mut window = Vec::with_capacity(t);
+            for _ in 0..t {
+                let mut row = Vec::with_capacity(f);
+                for _ in 0..f {
+                    row.push(f32::from_bits(c.u32()?));
+                }
+                window.push(row);
+            }
+            Frame::Submit { id, model, window }
+        }
+        2 => Frame::Response {
+            id: c.u64()?,
+            score: c.f64()?,
+            is_anomaly: match c.u8()? {
+                0 => false,
+                1 => true,
+                _ => return Err(WireError::BadPayload("bad bool byte")),
+            },
+            queue_us: c.f64()?,
+            service_us: c.f64()?,
+            e2e_us: c.f64()?,
+        },
+        3 => Frame::Shed { id: c.u64()?, reason: ShedReason::from_byte(c.u8()?)? },
+        4 => {
+            let n = c.u32()? as usize;
+            let bytes = c.take(n)?;
+            Frame::FleetReport {
+                text: String::from_utf8(bytes.to_vec()).map_err(|_| WireError::BadUtf8)?,
+            }
+        }
+        other => return Err(WireError::BadTag(other)),
+    };
+    c.done()?;
+    Ok(frame)
+}
+
+/// Read one frame from a byte stream. `Ok(None)` is a clean EOF at a
+/// frame boundary (the peer closed between frames); an EOF anywhere else
+/// is [`WireError::Truncated`].
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>, WireError> {
+    let mut prefix = [0u8; 4];
+    let mut got = 0usize;
+    while got < prefix.len() {
+        match r.read(&mut prefix[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => return Err(WireError::Truncated),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len == 0 || len > MAX_FRAME_LEN {
+        return Err(WireError::BadLength(len));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    decode_frame(body[0], &body[1..]).map(Some)
+}
+
+/// Write one frame to a byte stream.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<(), WireError> {
+    w.write_all(&frame.encode())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Run this end's half of the version handshake on a fresh connection:
+/// send our [`Frame::Hello`], read the peer's, and refuse a mismatch with
+/// [`WireError::BadVersion`]. Symmetric, so both client and server use
+/// the same helper (each side writes first, then reads — no deadlock,
+/// since a Hello frame is far smaller than any socket buffer).
+pub fn handshake(stream: &mut (impl Read + Write)) -> Result<(), WireError> {
+    write_frame(stream, &Frame::Hello { version: WIRE_VERSION })?;
+    match read_frame(stream)? {
+        Some(Frame::Hello { version }) if version == WIRE_VERSION => Ok(()),
+        Some(Frame::Hello { version }) => {
+            Err(WireError::BadVersion { got: version, want: WIRE_VERSION })
+        }
+        Some(_) => Err(WireError::BadPayload("peer's first frame was not Hello")),
+        None => Err(WireError::Truncated),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let bytes = frame.encode();
+        let mut cursor = &bytes[..];
+        let back = read_frame(&mut cursor).expect("decodes").expect("not EOF");
+        assert!(cursor.is_empty(), "decoder must consume the whole frame");
+        back
+    }
+
+    fn random_frame(rng: &mut Xoshiro256) -> Frame {
+        match rng.below(5) {
+            0 => Frame::Hello { version: rng.below(u16::MAX as u64 + 1) as u16 },
+            1 => {
+                let t = rng.below(6) as usize;
+                let f = 1 + rng.below(8) as usize;
+                let window = (0..t)
+                    .map(|_| (0..f).map(|_| rng.uniform(-2.0, 2.0) as f32).collect())
+                    .collect();
+                let model = format!("LSTM-AE-F{}-D{}", 16 << rng.below(3), rng.below(8));
+                Frame::Submit { id: rng.next_u64(), model, window }
+            }
+            2 => Frame::Response {
+                id: rng.next_u64(),
+                // Raw bit patterns, including NaN/inf payloads, must
+                // survive the wire untouched.
+                score: f64::from_bits(rng.next_u64()),
+                is_anomaly: rng.next_f64() < 0.5,
+                queue_us: rng.uniform(0.0, 1e6),
+                service_us: rng.uniform(0.0, 1e6),
+                e2e_us: rng.uniform(0.0, 1e6),
+            },
+            3 => Frame::Shed {
+                id: rng.next_u64(),
+                reason: [ShedReason::Overloaded, ShedReason::Closed, ShedReason::UnknownModel]
+                    [rng.below(3) as usize],
+            },
+            _ => {
+                let n = rng.below(200) as usize;
+                let text: String =
+                    (0..n).map(|i| char::from(b'a' + ((i as u8) % 26))).collect();
+                Frame::FleetReport { text }
+            }
+        }
+    }
+
+    /// Frame equality with bitwise float comparison (NaN payloads must
+    /// round-trip, and `PartialEq` on f64 would reject them).
+    fn frames_bit_equal(a: &Frame, b: &Frame) -> bool {
+        match (a, b) {
+            (
+                Frame::Response { id, score, is_anomaly, queue_us, service_us, e2e_us },
+                Frame::Response {
+                    id: id2,
+                    score: score2,
+                    is_anomaly: an2,
+                    queue_us: q2,
+                    service_us: s2,
+                    e2e_us: e2,
+                },
+            ) => {
+                id == id2
+                    && score.to_bits() == score2.to_bits()
+                    && is_anomaly == an2
+                    && queue_us.to_bits() == q2.to_bits()
+                    && service_us.to_bits() == s2.to_bits()
+                    && e2e_us.to_bits() == e2.to_bits()
+            }
+            _ => a == b,
+        }
+    }
+
+    #[test]
+    fn randomized_frames_roundtrip_bit_exactly() {
+        let mut rng = Xoshiro256::seeded(0xF0A7);
+        for i in 0..500 {
+            let frame = random_frame(&mut rng);
+            let back = roundtrip(&frame);
+            assert!(frames_bit_equal(&frame, &back), "iteration {i}: {frame:?} != {back:?}");
+        }
+    }
+
+    #[test]
+    fn streams_of_frames_decode_in_order() {
+        let mut rng = Xoshiro256::seeded(0xBEEF);
+        let frames: Vec<Frame> = (0..32).map(|_| random_frame(&mut rng)).collect();
+        let mut bytes = Vec::new();
+        for f in &frames {
+            bytes.extend_from_slice(&f.encode());
+        }
+        let mut cursor = &bytes[..];
+        for want in &frames {
+            let got = read_frame(&mut cursor).unwrap().unwrap();
+            assert!(frames_bit_equal(want, &got));
+        }
+        assert!(read_frame(&mut cursor).unwrap().is_none(), "clean EOF at the boundary");
+    }
+
+    #[test]
+    fn truncated_frames_error_cleanly_at_every_cut() {
+        let frame = Frame::Submit {
+            id: 7,
+            model: "LSTM-AE-F32-D2".into(),
+            window: vec![vec![0.5f32; 4]; 3],
+        };
+        let bytes = frame.encode();
+        // Cutting the stream anywhere inside the frame (after byte 0)
+        // must yield Truncated/BadPayload — never a panic, never Ok.
+        for cut in 1..bytes.len() {
+            let mut cursor = &bytes[..cut];
+            match read_frame(&mut cursor) {
+                Err(WireError::Truncated) | Err(WireError::BadPayload(_)) => {}
+                other => panic!("cut at {cut}: want truncation error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_and_garbage_prefixes_are_rejected_before_allocation() {
+        // Length prefix far beyond MAX_FRAME_LEN (e.g. the peer is not
+        // speaking this protocol at all): clean BadLength.
+        let mut garbage = Vec::new();
+        garbage.extend_from_slice(&(u32::MAX).to_le_bytes());
+        garbage.extend_from_slice(&[0u8; 64]);
+        match read_frame(&mut &garbage[..]) {
+            Err(WireError::BadLength(n)) => assert_eq!(n, u32::MAX as usize),
+            other => panic!("want BadLength, got {other:?}"),
+        }
+        // Zero length is equally malformed.
+        let zero = 0u32.to_le_bytes();
+        assert!(matches!(read_frame(&mut &zero[..]), Err(WireError::BadLength(0))));
+        // ASCII noise ("HTTP") decodes as a huge little-endian length.
+        let mut http = Vec::from(&b"HTTP/1.1 200 OK\r\n"[..]);
+        http.resize(64, 0);
+        assert!(matches!(read_frame(&mut &http[..]), Err(WireError::BadLength(_))));
+    }
+
+    #[test]
+    fn unknown_tags_and_malformed_payloads_are_rejected() {
+        assert!(matches!(decode_frame(9, &[]), Err(WireError::BadTag(9))));
+        // Hello payload too short.
+        assert!(matches!(decode_frame(0, &[1]), Err(WireError::BadPayload(_))));
+        // Trailing bytes after a valid Hello.
+        assert!(matches!(decode_frame(0, &[1, 0, 99]), Err(WireError::BadPayload(_))));
+        // Shed with an unknown reason byte.
+        let mut shed = Vec::new();
+        shed.extend_from_slice(&7u64.to_le_bytes());
+        shed.push(250);
+        assert!(matches!(decode_frame(3, &shed), Err(WireError::BadPayload(_))));
+        // Submit whose declared window size disagrees with the payload.
+        let mut submit = Vec::new();
+        submit.extend_from_slice(&1u64.to_le_bytes());
+        submit.extend_from_slice(&2u16.to_le_bytes());
+        submit.extend_from_slice(b"ab");
+        submit.extend_from_slice(&1000u32.to_le_bytes()); // T
+        submit.extend_from_slice(&1000u32.to_le_bytes()); // F, but no samples follow
+        assert!(matches!(decode_frame(1, &submit), Err(WireError::BadPayload(_))));
+        // The zero-width-row hole: T = u32::MAX with F = 0 needs zero
+        // sample bytes, so without the guard a ~22-byte frame would
+        // demand a multi-gigabyte row allocation (process abort, not an
+        // error). Must be a clean rejection.
+        let mut zero_f = Vec::new();
+        zero_f.extend_from_slice(&1u64.to_le_bytes());
+        zero_f.extend_from_slice(&0u16.to_le_bytes()); // empty model name
+        zero_f.extend_from_slice(&u32::MAX.to_le_bytes()); // T
+        zero_f.extend_from_slice(&0u32.to_le_bytes()); // F
+        assert!(matches!(decode_frame(1, &zero_f), Err(WireError::BadPayload(_))));
+        // Invalid UTF-8 in a model name.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&1u64.to_le_bytes());
+        bad.extend_from_slice(&2u16.to_le_bytes());
+        bad.extend_from_slice(&[0xFF, 0xFE]);
+        bad.extend_from_slice(&0u32.to_le_bytes());
+        bad.extend_from_slice(&0u32.to_le_bytes());
+        assert!(matches!(decode_frame(1, &bad), Err(WireError::BadUtf8)));
+        // Random byte soup across many seeds: errors only, no panics.
+        let mut rng = Xoshiro256::seeded(0xD15EA5E);
+        for _ in 0..2000 {
+            let n = rng.below(40) as usize;
+            let bytes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let tag = rng.below(256) as u8;
+            let _ = decode_frame(tag, &bytes);
+        }
+    }
+
+    #[test]
+    fn empty_window_submit_roundtrips() {
+        let frame = Frame::Submit { id: 0, model: String::new(), window: vec![] };
+        assert_eq!(roundtrip(&frame), frame);
+    }
+}

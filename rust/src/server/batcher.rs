@@ -16,13 +16,28 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::{Batch, Msg, ServerConfig, ServerMetrics, WorkerMsg};
+use super::front::CancelSet;
+use super::{Batch, Msg, Request, ServerConfig, ServerMetrics, WorkerMsg};
+
+/// Dequeue-side cancellation filter: a request whose id carries a cancel
+/// mark ([`crate::server::Ticket::cancel`]) is removed from the lane here
+/// — counted, never batched, never scored. Returns the request only when
+/// it is still live.
+fn admit(req: Request, cancels: &CancelSet, metrics: &ServerMetrics) -> Option<Request> {
+    metrics.on_dequeue();
+    if cancels.lock().unwrap().remove(&req.id) {
+        metrics.on_cancelled();
+        return None;
+    }
+    Some(req)
+}
 
 pub(crate) fn run_batcher(
     rx: Receiver<Msg>,
     out: SyncSender<WorkerMsg>,
     cfg: ServerConfig,
     metrics: Arc<ServerMetrics>,
+    cancels: CancelSet,
 ) {
     let mut pending: Batch = Vec::with_capacity(cfg.max_batch);
     // Meaningful only while `pending` is non-empty: *submit* time of the
@@ -36,11 +51,12 @@ pub(crate) fn run_batcher(
             // Idle: no deadline armed — block until traffic or shutdown.
             match rx.recv() {
                 Ok(Msg::Req(req)) => {
-                    metrics.on_dequeue();
-                    oldest = req.submitted;
-                    pending.push(req);
-                    if pending.len() >= cfg.max_batch {
-                        flush(&mut pending, &out);
+                    if let Some(req) = admit(req, &cancels, &metrics) {
+                        oldest = req.submitted;
+                        pending.push(req);
+                        if pending.len() >= cfg.max_batch {
+                            flush(&mut pending, &out);
+                        }
                     }
                 }
                 Ok(Msg::Shutdown) | Err(_) => return,
@@ -59,8 +75,9 @@ pub(crate) fn run_batcher(
                 while pending.len() < cfg.max_batch {
                     match rx.try_recv() {
                         Ok(Msg::Req(req)) => {
-                            metrics.on_dequeue();
-                            pending.push(req);
+                            if let Some(req) = admit(req, &cancels, &metrics) {
+                                pending.push(req);
+                            }
                         }
                         Ok(Msg::Shutdown) => {
                             flush(&mut pending, &out);
@@ -74,10 +91,11 @@ pub(crate) fn run_batcher(
             }
             match rx.recv_timeout(remaining) {
                 Ok(Msg::Req(req)) => {
-                    metrics.on_dequeue();
-                    pending.push(req);
-                    if pending.len() >= cfg.max_batch {
-                        flush(&mut pending, &out);
+                    if let Some(req) = admit(req, &cancels, &metrics) {
+                        pending.push(req);
+                        if pending.len() >= cfg.max_batch {
+                            flush(&mut pending, &out);
+                        }
                     }
                 }
                 Ok(Msg::Shutdown) => {
@@ -123,7 +141,7 @@ mod tests {
         let (tx, rx) = channel::<BatcherMsg>();
         let (out_tx, out_rx) = sync_channel::<WorkerMsg>(16);
         let metrics = Arc::new(ServerMetrics::new());
-        let h = std::thread::spawn(move || run_batcher(rx, out_tx, cfg, metrics));
+        let h = std::thread::spawn(move || run_batcher(rx, out_tx, cfg, metrics, Arc::default()));
         (tx, out_rx, h)
     }
 
@@ -204,7 +222,7 @@ mod tests {
         // batcher can look at it.
         let (out_tx, out_rx) = sync_channel::<WorkerMsg>(0);
         let metrics = Arc::new(ServerMetrics::new());
-        let h = std::thread::spawn(move || run_batcher(rx, out_tx, cfg, metrics));
+        let h = std::thread::spawn(move || run_batcher(rx, out_tx, cfg, metrics, Arc::default()));
         let (r1, _k1) = req(1);
         let (r2, _k2) = req(2);
         let (r3, _k3) = req(3);
@@ -220,6 +238,41 @@ mod tests {
         }
         assert_eq!(sizes.iter().sum::<usize>(), 3);
         assert!(sizes.len() <= 2, "overdue backlog must coalesce, got {sizes:?}");
+        tx.send(BatcherMsg::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn cancelled_requests_are_dropped_at_dequeue_not_batched() {
+        let cfg = ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(5),
+            ..Default::default()
+        };
+        let (tx, rx) = channel::<BatcherMsg>();
+        let (out_tx, out_rx) = sync_channel::<WorkerMsg>(16);
+        let metrics = Arc::new(ServerMetrics::new());
+        let cancels: CancelSet = Arc::default();
+        // Queue three requests and mark the middle one cancelled before
+        // the batcher starts, so the filter (not timing) decides.
+        let (r1, _k1) = req(1);
+        let (r2, _k2) = req(2);
+        let (r3, _k3) = req(3);
+        tx.send(BatcherMsg::Req(r1)).unwrap();
+        tx.send(BatcherMsg::Req(r2)).unwrap();
+        tx.send(BatcherMsg::Req(r3)).unwrap();
+        cancels.lock().unwrap().insert(2);
+        let m2 = metrics.clone();
+        let c2 = cancels.clone();
+        let h = std::thread::spawn(move || run_batcher(rx, out_tx, cfg, m2, c2));
+        let mut ids = Vec::new();
+        while ids.len() < 2 {
+            ids.extend(batch_of(out_rx.recv().unwrap()).iter().map(|r| r.id));
+        }
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 3], "the cancelled request must never be dispatched");
+        assert_eq!(metrics.cancelled(), 1);
+        assert!(cancels.lock().unwrap().is_empty(), "consumed marks are retired");
         tx.send(BatcherMsg::Shutdown).unwrap();
         h.join().unwrap();
     }

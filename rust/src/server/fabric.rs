@@ -37,13 +37,17 @@ use crate::model::{LstmAutoencoder, Topology};
 use crate::util::table::Table;
 use crate::workload::Window;
 
-use super::front::CompletionRouter;
+use super::front::{CancelSet, CompletionRouter};
 use super::{
     batcher, Autoscaler, AutoscalePolicy, Backend, BatcherMsg, QuantBackend, Request, Response,
     ServerConfig, ServerMetrics, Ticket, WorkerMsg,
 };
 
-/// Why a submission was rejected at admission.
+/// Why a submission was rejected at admission — and, through a
+/// [`super::Completion`], why an accepted ticket failed to resolve into a
+/// response (`Closed` after worker loss or a dead shard connection,
+/// `Cancelled` after [`Ticket::cancel`], `Overloaded` when a remote
+/// shard shed the request after local acceptance).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum SubmitError {
     /// The lane's bounded admission queue is full — the request was shed.
@@ -51,6 +55,16 @@ pub enum SubmitError {
     Overloaded,
     /// The lane (or its reply path) has shut down; no work is accepted.
     Closed,
+    /// The caller cancelled the request ([`Ticket::cancel`]) before it
+    /// was scored; it was removed from its lane's queue.
+    Cancelled,
+    /// The request cannot be represented on the wire: the window exceeds
+    /// the frame-size limit ([`crate::net::MAX_FRAME_LEN`]), has
+    /// zero-width rows, or the model name is longer than a wire string.
+    /// Returned by remote submission surfaces before anything touches
+    /// the socket — per-request and terminal, never a connection
+    /// failure.
+    TooLarge,
     /// The registry serves no model by that name.
     UnknownModel(String),
 }
@@ -60,6 +74,8 @@ impl std::fmt::Display for SubmitError {
         match self {
             SubmitError::Overloaded => write!(f, "admission queue full (load shed)"),
             SubmitError::Closed => write!(f, "lane is shut down"),
+            SubmitError::Cancelled => write!(f, "request cancelled before scoring"),
+            SubmitError::TooLarge => write!(f, "window exceeds the wire frame-size limit"),
             SubmitError::UnknownModel(m) => write!(f, "unknown model {m:?}"),
         }
     }
@@ -80,6 +96,9 @@ struct WorkerSet {
     backend: Arc<dyn Backend>,
     metrics: Arc<ServerMetrics>,
     threshold: f64,
+    /// The lane's cancelled-request marks; workers drop marked requests
+    /// from a batch before scoring it.
+    cancels: CancelSet,
     /// Producer side of the batch queue, kept so retirement messages can
     /// be injected behind the batcher's traffic. Dropped (`None`) at
     /// shutdown so workers see a disconnected channel and exit.
@@ -104,11 +123,14 @@ impl WorkerSet {
         let rx = self.batch_rx.clone();
         let metrics = self.metrics.clone();
         let threshold = self.threshold;
+        let cancels = self.cancels.clone();
         let alive = self.alive.clone();
         let pending_retire = self.pending_retire.clone();
         let handle = std::thread::Builder::new()
             .name(format!("scr{wid}:{}", self.lane))
-            .spawn(move || worker_loop(backend, rx, metrics, threshold, alive, pending_retire))
+            .spawn(move || {
+                worker_loop(backend, rx, metrics, threshold, cancels, alive, pending_retire)
+            })
             .expect("spawn worker");
         let mut handles = self.handles.lock().unwrap();
         // Reap handles of workers that already retired, so a lane that
@@ -209,13 +231,17 @@ impl Lane {
         let (batch_tx, batch_rx) = sync_channel::<WorkerMsg>(dispatch_workers.max(1) * 2);
         let batch_rx = Arc::new(Mutex::new(batch_rx));
 
+        // One cancel set per lane, shared by tickets (writers), the
+        // batcher, the workers, and the completion router (consumers).
+        let cancels: CancelSet = Arc::default();
         let batcher = {
             let cfg2 = cfg.clone();
             let out = batch_tx.clone();
             let metrics = metrics.clone();
+            let cancels = cancels.clone();
             std::thread::Builder::new()
                 .name(format!("bat:{name}"))
-                .spawn(move || batcher::run_batcher(rx, out, cfg2, metrics))
+                .spawn(move || batcher::run_batcher(rx, out, cfg2, metrics, cancels))
                 .expect("spawn batcher")
         };
         let workers = WorkerSet {
@@ -223,6 +249,7 @@ impl Lane {
             backend,
             metrics: metrics.clone(),
             threshold: cfg.threshold,
+            cancels: cancels.clone(),
             batch_tx: Mutex::new(Some(batch_tx)),
             batch_rx,
             alive: Arc::new(AtomicUsize::new(0)),
@@ -233,7 +260,7 @@ impl Lane {
         for _ in 0..cfg.workers {
             workers.spawn_worker();
         }
-        let front = CompletionRouter::start(&name);
+        let front = CompletionRouter::start(&name, cancels);
         Lane {
             name,
             tx,
@@ -480,6 +507,7 @@ fn worker_loop(
     rx: Arc<Mutex<Receiver<WorkerMsg>>>,
     metrics: Arc<ServerMetrics>,
     threshold: f64,
+    cancels: CancelSet,
     alive: Arc<AtomicUsize>,
     pending_retire: Arc<AtomicUsize>,
 ) {
@@ -491,7 +519,7 @@ fn worker_loop(
             guard.recv()
         };
         metrics.on_worker_idle(wait_start.elapsed().as_nanos() as u64);
-        let batch = match msg {
+        let mut batch = match msg {
             Ok(WorkerMsg::Batch(b)) => b,
             Ok(WorkerMsg::Retire) => {
                 pending_retire.fetch_sub(1, Ordering::Relaxed);
@@ -499,6 +527,23 @@ fn worker_loop(
             }
             Err(_) => break,
         };
+        // Last cancellation point: a request cancelled after the batcher
+        // dispatched its batch is dropped here, just before scoring. One
+        // lock acquisition for the whole batch — the guard is held
+        // across the retain so the hot path doesn't pay per-element
+        // contention against cancel writers.
+        {
+            let mut marks = cancels.lock().unwrap();
+            if !marks.is_empty() {
+                batch.retain(|req| {
+                    let cancelled = marks.remove(&req.id);
+                    if cancelled {
+                        metrics.on_cancelled();
+                    }
+                    !cancelled
+                });
+            }
+        }
         if batch.is_empty() {
             continue;
         }
@@ -753,7 +798,18 @@ impl ModelRegistry {
             autoscale: None,
         }
     }
+}
 
+impl super::SubmitSurface for ModelRegistry {
+    fn submit_async(&self, model: &str, window: Window) -> Result<Ticket, SubmitError> {
+        ModelRegistry::submit_async(self, model, window)
+    }
+
+    /// The in-process surface keeps its dedicated blocking path (a plain
+    /// `Receiver` wait, no router slot) rather than the trait default.
+    fn score_blocking(&self, model: &str, window: Window) -> Result<Response, SubmitError> {
+        ModelRegistry::score_blocking(self, model, window)
+    }
 }
 
 impl Default for ModelRegistry {
@@ -986,6 +1042,57 @@ mod tests {
         // Post-shutdown async submits are counted Closed rejections.
         assert_eq!(lane.submit_async(gen.benign_window(4)).unwrap_err(), SubmitError::Closed);
         assert_eq!(lane.metrics().rejected_closed(), 1);
+    }
+
+    #[test]
+    fn cancel_removes_queued_requests_and_accounting_conserves() {
+        // One worker blocked on a gated batch; everything submitted
+        // behind it is still queued (admission queue or batch queue) and
+        // must be actively removable.
+        let (gate_tx, gate_rx) = channel::<()>();
+        let backend = Arc::new(GatedBackend { gate: Mutex::new(gate_rx) });
+        let cfg = ServerConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(1),
+            workers: 1,
+            queue_capacity: 64,
+            threshold: 1.0,
+            autoscale: None,
+        };
+        let lane = Lane::start("cancel", backend, cfg);
+        // First request occupies the worker behind the gate...
+        let head = lane.submit_async(tiny_window()).expect("admitted");
+        // ...then a backlog of cancellable requests queues behind it.
+        let queued: Vec<Ticket> =
+            (0..8).map(|_| lane.submit_async(tiny_window()).expect("admitted")).collect();
+        let mut cancelled = 0u64;
+        for t in &queued {
+            if t.cancel() {
+                cancelled += 1;
+                // Cancel resolves immediately — before the gate opens.
+                assert_eq!(t.poll().unwrap().unwrap_err(), SubmitError::Cancelled);
+            }
+        }
+        assert!(cancelled > 0, "queued requests must be cancellable");
+        drop(gate_tx);
+        assert!(head.wait().is_ok(), "the in-worker request is past cancellation");
+        for t in &queued {
+            // Survivors complete; cancelled tickets keep their outcome.
+            match t.wait() {
+                Ok(_) | Err(SubmitError::Cancelled) => {}
+                Err(e) => panic!("unexpected outcome {e}"),
+            }
+        }
+        lane.shutdown();
+        let m = lane.metrics();
+        assert_eq!(m.submitted(), 9);
+        assert_eq!(m.cancelled(), cancelled, "every removed request is counted");
+        assert_eq!(
+            m.completed() + m.cancelled(),
+            m.submitted(),
+            "conservation: accepted work is scored or counted cancelled, never lost"
+        );
+        assert!(wait_for(|| lane.async_inflight() == 0), "cancel must not leak router slots");
     }
 
     #[test]

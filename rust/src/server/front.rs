@@ -36,13 +36,20 @@
 //! issued), and scores stay bit-identical to `ExecMode::Sequential`
 //! (`tests/integration_front.rs` pins both down).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::{Response, SubmitError};
+
+/// Ids whose requests were cancelled while still queued, shared between a
+/// lane's tickets (writers via [`Ticket::cancel`]) and its batcher +
+/// workers (consumers: a queued request whose id is marked here is
+/// removed from the lane instead of being scored, and counted in
+/// [`super::ServerMetrics::cancelled`]).
+pub(crate) type CancelSet = Arc<Mutex<HashSet<u64>>>;
 
 /// What a completed ticket resolves to: the scored [`Response`], or
 /// [`SubmitError::Closed`] when the lane shut down before the request
@@ -66,10 +73,12 @@ struct TicketState {
     hook: Option<SetHook>,
 }
 
-/// The slot shared between a [`Ticket`] and its lane's completion
-/// router: outcome + condvar for waiters, plus the optional callback and
-/// completion-set hook consumed at delivery.
-struct TicketShared {
+/// The slot shared between a [`Ticket`] and its completer (a lane's
+/// completion router, or a [`crate::net::ShardClient`] reader thread for
+/// tickets that resolve over the wire): outcome + condvar for waiters,
+/// plus the optional callback and completion-set hook consumed at
+/// delivery.
+pub(crate) struct TicketShared {
     state: Mutex<TicketState>,
     cond: Condvar,
 }
@@ -81,7 +90,7 @@ impl TicketShared {
 
     /// Resolve the slot. Called exactly once per ticket — by the router
     /// on delivery, or by the router's exit drain with `Err(Closed)`.
-    fn complete(&self, outcome: Completion) {
+    pub(crate) fn complete(&self, outcome: Completion) {
         let (callback, hook) = {
             let mut st = self.state.lock().unwrap();
             debug_assert!(st.outcome.is_none(), "a ticket completes exactly once");
@@ -125,9 +134,30 @@ pub struct Ticket {
     /// Shared with the router — no per-submit allocation for the name.
     lane: Arc<str>,
     shared: Arc<TicketShared>,
+    /// Wiring for [`Ticket::cancel`] on lane-local tickets; `None` for
+    /// tickets resolved by other completers (e.g. the net client), which
+    /// cannot reach into a remote lane's queue.
+    cancel: Option<CancelHook>,
+}
+
+/// What [`Ticket::cancel`] needs to reach back into its lane: the lane's
+/// cancel set (so the batcher/workers drop the queued request) and the
+/// router's slot map (so the slot is retired before the ticket resolves
+/// `Err(Cancelled)` — a Weak, because tickets routinely outlive lanes).
+struct CancelHook {
+    set: CancelSet,
+    slots: Weak<Mutex<HashMap<u64, Arc<TicketShared>>>>,
 }
 
 impl Ticket {
+    /// A ticket with no lane-side wiring, resolved by whoever holds the
+    /// returned slot (the net client's reader thread completes these from
+    /// `Response`/`Shed` frames).
+    pub(crate) fn raw(id: u64, lane: Arc<str>) -> (Ticket, Arc<TicketShared>) {
+        let shared = Arc::new(TicketShared::new());
+        (Ticket { id, lane, shared: shared.clone(), cancel: None }, shared)
+    }
+
     /// The lane-local request id this ticket redeems (matches
     /// [`Response::id`]).
     pub fn id(&self) -> u64 {
@@ -204,6 +234,51 @@ impl Ticket {
             None => st.callback = Some(Box::new(f)),
         }
     }
+
+    /// Cancel a still-queued request: actively **removes** it from the
+    /// lane (the batcher and workers drop a marked request instead of
+    /// scoring it, counting it in
+    /// [`super::ServerMetrics::cancelled`] so admission accounting still
+    /// conserves — after a drain, `submitted == completed + cancelled`)
+    /// and resolves this ticket immediately with
+    /// `Err(`[`SubmitError::Cancelled`]`)`, waking every waiter.
+    ///
+    /// Returns `true` when the ticket was resolved by this call. Returns
+    /// `false` — and changes nothing — when the outcome already arrived
+    /// (or arrives concurrently: delivery wins the race), and for tickets
+    /// without lane-side wiring (remote tickets from a
+    /// [`crate::net::ShardClient`]). Best-effort beyond the queue: a
+    /// request a worker already picked up is scored anyway; its response
+    /// is discarded (the ticket has resolved `Cancelled`) and it counts
+    /// as `completed`, not `cancelled`, keeping the conservation law
+    /// intact either way.
+    pub fn cancel(&self) -> bool {
+        let Some(hook) = &self.cancel else { return false };
+        {
+            // Mark under the slot lock: a concurrent delivery is either
+            // already done (outcome set — we bail) or will run after we
+            // release, and then the slot-map removal below arbitrates.
+            let st = self.shared.state.lock().unwrap();
+            if st.outcome.is_some() {
+                return false;
+            }
+            hook.set.lock().unwrap().insert(self.id);
+        }
+        let won = match hook.slots.upgrade() {
+            Some(slots) => slots.lock().unwrap().remove(&self.id).is_some(),
+            // Router gone ⇒ its exit drain owns every remaining slot (it
+            // may already be completing this one): delivery wins.
+            None => false,
+        };
+        if !won {
+            // Delivery got the slot first: roll the mark back and let the
+            // real outcome stand.
+            hook.set.lock().unwrap().remove(&self.id);
+            return false;
+        }
+        self.shared.complete(Err(SubmitError::Cancelled));
+        true
+    }
 }
 
 /// Per-lane completion router: the single thread that multiplexes every
@@ -226,23 +301,29 @@ pub(crate) struct CompletionRouter {
     /// submitters.
     tx: Mutex<Option<Sender<Response>>>,
     slots: Arc<Mutex<HashMap<u64, Arc<TicketShared>>>>,
+    /// The lane's cancel set, shared into every issued ticket's hook and
+    /// consulted by the routing thread to clean up marks whose request
+    /// was scored before the batcher/workers could drop it.
+    cancels: CancelSet,
     handle: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl CompletionRouter {
-    pub(crate) fn start(lane: &str) -> CompletionRouter {
+    pub(crate) fn start(lane: &str, cancels: CancelSet) -> CompletionRouter {
         let (tx, rx) = channel::<Response>();
         let slots: Arc<Mutex<HashMap<u64, Arc<TicketShared>>>> =
             Arc::new(Mutex::new(HashMap::new()));
         let thread_slots = slots.clone();
+        let thread_cancels = cancels.clone();
         let handle = std::thread::Builder::new()
             .name(format!("cpl:{lane}"))
-            .spawn(move || route(rx, thread_slots))
+            .spawn(move || route(rx, thread_slots, thread_cancels))
             .expect("spawn completion router");
         CompletionRouter {
             name: Arc::from(lane),
             tx: Mutex::new(Some(tx)),
             slots,
+            cancels,
             handle: Mutex::new(Some(handle)),
         }
     }
@@ -257,7 +338,11 @@ impl CompletionRouter {
         };
         let shared = Arc::new(TicketShared::new());
         self.slots.lock().unwrap().insert(id, shared.clone());
-        Ok((Ticket { id, lane: self.name.clone(), shared }, tx.clone()))
+        let cancel = Some(CancelHook {
+            set: self.cancels.clone(),
+            slots: Arc::downgrade(&self.slots),
+        });
+        Ok((Ticket { id, lane: self.name.clone(), shared, cancel }, tx.clone()))
     }
 
     /// Remove a slot whose submission was rejected (shed or closed) —
@@ -283,16 +368,24 @@ impl CompletionRouter {
     }
 }
 
-fn route(rx: Receiver<Response>, slots: Arc<Mutex<HashMap<u64, Arc<TicketShared>>>>) {
+fn route(
+    rx: Receiver<Response>,
+    slots: Arc<Mutex<HashMap<u64, Arc<TicketShared>>>>,
+    cancels: CancelSet,
+) {
     while let Ok(resp) = rx.recv() {
         // Remove-then-complete outside the map lock: callbacks run on
         // this thread and must not hold the slot map hostage.
         let slot = slots.lock().unwrap().remove(&resp.id);
         if let Some(slot) = slot {
             slot.complete(Ok(resp));
+        } else {
+            // A missing slot means the submission was revoked — or
+            // cancelled after a worker had already picked it up, in which
+            // case nothing downstream will ever consume the cancel mark:
+            // retire it here so the set stays bounded.
+            cancels.lock().unwrap().remove(&resp.id);
         }
-        // A missing slot means the submission was revoked after the
-        // worker had already picked it up — nothing waits on it.
     }
     // Every producer endpoint is gone (lane shutdown, workers joined):
     // any slot still registered belongs to a request that died with a
@@ -450,8 +543,7 @@ mod tests {
     }
 
     fn ticket(id: u64) -> (Ticket, Arc<TicketShared>) {
-        let shared = Arc::new(TicketShared::new());
-        (Ticket { id, lane: Arc::from("t"), shared: shared.clone() }, shared)
+        Ticket::raw(id, Arc::from("t"))
     }
 
     #[test]
@@ -524,8 +616,44 @@ mod tests {
     }
 
     #[test]
+    fn raw_tickets_and_already_complete_tickets_refuse_cancel() {
+        // Raw tickets (the net client's) have no lane to reach into.
+        let (t, _slot) = ticket(1);
+        assert!(!t.cancel());
+        assert!(t.poll().is_none(), "refused cancel must not resolve the ticket");
+        // Delivery always beats cancellation.
+        let (t, slot) = ticket(2);
+        slot.complete(Ok(resp(2, 0.5)));
+        assert!(!t.cancel());
+        assert_eq!(t.wait().unwrap().score, 0.5);
+    }
+
+    #[test]
+    fn cancelling_a_routed_ticket_resolves_it_and_frees_the_slot() {
+        let cancels: CancelSet = Arc::default();
+        let router = CompletionRouter::start("test", cancels.clone());
+        let (t, tx) = router.issue(5).unwrap();
+        assert!(t.cancel(), "in-flight ticket must cancel");
+        assert_eq!(t.wait().unwrap_err(), SubmitError::Cancelled);
+        assert_eq!(router.inflight(), 0, "cancel retires the router slot");
+        assert!(cancels.lock().unwrap().contains(&5), "queue mark left for the batcher");
+        assert!(!t.cancel(), "second cancel is a no-op");
+        // A late response (the request was scored before the lane saw the
+        // mark) is dropped and retires the stale mark.
+        tx.send(resp(5, 1.0)).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while cancels.lock().unwrap().contains(&5) {
+            assert!(Instant::now() < deadline, "router must retire the stale cancel mark");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(t.wait().unwrap_err(), SubmitError::Cancelled, "outcome must not change");
+        drop(tx);
+        router.shutdown();
+    }
+
+    #[test]
     fn router_routes_by_id_poisons_orphans_and_forgets_revoked() {
-        let router = CompletionRouter::start("test");
+        let router = CompletionRouter::start("test", Arc::default());
         let (accepted, tx) = router.issue(0).unwrap();
         let (orphan, tx2) = router.issue(1).unwrap();
         let (revoked, tx3) = router.issue(2).unwrap();

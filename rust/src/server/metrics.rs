@@ -26,6 +26,15 @@ pub struct ServerMetrics {
     /// autoscaler never sizes a phantom pool; this counter is the
     /// operator-visible trace that it happened.
     worker_panics: AtomicU64,
+    /// Accepted requests actively removed from the lane by
+    /// [`crate::server::Ticket::cancel`] before scoring. The accepted-work
+    /// conservation law becomes `submitted == completed + cancelled`
+    /// after a drain — cancelled work leaves the lane through this
+    /// counter instead of vanishing.
+    cancelled: AtomicU64,
+    /// Submissions a [`crate::server::ShardRouter`] had to route around
+    /// (or re-issue after) a dead shard connection.
+    shard_failovers: AtomicU64,
     completed: AtomicU64,
     anomalies: AtomicU64,
     batches: AtomicU64,
@@ -54,6 +63,8 @@ impl ServerMetrics {
             shed: AtomicU64::new(0),
             rejected_closed: AtomicU64::new(0),
             worker_panics: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            shard_failovers: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             anomalies: AtomicU64::new(0),
             batches: AtomicU64::new(0),
@@ -87,6 +98,16 @@ impl ServerMetrics {
     /// A worker thread died unwinding a backend panic.
     pub fn on_worker_panic(&self) {
         self.worker_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A cancelled request was actively removed from the lane's queue.
+    pub fn on_cancelled(&self) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A submission was routed around (or re-issued after) a dead shard.
+    pub fn on_shard_failover(&self) {
+        self.shard_failovers.fetch_add(1, Ordering::Relaxed);
     }
 
     /// The batcher popped one request out of the admission queue.
@@ -135,6 +156,20 @@ impl ServerMetrics {
     /// Worker threads lost to backend panics over this lane's lifetime.
     pub fn worker_panics(&self) -> u64 {
         self.worker_panics.load(Ordering::Relaxed)
+    }
+
+    /// Accepted requests removed before scoring by
+    /// [`crate::server::Ticket::cancel`] — the second leg of the
+    /// accepted-work conservation law, `submitted == completed +
+    /// cancelled` after a drain.
+    pub fn cancelled(&self) -> u64 {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
+    /// Submissions that had to avoid or abandon a dead shard connection
+    /// (counted by [`crate::server::ShardRouter`]).
+    pub fn shard_failovers(&self) -> u64 {
+        self.shard_failovers.load(Ordering::Relaxed)
     }
 
     pub fn completed(&self) -> u64 {
@@ -210,6 +245,12 @@ impl ServerMetrics {
         }
         if self.worker_panics() > 0 {
             extra.push_str(&format!(" | {} worker panics", self.worker_panics()));
+        }
+        if self.cancelled() > 0 {
+            extra.push_str(&format!(" | {} cancelled", self.cancelled()));
+        }
+        if self.shard_failovers() > 0 {
+            extra.push_str(&format!(" | {} shard failovers", self.shard_failovers()));
         }
         format!(
             "requests: {} submitted, {} shed, {} completed, {} flagged | \
@@ -299,6 +340,22 @@ mod tests {
         let report = m.report();
         assert!(report.contains("2 rejected (closed)"), "{report}");
         assert!(report.contains("1 worker panics"), "{report}");
+    }
+
+    #[test]
+    fn cancelled_and_failover_counters_surface_in_the_report() {
+        let m = ServerMetrics::new();
+        assert_eq!((m.cancelled(), m.shard_failovers()), (0, 0));
+        let quiet = m.report();
+        assert!(!quiet.contains("cancelled") && !quiet.contains("failover"), "{quiet}");
+        m.on_cancelled();
+        m.on_cancelled();
+        m.on_shard_failover();
+        assert_eq!(m.cancelled(), 2);
+        assert_eq!(m.shard_failovers(), 1);
+        let report = m.report();
+        assert!(report.contains("2 cancelled"), "{report}");
+        assert!(report.contains("1 shard failovers"), "{report}");
     }
 
     #[test]

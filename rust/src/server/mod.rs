@@ -46,6 +46,12 @@
 //!   and engine pipeline-replica pools between configured bounds with
 //!   hysteresis (the software analogue of SHARP-style workload-adaptive
 //!   resource allocation). See `ARCHITECTURE.md` for the control loop.
+//! - [`shard`] — the cross-process scale step: a [`ShardRouter`] spreads
+//!   the same `submit(model, window)` surface over N shard processes
+//!   (each a [`crate::net::ShardServer`] over its own registry), with a
+//!   static model map, power-of-two-choices balancing, and failover that
+//!   routes around dead shards. [`SubmitSurface`] is the trait both ends
+//!   of that symmetry implement.
 
 pub mod autoscale;
 pub mod backend;
@@ -53,12 +59,34 @@ pub mod batcher;
 pub mod fabric;
 pub mod front;
 pub mod metrics;
+pub mod shard;
 
 pub use autoscale::{Autoscaler, AutoscalePolicy, ScaleDecision};
 pub use backend::{Backend, PjrtBackend, QuantBackend, ThrottledBackend};
 pub use fabric::{Lane, ModelRegistry, SubmitError};
 pub use front::{Completion, CompletionSet, Ticket};
 pub use metrics::ServerMetrics;
+pub use shard::ShardRouter;
+
+/// The fleet-wide submission surface: anything that accepts
+/// `submit(model, window)` and answers through a [`Ticket`]. Implemented
+/// by the in-process [`ModelRegistry`] and the cross-process
+/// [`ShardRouter`], so the workload drivers
+/// ([`crate::workload::trace::closed_loop_async`] and friends) run
+/// unchanged against one process or a whole shard fleet — the scale step
+/// the ROADMAP's sharding item asks for, with client code untouched.
+pub trait SubmitSurface: Sync {
+    /// Nonblocking submit: a [`Ticket`] on acceptance, the usual
+    /// [`SubmitError`] admission outcomes otherwise. Remote surfaces may
+    /// additionally resolve the *ticket* to `Err(Overloaded)` — their
+    /// admission verdict arrives a round-trip later.
+    fn submit_async(&self, model: &str, window: Window) -> Result<Ticket, SubmitError>;
+
+    /// Submit and wait for the outcome.
+    fn score_blocking(&self, model: &str, window: Window) -> Result<Response, SubmitError> {
+        self.submit_async(model, window)?.wait()
+    }
+}
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;

@@ -1,0 +1,268 @@
+//! The shard router: N remote shards composed into one fleet-wide
+//! `submit(model, window)` surface.
+//!
+//! The router owns one [`ShardClient`] per shard process and routes each
+//! submission in two steps:
+//!
+//! 1. **Static map** — which shards serve this model at all (by default
+//!    every shard serves every model, the `fleet serve` deployment; a
+//!    custom map pins models to shard subsets).
+//! 2. **Power-of-two choices** — among the live shards serving the
+//!    model, pick two at random and submit to the one with fewer
+//!    requests in flight. Classic load balancing: nearly the quality of
+//!    join-shortest-queue at the cost of two counter reads, and robust
+//!    to the stale-load herding a pure least-loaded pick suffers.
+//!
+//! **Backpressure** crosses the wire unchanged: a shard lane's shed
+//! arrives as a `Shed` frame and resolves the ticket to
+//! `Err(`[`SubmitError::Overloaded`]`)` — the same signal, one hop out.
+//!
+//! **Failover**: a dead shard (connection EOF, write failure) is sticky
+//! — its client fails fast and the router routes around it, counting
+//! every avoided/re-issued submission in
+//! [`ServerMetrics::shard_failovers`]. Tickets that were in flight on
+//! the dead connection resolve `Err(Closed)` (never hang); the
+//! closed-loop drivers re-offer those, so a shard death loses zero
+//! tickets end to end (`tests/integration_shard.rs` pins that down).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::model::Topology;
+use crate::net::{ShardClient, WireError};
+use crate::util::rng::SplitMix64;
+use crate::workload::Window;
+
+use super::{ServerMetrics, SubmitError, SubmitSurface, Ticket};
+
+/// Client-side router over N shard connections, implementing
+/// [`SubmitSurface`] so every driver that runs against a local
+/// [`super::ModelRegistry`] runs unchanged against a remote fleet.
+pub struct ShardRouter {
+    shards: Vec<Arc<ShardClient>>,
+    /// Canonical model name → indices into `shards`. Empty means every
+    /// shard serves every model.
+    map: BTreeMap<String, Vec<usize>>,
+    metrics: Arc<ServerMetrics>,
+    /// Counter feeding the SplitMix64 draw behind each power-of-two pick
+    /// (cheap, lock-free, deterministic per submission index).
+    picks: AtomicU64,
+}
+
+impl ShardRouter {
+    /// Connect to every address (comma-split lists come from the
+    /// `fleet connect --shards` flag) with every shard serving every
+    /// model. Fails if any connection or handshake fails — a fleet that
+    /// starts degraded is a config error, unlike one that degrades later.
+    pub fn connect<S: AsRef<str>>(addrs: &[S]) -> Result<ShardRouter, WireError> {
+        let mut shards = Vec::with_capacity(addrs.len());
+        for a in addrs {
+            shards.push(Arc::new(ShardClient::connect(a.as_ref())?));
+        }
+        Ok(Self::over(shards, BTreeMap::new()))
+    }
+
+    /// A router over already-connected clients with an explicit
+    /// model → shard-subset map (empty = all shards serve all models).
+    /// Map keys should be canonical topology names; lookups fall back
+    /// through [`Topology::from_name`] like the registry's do.
+    pub fn over(shards: Vec<Arc<ShardClient>>, map: BTreeMap<String, Vec<usize>>) -> ShardRouter {
+        assert!(!shards.is_empty(), "a shard router needs at least one shard");
+        for idxs in map.values() {
+            assert!(idxs.iter().all(|&i| i < shards.len()), "shard index out of range");
+        }
+        ShardRouter {
+            shards,
+            map,
+            metrics: Arc::new(ServerMetrics::new()),
+            picks: AtomicU64::new(0),
+        }
+    }
+
+    /// Shards this router was built over (dead ones included).
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Shards whose connection is still up.
+    pub fn live_shards(&self) -> usize {
+        self.shards.iter().filter(|s| s.is_alive()).count()
+    }
+
+    /// The shard client at `index` (router construction order).
+    pub fn shard(&self, index: usize) -> &ShardClient {
+        &self.shards[index]
+    }
+
+    /// Router-level metrics: `submitted` counts accepted submissions,
+    /// `shard_failovers` counts submissions that had to route around (or
+    /// re-issue after) a dead shard.
+    pub fn metrics(&self) -> &ServerMetrics {
+        &self.metrics
+    }
+
+    /// Shard indices statically mapped to `model` (before liveness).
+    fn candidates(&self, model: &str) -> Vec<usize> {
+        if self.map.is_empty() {
+            return (0..self.shards.len()).collect();
+        }
+        if let Some(idxs) = self.map.get(model) {
+            return idxs.clone();
+        }
+        match Topology::from_name(model) {
+            Ok(t) => self.map.get(&t.name).cloned().unwrap_or_default(),
+            Err(_) => Vec::new(),
+        }
+    }
+
+    /// Power-of-two-choices pick among `live` (indices into `shards`):
+    /// draw two distinct candidates, submit to the lighter-loaded one.
+    fn pick(&self, live: &[usize]) -> usize {
+        if live.len() == 1 {
+            return live[0];
+        }
+        let mut rng = SplitMix64::new(self.picks.fetch_add(1, Ordering::Relaxed));
+        let a = live[(rng.next_u64() % live.len() as u64) as usize];
+        let mut b = live[(rng.next_u64() % (live.len() - 1) as u64) as usize];
+        if b == a {
+            b = live[live.len() - 1];
+        }
+        if self.shards[a].inflight() <= self.shards[b].inflight() {
+            a
+        } else {
+            b
+        }
+    }
+
+    /// Fleet reports of every live shard, concatenated (each shard rolls
+    /// up its own lanes; the router has no global view by design).
+    pub fn fleet_report(&self) -> String {
+        let mut out = String::new();
+        for shard in &self.shards {
+            match shard.fleet_report(Duration::from_secs(5)) {
+                Ok(text) => {
+                    out.push_str(&format!("shard {}:\n{text}", shard.addr()));
+                }
+                Err(_) => out.push_str(&format!("shard {}: unreachable\n", shard.addr())),
+            }
+        }
+        out
+    }
+
+    /// Close every shard connection (in-flight tickets resolve
+    /// `Err(Closed)`). Idempotent.
+    pub fn shutdown(&self) {
+        for shard in &self.shards {
+            shard.shutdown();
+        }
+    }
+}
+
+impl SubmitSurface for ShardRouter {
+    /// Route a submission: static map → live filter (dead shards are
+    /// skipped and counted as failovers) → power-of-two pick → submit,
+    /// falling through the remaining live shards if the picked
+    /// connection dies under the write. `Err(Closed)` only when every
+    /// shard serving the model is dead; `Err(UnknownModel)` when the
+    /// static map serves it nowhere.
+    fn submit_async(&self, model: &str, window: Window) -> Result<Ticket, SubmitError> {
+        let cands = self.candidates(model);
+        if cands.is_empty() {
+            return Err(SubmitError::UnknownModel(model.to_string()));
+        }
+        let live: Vec<usize> =
+            cands.iter().copied().filter(|&i| self.shards[i].is_alive()).collect();
+        if live.is_empty() {
+            return Err(SubmitError::Closed);
+        }
+        if live.len() < cands.len() {
+            // Routed around at least one dead shard.
+            self.metrics.on_shard_failover();
+        }
+        let first = self.pick(&live);
+        let mut order = vec![first];
+        order.extend(live.iter().copied().filter(|&i| i != first));
+        for (attempt, &i) in order.iter().enumerate() {
+            if attempt > 0 {
+                // The previous pick died under us: re-issue elsewhere.
+                self.metrics.on_shard_failover();
+            }
+            // The client serializes straight off the borrow, so routing
+            // (and failover retries) never deep-copy the T×F samples.
+            match self.shards[i].submit_async(model, &window) {
+                Ok(ticket) => {
+                    self.metrics.on_submit();
+                    return Ok(ticket);
+                }
+                // Connection death: try the next live shard.
+                Err(SubmitError::Closed) => continue,
+                // Per-request verdicts (e.g. TooLarge) are terminal —
+                // every shard would answer the same, and retrying them
+                // would fabricate failovers on healthy connections.
+                Err(e) => return Err(e),
+            }
+        }
+        Err(SubmitError::Closed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Socket-free routing tests live here; the full loopback behaviour
+    // (bit-identity, failover under a killed shard) is pinned by
+    // `tests/integration_shard.rs`.
+
+    #[test]
+    fn candidates_honor_static_map_with_canonical_fallback() {
+        // An empty registry is fine: these connections only handshake.
+        let reg = Arc::new(crate::server::ModelRegistry::new());
+        let srv_a = crate::net::ShardServer::bind("127.0.0.1:0", reg.clone()).unwrap();
+        let srv_b = crate::net::ShardServer::bind("127.0.0.1:0", reg.clone()).unwrap();
+        let ca = Arc::new(ShardClient::connect(&srv_a.local_addr().to_string()).unwrap());
+        let cb = Arc::new(ShardClient::connect(&srv_b.local_addr().to_string()).unwrap());
+        let map = BTreeMap::from([
+            ("LSTM-AE-F32-D2".to_string(), vec![0]),
+            ("LSTM-AE-F64-D6".to_string(), vec![0, 1]),
+        ]);
+        let router = ShardRouter::over(vec![ca, cb], map);
+        assert_eq!(router.candidates("LSTM-AE-F32-D2"), vec![0]);
+        // Short name falls back to the canonical topology name.
+        assert_eq!(router.candidates("F64-D6"), vec![0, 1]);
+        assert!(router.candidates("no-such-model").is_empty());
+        // An unmapped model routes nowhere: UnknownModel, not a panic.
+        let w = crate::workload::Window { data: vec![vec![0.0]], anomaly: None };
+        assert!(matches!(
+            router.submit_async("no-such-model", w),
+            Err(SubmitError::UnknownModel(_))
+        ));
+        router.shutdown();
+        srv_a.shutdown();
+        srv_b.shutdown();
+    }
+
+    #[test]
+    fn pick_prefers_the_lighter_shard_and_stays_in_range() {
+        let reg = Arc::new(crate::server::ModelRegistry::new());
+        let srv = crate::net::ShardServer::bind("127.0.0.1:0", reg.clone()).unwrap();
+        let addr = srv.local_addr().to_string();
+        let shards: Vec<Arc<ShardClient>> =
+            (0..3).map(|_| Arc::new(ShardClient::connect(&addr).unwrap())).collect();
+        let router = ShardRouter::over(shards, BTreeMap::new());
+        let live: Vec<usize> = vec![0, 1, 2];
+        for _ in 0..200 {
+            let p = router.pick(&live);
+            assert!(p < 3);
+        }
+        assert_eq!(router.pick(&[2]), 2, "singleton pick is the shard itself");
+        router.shutdown();
+        srv.shutdown();
+    }
+}

@@ -1,14 +1,22 @@
 //! Request traces for the serving experiments: Poisson (open-loop) and
 //! closed-loop arrival processes over telemetry windows, the multi-model
 //! merge used by the fleet driver, and the replay drivers that push those
-//! traces through a [`ModelRegistry`] — blocking or through the async
+//! traces through any [`SubmitSurface`] — blocking or through the async
 //! ticket front ([`replay_async`], [`closed_loop_async`]).
+//!
+//! Every driver is generic over [`SubmitSurface`], so the same
+//! closed-loop client that exercises an in-process
+//! [`crate::server::ModelRegistry`] drives a cross-process
+//! [`crate::server::ShardRouter`] unchanged — the `fleet connect` CLI
+//! and the CI loopback soak run [`replay_fleet`] against a live TCP
+//! fleet with the exact accounting the in-process tests pin down.
 
+use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use super::{TelemetryGen, Window};
 use crate::model::Topology;
-use crate::server::{CompletionSet, ModelRegistry, SubmitError};
+use crate::server::{CompletionSet, SubmitError, SubmitSurface};
 use crate::util::rng::Xoshiro256;
 
 /// One timed request.
@@ -185,8 +193,8 @@ fn reap_replay(stats: &mut AsyncReplayStats, outcome: crate::server::Completion)
 /// thread per in-flight request to keep submitting on time; through
 /// tickets the submitter alone sustains the entire backlog
 /// (`max_outstanding` reports how deep it got).
-pub fn replay_async(
-    registry: &ModelRegistry,
+pub fn replay_async<S: SubmitSurface>(
+    surface: &S,
     models: &[String],
     trace: Vec<(usize, TimedRequest)>,
 ) -> AsyncReplayStats {
@@ -203,7 +211,7 @@ pub fn replay_async(
         while let Some((_, outcome)) = set.try_next() {
             reap_replay(&mut stats, outcome);
         }
-        match registry.submit_async(&models[mi], req.window) {
+        match surface.submit_async(&models[mi], req.window) {
             Ok(ticket) => {
                 stats.accepted += 1;
                 set.add(mi as u64, ticket);
@@ -241,7 +249,8 @@ pub struct ClosedLoopStats {
 /// Per-client telemetry generators, one per model, deterministically
 /// seeded so driver runs are reproducible. The drivers draw windows at
 /// each model's feature width, so `models` must be canonical topology
-/// names (the [`ModelRegistry::paper_fleet`] convention) — a name the
+/// names (the [`crate::server::ModelRegistry::paper_fleet`] convention)
+/// — a name the
 /// topology table doesn't know would silently generate wrong-width
 /// windows, so it panics instead.
 fn client_gens(models: &[String], client: usize, base_seed: u64) -> Vec<TelemetryGen> {
@@ -266,8 +275,8 @@ fn client_gens(models: &[String], client: usize, base_seed: u64) -> Vec<Telemetr
 /// exactly `total` requests split evenly across threads (remainder to
 /// the first ones). The baseline the async driver is compared against
 /// at equal client-thread count.
-pub fn closed_loop_blocking(
-    registry: &ModelRegistry,
+pub fn closed_loop_blocking<S: SubmitSurface>(
+    surface: &S,
     models: &[String],
     clients: usize,
     total: usize,
@@ -292,7 +301,7 @@ pub fn closed_loop_blocking(
                         let mi = (c + k) % models.len();
                         loop {
                             let w = gens[mi].benign_window(t);
-                            match registry.score_blocking(&models[mi], w) {
+                            match surface.score_blocking(&models[mi], w) {
                                 Ok(_) => {
                                     completed += 1;
                                     break;
@@ -330,8 +339,8 @@ pub fn closed_loop_blocking(
 /// `outstanding_per_client ×` the outstanding work — the fleet-scale
 /// property `fleet --async` demonstrates and `benches/hotpath.rs`
 /// tracks.
-pub fn closed_loop_async(
-    registry: &ModelRegistry,
+pub fn closed_loop_async<S: SubmitSurface>(
+    surface: &S,
     models: &[String],
     clients: usize,
     outstanding_per_client: usize,
@@ -362,7 +371,7 @@ pub fn closed_loop_async(
                         while set.pending() < target && submitted < quota {
                             let mi = (c + k) % models.len();
                             let w = gens[mi].benign_window(t);
-                            match registry.submit_async(&models[mi], w) {
+                            match surface.submit_async(&models[mi], w) {
                                 Ok(ticket) => {
                                     set.add(mi as u64, ticket);
                                     submitted += 1;
@@ -380,6 +389,14 @@ pub fn closed_loop_async(
                         }
                         match set.wait() {
                             Some((_, Ok(_))) => completed += 1,
+                            Some((_, Err(SubmitError::Overloaded))) => {
+                                // A remote shard shed after local
+                                // acceptance (cross-shard backpressure):
+                                // closed loop re-offers, same as a
+                                // submit-time shed.
+                                submitted -= 1;
+                                shed += 1;
+                            }
                             Some((_, Err(_))) => failed += 1,
                             // Nothing in flight (every submit shed):
                             // brief backoff before re-offering.
@@ -400,6 +417,184 @@ pub fn closed_loop_async(
     });
     stats.wall = start.elapsed();
     stats
+}
+
+/// Outcome of a [`replay_fleet`] run. The accounting is exhaustive and
+/// conserved: every trace entry terminates in exactly one of
+/// `completed` / `shed` / `rejected_closed`, which
+/// [`FleetReplayStats::conserves`] checks — the invariant the CI
+/// loopback-soak job fails on.
+#[derive(Clone, Debug, Default)]
+pub struct FleetReplayStats {
+    /// Trace entries driven (the accounting denominator).
+    pub offered: u64,
+    /// Entries that resolved to a scored response.
+    pub completed: u64,
+    /// Entries shed by backpressure — at submit time
+    /// ([`SubmitError::Overloaded`]) or by a remote shard's `Shed` frame
+    /// after local acceptance. Terminal: an open-loop driver reports
+    /// shed work, it does not re-offer it.
+    pub shed: u64,
+    /// Entries lost to a closed lane/connection with no shard left to
+    /// fail over to (zero on a healthy run — the soak's red flag).
+    pub rejected_closed: u64,
+    /// `Closed` outcomes successfully re-offered to a surviving shard
+    /// (the zero-loss failover path; each retried entry still terminates
+    /// in exactly one bucket above).
+    pub retried_closed: u64,
+    /// Responses flagged as anomalies.
+    pub flagged: u64,
+    /// Peak simultaneously-outstanding tickets.
+    pub max_outstanding: usize,
+    /// Wall-clock time of the whole replay (pacing + trailing drain).
+    pub wall: Duration,
+}
+
+impl FleetReplayStats {
+    /// The conservation law: `offered == completed + shed +
+    /// rejected_closed`. A false return means the fabric lost or
+    /// double-counted work — the bug class the soak exists to catch.
+    pub fn conserves(&self) -> bool {
+        self.offered == self.completed + self.shed + self.rejected_closed
+    }
+}
+
+/// Replay a merged trace open-loop through any [`SubmitSurface`] with
+/// full conservation accounting — the driver behind `fleet connect` and
+/// the CI loopback soak.
+///
+/// One submitter honors every arrival time; completions drain between
+/// arrivals and fully at the end. When `retry_closed` is set, a ticket
+/// that resolves `Err(Closed)` (its shard died with the request in
+/// flight) is re-offered through the surface — against a
+/// [`crate::server::ShardRouter`] that re-routes to a surviving shard,
+/// so killing a shard mid-trace loses zero tickets
+/// (`tests/integration_shard.rs` pins that down). Retries are bounded
+/// per entry ([`CLOSED_RETRY_BUDGET`]) and a re-offer that fails at
+/// submit time is terminal, so the retry path can never spin — not even
+/// against a degenerate fleet whose connections stay up while every
+/// lane answers `Closed`.
+pub fn replay_fleet<S: SubmitSurface>(
+    surface: &S,
+    models: &[String],
+    trace: Vec<(usize, TimedRequest)>,
+    retry_closed: bool,
+) -> FleetReplayStats {
+    assert!(!models.is_empty(), "replay_fleet needs at least one model");
+    let start = Instant::now();
+    let mut d = FleetDriver {
+        surface,
+        models,
+        retry_closed,
+        set: CompletionSet::new(),
+        inflight: HashMap::new(),
+        stats: FleetReplayStats::default(),
+        next_key: 0,
+    };
+    for (mi, req) in trace {
+        d.stats.offered += 1;
+        let target = Duration::from_secs_f64(req.at_s);
+        if let Some(sleep) = target.checked_sub(start.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        // Open loop: drain whatever has completed, without blocking.
+        while let Some((key, outcome)) = d.set.try_next() {
+            d.settle(key, outcome);
+        }
+        d.offer(mi, req.window);
+    }
+    // Trailing drain; settled Closed outcomes may re-enter the set, so
+    // wait() (which returns None exactly at zero outstanding) is the
+    // loop condition.
+    while let Some((key, outcome)) = d.set.wait() {
+        d.settle(key, outcome);
+    }
+    debug_assert!(d.inflight.is_empty(), "drained replay leaves no in-flight entries");
+    d.stats.wall = start.elapsed();
+    d.stats
+}
+
+/// Most times one [`replay_fleet`] entry is re-offered after a `Closed`
+/// outcome before it is declared lost. A genuine shard death costs one
+/// retry (the router re-routes to a survivor); the budget exists for the
+/// degenerate fleet whose connections stay up while every lane answers
+/// `Closed` — without it, retry-on-Closed would spin forever there.
+pub const CLOSED_RETRY_BUDGET: u32 = 8;
+
+/// One in-flight [`replay_fleet`] entry: model index, the window (kept
+/// so a `Closed` outcome can be re-offered verbatim), and how many
+/// re-offers it has already consumed. Bounded by the in-flight count —
+/// entries leave at terminal outcomes.
+struct InflightEntry {
+    mi: usize,
+    window: Window,
+    retries: u32,
+}
+
+/// [`replay_fleet`]'s working state: the completion set, the in-flight
+/// entries, and the running accounting.
+struct FleetDriver<'a, S: SubmitSurface> {
+    surface: &'a S,
+    models: &'a [String],
+    retry_closed: bool,
+    set: CompletionSet,
+    inflight: HashMap<u64, InflightEntry>,
+    stats: FleetReplayStats,
+    next_key: u64,
+}
+
+impl<S: SubmitSurface> FleetDriver<'_, S> {
+    /// First offer of a trace entry.
+    fn offer(&mut self, mi: usize, window: Window) {
+        match self.surface.submit_async(&self.models[mi], window.clone()) {
+            Ok(ticket) => {
+                let key = self.next_key;
+                self.next_key += 1;
+                self.inflight.insert(key, InflightEntry { mi, window, retries: 0 });
+                self.set.add(key, ticket);
+                self.stats.max_outstanding = self.stats.max_outstanding.max(self.set.pending());
+            }
+            Err(SubmitError::Overloaded) => self.stats.shed += 1,
+            Err(_) => self.stats.rejected_closed += 1,
+        }
+    }
+
+    /// One outcome for the entry under `key`: terminal, or (for `Closed`
+    /// with retry enabled and budget left) re-offered through the
+    /// surface — against a ShardRouter that re-routes to a surviving
+    /// shard. Only `Closed` is retried: it means the serving connection
+    /// died, which a re-route can actually fix. A persistent per-request
+    /// verdict (Overloaded, UnknownModel, Cancelled, TooLarge) is
+    /// terminal — re-offering it would just reproduce the same answer.
+    fn settle(&mut self, key: u64, outcome: crate::server::Completion) {
+        let entry = self.inflight.remove(&key).expect("every key has an in-flight entry");
+        match outcome {
+            Ok(r) => {
+                self.stats.completed += 1;
+                if r.is_anomaly {
+                    self.stats.flagged += 1;
+                }
+            }
+            Err(SubmitError::Overloaded) => self.stats.shed += 1,
+            Err(SubmitError::Closed)
+                if self.retry_closed && entry.retries < CLOSED_RETRY_BUDGET =>
+            {
+                match self.surface.submit_async(&self.models[entry.mi], entry.window.clone()) {
+                    Ok(ticket) => {
+                        self.stats.retried_closed += 1;
+                        self.inflight.insert(
+                            key,
+                            InflightEntry { retries: entry.retries + 1, ..entry },
+                        );
+                        self.set.add(key, ticket);
+                    }
+                    Err(SubmitError::Overloaded) => self.stats.shed += 1,
+                    Err(_) => self.stats.rejected_closed += 1,
+                }
+            }
+            Err(_) => self.stats.rejected_closed += 1,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -488,6 +683,8 @@ mod tests {
         assert_eq!(merged.len(), models.len());
     }
 
+    use crate::server::ModelRegistry;
+
     fn one_lane_registry() -> (ModelRegistry, Vec<String>) {
         use crate::model::LstmAutoencoder;
         use crate::server::{QuantBackend, ServerConfig};
@@ -516,6 +713,23 @@ mod tests {
         assert_eq!(stats.accepted + stats.shed + stats.rejected, n);
         assert_eq!(stats.completed + stats.failed, stats.accepted);
         assert_eq!(stats.failed, 0, "healthy lane: every accepted ticket completes");
+        assert!(stats.max_outstanding >= 1);
+        reg.shutdown();
+    }
+
+    #[test]
+    fn replay_fleet_accounts_every_entry() {
+        let (reg, models) = one_lane_registry();
+        let mut gen = TelemetryGen::new(32, 7);
+        let trace: Vec<(usize, TimedRequest)> = poisson_trace(&mut gen, 11, 5000.0, 80, 4, 0.1)
+            .into_iter()
+            .map(|r| (0usize, r))
+            .collect();
+        let stats = replay_fleet(&reg, &models, trace, true);
+        assert_eq!(stats.offered, 80);
+        assert!(stats.conserves(), "conservation must hold: {stats:?}");
+        assert_eq!(stats.rejected_closed, 0, "healthy lane loses nothing");
+        assert_eq!(stats.completed + stats.shed, 80);
         assert!(stats.max_outstanding >= 1);
         reg.shutdown();
     }

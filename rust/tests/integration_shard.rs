@@ -1,0 +1,290 @@
+//! Integration: the network shard fabric over real loopback sockets —
+//! bit-identity of remote scores vs `ExecMode::Sequential`, cross-shard
+//! backpressure (`Shed` frames → `Err(Overloaded)` tickets), the version
+//! handshake gate, remote fleet reports, and zero-loss failover when a
+//! shard process dies mid-trace.
+
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use lstm_ae_accel::engine::ExecMode;
+use lstm_ae_accel::model::{LstmAutoencoder, Topology};
+use lstm_ae_accel::net::{
+    wire, Frame, ShardClient, ShardServer, WireError, WIRE_VERSION,
+};
+use lstm_ae_accel::server::{
+    CompletionSet, ModelRegistry, ServerConfig, ShardRouter, SubmitError, SubmitSurface,
+    ThrottledBackend,
+};
+use lstm_ae_accel::workload::{trace, TelemetryGen, Window};
+
+/// A shard process in miniature: a paper-fleet registry behind a
+/// `ShardServer` on an ephemeral loopback port.
+fn spawn_shard(seed: u64) -> (ShardServer, String) {
+    let registry = Arc::new(ModelRegistry::paper_fleet(seed, ExecMode::Auto, 2));
+    let server = ShardServer::bind("127.0.0.1:0", registry).expect("bind loopback");
+    let addr = server.local_addr().to_string();
+    (server, addr)
+}
+
+#[test]
+fn remote_scores_are_bit_identical_to_sequential_across_all_four_models() {
+    let seed = 170;
+    let (server, addr) = spawn_shard(seed);
+    let router = ShardRouter::connect(&[addr]).expect("connect");
+    // References rebuilt from the paper_fleet seeding convention: model i
+    // uses seed + i, and score_quant IS ExecMode::Sequential arithmetic.
+    for (i, topo) in Topology::paper_models().into_iter().enumerate() {
+        let reference = LstmAutoencoder::random(topo.clone(), seed + i as u64);
+        let mut gen = TelemetryGen::new(topo.features, 400 + i as u64);
+        let mut pending = Vec::new();
+        for round in 0..12usize {
+            let t = [4usize, 8, 6, 1][round % 4];
+            let w = gen.benign_window(t);
+            let want = reference.score_quant(&w.data);
+            let ticket = router.submit_async(&topo.name, w).expect("submitted");
+            pending.push((ticket, want));
+        }
+        for (ticket, want) in pending {
+            let r = ticket.wait().expect("remote score arrives");
+            assert_eq!(
+                r.score.to_bits(),
+                want.to_bits(),
+                "{}: wire-transported score must be bit-identical to sequential",
+                topo.name
+            );
+        }
+    }
+    router.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn remote_shed_resolves_tickets_overloaded_and_lane_recovers() {
+    // A deliberately tiny lane (slow backend, queue of 2) behind a shard:
+    // a burst must shed — and the shed must cross the wire as a Shed
+    // frame, resolving tickets to Err(Overloaded), not hanging them.
+    let mut registry = ModelRegistry::new();
+    registry.register(
+        "tiny",
+        Arc::new(ThrottledBackend::zeros(Duration::from_millis(30))),
+        ServerConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(50),
+            workers: 1,
+            queue_capacity: 2,
+            threshold: 1.0,
+            autoscale: None,
+        },
+    );
+    let server = ShardServer::bind("127.0.0.1:0", Arc::new(registry)).expect("bind");
+    let client = ShardClient::connect(&server.local_addr().to_string()).expect("connect");
+    let window = || Window { data: vec![vec![0.0f32; 4]; 2], anomaly: None };
+    let tickets: Vec<_> =
+        (0..48).map(|_| client.submit_async("tiny", &window()).expect("conn up")).collect();
+    let (mut ok, mut shed) = (0u64, 0u64);
+    for t in tickets {
+        match t.wait() {
+            Ok(r) => {
+                assert_eq!(r.score, 0.0);
+                ok += 1;
+            }
+            Err(SubmitError::Overloaded) => shed += 1,
+            Err(e) => panic!("unexpected outcome {e}"),
+        }
+    }
+    assert!(shed > 0, "a burst of 48 into queue=2 must shed over the wire");
+    assert!(ok > 0, "accepted work survives the overload");
+    // Backpressure is load shedding, not failure: fresh traffic scores.
+    let r = client.submit_async("tiny", &window()).unwrap().wait().expect("lane recovered");
+    assert_eq!(r.score, 0.0);
+    // Unknown models are rejected per-request, not per-connection.
+    let verdict = client.submit_async("no-such-model", &window()).unwrap().wait();
+    assert!(matches!(verdict, Err(SubmitError::UnknownModel(_))));
+    // So are windows too large for a wire frame — the pre-flight gate
+    // fires before the socket, and the connection stays healthy.
+    let giant = Window { data: vec![vec![0.0f32; 4096]; 1025], anomaly: None };
+    assert!(matches!(client.submit_async("tiny", &giant), Err(SubmitError::TooLarge)));
+    // ...and so are ragged windows, which the frame layout cannot carry.
+    let ragged = Window { data: vec![vec![0.0f32; 4], vec![0.0f32; 3]], anomaly: None };
+    assert!(matches!(client.submit_async("tiny", &ragged), Err(SubmitError::TooLarge)));
+    let r = client.submit_async("tiny", &window()).unwrap().wait().expect("conn survives");
+    assert_eq!(r.score, 0.0);
+    client.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn version_mismatch_hello_is_refused_by_the_server() {
+    let (server, addr) = spawn_shard(3);
+    let mut stream = TcpStream::connect(&addr).expect("tcp connect");
+    // Speak a future protocol version; the server must answer with its
+    // own Hello (so we can diagnose) and then refuse the connection.
+    wire::write_frame(&mut stream, &Frame::Hello { version: WIRE_VERSION + 1 }).unwrap();
+    match wire::read_frame(&mut stream) {
+        Ok(Some(Frame::Hello { version })) => assert_eq!(version, WIRE_VERSION),
+        other => panic!("server must send its Hello before refusing, got {other:?}"),
+    }
+    // No submission is ever served on a refused connection: the server
+    // closes, so the next read is clean EOF (or a reset, depending on
+    // timing) — never a Response.
+    let _ = wire::write_frame(
+        &mut stream,
+        &Frame::Submit { id: 0, model: "LSTM-AE-F32-D2".into(), window: vec![vec![0.0]] },
+    );
+    match wire::read_frame(&mut stream) {
+        Ok(None) | Err(_) => {}
+        Ok(Some(f)) => panic!("refused connection must not serve frames, got {f:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn version_mismatch_hello_is_refused_by_the_client() {
+    // A fake shard speaking a different version: ShardClient::connect
+    // must fail the handshake with BadVersion, not hand out tickets.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let fake = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let _ = wire::write_frame(&mut s, &Frame::Hello { version: WIRE_VERSION + 7 });
+        let _ = wire::read_frame(&mut s); // the client's Hello
+    });
+    match ShardClient::connect(&addr) {
+        Err(WireError::BadVersion { got, want }) => {
+            assert_eq!(got, WIRE_VERSION + 7);
+            assert_eq!(want, WIRE_VERSION);
+        }
+        other => panic!("want BadVersion, got {other:?}"),
+    }
+    fake.join().unwrap();
+}
+
+#[test]
+fn fleet_report_travels_over_the_wire() {
+    let (server, addr) = spawn_shard(9);
+    let client = ShardClient::connect(&addr).expect("connect");
+    let mut gen = TelemetryGen::new(32, 5);
+    let t = client.submit_async("LSTM-AE-F32-D2", &gen.benign_window(4)).unwrap();
+    t.wait().expect("scored");
+    let report = client.fleet_report(Duration::from_secs(5)).expect("report");
+    assert!(report.contains("LSTM-AE-F64-D6"), "{report}");
+    assert!(report.contains("4 lanes"), "{report}");
+    client.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn killing_a_shard_mid_trace_fails_over_with_zero_lost_tickets() {
+    // Two shards with identical seeds (identical weights), one router
+    // over both. Kill shard A with half the trace in flight: every
+    // ticket must still resolve — in-flight ones poison Err(Closed) and
+    // are re-offered to shard B — and every completed score must still
+    // be bit-identical to the sequential reference.
+    let seed = 210;
+    let (srv_a, addr_a) = spawn_shard(seed);
+    let (srv_b, addr_b) = spawn_shard(seed);
+    let router = ShardRouter::connect(&[addr_a, addr_b]).expect("connect both");
+    assert_eq!(router.live_shards(), 2);
+
+    let topos = Topology::paper_models();
+    let refs: Vec<LstmAutoencoder> = topos
+        .iter()
+        .enumerate()
+        .map(|(i, topo)| LstmAutoencoder::random(topo.clone(), seed + i as u64))
+        .collect();
+    let mut gens: Vec<TelemetryGen> = topos
+        .iter()
+        .enumerate()
+        .map(|(i, topo)| TelemetryGen::new(topo.features, 600 + i as u64))
+        .collect();
+
+    let total = 240usize;
+    let mut set = CompletionSet::new();
+    // key → (model index, window, reference score bits): enough to retry
+    // a Closed outcome and to verify bit-identity wherever it completes.
+    let mut inflight: HashMap<u64, (usize, Window, u64)> = HashMap::new();
+    for k in 0..total {
+        let mi = k % topos.len();
+        let w = gens[mi].benign_window(4);
+        let want = refs[mi].score_quant(&w.data).to_bits();
+        let ticket = router.submit_async(&topos[mi].name, w.clone()).expect("two live shards");
+        inflight.insert(k as u64, (mi, w, want));
+        set.add(k as u64, ticket);
+        if k == total / 2 {
+            // Mid-trace shard death, with up to half the trace in flight.
+            srv_a.shutdown();
+            // Wait for the router to observe the death (its client's
+            // reader sees EOF asynchronously) so the back half of the
+            // trace deterministically routes around the dead shard.
+            let deadline = std::time::Instant::now() + Duration::from_secs(5);
+            while router.live_shards() != 1 {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "client must observe the shard death"
+                );
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+    let mut completed = 0u64;
+    let mut retried = 0u64;
+    while let Some((key, outcome)) = set.wait() {
+        match outcome {
+            Ok(r) => {
+                let (_, _, want) = inflight.remove(&key).expect("known key");
+                assert_eq!(
+                    r.score.to_bits(),
+                    want,
+                    "failover must not change a single bit of any score"
+                );
+                completed += 1;
+            }
+            Err(SubmitError::Closed) => {
+                // Died with shard A: re-offer through the router, which
+                // must route it to the surviving shard.
+                let (mi, w, _) = inflight.get(&key).expect("known key").clone();
+                let ticket = router
+                    .submit_async(&topos[mi].name, w)
+                    .expect("surviving shard accepts the retry");
+                retried += 1;
+                set.add(key, ticket);
+            }
+            Err(e) => panic!("unexpected outcome {e}"),
+        }
+    }
+    assert_eq!(completed as usize, total, "zero lost tickets across the shard death");
+    assert!(inflight.is_empty());
+    assert_eq!(router.live_shards(), 1, "the dead shard is routed around, not revived");
+    assert!(
+        router.metrics().shard_failovers() > 0,
+        "submissions after the death must count as failovers (retried {retried})"
+    );
+    router.shutdown();
+    srv_b.shutdown();
+}
+
+#[test]
+fn replay_fleet_over_loopback_conserves_accounting() {
+    // The in-process version of the CI loopback soak: drive a short
+    // mixed Poisson trace across all four topologies through a real
+    // socket and enforce the same conservation law `fleet connect` gates
+    // on — offered == completed + shed + rejected_closed, with zero loss
+    // on a healthy fleet.
+    let (server, addr) = spawn_shard(77);
+    let router = ShardRouter::connect(&[addr]).expect("connect");
+    let topos = Topology::paper_models();
+    let models: Vec<String> = topos.iter().map(|m| m.name.clone()).collect();
+    let merged = trace::merged_poisson(&topos, 47, 3000.0, 400, 6, 0.1);
+    let offered = merged.len() as u64;
+    let stats = trace::replay_fleet(&router, &models, merged, true);
+    assert_eq!(stats.offered, offered);
+    assert!(stats.conserves(), "conservation must hold over the wire: {stats:?}");
+    assert_eq!(stats.rejected_closed, 0, "healthy fleet loses nothing");
+    assert!(stats.completed > 0);
+    assert_eq!(stats.completed + stats.shed, offered);
+    router.shutdown();
+    server.shutdown();
+}
