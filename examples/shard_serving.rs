@@ -64,7 +64,7 @@ fn main() {
     let tickets: Vec<_> = (0..64)
         .map(|_| router.submit_async("LSTM-AE-F32-D2", gen.benign_window(6)).expect("submitted"))
         .collect();
-    let mid = (router.shard(0).inflight(), router.shard(1).inflight());
+    let mid = (router.shard_inflight(0), router.shard_inflight(1));
     for t in tickets {
         t.wait().expect("scored");
     }

@@ -29,6 +29,10 @@
 //!   fleet connect --shards a1:p1,a2:p2 [--requests N] [--rate R] [--timesteps T]
 //!             [--seed 7] [--report] drive the Poisson trace across a shard
 //!             fleet; exits nonzero on accounting mismatch or lost requests
+//!             [--heartbeat-ms 250] [--suspect-after 3] [--dead-after 6]
+//!             [--reconnect-max-backoff 5000] control-plane tuning: probe
+//!             cadence, missed-probe demotion thresholds, redial backoff cap
+//!             — dead shards are redialed until they rejoin, no flag needed
 //!   checks                         run the paper-shape checks
 //! ```
 
@@ -49,7 +53,7 @@ use lstm_ae_accel::engine::ExecMode;
 use lstm_ae_accel::net::{ShardServer, WIRE_VERSION};
 use lstm_ae_accel::server::{
     self, AnomalyServer, AutoscalePolicy, Backend, ModelRegistry, PjrtBackend, QuantBackend,
-    ServerConfig, ShardRouter, SubmitError,
+    RouterConfig, ServerConfig, ShardRouter, SubmitError,
 };
 use lstm_ae_accel::util::cli::Args;
 use lstm_ae_accel::util::table::Table;
@@ -668,8 +672,18 @@ fn cmd_fleet_connect(args: &Args) -> Result<()> {
     let timesteps = args.get_usize("timesteps", 16);
     let anomaly_rate = args.get_f64("anomaly-rate", 0.1);
     let seed = args.get_u64("seed", 7);
-    let router =
-        ShardRouter::connect(&shards).map_err(|e| anyhow!("connect {shards:?}: {e}"))?;
+    let suspect_after = args.get_u64("suspect-after", 3).clamp(1, u32::MAX as u64) as u32;
+    // Clamp instead of panicking on dead-after < suspect-after.
+    let dead_after =
+        args.get_u64("dead-after", 6).clamp(u64::from(suspect_after), u32::MAX as u64) as u32;
+    let cfg = RouterConfig {
+        heartbeat_ms: args.get_u64("heartbeat-ms", 250).max(1),
+        suspect_after,
+        dead_after,
+        reconnect_max_backoff_ms: args.get_u64("reconnect-max-backoff", 5000).max(1),
+    };
+    let router = ShardRouter::connect_with(&shards, cfg)
+        .map_err(|e| anyhow!("connect {shards:?}: {e}"))?;
     let topos = Topology::paper_models();
     let models: Vec<String> = topos.iter().map(|m| m.name.clone()).collect();
     let merged =
@@ -699,6 +713,28 @@ fn cmd_fleet_connect(args: &Args) -> Result<()> {
         router.live_shards(),
         router.len()
     );
+    let m = router.metrics();
+    // The "reconnects N (attempts M)" shape is what the CI chaos soak
+    // greps for as proof the restarted shard rejoined through backoff.
+    println!(
+        "control plane: {} probes, {} heartbeats | suspects {} | deaths {} | \
+         reconnects {} (attempts {})",
+        m.health_probes(),
+        m.heartbeats(),
+        m.shard_suspects(),
+        m.shard_deaths(),
+        m.shard_reconnects(),
+        m.shard_reconnect_attempts(),
+    );
+    for i in 0..router.len() {
+        println!(
+            "  shard {} [{}] gen {} inflight {}",
+            router.shard_addr(i),
+            router.shard_state(i),
+            router.shard_generation(i),
+            router.shard_inflight(i),
+        );
+    }
     if args.has("report") {
         print!("{}", router.fleet_report());
     }

@@ -46,6 +46,47 @@ struct ReportSlot {
     cond: Condvar,
 }
 
+/// The shard's post-handshake `Join` announcement: which process
+/// instance is on the other end, and how many model lanes it serves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JoinInfo {
+    /// Identifies the serving *process instance*; a restarted shard
+    /// announces a different id.
+    pub shard_id: u64,
+    /// Lanes the shard serves.
+    pub models: u32,
+}
+
+/// The latest `Heartbeat` this connection has received (a probe reply;
+/// see [`ShardClient::send_probe`]). `seq` echoes the probe that
+/// triggered it, so a registry can tell fresh replies from stale ones.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HeartbeatSnapshot {
+    pub seq: u64,
+    /// Requests in flight across the shard's lanes (its own count, which
+    /// includes traffic from other routers — not just ours).
+    pub inflight: u64,
+    /// Sheds since the previous heartbeat on this connection.
+    pub shed_delta: u64,
+    /// Shard-side EWMA of p50 e2e latency, µs (0.0 until it completes
+    /// anything).
+    pub p50_us: f64,
+    /// Shard-side EWMA of p99 e2e latency, µs.
+    pub p99_us: f64,
+}
+
+/// Control-plane state pushed by the shard over this connection,
+/// updated by the reader thread and read by the shard registry's health
+/// tick.
+#[derive(Default)]
+struct ControlState {
+    joined: Mutex<Option<JoinInfo>>,
+    heartbeat: Mutex<Option<HeartbeatSnapshot>>,
+    /// Set by a `Leave` frame: the shard asked to drain — stop routing
+    /// new work here, let in-flight requests finish.
+    draining: AtomicBool,
+}
+
 /// A connection to one shard process, speaking the [`super::wire`]
 /// protocol. Submissions return the same [`Ticket`] a local lane issues;
 /// completion is delivered by this connection's single reader thread.
@@ -66,6 +107,7 @@ pub struct ShardClient {
     alive: Arc<AtomicBool>,
     reader: Mutex<Option<JoinHandle<()>>>,
     report: Arc<ReportSlot>,
+    control: Arc<ControlState>,
 }
 
 impl ShardClient {
@@ -86,13 +128,15 @@ impl ShardClient {
             Arc::new(Mutex::new(HashMap::new()));
         let alive = Arc::new(AtomicBool::new(true));
         let report = Arc::new(ReportSlot { text: Mutex::new(None), cond: Condvar::new() });
+        let control = Arc::new(ControlState::default());
         let reader = {
             let slots = slots.clone();
             let alive = alive.clone();
             let report = report.clone();
+            let control = control.clone();
             std::thread::Builder::new()
                 .name(format!("shard-rx:{addr}"))
-                .spawn(move || reader_loop(read_half, slots, alive, report))
+                .spawn(move || reader_loop(read_half, slots, alive, report, control))
                 .expect("spawn shard reader")
         };
         Ok(ShardClient {
@@ -104,6 +148,7 @@ impl ShardClient {
             alive,
             reader: Mutex::new(Some(reader)),
             report,
+            control,
         })
     }
 
@@ -123,6 +168,35 @@ impl ShardClient {
     /// power-of-two-choices pick compares.
     pub fn inflight(&self) -> usize {
         self.slots.lock().unwrap().len()
+    }
+
+    /// The shard's `Join` announcement, once the reader has seen it
+    /// (arrives right after the handshake, so `None` only in the first
+    /// instants of a connection).
+    pub fn join_info(&self) -> Option<JoinInfo> {
+        *self.control.joined.lock().unwrap()
+    }
+
+    /// The latest heartbeat received on this connection, if any.
+    pub fn last_heartbeat(&self) -> Option<HeartbeatSnapshot> {
+        *self.control.heartbeat.lock().unwrap()
+    }
+
+    /// Whether the shard announced a graceful `Leave`: route no new work
+    /// here, but let in-flight requests finish — they will be answered.
+    pub fn is_draining(&self) -> bool {
+        self.control.draining.load(Ordering::Acquire)
+    }
+
+    /// Send one `HealthProbe { seq }`; the shard answers with a
+    /// `Heartbeat` echoing `seq`, which lands in
+    /// [`Self::last_heartbeat`]. Fails fast with `Err(Closed)` when the
+    /// connection is down — the caller's cue to demote this shard.
+    pub fn send_probe(&self, seq: u64) -> Result<(), SubmitError> {
+        if !self.is_alive() {
+            return Err(SubmitError::Closed);
+        }
+        self.write(&Frame::HealthProbe { seq })
     }
 
     /// Submit a window to the remote shard. Returns a [`Ticket`]
@@ -260,6 +334,7 @@ fn reader_loop(
     slots: Arc<Mutex<HashMap<u64, Arc<TicketShared>>>>,
     alive: Arc<AtomicBool>,
     report: Arc<ReportSlot>,
+    control: Arc<ControlState>,
 ) {
     loop {
         match wire::read_frame(&mut stream) {
@@ -285,6 +360,27 @@ fn reader_loop(
             Ok(Some(Frame::FleetReport { text })) => {
                 *report.text.lock().unwrap() = Some(text);
                 report.cond.notify_all();
+            }
+            Ok(Some(Frame::Join { shard_id, models })) => {
+                *control.joined.lock().unwrap() = Some(JoinInfo { shard_id, models });
+            }
+            Ok(Some(Frame::Leave { .. })) => {
+                // Graceful departure: the connection stays up so in-flight
+                // requests drain; the registry stops routing new work.
+                control.draining.store(true, Ordering::Release);
+            }
+            Ok(Some(Frame::Heartbeat { seq, inflight, shed_delta, p50_us, p99_us })) => {
+                let mut slot = control.heartbeat.lock().unwrap();
+                // Keep the freshest reply by probe sequence — a late
+                // reply to an old probe must not overwrite a newer one.
+                let fresh = match *slot {
+                    Some(h) => seq > h.seq,
+                    None => true,
+                };
+                if fresh {
+                    *slot =
+                        Some(HeartbeatSnapshot { seq, inflight, shed_delta, p50_us, p99_us });
+                }
             }
             // Anything else (clean EOF, truncation, a confused peer)
             // ends the connection.

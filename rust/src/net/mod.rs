@@ -18,9 +18,11 @@
 //!                                       └────────────────────────────┘
 //! ```
 //!
-//! - [`wire`] — the versioned, length-prefixed frame protocol
-//!   (`Hello`/`Submit`/`Response`/`Shed`/`FleetReport`); every malformed
-//!   byte stream decodes to a clean error, never a panic.
+//! - [`wire`] — the versioned, length-prefixed frame protocol: the data
+//!   plane (`Hello`/`Submit`/`Response`/`Shed`/`FleetReport`) plus the
+//!   v2 control plane (`Join`/`Leave`/`HealthProbe`/`Heartbeat`) behind
+//!   the fleet's self-healing membership; every malformed byte stream
+//!   decodes to a clean error, never a panic.
 //! - [`ShardServer`] — a threaded `std::net::TcpListener` front over an
 //!   in-process [`crate::server::ModelRegistry`]: each connection gets a
 //!   reader thread that drains `Submit` frames into
@@ -41,6 +43,6 @@ pub mod client;
 pub mod server;
 pub mod wire;
 
-pub use client::ShardClient;
+pub use client::{HeartbeatSnapshot, JoinInfo, ShardClient};
 pub use server::ShardServer;
 pub use wire::{Frame, ShedReason, WireError, MAX_FRAME_LEN, WIRE_VERSION};

@@ -25,10 +25,31 @@
 //! a `Shed` frame — [`crate::server::SubmitError::Overloaded`] a hop
 //! later. The version handshake refuses mismatched peers before any
 //! other frame is parsed.
+//!
+//! # Control plane
+//!
+//! Beyond the data plane, every connection speaks the fleet control
+//! plane:
+//!
+//! - right after the handshake the server announces itself with a
+//!   `Join` frame (stable per-process `shard_id`, model count), so a
+//!   router learns membership without out-of-band configuration;
+//! - `HealthProbe { seq }` frames are answered with `Heartbeat` frames
+//!   carrying the registry's live load ([`ModelRegistry::fleet_load`]):
+//!   in-flight count, shed delta since the previous probe on this
+//!   connection, and p50/p99 service-latency EWMAs;
+//! - [`ShardServer::announce_leave`] broadcasts a `Leave` frame on every
+//!   connection (and to late joiners), telling routers to drain this
+//!   shard gracefully: stop routing new work, let in-flight tickets
+//!   complete, then close.
+//!
+//! The listener binds with `SO_REUSEADDR` (on Linux) so a restarted
+//! shard can rebind its port immediately instead of waiting out
+//! `TIME_WAIT` — a requirement for zero-operator-action rejoin.
 
-use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -57,11 +78,145 @@ fn shed_reason(e: &SubmitError) -> ShedReason {
 /// (the shed path takes no lane slot, so this queue is its only bound).
 const OUTBOUND_QUEUE_FRAMES: usize = 4096;
 
+/// Smoothing factor for the per-connection p50/p99 latency EWMAs
+/// reported in heartbeats. 0.3 tracks a load shift within a few probe
+/// ticks without letting one outlier probe swing the routing signal.
+const HEARTBEAT_EWMA_ALPHA: f64 = 0.3;
+
+/// Bind a listener with `SO_REUSEADDR` so a restarted shard can rebind
+/// its port while the previous process's connections sit in `TIME_WAIT`.
+/// Without it a kill→restart cycle fails `EADDRINUSE` for up to a minute
+/// — fatal for automatic rejoin. Linux-only (done via direct syscalls:
+/// the std listener builder exposes no socket options); elsewhere this
+/// falls back to a plain bind.
+#[cfg(target_os = "linux")]
+mod rebind {
+    use std::net::{SocketAddr, TcpListener};
+    use std::os::fd::FromRawFd;
+
+    #[repr(C)]
+    struct SockaddrIn {
+        sin_family: u16,
+        sin_port: u16,
+        sin_addr: u32,
+        sin_zero: [u8; 8],
+    }
+
+    const AF_INET: i32 = 2;
+    const SOCK_STREAM: i32 = 1;
+    const SOCK_CLOEXEC: i32 = 0o2000000;
+    const SOL_SOCKET: i32 = 1;
+    const SO_REUSEADDR: i32 = 2;
+
+    extern "C" {
+        fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+        fn setsockopt(
+            fd: i32,
+            level: i32,
+            name: i32,
+            value: *const std::ffi::c_void,
+            len: u32,
+        ) -> i32;
+        fn bind(fd: i32, addr: *const SockaddrIn, len: u32) -> i32;
+        fn listen(fd: i32, backlog: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    pub fn bind_reuseaddr(addr: SocketAddr) -> std::io::Result<TcpListener> {
+        let SocketAddr::V4(v4) = addr else {
+            // V6 never appears in this fabric's loopback/LAN deployments;
+            // keep the raw path narrow and let std handle the rest.
+            return TcpListener::bind(addr);
+        };
+        // SAFETY: plain syscalls over owned values; on every early-return
+        // path the fd is closed, on success it is moved into the
+        // TcpListener which owns it from then on.
+        unsafe {
+            let fd = socket(AF_INET, SOCK_STREAM | SOCK_CLOEXEC, 0);
+            if fd < 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            let one: i32 = 1;
+            let rc = setsockopt(
+                fd,
+                SOL_SOCKET,
+                SO_REUSEADDR,
+                (&one as *const i32).cast(),
+                std::mem::size_of::<i32>() as u32,
+            );
+            if rc < 0 {
+                let e = std::io::Error::last_os_error();
+                close(fd);
+                return Err(e);
+            }
+            let sa = SockaddrIn {
+                sin_family: AF_INET as u16,
+                // Both port and address live in network byte order inside
+                // sockaddr_in; octets() is already big-endian memory.
+                sin_port: v4.port().to_be(),
+                sin_addr: u32::from_ne_bytes(v4.ip().octets()),
+                sin_zero: [0; 8],
+            };
+            if bind(fd, &sa, std::mem::size_of::<SockaddrIn>() as u32) < 0 {
+                let e = std::io::Error::last_os_error();
+                close(fd);
+                return Err(e);
+            }
+            if listen(fd, 128) < 0 {
+                let e = std::io::Error::last_os_error();
+                close(fd);
+                return Err(e);
+            }
+            Ok(TcpListener::from_raw_fd(fd))
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod rebind {
+    use std::net::{SocketAddr, TcpListener};
+
+    pub fn bind_reuseaddr(addr: SocketAddr) -> std::io::Result<TcpListener> {
+        TcpListener::bind(addr)
+    }
+}
+
+/// A process-unique shard identity, minted once per [`ShardServer`].
+/// Wall-clock nanos XOR a rotated pid: two shards started the same
+/// nanosecond on one host still differ, and a restarted process gets a
+/// *new* id — routers use that to tell "same shard came back" (same
+/// addr) from "same process never died" (same id).
+fn fresh_shard_id() -> u64 {
+    use std::time::{SystemTime, UNIX_EPOCH};
+    let nanos = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    nanos ^ u64::from(std::process::id()).rotate_left(32)
+}
+
+/// State shared by the accept loop and every connection handler.
+struct ServerShared {
+    registry: Arc<ModelRegistry>,
+    shard_id: u64,
+    /// Set by [`ShardServer::announce_leave`]; connections accepted after
+    /// the broadcast read this and send `Leave` themselves, so a router
+    /// that dials in mid-drain still learns not to route here.
+    leaving: AtomicBool,
+}
+
 /// A live connection: a clone of its socket (so shutdown can unblock the
-/// reader) plus the handler thread's join handle. Reaped once the
-/// handler finishes, so a long-running shard doesn't accumulate dead
-/// fds and handles under connection churn.
-type Conn = (TcpStream, JoinHandle<()>);
+/// reader), the handler thread's join handle, and a slot holding the
+/// connection's outbound sender while the handler is live — the hook
+/// [`ShardServer::announce_leave`] uses to inject `Leave` frames into
+/// established connections. Reaped once the handler finishes, so a
+/// long-running shard doesn't accumulate dead fds and handles under
+/// connection churn.
+struct Conn {
+    stream: TcpStream,
+    handle: JoinHandle<()>,
+    out: Arc<Mutex<Option<SyncSender<Vec<u8>>>>>,
+}
 
 /// A serving shard: one [`ModelRegistry`] behind a `TcpListener`. Owns
 /// the accept loop and every connection's reader/writer thread pair;
@@ -70,38 +225,74 @@ type Conn = (TcpStream, JoinHandle<()>);
 pub struct ShardServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
+    shared: Arc<ServerShared>,
     accept: Mutex<Option<JoinHandle<()>>>,
     conns: Arc<Mutex<Vec<Conn>>>,
 }
 
 impl ShardServer {
     /// Bind `addr` (e.g. `"127.0.0.1:7070"`, port 0 for ephemeral) and
-    /// start accepting shard-fabric connections over `registry`.
+    /// start accepting shard-fabric connections over `registry`. The
+    /// socket is bound with `SO_REUSEADDR` so a restarted shard rebinds
+    /// its old port immediately.
     pub fn bind(addr: &str, registry: Arc<ModelRegistry>) -> std::io::Result<ShardServer> {
-        let listener = TcpListener::bind(addr)?;
+        let resolved = addr.to_socket_addrs()?.next().ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::InvalidInput, "address resolved to nothing")
+        })?;
+        let listener = rebind::bind_reuseaddr(resolved)?;
         // Nonblocking accept + a short poll keeps shutdown dependency-free
         // (no self-connect tricks); 5 ms of accept latency is noise next
         // to a connection's lifetime.
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
+        let shared = Arc::new(ServerShared {
+            registry,
+            shard_id: fresh_shard_id(),
+            leaving: AtomicBool::new(false),
+        });
         let conns: Arc<Mutex<Vec<Conn>>> = Arc::new(Mutex::new(Vec::new()));
         let accept = {
             let stop = stop.clone();
             let conns = conns.clone();
+            let shared = shared.clone();
             std::thread::Builder::new()
                 .name(format!("shard-accept:{addr}"))
                 .spawn(move || {
-                    accept_loop(listener, registry, stop, conns);
+                    accept_loop(listener, shared, stop, conns);
                 })
                 .expect("spawn accept loop")
         };
-        Ok(ShardServer { addr, stop, accept: Mutex::new(Some(accept)), conns })
+        Ok(ShardServer { addr, stop, shared, accept: Mutex::new(Some(accept)), conns })
     }
 
     /// The bound address (resolves port 0 to the real ephemeral port).
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// This process's shard identity, as announced in `Join` frames.
+    pub fn shard_id(&self) -> u64 {
+        self.shared.shard_id
+    }
+
+    /// Broadcast `Leave` on every live connection (and mark the server
+    /// so later connections get one too): routers stop sending new work
+    /// here, in-flight tickets complete normally, and the operator can
+    /// [`ShardServer::shutdown`] once the fleet has drained. Idempotent;
+    /// does not itself close anything.
+    pub fn announce_leave(&self) {
+        self.shared.leaving.store(true, Ordering::Release);
+        let frame = Frame::Leave { reason: "drain".to_string() }.encode();
+        let conns = self.conns.lock().unwrap();
+        for conn in conns.iter() {
+            if let Some(tx) = conn.out.lock().unwrap().as_ref() {
+                // try_send: a connection too backed up to take one
+                // control frame is already being killed by the overflow
+                // path; never block the caller on it.
+                let _ = tx.try_send(frame.clone());
+            }
+        }
     }
 
     /// Stop accepting, close every connection, and join all server
@@ -117,11 +308,11 @@ impl ShardServer {
         }
         let mut conns = self.conns.lock().unwrap();
         // Unblock every connection reader first, then join the handlers.
-        for (stream, _) in conns.iter() {
-            let _ = stream.shutdown(Shutdown::Both);
+        for conn in conns.iter() {
+            let _ = conn.stream.shutdown(Shutdown::Both);
         }
-        for (_, handle) in conns.drain(..) {
-            let _ = handle.join();
+        for conn in conns.drain(..) {
+            let _ = conn.handle.join();
         }
     }
 }
@@ -138,11 +329,11 @@ impl Drop for ShardServer {
 fn reap_finished(conns: &Mutex<Vec<Conn>>) {
     let mut guard = conns.lock().unwrap();
     let mut live = Vec::with_capacity(guard.len());
-    for (stream, handle) in guard.drain(..) {
-        if handle.is_finished() {
-            let _ = handle.join();
+    for conn in guard.drain(..) {
+        if conn.handle.is_finished() {
+            let _ = conn.handle.join();
         } else {
-            live.push((stream, handle));
+            live.push(conn);
         }
     }
     *guard = live;
@@ -150,7 +341,7 @@ fn reap_finished(conns: &Mutex<Vec<Conn>>) {
 
 fn accept_loop(
     listener: TcpListener,
-    registry: Arc<ModelRegistry>,
+    shared: Arc<ServerShared>,
     stop: Arc<AtomicBool>,
     conns: Arc<Mutex<Vec<Conn>>>,
 ) {
@@ -165,12 +356,16 @@ fn accept_loop(
                     continue;
                 }
                 let Ok(clone) = stream.try_clone() else { continue };
-                let registry = registry.clone();
-                let handle = std::thread::Builder::new()
-                    .name(format!("shard-conn:{peer}"))
-                    .spawn(move || handle_conn(stream, registry))
-                    .expect("spawn connection handler");
-                conns.lock().unwrap().push((clone, handle));
+                let out: Arc<Mutex<Option<SyncSender<Vec<u8>>>>> = Arc::new(Mutex::new(None));
+                let shared = shared.clone();
+                let handle = {
+                    let out = out.clone();
+                    std::thread::Builder::new()
+                        .name(format!("shard-conn:{peer}"))
+                        .spawn(move || handle_conn(stream, shared, out))
+                        .expect("spawn connection handler")
+                };
+                conns.lock().unwrap().push(Conn { stream: clone, handle, out });
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(5));
@@ -189,7 +384,40 @@ fn accept_loop(
     }
 }
 
-fn handle_conn(mut stream: TcpStream, registry: Arc<ModelRegistry>) {
+/// Per-connection heartbeat state: the shed counter snapshot behind the
+/// reported deltas, and the latency EWMAs. Per *connection*, not per
+/// shard: each router smooths against its own probe cadence.
+struct HbState {
+    last_shed: u64,
+    p50: Option<f64>,
+    p99: Option<f64>,
+}
+
+impl HbState {
+    fn new() -> HbState {
+        HbState { last_shed: 0, p50: None, p99: None }
+    }
+
+    /// Fold a fresh registry sample into the EWMAs (first sample seeds).
+    fn observe(&mut self, p50_us: f64, p99_us: f64) -> (f64, f64) {
+        let fold = |prev: Option<f64>, x: f64| match prev {
+            Some(p) => p + HEARTBEAT_EWMA_ALPHA * (x - p),
+            None => x,
+        };
+        let p50 = fold(self.p50, p50_us);
+        let p99 = fold(self.p99, p99_us);
+        self.p50 = Some(p50);
+        self.p99 = Some(p99);
+        (p50, p99)
+    }
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    shared: Arc<ServerShared>,
+    out_slot: Arc<Mutex<Option<SyncSender<Vec<u8>>>>>,
+) {
+    use std::io::Write;
     // Version gate before anything else: a mismatched (or non-protocol)
     // peer is refused — our Hello goes out so the peer can diagnose the
     // mismatch, then the connection closes without parsing another frame.
@@ -202,6 +430,18 @@ fn handle_conn(mut stream: TcpStream, registry: Arc<ModelRegistry>) {
         return;
     }
     let _ = stream.set_read_timeout(None);
+    // Announce membership before any data-plane traffic. Written directly
+    // on the stream — the writer thread doesn't exist yet, so there's no
+    // interleaving hazard — making Join the first post-handshake frame a
+    // router ever sees from a shard.
+    let join = Frame::Join {
+        shard_id: shared.shard_id,
+        models: shared.registry.len() as u32,
+    };
+    if stream.write_all(&join.encode()).is_err() {
+        let _ = stream.shutdown(Shutdown::Both);
+        return;
+    }
     let write_half = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -212,6 +452,7 @@ fn handle_conn(mut stream: TcpStream, registry: Arc<ModelRegistry>) {
     // connection is killed rather than buffered without bound — the
     // client-side reader then poisons its tickets with Err(Closed).
     let (out_tx, out_rx) = sync_channel::<Vec<u8>>(OUTBOUND_QUEUE_FRAMES);
+    *out_slot.lock().unwrap() = Some(out_tx.clone());
     // Socket handle shared into completion callbacks so overflow can
     // kill the connection from a lane router thread without blocking it.
     let sock = Arc::new(match stream.try_clone() {
@@ -222,12 +463,17 @@ fn handle_conn(mut stream: TcpStream, registry: Arc<ModelRegistry>) {
         .name("shard-tx".to_string())
         .spawn(move || writer_loop(write_half, out_rx))
         .expect("spawn connection writer");
+    // A connection dialed mid-drain missed the broadcast; tell it now.
+    if shared.leaving.load(Ordering::Acquire) {
+        let _ = out_tx.try_send(Frame::Leave { reason: "drain".to_string() }.encode());
+    }
+    let mut hb = HbState::new();
 
     loop {
         match wire::read_frame(&mut stream) {
             Ok(Some(Frame::Submit { id, model, window })) => {
                 let window = Window { data: window, anomaly: None };
-                match registry.submit_async(&model, window) {
+                match shared.registry.submit_async(&model, window) {
                     Ok(ticket) => {
                         let otx = out_tx.clone();
                         let sock = sock.clone();
@@ -263,8 +509,24 @@ fn handle_conn(mut stream: TcpStream, registry: Arc<ModelRegistry>) {
                     }
                 }
             }
+            Ok(Some(Frame::HealthProbe { seq })) => {
+                let load = shared.registry.fleet_load();
+                let shed_delta = load.shed.saturating_sub(hb.last_shed);
+                hb.last_shed = load.shed;
+                let (p50_us, p99_us) = hb.observe(load.p50_us, load.p99_us);
+                let frame = Frame::Heartbeat {
+                    seq,
+                    inflight: load.inflight,
+                    shed_delta,
+                    p50_us,
+                    p99_us,
+                };
+                if out_tx.try_send(frame.encode()).is_err() {
+                    break;
+                }
+            }
             Ok(Some(Frame::FleetReport { .. })) => {
-                let frame = Frame::FleetReport { text: registry.fleet_report() };
+                let frame = Frame::FleetReport { text: shared.registry.fleet_report() };
                 if out_tx.try_send(frame.encode()).is_err() {
                     break;
                 }
@@ -275,6 +537,9 @@ fn handle_conn(mut stream: TcpStream, registry: Arc<ModelRegistry>) {
             Ok(Some(_)) | Ok(None) | Err(_) => break,
         }
     }
+    // Unhook from announce_leave before tearing down, so the broadcast
+    // never lands on a sender whose writer is gone.
+    *out_slot.lock().unwrap() = None;
     // Let in-flight completions drain: the writer exits once every
     // on_complete clone of out_tx has fired (lanes always resolve
     // accepted tickets) and the channel disconnects.

@@ -10,7 +10,9 @@
 //!   decoder reserve gigabytes or spin.
 //! ```
 //!
-//! Five frame kinds carry the whole protocol (see [`Frame`]):
+//! Nine frame kinds carry the whole protocol (see [`Frame`]). Tags 0–4
+//! are the data plane; tags 5–8 are the control plane the shard registry
+//! drives membership and health from:
 //!
 //! | tag | frame        | direction        | payload                        |
 //! |-----|--------------|------------------|--------------------------------|
@@ -19,6 +21,10 @@
 //! | 2   | `Response`   | shard → client   | `id, score, flags, latencies`  |
 //! | 3   | `Shed`       | shard → client   | `id, reason: u8`               |
 //! | 4   | `FleetReport`| both             | `text` (empty = request)       |
+//! | 5   | `Join`       | shard → client   | `shard_id: u64, models: u32`   |
+//! | 6   | `Leave`      | shard → client   | `reason: str`                  |
+//! | 7   | `HealthProbe`| client → shard   | `seq: u64`                     |
+//! | 8   | `Heartbeat`  | shard → client   | `seq, load counters, p50/p99`  |
 //!
 //! Integers and floats are little-endian; strings are `u16` length +
 //! UTF-8 bytes; the window is `T: u32, F: u32` then `T·F` `f32` samples
@@ -34,7 +40,9 @@
 use std::io::{Read, Write};
 
 /// Protocol version exchanged in [`Frame::Hello`]; both ends must match.
-pub const WIRE_VERSION: u16 = 1;
+/// v2 added the control plane (`Join`/`Leave`/`HealthProbe`/`Heartbeat`)
+/// and the shard's post-handshake `Join` announcement.
+pub const WIRE_VERSION: u16 = 2;
 
 /// Upper bound on `len` (tag + payload bytes) accepted by the decoder.
 /// 16 MiB comfortably holds the largest real frame (a `Submit` carrying a
@@ -91,6 +99,25 @@ pub enum Frame {
     /// Fleet-report exchange: an empty `text` asks the shard for its
     /// rolled-up report; the shard answers with the report text.
     FleetReport { text: String },
+    /// Sent by the shard right after the handshake on every connection:
+    /// `shard_id` identifies the serving *process instance* (a restarted
+    /// shard announces a different id, which is how the registry tells a
+    /// rejoin from a reconnect to the same process), `models` is how many
+    /// lanes it serves.
+    Join { shard_id: u64, models: u32 },
+    /// Graceful-departure announcement (shard → client): stop routing new
+    /// work here; in-flight requests will still be answered. The
+    /// connection stays open until the client has drained it.
+    Leave { reason: String },
+    /// Health probe (client → shard): `seq` is echoed in the matching
+    /// [`Frame::Heartbeat`] so the registry can tell fresh replies from
+    /// stale ones.
+    HealthProbe { seq: u64 },
+    /// Probe reply carrying the shard's load snapshot: requests in flight
+    /// across its lanes, sheds since the previous heartbeat on this
+    /// connection, and smoothed (EWMA) p50/p99 end-to-end latency in µs.
+    /// Floats travel as raw bits like every other f64 on this wire.
+    Heartbeat { seq: u64, inflight: u64, shed_delta: u64, p50_us: f64, p99_us: f64 },
 }
 
 /// Decode/IO failure. Every malformed input maps here — the decoder has
@@ -178,6 +205,10 @@ impl Frame {
             Frame::Response { .. } => 2,
             Frame::Shed { .. } => 3,
             Frame::FleetReport { .. } => 4,
+            Frame::Join { .. } => 5,
+            Frame::Leave { .. } => 6,
+            Frame::HealthProbe { .. } => 7,
+            Frame::Heartbeat { .. } => 8,
         }
     }
 
@@ -207,6 +238,19 @@ impl Frame {
                 assert!(text.len() <= u32::MAX as usize);
                 put_u32(&mut body, text.len() as u32);
                 body.extend_from_slice(text.as_bytes());
+            }
+            Frame::Join { shard_id, models } => {
+                put_u64(&mut body, *shard_id);
+                put_u32(&mut body, *models);
+            }
+            Frame::Leave { reason } => put_str(&mut body, reason),
+            Frame::HealthProbe { seq } => put_u64(&mut body, *seq),
+            Frame::Heartbeat { seq, inflight, shed_delta, p50_us, p99_us } => {
+                put_u64(&mut body, *seq);
+                put_u64(&mut body, *inflight);
+                put_u64(&mut body, *shed_delta);
+                put_f64(&mut body, *p50_us);
+                put_f64(&mut body, *p99_us);
             }
         }
         finish_frame(body)
@@ -353,6 +397,16 @@ pub fn decode_frame(tag: u8, payload: &[u8]) -> Result<Frame, WireError> {
                 text: String::from_utf8(bytes.to_vec()).map_err(|_| WireError::BadUtf8)?,
             }
         }
+        5 => Frame::Join { shard_id: c.u64()?, models: c.u32()? },
+        6 => Frame::Leave { reason: c.string()? },
+        7 => Frame::HealthProbe { seq: c.u64()? },
+        8 => Frame::Heartbeat {
+            seq: c.u64()?,
+            inflight: c.u64()?,
+            shed_delta: c.u64()?,
+            p50_us: c.f64()?,
+            p99_us: c.f64()?,
+        },
         other => return Err(WireError::BadTag(other)),
     };
     c.done()?;
@@ -421,7 +475,7 @@ mod tests {
     }
 
     fn random_frame(rng: &mut Xoshiro256) -> Frame {
-        match rng.below(5) {
+        match rng.below(9) {
             0 => Frame::Hello { version: rng.below(u16::MAX as u64 + 1) as u16 },
             1 => {
                 let t = rng.below(6) as usize;
@@ -447,12 +501,25 @@ mod tests {
                 reason: [ShedReason::Overloaded, ShedReason::Closed, ShedReason::UnknownModel]
                     [rng.below(3) as usize],
             },
-            _ => {
+            4 => {
                 let n = rng.below(200) as usize;
                 let text: String =
                     (0..n).map(|i| char::from(b'a' + ((i as u8) % 26))).collect();
                 Frame::FleetReport { text }
             }
+            5 => Frame::Join { shard_id: rng.next_u64(), models: rng.below(16) as u32 },
+            6 => Frame::Leave {
+                reason: ["drain", "restart", ""][rng.below(3) as usize].to_string(),
+            },
+            7 => Frame::HealthProbe { seq: rng.next_u64() },
+            _ => Frame::Heartbeat {
+                seq: rng.next_u64(),
+                inflight: rng.below(1 << 20),
+                shed_delta: rng.below(1 << 20),
+                // Raw bit patterns (NaN/inf included) must survive.
+                p50_us: f64::from_bits(rng.next_u64()),
+                p99_us: f64::from_bits(rng.next_u64()),
+            },
         }
     }
 
@@ -477,6 +544,22 @@ mod tests {
                     && queue_us.to_bits() == q2.to_bits()
                     && service_us.to_bits() == s2.to_bits()
                     && e2e_us.to_bits() == e2.to_bits()
+            }
+            (
+                Frame::Heartbeat { seq, inflight, shed_delta, p50_us, p99_us },
+                Frame::Heartbeat {
+                    seq: seq2,
+                    inflight: in2,
+                    shed_delta: sd2,
+                    p50_us: p50b,
+                    p99_us: p99b,
+                },
+            ) => {
+                seq == seq2
+                    && inflight == in2
+                    && shed_delta == sd2
+                    && p50_us.to_bits() == p50b.to_bits()
+                    && p99_us.to_bits() == p99b.to_bits()
             }
             _ => a == b,
         }
@@ -585,6 +668,22 @@ mod tests {
         bad.extend_from_slice(&0u32.to_le_bytes());
         bad.extend_from_slice(&0u32.to_le_bytes());
         assert!(matches!(decode_frame(1, &bad), Err(WireError::BadUtf8)));
+        // Control-plane payloads get the same treatment: short fields and
+        // trailing bytes are clean rejections, never panics.
+        assert!(matches!(decode_frame(5, &[1, 2, 3]), Err(WireError::BadPayload(_))));
+        assert!(matches!(decode_frame(7, &[0; 7]), Err(WireError::BadPayload(_))));
+        assert!(matches!(decode_frame(7, &[0; 9]), Err(WireError::BadPayload(_))));
+        assert!(matches!(decode_frame(8, &[0; 39]), Err(WireError::BadPayload(_))));
+        // Leave with a string length past the payload end.
+        let mut leave = Vec::new();
+        leave.extend_from_slice(&9u16.to_le_bytes());
+        leave.extend_from_slice(b"dr");
+        assert!(matches!(decode_frame(6, &leave), Err(WireError::BadPayload(_))));
+        // Leave with invalid UTF-8 in the reason.
+        let mut bad_leave = Vec::new();
+        bad_leave.extend_from_slice(&2u16.to_le_bytes());
+        bad_leave.extend_from_slice(&[0xFF, 0xFE]);
+        assert!(matches!(decode_frame(6, &bad_leave), Err(WireError::BadUtf8)));
         // Random byte soup across many seeds: errors only, no panics.
         let mut rng = Xoshiro256::seeded(0xD15EA5E);
         for _ in 0..2000 {

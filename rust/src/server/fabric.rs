@@ -595,6 +595,21 @@ pub struct ModelRegistry {
     autoscaler: Mutex<Option<Autoscaler>>,
 }
 
+/// One registry-wide load sample (see [`ModelRegistry::fleet_load`]):
+/// what a shard reports about itself in a control-plane heartbeat.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FleetLoad {
+    /// Requests accepted but not yet completed or cancelled, summed over
+    /// lanes (queued + batching + scoring + awaiting pickup).
+    pub inflight: u64,
+    /// Cumulative admission sheds over all lanes.
+    pub shed: u64,
+    /// Completed-weighted mean of per-lane p50 e2e latency, µs.
+    pub p50_us: f64,
+    /// Completed-weighted mean of per-lane p99 e2e latency, µs.
+    pub p99_us: f64,
+}
+
 impl ModelRegistry {
     /// An empty registry (no lanes, no autoscaler).
     pub fn new() -> ModelRegistry {
@@ -703,6 +718,36 @@ impl ModelRegistry {
             t.render(),
             self.lanes.len()
         )
+    }
+
+    /// Aggregate load snapshot across every lane — the payload of a
+    /// control-plane heartbeat ([`crate::net::ShardServer`] answers each
+    /// `HealthProbe` with one): accepted-but-unfinished requests,
+    /// cumulative sheds, and completed-weighted p50/p99 end-to-end
+    /// latency in µs (0.0 until anything completes).
+    pub fn fleet_load(&self) -> FleetLoad {
+        let mut load = FleetLoad::default();
+        let mut weight = 0.0f64;
+        for lane in self.lanes.values() {
+            let m = lane.metrics();
+            // Counter reads race (Relaxed), so the difference saturates
+            // rather than wrapping when a completion lands between reads.
+            load.inflight +=
+                m.submitted().saturating_sub(m.completed().saturating_add(m.cancelled()));
+            load.shed += m.shed();
+            let done = m.completed() as f64;
+            if done > 0.0 {
+                let (p50, _, p99) = m.e2e_percentiles_us();
+                load.p50_us += p50 * done;
+                load.p99_us += p99 * done;
+                weight += done;
+            }
+        }
+        if weight > 0.0 {
+            load.p50_us /= weight;
+            load.p99_us /= weight;
+        }
+        load
     }
 
     /// Start the fleet autoscaler over every lane whose config carries an

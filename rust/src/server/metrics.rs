@@ -35,6 +35,25 @@ pub struct ServerMetrics {
     /// Submissions a [`crate::server::ShardRouter`] had to route around
     /// (or re-issue after) a dead shard connection.
     shard_failovers: AtomicU64,
+    /// Control plane: health probes sent to shards.
+    health_probes: AtomicU64,
+    /// Control plane: heartbeat replies consumed from shards.
+    heartbeats: AtomicU64,
+    /// Control plane: Live→Suspect demotions (missed-probe threshold).
+    shard_suspects: AtomicU64,
+    /// Control plane: demotions to Dead (in-flight work poisoned).
+    shard_deaths: AtomicU64,
+    /// Control plane: reconnect dials attempted (successful or not).
+    shard_reconnect_attempts: AtomicU64,
+    /// Control plane: reconnects that landed — a dead shard rejoined.
+    shard_reconnects: AtomicU64,
+    /// Control plane: fleet membership by state, refreshed every health
+    /// tick — (live, suspect, draining, down). Point-in-time gauges,
+    /// unlike the monotone counters above.
+    shards_live: AtomicUsize,
+    shards_suspect: AtomicUsize,
+    shards_draining: AtomicUsize,
+    shards_down: AtomicUsize,
     completed: AtomicU64,
     anomalies: AtomicU64,
     batches: AtomicU64,
@@ -65,6 +84,16 @@ impl ServerMetrics {
             worker_panics: AtomicU64::new(0),
             cancelled: AtomicU64::new(0),
             shard_failovers: AtomicU64::new(0),
+            health_probes: AtomicU64::new(0),
+            heartbeats: AtomicU64::new(0),
+            shard_suspects: AtomicU64::new(0),
+            shard_deaths: AtomicU64::new(0),
+            shard_reconnect_attempts: AtomicU64::new(0),
+            shard_reconnects: AtomicU64::new(0),
+            shards_live: AtomicUsize::new(0),
+            shards_suspect: AtomicUsize::new(0),
+            shards_draining: AtomicUsize::new(0),
+            shards_down: AtomicUsize::new(0),
             completed: AtomicU64::new(0),
             anomalies: AtomicU64::new(0),
             batches: AtomicU64::new(0),
@@ -108,6 +137,45 @@ impl ServerMetrics {
     /// A submission was routed around (or re-issued after) a dead shard.
     pub fn on_shard_failover(&self) {
         self.shard_failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A health probe went out to a shard.
+    pub fn on_health_probe(&self) {
+        self.health_probes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A fresh heartbeat reply was consumed from a shard.
+    pub fn on_heartbeat(&self) {
+        self.heartbeats.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A shard was demoted Live→Suspect (missed-probe threshold).
+    pub fn on_shard_suspect(&self) {
+        self.shard_suspects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A shard was demoted to Dead; its in-flight tickets were poisoned.
+    pub fn on_shard_death(&self) {
+        self.shard_deaths.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A reconnect dial was attempted against a dead shard.
+    pub fn on_shard_reconnect_attempt(&self) {
+        self.shard_reconnect_attempts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A reconnect succeeded — the shard is back in the routable set.
+    pub fn on_shard_reconnect(&self) {
+        self.shard_reconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Refresh the fleet-membership gauges (called once per health tick
+    /// with a consistent snapshot; `down` folds Dead and Reconnecting).
+    pub fn set_shard_states(&self, live: usize, suspect: usize, draining: usize, down: usize) {
+        self.shards_live.store(live, Ordering::Relaxed);
+        self.shards_suspect.store(suspect, Ordering::Relaxed);
+        self.shards_draining.store(draining, Ordering::Relaxed);
+        self.shards_down.store(down, Ordering::Relaxed);
     }
 
     /// The batcher popped one request out of the admission queue.
@@ -170,6 +238,50 @@ impl ServerMetrics {
     /// (counted by [`crate::server::ShardRouter`]).
     pub fn shard_failovers(&self) -> u64 {
         self.shard_failovers.load(Ordering::Relaxed)
+    }
+
+    /// Health probes sent to shards so far.
+    pub fn health_probes(&self) -> u64 {
+        self.health_probes.load(Ordering::Relaxed)
+    }
+
+    /// Heartbeat replies consumed from shards so far.
+    pub fn heartbeats(&self) -> u64 {
+        self.heartbeats.load(Ordering::Relaxed)
+    }
+
+    /// Live→Suspect demotions so far.
+    pub fn shard_suspects(&self) -> u64 {
+        self.shard_suspects.load(Ordering::Relaxed)
+    }
+
+    /// Demotions to Dead so far.
+    pub fn shard_deaths(&self) -> u64 {
+        self.shard_deaths.load(Ordering::Relaxed)
+    }
+
+    /// Reconnect dials attempted so far (successful or not) — together
+    /// with [`Self::shard_reconnects`] this makes the backoff schedule
+    /// observable: attempts grow while a shard stays down, reconnects
+    /// ticks once when it comes back.
+    pub fn shard_reconnect_attempts(&self) -> u64 {
+        self.shard_reconnect_attempts.load(Ordering::Relaxed)
+    }
+
+    /// Reconnects that landed so far.
+    pub fn shard_reconnects(&self) -> u64 {
+        self.shard_reconnects.load(Ordering::Relaxed)
+    }
+
+    /// Fleet membership gauges as of the last health tick:
+    /// (live, suspect, draining, down).
+    pub fn shard_states(&self) -> (usize, usize, usize, usize) {
+        (
+            self.shards_live.load(Ordering::Relaxed),
+            self.shards_suspect.load(Ordering::Relaxed),
+            self.shards_draining.load(Ordering::Relaxed),
+            self.shards_down.load(Ordering::Relaxed),
+        )
     }
 
     pub fn completed(&self) -> u64 {
@@ -251,6 +363,22 @@ impl ServerMetrics {
         }
         if self.shard_failovers() > 0 {
             extra.push_str(&format!(" | {} shard failovers", self.shard_failovers()));
+        }
+        if self.health_probes() > 0 {
+            extra.push_str(&format!(
+                " | control: {} probes, {} heartbeats, {} suspects, {} deaths, \
+                 {} reconnects ({} attempts)",
+                self.health_probes(),
+                self.heartbeats(),
+                self.shard_suspects(),
+                self.shard_deaths(),
+                self.shard_reconnects(),
+                self.shard_reconnect_attempts(),
+            ));
+            let (live, suspect, draining, down) = self.shard_states();
+            extra.push_str(&format!(
+                " | fleet: {live} live, {suspect} suspect, {draining} draining, {down} down"
+            ));
         }
         format!(
             "requests: {} submitted, {} shed, {} completed, {} flagged | \
@@ -356,6 +484,37 @@ mod tests {
         let report = m.report();
         assert!(report.contains("2 cancelled"), "{report}");
         assert!(report.contains("1 shard failovers"), "{report}");
+    }
+
+    #[test]
+    fn control_plane_counters_and_gauges_surface_in_the_report() {
+        let m = ServerMetrics::new();
+        assert_eq!(m.shard_states(), (0, 0, 0, 0));
+        let quiet = m.report();
+        assert!(!quiet.contains("control:"), "{quiet}");
+        for _ in 0..4 {
+            m.on_health_probe();
+        }
+        for _ in 0..3 {
+            m.on_heartbeat();
+        }
+        m.on_shard_suspect();
+        m.on_shard_death();
+        m.on_shard_reconnect_attempt();
+        m.on_shard_reconnect_attempt();
+        m.on_shard_reconnect();
+        m.set_shard_states(2, 1, 0, 1);
+        assert_eq!(m.health_probes(), 4);
+        assert_eq!(m.heartbeats(), 3);
+        assert_eq!(m.shard_suspects(), 1);
+        assert_eq!(m.shard_deaths(), 1);
+        assert_eq!(m.shard_reconnect_attempts(), 2);
+        assert_eq!(m.shard_reconnects(), 1);
+        assert_eq!(m.shard_states(), (2, 1, 0, 1));
+        let report = m.report();
+        assert!(report.contains("4 probes"), "{report}");
+        assert!(report.contains("1 reconnects (2 attempts)"), "{report}");
+        assert!(report.contains("2 live, 1 suspect, 0 draining, 1 down"), "{report}");
     }
 
     #[test]

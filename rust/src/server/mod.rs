@@ -49,9 +49,13 @@
 //! - [`shard`] — the cross-process scale step: a [`ShardRouter`] spreads
 //!   the same `submit(model, window)` surface over N shard processes
 //!   (each a [`crate::net::ShardServer`] over its own registry), with a
-//!   static model map, power-of-two-choices balancing, and failover that
-//!   routes around dead shards. [`SubmitSurface`] is the trait both ends
-//!   of that symmetry implement.
+//!   static model map, health-weighted power-of-two balancing, and a
+//!   self-healing control plane: probe/heartbeat health ticks drive each
+//!   shard through Live→Suspect→Dead ([`ShardState`]), dead shards are
+//!   redialed with capped backoff until they rejoin, `Leave` announcers
+//!   drain gracefully, and [`ShardRouter::add_shard`] admits shards into
+//!   a running fleet. [`SubmitSurface`] is the trait both ends of that
+//!   symmetry implement.
 
 pub mod autoscale;
 pub mod backend;
@@ -63,10 +67,10 @@ pub mod shard;
 
 pub use autoscale::{Autoscaler, AutoscalePolicy, ScaleDecision};
 pub use backend::{Backend, PjrtBackend, QuantBackend, ThrottledBackend};
-pub use fabric::{Lane, ModelRegistry, SubmitError};
+pub use fabric::{FleetLoad, Lane, ModelRegistry, SubmitError};
 pub use front::{Completion, CompletionSet, Ticket};
 pub use metrics::ServerMetrics;
-pub use shard::ShardRouter;
+pub use shard::{RouterConfig, ShardRouter, ShardState};
 
 /// The fleet-wide submission surface: anything that accepts
 /// `submit(model, window)` and answers through a [`Ticket`]. Implemented

@@ -1,34 +1,70 @@
 //! The shard router: N remote shards composed into one fleet-wide
-//! `submit(model, window)` surface.
+//! `submit(model, window)` surface, with a live control plane.
 //!
-//! The router owns one [`ShardClient`] per shard process and routes each
-//! submission in two steps:
+//! The router owns one slot per shard address. A slot holds the current
+//! [`ShardClient`] connection (if any) plus the shard's membership
+//! state, and routes each submission in two steps:
 //!
 //! 1. **Static map** — which shards serve this model at all (by default
 //!    every shard serves every model, the `fleet serve` deployment; a
 //!    custom map pins models to shard subsets).
-//! 2. **Power-of-two choices** — among the live shards serving the
-//!    model, pick two at random and submit to the one with fewer
-//!    requests in flight. Classic load balancing: nearly the quality of
-//!    join-shortest-queue at the cost of two counter reads, and robust
-//!    to the stale-load herding a pure least-loaded pick suffers.
+//! 2. **Power-of-two choices** — among the routable shards serving the
+//!    model, draw two distinct candidates and submit to the
+//!    healthier-looking one. Classic load balancing: nearly the quality
+//!    of join-shortest-queue at the cost of two reads, and robust to the
+//!    stale-load herding a pure least-loaded pick suffers. When both
+//!    candidates have heartbeat samples the compare is health-weighted —
+//!    expected drain time `(backlog + 1) × p99 EWMA` — otherwise it
+//!    falls back to raw local in-flight counts, so a shard that just
+//!    joined (no samples yet) is never scored zero and flooded.
 //!
 //! **Backpressure** crosses the wire unchanged: a shard lane's shed
 //! arrives as a `Shed` frame and resolves the ticket to
 //! `Err(`[`SubmitError::Overloaded`]`)` — the same signal, one hop out.
 //!
-//! **Failover**: a dead shard (connection EOF, write failure) is sticky
-//! — its client fails fast and the router routes around it, counting
-//! every avoided/re-issued submission in
-//! [`ServerMetrics::shard_failovers`]. Tickets that were in flight on
-//! the dead connection resolve `Err(Closed)` (never hang); the
-//! closed-loop drivers re-offer those, so a shard death loses zero
-//! tickets end to end (`tests/integration_shard.rs` pins that down).
+//! # Control plane
+//!
+//! A health thread ticks every [`RouterConfig::heartbeat_ms`] and walks
+//! the fleet, driving each slot through the membership state machine:
+//!
+//! ```text
+//!          fresh heartbeat                    missed ≥ suspect_after
+//!   ┌─────────────────────── Suspect ◄──────────────────────────┐
+//!   ▼                          │ missed ≥ dead_after            │
+//! Live ──────────────────────► │ (or the connection died)     Live
+//!   │  Leave frame             ▼                                ▲
+//!   ▼                        Dead ────► Reconnecting ───────────┘
+//! Draining ──── in-flight=0 ───┘  backoff   dial ok: fresh client,
+//!              (clean close)      capped,   new generation
+//!                                 jittered
+//! ```
+//!
+//! - Each tick sends one `HealthProbe` per connected shard; the shard
+//!   answers with a `Heartbeat` carrying its in-flight count, shed
+//!   delta, and p50/p99 latency EWMAs. Fresh replies reset the miss
+//!   counter and feed the routing EWMAs; silence accumulates misses.
+//! - **Suspect** shards take no new work but nothing is poisoned — a
+//!   slow-but-alive shard re-promotes on its next fresh heartbeat, and
+//!   every response it produced while Suspect still counts. If no Live
+//!   shard serves a model, Suspect ones are used as a last resort.
+//! - **Dead** demotions close the connection, poisoning in-flight
+//!   tickets with `Err(Closed)` — the no-hanging-tickets invariant; the
+//!   closed-loop drivers re-offer those, so a death loses zero tickets.
+//! - Dead slots are redialed with capped exponential backoff + jitter;
+//!   a restarted process rejoins with zero operator action (the rejoin
+//!   is observable: `shard_reconnects` metrics tick and the slot's
+//!   generation bumps).
+//! - A shard announcing `Leave` drains gracefully: no new work, its
+//!   in-flight tickets complete, then the connection closes cleanly.
+//!
+//! Membership is dynamic the other way too: [`ShardRouter::add_shard`]
+//! admits a new shard into a running fleet.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::model::Topology;
 use crate::net::{ShardClient, WireError};
@@ -37,31 +73,283 @@ use crate::workload::Window;
 
 use super::{ServerMetrics, SubmitError, SubmitSurface, Ticket};
 
-/// Client-side router over N shard connections, implementing
+/// First redial delay after a shard dies; doubles per failed attempt up
+/// to [`RouterConfig::reconnect_max_backoff_ms`].
+const RECONNECT_INITIAL_BACKOFF_MS: u64 = 100;
+
+/// Smoothing factor for the router-side heartbeat EWMAs (in-flight and
+/// p99) behind the health-weighted pick.
+const HEALTH_EWMA_ALPHA: f64 = 0.3;
+
+/// A shard slot's membership state, as driven by the health tick.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardState {
+    /// Connected and answering probes: full routing weight.
+    Live = 0,
+    /// Missed probes past [`RouterConfig::suspect_after`]: no new work
+    /// (unless no Live shard serves the model), nothing poisoned —
+    /// re-promotes on the next fresh heartbeat.
+    Suspect = 1,
+    /// Announced `Leave`: no new work; the connection closes cleanly
+    /// once its in-flight count reaches zero.
+    Draining = 2,
+    /// Connection closed (death or drain completion); in-flight tickets
+    /// were poisoned `Err(Closed)` on the death path. Awaiting redial.
+    Dead = 3,
+    /// A redial is in flight right now.
+    Reconnecting = 4,
+}
+
+impl ShardState {
+    fn from_u8(v: u8) -> ShardState {
+        match v {
+            0 => ShardState::Live,
+            1 => ShardState::Suspect,
+            2 => ShardState::Draining,
+            4 => ShardState::Reconnecting,
+            _ => ShardState::Dead,
+        }
+    }
+}
+
+impl std::fmt::Display for ShardState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ShardState::Live => "live",
+            ShardState::Suspect => "suspect",
+            ShardState::Draining => "draining",
+            ShardState::Dead => "dead",
+            ShardState::Reconnecting => "reconnecting",
+        })
+    }
+}
+
+/// Health/reconnect tuning for a [`ShardRouter`]. The defaults detect a
+/// silent shard in ~1.5 s (6 × 250 ms) and redial from 100 ms up to 5 s.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    /// Health-tick period in ms: one probe per connected shard per tick.
+    pub heartbeat_ms: u64,
+    /// Consecutive missed probes before Live→Suspect.
+    pub suspect_after: u32,
+    /// Consecutive missed probes before demotion to Dead.
+    pub dead_after: u32,
+    /// Cap on the exponential redial backoff, ms.
+    pub reconnect_max_backoff_ms: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            heartbeat_ms: 250,
+            suspect_after: 3,
+            dead_after: 6,
+            reconnect_max_backoff_ms: 5_000,
+        }
+    }
+}
+
+/// Mutable per-slot health bookkeeping, guarded by one mutex. Lock
+/// order: a holder of this lock may take the slot's `client` lock, never
+/// the reverse (the submit path takes only `client`; the reader threads
+/// take neither).
+struct SlotCtl {
+    /// Ticks since the last fresh heartbeat.
+    missed: u32,
+    /// Last probe sequence sent on the current connection.
+    probe_seq: u64,
+    /// Highest heartbeat sequence consumed on the current connection.
+    seen_seq: u64,
+    /// Bumped on every successful reconnect — "same addr, new process".
+    generation: u64,
+    /// Failed redials since the shard died (monotone per outage).
+    attempts: u64,
+    /// Next redial delay, ms (doubles per failure, capped).
+    backoff_ms: u64,
+    /// Redial not before this instant; `None` means due immediately.
+    next_attempt: Option<Instant>,
+}
+
+impl SlotCtl {
+    fn new() -> SlotCtl {
+        SlotCtl {
+            missed: 0,
+            probe_seq: 0,
+            seen_seq: 0,
+            generation: 0,
+            attempts: 0,
+            backoff_ms: RECONNECT_INITIAL_BACKOFF_MS,
+            next_attempt: None,
+        }
+    }
+}
+
+/// One shard address's slot in the registry: the current connection (if
+/// any), the published membership state, and lock-free EWMA mirrors for
+/// the hot routing path.
+struct ShardSlot {
+    addr: String,
+    /// Published [`ShardState`]; transitions happen under `ctl`, reads
+    /// are lock-free.
+    state: AtomicU8,
+    /// f64 bits; NaN = no heartbeat sample yet on this connection.
+    inflight_ewma: AtomicU64,
+    p99_ewma: AtomicU64,
+    /// The live connection. `None` while Dead/Reconnecting.
+    client: RwLock<Option<Arc<ShardClient>>>,
+    ctl: Mutex<SlotCtl>,
+}
+
+impl ShardSlot {
+    fn new(addr: String, client: Arc<ShardClient>) -> ShardSlot {
+        ShardSlot {
+            addr,
+            state: AtomicU8::new(ShardState::Live as u8),
+            inflight_ewma: AtomicU64::new(f64::NAN.to_bits()),
+            p99_ewma: AtomicU64::new(f64::NAN.to_bits()),
+            client: RwLock::new(Some(client)),
+            ctl: Mutex::new(SlotCtl::new()),
+        }
+    }
+
+    fn state(&self) -> ShardState {
+        ShardState::from_u8(self.state.load(Ordering::Acquire))
+    }
+
+    fn set_state(&self, s: ShardState) {
+        self.state.store(s as u8, Ordering::Release);
+    }
+
+    fn client(&self) -> Option<Arc<ShardClient>> {
+        self.client.read().unwrap().clone()
+    }
+
+    fn client_alive(&self) -> bool {
+        self.client.read().unwrap().as_ref().is_some_and(|c| c.is_alive())
+    }
+
+    fn local_inflight(&self) -> usize {
+        self.client.read().unwrap().as_ref().map_or(0, |c| c.inflight())
+    }
+
+    /// Heartbeat-fed EWMAs, or `None` until this connection has a usable
+    /// sample (p99 must be positive: a shard that never completed
+    /// anything reports 0, which would score it "free" and flood it).
+    fn ewmas(&self) -> Option<(f64, f64)> {
+        let inf = f64::from_bits(self.inflight_ewma.load(Ordering::Relaxed));
+        let p99 = f64::from_bits(self.p99_ewma.load(Ordering::Relaxed));
+        if inf.is_finite() && p99.is_finite() && p99 > 0.0 {
+            Some((inf, p99))
+        } else {
+            None
+        }
+    }
+
+    /// Fold one heartbeat into the EWMAs (first sample seeds). Single
+    /// writer — the health thread — so load/store pairs don't race.
+    fn fold_ewmas(&self, inflight: f64, p99_us: f64) {
+        let fold = |cell: &AtomicU64, x: f64| {
+            let prev = f64::from_bits(cell.load(Ordering::Relaxed));
+            let next =
+                if prev.is_finite() { prev + HEALTH_EWMA_ALPHA * (x - prev) } else { x };
+            cell.store(next.to_bits(), Ordering::Relaxed);
+        };
+        fold(&self.inflight_ewma, inflight);
+        fold(&self.p99_ewma, p99_us);
+    }
+
+    fn clear_ewmas(&self) {
+        self.inflight_ewma.store(f64::NAN.to_bits(), Ordering::Relaxed);
+        self.p99_ewma.store(f64::NAN.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// State shared between the router, its health thread, and redial
+/// threads.
+struct RouterShared {
+    /// Grow-only: slots keep their index for the static map's lifetime.
+    slots: RwLock<Vec<Arc<ShardSlot>>>,
+    metrics: Arc<ServerMetrics>,
+    cfg: RouterConfig,
+    stop: Mutex<bool>,
+    tick: Condvar,
+}
+
+impl RouterShared {
+    fn is_stopping(&self) -> bool {
+        *self.stop.lock().unwrap()
+    }
+}
+
+/// Model candidates for one submission: either "every shard" (the empty
+/// static map) or a borrowed index slice — nothing allocated either way.
+enum Cands<'a> {
+    All(usize),
+    Slice(&'a [usize]),
+}
+
+impl Cands<'_> {
+    fn len(&self) -> usize {
+        match self {
+            Cands::All(n) => *n,
+            Cands::Slice(s) => s.len(),
+        }
+    }
+
+    fn get(&self, k: usize) -> usize {
+        match self {
+            Cands::All(_) => k,
+            Cands::Slice(s) => s[k],
+        }
+    }
+}
+
+/// Draw two distinct ordinals in `0..n` without bias: `a` uniform, `b`
+/// a uniform *offset* from `a` — every ordered pair with `a != b` is
+/// equally likely (the naive "redraw over `n-1` and patch collisions"
+/// under-selects the last element).
+fn draw_pair(seed: u64, n: usize) -> (usize, usize) {
+    debug_assert!(n >= 2);
+    let mut rng = SplitMix64::new(seed);
+    let a = (rng.next_u64() % n as u64) as usize;
+    let b = (a + 1 + (rng.next_u64() % (n as u64 - 1)) as usize) % n;
+    (a, b)
+}
+
+/// Client-side registry/router over N shard slots, implementing
 /// [`SubmitSurface`] so every driver that runs against a local
 /// [`super::ModelRegistry`] runs unchanged against a remote fleet.
 pub struct ShardRouter {
-    shards: Vec<Arc<ShardClient>>,
-    /// Canonical model name → indices into `shards`. Empty means every
-    /// shard serves every model.
+    shared: Arc<RouterShared>,
+    /// Canonical model name → indices into the slot vector. Empty means
+    /// every shard serves every model.
     map: BTreeMap<String, Vec<usize>>,
-    metrics: Arc<ServerMetrics>,
     /// Counter feeding the SplitMix64 draw behind each power-of-two pick
     /// (cheap, lock-free, deterministic per submission index).
     picks: AtomicU64,
+    health: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl ShardRouter {
     /// Connect to every address (comma-split lists come from the
     /// `fleet connect --shards` flag) with every shard serving every
-    /// model. Fails if any connection or handshake fails — a fleet that
-    /// starts degraded is a config error, unlike one that degrades later.
+    /// model and default health tuning. Fails if any connection or
+    /// handshake fails — a fleet that *starts* degraded is a config
+    /// error, unlike one that degrades later.
     pub fn connect<S: AsRef<str>>(addrs: &[S]) -> Result<ShardRouter, WireError> {
+        Self::connect_with(addrs, RouterConfig::default())
+    }
+
+    /// [`Self::connect`] with explicit health/reconnect tuning.
+    pub fn connect_with<S: AsRef<str>>(
+        addrs: &[S],
+        cfg: RouterConfig,
+    ) -> Result<ShardRouter, WireError> {
         let mut shards = Vec::with_capacity(addrs.len());
         for a in addrs {
             shards.push(Arc::new(ShardClient::connect(a.as_ref())?));
         }
-        Ok(Self::over(shards, BTreeMap::new()))
+        Ok(Self::over_with(shards, BTreeMap::new(), cfg))
     }
 
     /// A router over already-connected clients with an explicit
@@ -69,146 +357,545 @@ impl ShardRouter {
     /// Map keys should be canonical topology names; lookups fall back
     /// through [`Topology::from_name`] like the registry's do.
     pub fn over(shards: Vec<Arc<ShardClient>>, map: BTreeMap<String, Vec<usize>>) -> ShardRouter {
+        Self::over_with(shards, map, RouterConfig::default())
+    }
+
+    /// [`Self::over`] with explicit health/reconnect tuning.
+    pub fn over_with(
+        shards: Vec<Arc<ShardClient>>,
+        map: BTreeMap<String, Vec<usize>>,
+        cfg: RouterConfig,
+    ) -> ShardRouter {
         assert!(!shards.is_empty(), "a shard router needs at least one shard");
+        assert!(cfg.heartbeat_ms >= 1, "heartbeat period must be nonzero");
+        assert!(
+            1 <= cfg.suspect_after && cfg.suspect_after <= cfg.dead_after,
+            "need 1 <= suspect_after <= dead_after"
+        );
         for idxs in map.values() {
             assert!(idxs.iter().all(|&i| i < shards.len()), "shard index out of range");
         }
-        ShardRouter {
-            shards,
-            map,
+        let slots: Vec<Arc<ShardSlot>> = shards
+            .into_iter()
+            .map(|c| Arc::new(ShardSlot::new(c.addr().to_string(), c)))
+            .collect();
+        let shared = Arc::new(RouterShared {
+            slots: RwLock::new(slots),
             metrics: Arc::new(ServerMetrics::new()),
+            cfg,
+            stop: Mutex::new(false),
+            tick: Condvar::new(),
+        });
+        let health = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("shard-health".to_string())
+                .spawn(move || health_loop(shared))
+                .expect("spawn health loop")
+        };
+        ShardRouter {
+            shared,
+            map,
             picks: AtomicU64::new(0),
+            health: Mutex::new(Some(health)),
         }
     }
 
-    /// Shards this router was built over (dead ones included).
+    /// Admit a new shard into the running fleet: dial it, handshake, and
+    /// append a Live slot — submissions can route to it immediately.
+    /// Returns the new slot's index. Only valid with the empty static
+    /// map (every shard serves every model); a pinned map names slot
+    /// indices, which a post-hoc join can't extend coherently.
+    pub fn add_shard(&self, addr: &str) -> Result<usize, WireError> {
+        assert!(
+            self.map.is_empty(),
+            "add_shard requires the every-shard-serves-every-model map"
+        );
+        let client = Arc::new(ShardClient::connect(addr)?);
+        let slot = Arc::new(ShardSlot::new(addr.to_string(), client));
+        let mut slots = self.shared.slots.write().unwrap();
+        slots.push(slot);
+        Ok(slots.len() - 1)
+    }
+
+    /// Shard slots this router manages (dead ones included).
     pub fn len(&self) -> usize {
-        self.shards.len()
+        self.shared.slots.read().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.shards.is_empty()
+        self.len() == 0
     }
 
-    /// Shards whose connection is still up.
+    /// Shards currently Live with an open connection.
     pub fn live_shards(&self) -> usize {
-        self.shards.iter().filter(|s| s.is_alive()).count()
+        self.shared
+            .slots
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|s| s.state() == ShardState::Live && s.client_alive())
+            .count()
     }
 
-    /// The shard client at `index` (router construction order).
-    pub fn shard(&self, index: usize) -> &ShardClient {
-        &self.shards[index]
+    /// The membership state of the slot at `index`.
+    pub fn shard_state(&self, index: usize) -> ShardState {
+        self.shared.slots.read().unwrap()[index].state()
+    }
+
+    /// The address the slot at `index` dials.
+    pub fn shard_addr(&self, index: usize) -> String {
+        self.shared.slots.read().unwrap()[index].addr.clone()
+    }
+
+    /// Our in-flight submissions on the slot at `index` (0 when down).
+    pub fn shard_inflight(&self, index: usize) -> usize {
+        self.shared.slots.read().unwrap()[index].local_inflight()
+    }
+
+    /// The slot's current connection, if it has one. Each successful
+    /// reconnect installs a *new* client — hold the `Arc` only briefly.
+    pub fn shard_client(&self, index: usize) -> Option<Arc<ShardClient>> {
+        self.shared.slots.read().unwrap()[index].client()
+    }
+
+    /// How many times the slot at `index` has successfully reconnected
+    /// ("same addr, new process" — rejoin made observable).
+    pub fn shard_generation(&self, index: usize) -> u64 {
+        self.shared.slots.read().unwrap()[index].ctl.lock().unwrap().generation
     }
 
     /// Router-level metrics: `submitted` counts accepted submissions,
     /// `shard_failovers` counts submissions that had to route around (or
-    /// re-issue after) a dead shard.
+    /// re-issue after) an unroutable shard, and the control-plane block
+    /// (`health_probes`, `heartbeats`, `shard_suspects`, `shard_deaths`,
+    /// `shard_reconnects`/`..._attempts`, membership gauges) makes the
+    /// health loop observable.
     pub fn metrics(&self) -> &ServerMetrics {
-        &self.metrics
+        &self.shared.metrics
     }
 
-    /// Shard indices statically mapped to `model` (before liveness).
-    fn candidates(&self, model: &str) -> Vec<usize> {
+    /// Shard indices statically mapped to `model` (before liveness);
+    /// `n` is the current slot count. Borrow-only: the hot path never
+    /// clones the map's index vectors.
+    fn candidates(&self, model: &str, n: usize) -> Cands<'_> {
+        const EMPTY: &[usize] = &[];
         if self.map.is_empty() {
-            return (0..self.shards.len()).collect();
+            return Cands::All(n);
         }
         if let Some(idxs) = self.map.get(model) {
-            return idxs.clone();
+            return Cands::Slice(idxs);
         }
         match Topology::from_name(model) {
-            Ok(t) => self.map.get(&t.name).cloned().unwrap_or_default(),
-            Err(_) => Vec::new(),
+            Ok(t) => Cands::Slice(self.map.get(&t.name).map_or(EMPTY, Vec::as_slice)),
+            Err(_) => Cands::Slice(EMPTY),
         }
     }
 
-    /// Power-of-two-choices pick among `live` (indices into `shards`):
-    /// draw two distinct candidates, submit to the lighter-loaded one.
-    fn pick(&self, live: &[usize]) -> usize {
-        if live.len() == 1 {
-            return live[0];
-        }
-        let mut rng = SplitMix64::new(self.picks.fetch_add(1, Ordering::Relaxed));
-        let a = live[(rng.next_u64() % live.len() as u64) as usize];
-        let mut b = live[(rng.next_u64() % (live.len() - 1) as u64) as usize];
-        if b == a {
-            b = live[live.len() - 1];
-        }
-        if self.shards[a].inflight() <= self.shards[b].inflight() {
-            a
-        } else {
-            b
-        }
-    }
-
-    /// Fleet reports of every live shard, concatenated (each shard rolls
-    /// up its own lanes; the router has no global view by design).
-    pub fn fleet_report(&self) -> String {
-        let mut out = String::new();
-        for shard in &self.shards {
-            match shard.fleet_report(Duration::from_secs(5)) {
-                Ok(text) => {
-                    out.push_str(&format!("shard {}:\n{text}", shard.addr()));
+    /// The healthier of two slots: expected drain time (`(backlog + 1) ×
+    /// p99 EWMA`) when both have heartbeat samples, raw local in-flight
+    /// otherwise. Backlog is the max of our local count and the shard's
+    /// own reported EWMA — the shard may be loaded by *other* routers.
+    fn lighter(&self, slots: &[Arc<ShardSlot>], a: usize, b: usize) -> usize {
+        let (sa, sb) = (&slots[a], &slots[b]);
+        let (la, lb) = (sa.local_inflight(), sb.local_inflight());
+        match (sa.ewmas(), sb.ewmas()) {
+            (Some((ia, pa)), Some((ib, pb))) => {
+                let ca = ((la as f64).max(ia) + 1.0) * pa;
+                let cb = ((lb as f64).max(ib) + 1.0) * pb;
+                if ca <= cb {
+                    a
+                } else {
+                    b
                 }
-                Err(_) => out.push_str(&format!("shard {}: unreachable\n", shard.addr())),
+            }
+            _ => {
+                if la <= lb {
+                    a
+                } else {
+                    b
+                }
+            }
+        }
+    }
+
+    /// Fleet reports of every serving shard, queried concurrently (one
+    /// scoped thread per shard, so a single hung connection costs its
+    /// own 5 s timeout — not 5 s × fleet). Known-dead shards are skipped
+    /// outright; every line carries the slot's membership state.
+    pub fn fleet_report(&self) -> String {
+        let slots = self.shared.slots.read().unwrap();
+        let rows: Vec<(String, ShardState, Option<Result<String, SubmitError>>)> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = slots
+                    .iter()
+                    .map(|slot| {
+                        let addr = slot.addr.clone();
+                        let state = slot.state();
+                        let client = slot.client();
+                        scope.spawn(move || {
+                            let text = match (state, client) {
+                                (ShardState::Dead | ShardState::Reconnecting, _) => None,
+                                (_, None) => None,
+                                (_, Some(c)) => Some(c.fleet_report(Duration::from_secs(5))),
+                            };
+                            (addr, state, text)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+        let mut out = String::new();
+        for (addr, state, text) in rows {
+            match text {
+                Some(Ok(t)) => out.push_str(&format!("shard {addr} [{state}]:\n{t}")),
+                Some(Err(_)) => {
+                    out.push_str(&format!("shard {addr} [{state}]: unreachable\n"));
+                }
+                None => out.push_str(&format!("shard {addr} [{state}]: down, skipped\n")),
             }
         }
         out
     }
 
-    /// Close every shard connection (in-flight tickets resolve
+    /// Stop the health thread (joining any in-flight redials), then
+    /// close every shard connection (in-flight tickets resolve
     /// `Err(Closed)`). Idempotent.
     pub fn shutdown(&self) {
-        for shard in &self.shards {
-            shard.shutdown();
+        *self.shared.stop.lock().unwrap() = true;
+        self.shared.tick.notify_all();
+        if let Some(h) = self.health.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        for slot in self.shared.slots.read().unwrap().iter() {
+            if let Some(client) = slot.client.write().unwrap().take() {
+                client.shutdown();
+            }
+            slot.set_state(ShardState::Dead);
         }
     }
 }
 
+impl Drop for ShardRouter {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
 impl SubmitSurface for ShardRouter {
-    /// Route a submission: static map → live filter (dead shards are
-    /// skipped and counted as failovers) → power-of-two pick → submit,
-    /// falling through the remaining live shards if the picked
-    /// connection dies under the write. `Err(Closed)` only when every
-    /// shard serving the model is dead; `Err(UnknownModel)` when the
-    /// static map serves it nowhere.
+    /// Route a submission: static map → routable filter (dead, draining,
+    /// and — while any Live candidate exists — suspect shards are
+    /// skipped, counted as failovers) → power-of-two pick → submit,
+    /// falling through the remaining routable shards if the picked
+    /// connection dies under the write. `Err(Closed)` only when nothing
+    /// serving the model is routable; `Err(UnknownModel)` when the
+    /// static map serves it nowhere. Allocation-free up to the accepted
+    /// ticket itself.
     fn submit_async(&self, model: &str, window: Window) -> Result<Ticket, SubmitError> {
-        let cands = self.candidates(model);
-        if cands.is_empty() {
+        let slots = self.shared.slots.read().unwrap();
+        let cands = self.candidates(model, slots.len());
+        let total = cands.len();
+        if total == 0 {
             return Err(SubmitError::UnknownModel(model.to_string()));
         }
-        let live: Vec<usize> =
-            cands.iter().copied().filter(|&i| self.shards[i].is_alive()).collect();
-        if live.is_empty() {
+        let (mut n_live, mut n_suspect) = (0usize, 0usize);
+        for k in 0..total {
+            let slot = &slots[cands.get(k)];
+            if !slot.client_alive() {
+                continue;
+            }
+            match slot.state() {
+                ShardState::Live => n_live += 1,
+                ShardState::Suspect => n_suspect += 1,
+                _ => {}
+            }
+        }
+        // Suspect shards are a last resort: routable only when no Live
+        // candidate serves the model (graceful degradation beats Closed).
+        let (n_route, allow_suspect) =
+            if n_live > 0 { (n_live, false) } else { (n_suspect, true) };
+        if n_route == 0 {
             return Err(SubmitError::Closed);
         }
-        if live.len() < cands.len() {
-            // Routed around at least one dead shard.
-            self.metrics.on_shard_failover();
+        if n_route < total {
+            // Routed around at least one unroutable shard.
+            self.shared.metrics.on_shard_failover();
         }
-        let first = self.pick(&live);
-        let mut order = vec![first];
-        order.extend(live.iter().copied().filter(|&i| i != first));
-        for (attempt, &i) in order.iter().enumerate() {
-            if attempt > 0 {
-                // The previous pick died under us: re-issue elsewhere.
-                self.metrics.on_shard_failover();
+        let routable = |slot: &ShardSlot| {
+            let st = slot.state();
+            (st == ShardState::Live || (allow_suspect && st == ShardState::Suspect))
+                && slot.client_alive()
+        };
+        // Resolve the drawn ordinals to slot indices in one scan (states
+        // can flip between the count and this scan; any shortfall just
+        // falls through to the sweep below).
+        let first = if n_route == 1 {
+            (0..total).map(|k| cands.get(k)).find(|&i| routable(&slots[i]))
+        } else {
+            let (a_k, b_k) = draw_pair(self.picks.fetch_add(1, Ordering::Relaxed), n_route);
+            let (mut ia, mut ib) = (None, None);
+            let mut r = 0usize;
+            for k in 0..total {
+                let i = cands.get(k);
+                if !routable(&slots[i]) {
+                    continue;
+                }
+                if r == a_k {
+                    ia = Some(i);
+                }
+                if r == b_k {
+                    ib = Some(i);
+                }
+                r += 1;
+                if ia.is_some() && ib.is_some() {
+                    break;
+                }
             }
-            // The client serializes straight off the borrow, so routing
-            // (and failover retries) never deep-copy the T×F samples.
-            match self.shards[i].submit_async(model, &window) {
-                Ok(ticket) => {
-                    self.metrics.on_submit();
+            match (ia, ib) {
+                (Some(a), Some(b)) => Some(self.lighter(slots.as_slice(), a, b)),
+                (one, other) => one.or(other),
+            }
+        };
+        let Some(first) = first else {
+            return Err(SubmitError::Closed);
+        };
+        // The client serializes straight off the borrow, so routing (and
+        // failover retries) never deep-copy the T×F samples.
+        match try_one(&slots[first], model, &window) {
+            Some(Ok(ticket)) => {
+                self.shared.metrics.on_submit();
+                return Ok(ticket);
+            }
+            Some(Err(e)) => return Err(e),
+            None => {}
+        }
+        for k in 0..total {
+            let i = cands.get(k);
+            if i == first || !routable(&slots[i]) {
+                continue;
+            }
+            // The previous pick died under the write: re-issue elsewhere.
+            self.shared.metrics.on_shard_failover();
+            match try_one(&slots[i], model, &window) {
+                Some(Ok(ticket)) => {
+                    self.shared.metrics.on_submit();
                     return Ok(ticket);
                 }
-                // Connection death: try the next live shard.
-                Err(SubmitError::Closed) => continue,
-                // Per-request verdicts (e.g. TooLarge) are terminal —
-                // every shard would answer the same, and retrying them
-                // would fabricate failovers on healthy connections.
-                Err(e) => return Err(e),
+                Some(Err(e)) => return Err(e),
+                None => {}
             }
         }
         Err(SubmitError::Closed)
+    }
+}
+
+/// Submit to one slot. `None` means "connection died under us — try the
+/// next candidate"; per-request verdicts (e.g. `TooLarge`) are terminal,
+/// every shard would answer the same, and retrying them would fabricate
+/// failovers on healthy connections.
+fn try_one(
+    slot: &ShardSlot,
+    model: &str,
+    window: &Window,
+) -> Option<Result<Ticket, SubmitError>> {
+    let client = slot.client()?;
+    match client.submit_async(model, window) {
+        Err(SubmitError::Closed) => None,
+        other => Some(other),
+    }
+}
+
+fn health_loop(shared: Arc<RouterShared>) {
+    let mut redials: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        {
+            let stopped = shared.stop.lock().unwrap();
+            let period = Duration::from_millis(shared.cfg.heartbeat_ms);
+            let (stopped, _) = shared.tick.wait_timeout(stopped, period).unwrap();
+            if *stopped {
+                break;
+            }
+        }
+        let (done, pending): (Vec<_>, Vec<_>) =
+            redials.into_iter().partition(|h| h.is_finished());
+        for h in done {
+            let _ = h.join();
+        }
+        redials = pending;
+        health_tick(&shared, &mut redials);
+    }
+    for h in redials {
+        let _ = h.join();
+    }
+}
+
+/// One health tick: walk every slot, consume heartbeats, drive the
+/// state machine, send the next probes, launch due redials, and refresh
+/// the membership gauges.
+fn health_tick(shared: &Arc<RouterShared>, redials: &mut Vec<JoinHandle<()>>) {
+    // Snapshot the slot list so the walk never holds the registry lock
+    // (a demotion joins a reader thread — too slow to hold locks across).
+    let slots: Vec<Arc<ShardSlot>> = shared.slots.read().unwrap().clone();
+    let (mut live, mut suspect, mut draining, mut down) = (0, 0, 0, 0);
+    for slot in &slots {
+        match slot.state() {
+            ShardState::Dead => {
+                down += 1;
+                let due = {
+                    let ctl = slot.ctl.lock().unwrap();
+                    match ctl.next_attempt {
+                        Some(t) => Instant::now() >= t,
+                        None => true,
+                    }
+                };
+                if due && !shared.is_stopping() {
+                    slot.set_state(ShardState::Reconnecting);
+                    let slot = slot.clone();
+                    let shared = shared.clone();
+                    let handle = std::thread::Builder::new()
+                        .name(format!("shard-redial:{}", slot.addr))
+                        .spawn(move || reconnect_attempt(slot, shared))
+                        .expect("spawn shard redial");
+                    redials.push(handle);
+                }
+            }
+            ShardState::Reconnecting => down += 1,
+            _ => {
+                let client = slot.client();
+                let mut ctl = slot.ctl.lock().unwrap();
+                let Some(client) = client else {
+                    demote_dead(slot, &mut ctl, &shared.metrics);
+                    down += 1;
+                    continue;
+                };
+                if !client.is_alive() {
+                    // Hard connection death (EOF, write failure): don't
+                    // wait out the probe thresholds.
+                    demote_dead(slot, &mut ctl, &shared.metrics);
+                    down += 1;
+                    continue;
+                }
+                let fresh = match client.last_heartbeat() {
+                    Some(hb) if hb.seq > ctl.seen_seq => Some(hb),
+                    _ => None,
+                };
+                if let Some(hb) = fresh {
+                    ctl.seen_seq = hb.seq;
+                    ctl.missed = 0;
+                    shared.metrics.on_heartbeat();
+                    slot.fold_ewmas(hb.inflight as f64, hb.p99_us);
+                    if slot.state() == ShardState::Suspect {
+                        // Slow-but-alive shard answered again: re-promote.
+                        slot.set_state(ShardState::Live);
+                    }
+                } else if ctl.probe_seq > 0 {
+                    ctl.missed += 1;
+                }
+                if client.is_draining() {
+                    slot.set_state(ShardState::Draining);
+                }
+                if slot.state() == ShardState::Draining {
+                    if client.inflight() == 0 {
+                        // Drained: close cleanly (nothing left to poison)
+                        // and hand the slot to the redial path — if the
+                        // process restarts, it rejoins like any other.
+                        client.shutdown();
+                        *slot.client.write().unwrap() = None;
+                        slot.clear_ewmas();
+                        ctl.missed = 0;
+                        ctl.next_attempt = Some(
+                            Instant::now() + Duration::from_millis(ctl.backoff_ms),
+                        );
+                        slot.set_state(ShardState::Dead);
+                        down += 1;
+                        continue;
+                    }
+                    draining += 1;
+                } else if ctl.missed >= shared.cfg.dead_after {
+                    demote_dead(slot, &mut ctl, &shared.metrics);
+                    down += 1;
+                    continue;
+                } else {
+                    if ctl.missed >= shared.cfg.suspect_after
+                        && slot.state() == ShardState::Live
+                    {
+                        slot.set_state(ShardState::Suspect);
+                        shared.metrics.on_shard_suspect();
+                    }
+                    match slot.state() {
+                        ShardState::Suspect => suspect += 1,
+                        _ => live += 1,
+                    }
+                }
+                // One probe per tick; a healthy shard's reply lands well
+                // before the next tick. A failed write flips the client
+                // dead and the next tick demotes — no extra handling.
+                ctl.probe_seq += 1;
+                if client.send_probe(ctl.probe_seq).is_ok() {
+                    shared.metrics.on_health_probe();
+                }
+            }
+        }
+    }
+    shared.metrics.set_shard_states(live, suspect, draining, down);
+}
+
+/// Demote a slot to Dead: close the connection — poisoning every
+/// in-flight ticket with `Err(Closed)`, so no caller hangs — and arm an
+/// immediate first redial.
+fn demote_dead(slot: &ShardSlot, ctl: &mut SlotCtl, metrics: &ServerMetrics) {
+    if let Some(client) = slot.client.write().unwrap().take() {
+        client.shutdown();
+    }
+    slot.clear_ewmas();
+    ctl.missed = 0;
+    ctl.backoff_ms = RECONNECT_INITIAL_BACKOFF_MS;
+    ctl.next_attempt = None;
+    slot.set_state(ShardState::Dead);
+    metrics.on_shard_death();
+}
+
+/// One redial against a dead slot, run on its own short-lived thread so
+/// a slow dial never stalls the health tick. Success installs a fresh
+/// client (new generation, EWMAs reset — the rejoiner is compared on raw
+/// in-flight until it has samples); failure doubles the backoff (capped)
+/// and schedules the next attempt with jitter, so a fleet of routers
+/// doesn't redial a restarted shard in lockstep.
+fn reconnect_attempt(slot: Arc<ShardSlot>, shared: Arc<RouterShared>) {
+    shared.metrics.on_shard_reconnect_attempt();
+    let dialed =
+        if shared.is_stopping() { None } else { ShardClient::connect(&slot.addr).ok() };
+    let mut ctl = slot.ctl.lock().unwrap();
+    match dialed {
+        Some(client) if !shared.is_stopping() => {
+            *slot.client.write().unwrap() = Some(Arc::new(client));
+            slot.clear_ewmas();
+            ctl.generation += 1;
+            ctl.missed = 0;
+            ctl.probe_seq = 0;
+            ctl.seen_seq = 0;
+            ctl.attempts = 0;
+            ctl.backoff_ms = RECONNECT_INITIAL_BACKOFF_MS;
+            ctl.next_attempt = None;
+            slot.set_state(ShardState::Live);
+            shared.metrics.on_shard_reconnect();
+        }
+        Some(client) => {
+            // Raced shutdown: never install into a closing router.
+            client.shutdown();
+            slot.set_state(ShardState::Dead);
+        }
+        None => {
+            ctl.attempts += 1;
+            let jitter = SplitMix64::new(ctl.attempts ^ ((slot.addr.len() as u64) << 32))
+                .next_u64()
+                % (ctl.backoff_ms / 2 + 1);
+            ctl.next_attempt =
+                Some(Instant::now() + Duration::from_millis(ctl.backoff_ms + jitter));
+            ctl.backoff_ms = (ctl.backoff_ms.saturating_mul(2))
+                .min(shared.cfg.reconnect_max_backoff_ms.max(RECONNECT_INITIAL_BACKOFF_MS));
+            slot.set_state(ShardState::Dead);
+        }
     }
 }
 
@@ -217,8 +904,13 @@ mod tests {
     use super::*;
 
     // Socket-free routing tests live here; the full loopback behaviour
-    // (bit-identity, failover under a killed shard) is pinned by
-    // `tests/integration_shard.rs`.
+    // (bit-identity, failover and rejoin under a killed shard) is pinned
+    // by `tests/integration_shard.rs`.
+
+    fn cand_indices(router: &ShardRouter, model: &str) -> Vec<usize> {
+        let c = router.candidates(model, router.len());
+        (0..c.len()).map(|k| c.get(k)).collect()
+    }
 
     #[test]
     fn candidates_honor_static_map_with_canonical_fallback() {
@@ -233,10 +925,10 @@ mod tests {
             ("LSTM-AE-F64-D6".to_string(), vec![0, 1]),
         ]);
         let router = ShardRouter::over(vec![ca, cb], map);
-        assert_eq!(router.candidates("LSTM-AE-F32-D2"), vec![0]);
+        assert_eq!(cand_indices(&router, "LSTM-AE-F32-D2"), vec![0]);
         // Short name falls back to the canonical topology name.
-        assert_eq!(router.candidates("F64-D6"), vec![0, 1]);
-        assert!(router.candidates("no-such-model").is_empty());
+        assert_eq!(cand_indices(&router, "F64-D6"), vec![0, 1]);
+        assert!(cand_indices(&router, "no-such-model").is_empty());
         // An unmapped model routes nowhere: UnknownModel, not a panic.
         let w = crate::workload::Window { data: vec![vec![0.0]], anomaly: None };
         assert!(matches!(
@@ -249,20 +941,67 @@ mod tests {
     }
 
     #[test]
-    fn pick_prefers_the_lighter_shard_and_stays_in_range() {
-        let reg = Arc::new(crate::server::ModelRegistry::new());
-        let srv = crate::net::ShardServer::bind("127.0.0.1:0", reg.clone()).unwrap();
-        let addr = srv.local_addr().to_string();
-        let shards: Vec<Arc<ShardClient>> =
-            (0..3).map(|_| Arc::new(ShardClient::connect(&addr).unwrap())).collect();
-        let router = ShardRouter::over(shards, BTreeMap::new());
-        let live: Vec<usize> = vec![0, 1, 2];
-        for _ in 0..200 {
-            let p = router.pick(&live);
-            assert!(p < 3);
+    fn distinct_pair_draw_is_unbiased() {
+        // The old draw sampled b from live[0..len-1] and patched
+        // collisions to the *last* element, over-selecting it. The fixed
+        // draw must give every index — and every unordered pair —
+        // near-uniform frequency. Deterministic: seeds are sequential,
+        // exactly like the router's picks counter.
+        const DRAWS: u64 = 30_000;
+        let mut appear = [0u64; 3];
+        let mut pairs: BTreeMap<(usize, usize), u64> = BTreeMap::new();
+        for seed in 0..DRAWS {
+            let (a, b) = draw_pair(seed, 3);
+            assert_ne!(a, b, "pair must be distinct");
+            assert!(a < 3 && b < 3, "draw out of range: ({a}, {b})");
+            appear[a] += 1;
+            appear[b] += 1;
+            *pairs.entry((a.min(b), a.max(b))).or_default() += 1;
         }
-        assert_eq!(router.pick(&[2]), 2, "singleton pick is the shard itself");
+        // Each index sits in 2/3 of pairs: expect 20 000 (±5%, ~12σ).
+        for (i, &c) in appear.iter().enumerate() {
+            assert!((19_000..=21_000).contains(&c), "index {i} appeared {c}× in 30k draws");
+        }
+        // Each unordered pair: expect 10 000 (±10%).
+        assert_eq!(pairs.len(), 3);
+        for (&pair, &c) in &pairs {
+            assert!((9_000..=11_000).contains(&c), "pair {pair:?} drawn {c}×");
+        }
+        // n = 2 degenerates to "the other one", both orders reachable.
+        let mut orders = std::collections::BTreeSet::new();
+        for seed in 0..64 {
+            orders.insert(draw_pair(seed, 2));
+        }
+        assert_eq!(orders.into_iter().collect::<Vec<_>>(), vec![(0, 1), (1, 0)]);
+    }
+
+    #[test]
+    fn slots_expose_state_addr_and_inflight() {
+        let reg = Arc::new(crate::server::ModelRegistry::new());
+        let srv = crate::net::ShardServer::bind("127.0.0.1:0", reg).unwrap();
+        let addr = srv.local_addr().to_string();
+        let router = ShardRouter::connect(&[addr.clone()]).unwrap();
+        assert_eq!(router.len(), 1);
+        assert!(!router.is_empty());
+        assert_eq!(router.shard_state(0), ShardState::Live);
+        assert_eq!(router.shard_addr(0), addr);
+        assert_eq!(router.shard_inflight(0), 0);
+        assert_eq!(router.shard_generation(0), 0);
+        assert_eq!(router.live_shards(), 1);
+        let report = router.fleet_report();
+        assert!(report.contains("[live]"), "{report}");
         router.shutdown();
+        assert_eq!(router.live_shards(), 0);
+        assert_eq!(router.shard_state(0), ShardState::Dead);
         srv.shutdown();
+    }
+
+    #[test]
+    fn router_config_defaults_are_sane() {
+        let cfg = RouterConfig::default();
+        assert!(cfg.suspect_after >= 1);
+        assert!(cfg.dead_after >= cfg.suspect_after);
+        assert!(cfg.heartbeat_ms >= 1);
+        assert!(cfg.reconnect_max_backoff_ms >= RECONNECT_INITIAL_BACKOFF_MS);
     }
 }

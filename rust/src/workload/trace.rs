@@ -438,9 +438,11 @@ pub struct FleetReplayStats {
     /// Entries lost to a closed lane/connection with no shard left to
     /// fail over to (zero on a healthy run — the soak's red flag).
     pub rejected_closed: u64,
-    /// `Closed` outcomes successfully re-offered to a surviving shard
-    /// (the zero-loss failover path; each retried entry still terminates
-    /// in exactly one bucket above).
+    /// `Closed` outcomes survived by a successful re-offer — a ticket
+    /// re-routed to a surviving shard, or a first offer that rode out a
+    /// momentarily unroutable fleet on the grace schedule (the zero-loss
+    /// failover path; each retried entry still terminates in exactly one
+    /// bucket above).
     pub retried_closed: u64,
     /// Responses flagged as anomalies.
     pub flagged: u64,
@@ -469,11 +471,16 @@ impl FleetReplayStats {
 /// flight) is re-offered through the surface — against a
 /// [`crate::server::ShardRouter`] that re-routes to a surviving shard,
 /// so killing a shard mid-trace loses zero tickets
-/// (`tests/integration_shard.rs` pins that down). Retries are bounded
-/// per entry ([`CLOSED_RETRY_BUDGET`]) and a re-offer that fails at
-/// submit time is terminal, so the retry path can never spin — not even
-/// against a degenerate fleet whose connections stay up while every
-/// lane answers `Closed`.
+/// (`tests/integration_shard.rs` pins that down). A submit-time `Closed`
+/// — the whole fleet momentarily unroutable, the kill→restart window on
+/// a small fleet — is retried through a short back-off schedule
+/// ([`SUBMIT_GRACE_MS`], ~0.9 s) before it counts as lost, which is what
+/// lets a trace ride out a full restart cycle with zero
+/// `rejected_closed`. Retries are bounded per entry
+/// ([`CLOSED_RETRY_BUDGET`]), a re-offer that exhausts its grace is
+/// terminal, and one fully failed schedule latches fast-fail, so the
+/// retry path can never spin — not even against a fleet that is down
+/// for good.
 pub fn replay_fleet<S: SubmitSurface>(
     surface: &S,
     models: &[String],
@@ -486,6 +493,7 @@ pub fn replay_fleet<S: SubmitSurface>(
         surface,
         models,
         retry_closed,
+        fast_fail: false,
         set: CompletionSet::new(),
         inflight: HashMap::new(),
         stats: FleetReplayStats::default(),
@@ -521,6 +529,15 @@ pub fn replay_fleet<S: SubmitSurface>(
 /// `Closed` — without it, retry-on-Closed would spin forever there.
 pub const CLOSED_RETRY_BUDGET: u32 = 8;
 
+/// Back-off schedule (ms) for offering into a fleet that is *momentarily*
+/// fully unroutable — every shard dead, draining, or mid-reconnect, the
+/// exact shape of a kill→restart cycle on a small fleet. ~0.9 s total:
+/// enough for the router's health tick to redial a restarted shard,
+/// short enough that a genuinely dead fleet fails the run quickly (and
+/// after one fully failed schedule the driver latches fast-fail, so a
+/// dead fleet costs the schedule once, not per entry).
+const SUBMIT_GRACE_MS: [u64; 5] = [5, 25, 100, 250, 500];
+
 /// One in-flight [`replay_fleet`] entry: model index, the window (kept
 /// so a `Closed` outcome can be re-offered verbatim), and how many
 /// re-offers it has already consumed. Bounded by the in-flight count —
@@ -537,6 +554,10 @@ struct FleetDriver<'a, S: SubmitSurface> {
     surface: &'a S,
     models: &'a [String],
     retry_closed: bool,
+    /// Latched after one fully failed grace schedule: the fleet looks
+    /// permanently dead, so later offers fail fast instead of sleeping
+    /// through the schedule per entry. Any accepted submit resets it.
+    fast_fail: bool,
     set: CompletionSet,
     inflight: HashMap<u64, InflightEntry>,
     stats: FleetReplayStats,
@@ -544,10 +565,42 @@ struct FleetDriver<'a, S: SubmitSurface> {
 }
 
 impl<S: SubmitSurface> FleetDriver<'_, S> {
+    /// Submit with churn grace: `Err(Closed)` at submit time means the
+    /// whole fleet is unroutable *right now* — which, mid kill→restart,
+    /// is a transient the router's redial loop fixes within the
+    /// [`SUBMIT_GRACE_MS`] schedule. Returns the final outcome and
+    /// whether any grace retry was consumed (so the caller can count the
+    /// entry as a survived-`Closed` retry, keeping churn observable).
+    fn submit_graced(&mut self, mi: usize, window: &Window) -> (Result<Ticket, SubmitError>, bool) {
+        let mut outcome = self.surface.submit_async(&self.models[mi], window.clone());
+        let mut graced = false;
+        if self.retry_closed && !self.fast_fail {
+            for ms in SUBMIT_GRACE_MS {
+                if !matches!(outcome, Err(SubmitError::Closed)) {
+                    break;
+                }
+                graced = true;
+                std::thread::sleep(Duration::from_millis(ms));
+                outcome = self.surface.submit_async(&self.models[mi], window.clone());
+            }
+        }
+        match &outcome {
+            // A full schedule without one acceptance: stop paying it.
+            Err(SubmitError::Closed) if graced => self.fast_fail = true,
+            Ok(_) => self.fast_fail = false,
+            _ => {}
+        }
+        (outcome, graced)
+    }
+
     /// First offer of a trace entry.
     fn offer(&mut self, mi: usize, window: Window) {
-        match self.surface.submit_async(&self.models[mi], window.clone()) {
+        let (outcome, graced) = self.submit_graced(mi, &window);
+        match outcome {
             Ok(ticket) => {
+                if graced {
+                    self.stats.retried_closed += 1;
+                }
                 let key = self.next_key;
                 self.next_key += 1;
                 self.inflight.insert(key, InflightEntry { mi, window, retries: 0 });
@@ -579,7 +632,8 @@ impl<S: SubmitSurface> FleetDriver<'_, S> {
             Err(SubmitError::Closed)
                 if self.retry_closed && entry.retries < CLOSED_RETRY_BUDGET =>
             {
-                match self.surface.submit_async(&self.models[entry.mi], entry.window.clone()) {
+                let (outcome, _) = self.submit_graced(entry.mi, &entry.window);
+                match outcome {
                     Ok(ticket) => {
                         self.stats.retried_closed += 1;
                         self.inflight.insert(

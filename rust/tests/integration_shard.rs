@@ -6,8 +6,9 @@
 
 use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use lstm_ae_accel::engine::ExecMode;
 use lstm_ae_accel::model::{LstmAutoencoder, Topology};
@@ -15,8 +16,8 @@ use lstm_ae_accel::net::{
     wire, Frame, ShardClient, ShardServer, WireError, WIRE_VERSION,
 };
 use lstm_ae_accel::server::{
-    CompletionSet, ModelRegistry, ServerConfig, ShardRouter, SubmitError, SubmitSurface,
-    ThrottledBackend,
+    CompletionSet, ModelRegistry, RouterConfig, ServerConfig, ShardRouter, ShardState,
+    SubmitError, SubmitSurface, ThrottledBackend,
 };
 use lstm_ae_accel::workload::{trace, TelemetryGen, Window};
 
@@ -263,6 +264,237 @@ fn killing_a_shard_mid_trace_fails_over_with_zero_lost_tickets() {
         "submissions after the death must count as failovers (retried {retried})"
     );
     router.shutdown();
+    srv_b.shutdown();
+}
+
+#[test]
+fn restarted_shard_rejoins_the_fleet_without_operator_action() {
+    // The self-healing loop end to end: kill a shard, restart the same
+    // deployment on the SAME port, and the registry's backoff redial
+    // must readmit it with zero operator action — while every score
+    // stays bit-identical to the sequential reference throughout.
+    let seed = 230;
+    let (srv_a, addr_a) = spawn_shard(seed);
+    let (srv_b, addr_b) = spawn_shard(seed);
+    let cfg = RouterConfig {
+        heartbeat_ms: 25,
+        suspect_after: 2,
+        dead_after: 4,
+        reconnect_max_backoff_ms: 200,
+    };
+    let router = ShardRouter::connect_with(&[addr_a.clone(), addr_b], cfg).expect("connect both");
+    assert_eq!(router.live_shards(), 2);
+
+    let topos = Topology::paper_models();
+    let refs: Vec<LstmAutoencoder> = topos
+        .iter()
+        .enumerate()
+        .map(|(i, topo)| LstmAutoencoder::random(topo.clone(), seed + i as u64))
+        .collect();
+    let mut gens: Vec<TelemetryGen> = topos
+        .iter()
+        .enumerate()
+        .map(|(i, topo)| TelemetryGen::new(topo.features, 700 + i as u64))
+        .collect();
+    // Submit-then-settle a burst; every ticket must resolve Ok with the
+    // reference bits (no Closed leaks outside the kill window here —
+    // each burst runs against a stable membership).
+    let mut drive = |n: usize| {
+        let mut pending = Vec::new();
+        for k in 0..n {
+            let mi = k % topos.len();
+            let w = gens[mi].benign_window(4);
+            let want = refs[mi].score_quant(&w.data).to_bits();
+            let ticket = router.submit_async(&topos[mi].name, w).expect("routable shard");
+            pending.push((ticket, want));
+        }
+        for (ticket, want) in pending {
+            let r = ticket.wait().expect("scores");
+            assert_eq!(r.score.to_bits(), want, "churn must not change a single score bit");
+        }
+    };
+    drive(24);
+
+    srv_a.shutdown();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while router.metrics().shard_deaths() == 0 {
+        assert!(Instant::now() < deadline, "health loop must demote the killed shard");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    drive(12); // the survivor carries the trace while A is down
+
+    // Same port, fresh process state: SO_REUSEADDR makes the rebind
+    // immediate instead of waiting out TIME_WAIT.
+    let registry = Arc::new(ModelRegistry::paper_fleet(seed, ExecMode::Auto, 2));
+    let srv_a2 = loop {
+        match ShardServer::bind(&addr_a, Arc::clone(&registry)) {
+            Ok(s) => break s,
+            Err(_) if Instant::now() < deadline => std::thread::sleep(Duration::from_millis(50)),
+            Err(e) => panic!("rebind {addr_a}: {e}"),
+        }
+    };
+    while router.live_shards() != 2 {
+        assert!(Instant::now() < deadline, "restarted shard must rejoin automatically");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(router.shard_state(0), ShardState::Live);
+    assert!(router.shard_generation(0) >= 1, "a rejoin bumps the slot generation");
+    assert!(router.metrics().shard_reconnects() >= 1, "the rejoin is a counted reconnect");
+    assert!(router.metrics().shard_deaths() >= 1);
+    drive(24); // both shards again, still bit-identical
+
+    router.shutdown();
+    srv_a2.shutdown();
+    srv_b.shutdown();
+}
+
+/// A scripted shard speaking the real wire protocol: answers `Submit`s
+/// with a fixed score and echoes `HealthProbe`s — unless `withhold` is
+/// set, in which case it stays silent (alive but unresponsive), which is
+/// exactly the Suspect scenario.
+fn scripted_shard(
+    listener: TcpListener,
+    withhold: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().expect("router dials");
+        wire::handshake(&mut s).expect("handshake");
+        if wire::write_frame(&mut s, &Frame::Join { shard_id: 0xFA4E, models: 4 }).is_err() {
+            return;
+        }
+        loop {
+            match wire::read_frame(&mut s) {
+                Ok(Some(Frame::Submit { id, .. })) => {
+                    let reply = Frame::Response {
+                        id,
+                        score: 0.25,
+                        is_anomaly: false,
+                        queue_us: 1.0,
+                        service_us: 2.0,
+                        e2e_us: 3.0,
+                    };
+                    if wire::write_frame(&mut s, &reply).is_err() {
+                        break;
+                    }
+                }
+                Ok(Some(Frame::HealthProbe { seq })) => {
+                    if withhold.load(Ordering::SeqCst) {
+                        continue; // alive, but not answering probes
+                    }
+                    let hb = Frame::Heartbeat {
+                        seq,
+                        inflight: 0,
+                        shed_delta: 0,
+                        p50_us: 10.0,
+                        p99_us: 20.0,
+                    };
+                    if wire::write_frame(&mut s, &hb).is_err() {
+                        break;
+                    }
+                }
+                Ok(Some(_)) => {}
+                Ok(None) | Err(_) => break,
+            }
+        }
+    })
+}
+
+#[test]
+fn slow_shard_flaps_to_suspect_and_back_without_poisoning_work() {
+    // A shard that stops answering probes but keeps its socket (and its
+    // service) alive must be demoted Suspect — not killed — and must
+    // re-promote to Live on the next fresh heartbeat. Nothing completed
+    // or in flight is poisoned across the flap.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let withhold = Arc::new(AtomicBool::new(false));
+    let fake = scripted_shard(listener, Arc::clone(&withhold));
+    let cfg = RouterConfig {
+        heartbeat_ms: 20,
+        suspect_after: 2,
+        dead_after: 100_000, // flap test: never let Suspect decay to Dead
+        reconnect_max_backoff_ms: 500,
+    };
+    let router = ShardRouter::connect_with(&[addr], cfg).expect("connect");
+    let mut gen = TelemetryGen::new(32, 5);
+    let score = |router: &ShardRouter, gen: &mut TelemetryGen| {
+        let r = router
+            .submit_async("LSTM-AE-F32-D2", gen.benign_window(4))
+            .expect("routable")
+            .wait()
+            .expect("scripted shard answers");
+        assert_eq!(r.score.to_bits(), 0.25f64.to_bits());
+    };
+    score(&router, &mut gen);
+
+    withhold.store(true, Ordering::SeqCst);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while router.shard_state(0) != ShardState::Suspect {
+        assert!(Instant::now() < deadline, "missed probes must demote Live -> Suspect");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // Suspect is a soft state: with no Live candidate for the model the
+    // router still routes here rather than failing the submission.
+    score(&router, &mut gen);
+
+    withhold.store(false, Ordering::SeqCst);
+    while router.shard_state(0) != ShardState::Live {
+        assert!(Instant::now() < deadline, "a fresh heartbeat must re-promote Suspect");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    score(&router, &mut gen);
+    assert!(router.metrics().shard_suspects() >= 1, "the demotion is counted");
+    assert_eq!(router.metrics().shard_deaths(), 0, "a flap must never poison the slot");
+    router.shutdown();
+    fake.join().unwrap();
+}
+
+#[test]
+fn leave_announcement_drains_a_shard_without_poisoning_in_flight_work() {
+    // Graceful departure: `announce_leave` pushes a Leave frame to every
+    // connected router, which must stop routing new work to the shard
+    // and let in-flight requests finish — the opposite of the kill path,
+    // where in-flight tickets poison Err(Closed).
+    let seed = 240;
+    let (srv_a, addr_a) = spawn_shard(seed);
+    let (srv_b, addr_b) = spawn_shard(seed);
+    let cfg = RouterConfig {
+        heartbeat_ms: 20,
+        suspect_after: 3,
+        dead_after: 100_000,
+        reconnect_max_backoff_ms: 5000,
+    };
+    let router = ShardRouter::connect_with(&[addr_a, addr_b], cfg).expect("connect both");
+    let topo = &Topology::paper_models()[0];
+    let reference = LstmAutoencoder::random(topo.clone(), seed);
+    let mut gen = TelemetryGen::new(topo.features, 900);
+    let mut pending = Vec::new();
+    for _ in 0..16 {
+        let w = gen.benign_window(4);
+        let want = reference.score_quant(&w.data).to_bits();
+        pending.push((router.submit_async(&topo.name, w).expect("submitted"), want));
+    }
+    srv_a.announce_leave();
+    // The Leave must drive slot 0 out of Live (Draining, then Dead once
+    // its in-flight count reaches zero) — observed via the health tick.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while router.shard_state(0) == ShardState::Live {
+        assert!(Instant::now() < deadline, "the health loop must observe the Leave");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    for (ticket, want) in pending {
+        let r = ticket.wait().expect("drain completes in-flight work, never poisons it");
+        assert_eq!(r.score.to_bits(), want);
+    }
+    // New work keeps flowing through the rest of the fleet.
+    for _ in 0..8 {
+        let w = gen.benign_window(4);
+        let want = reference.score_quant(&w.data).to_bits();
+        let r = router.submit_async(&topo.name, w).expect("fleet accepts").wait().expect("scored");
+        assert_eq!(r.score.to_bits(), want);
+    }
+    router.shutdown();
+    srv_a.shutdown();
     srv_b.shutdown();
 }
 
