@@ -21,7 +21,7 @@ use lstm_ae_accel::accel::dataflow::DataflowSim;
 use lstm_ae_accel::accel::latency::LatencyModel;
 use lstm_ae_accel::accel::reuse::BalancedConfig;
 use lstm_ae_accel::activations::Pwl;
-use lstm_ae_accel::engine::{BatchEngine, PipelinePool, TemporalPipeline};
+use lstm_ae_accel::engine::{BatchEngine, PipelineOptions, PipelinePool, TemporalPipeline};
 use lstm_ae_accel::fixed::{dot_q, Q8_24};
 use lstm_ae_accel::model::lstm::{QuantLstmCell, QuantLstmState, StepScratch};
 use lstm_ae_accel::model::{LstmAutoencoder, Topology};
@@ -176,6 +176,96 @@ fn main() {
     println!("{}   ({:.1} M MAC/s)", r.report(), macs / r.per_iter.mean / 1e6);
     rec.add(&r, Some(macs));
 
+    println!("\n## Kernel layout: row-major vs gate-interleaved (bit-identical)");
+    // Same cell, same inputs, two weight traversals: the interleaved
+    // kernel streams x/h once per output element feeding all four gate
+    // dot products; the row-major reference streams them once per gate
+    // row. Bit-identity is asserted here before timing and enforced by
+    // the property suite; these rows are the CI perf gate's kernel set.
+    {
+        let mut krng = lstm_ae_accel::util::rng::Xoshiro256::seeded(29);
+        for (lx, lh) in [(64usize, 64usize), (64, 16)] {
+            let w = lstm_ae_accel::model::weights::LayerWeights::random(
+                lstm_ae_accel::model::topology::LayerDims { lx, lh },
+                &mut krng,
+            );
+            let kcell = QuantLstmCell::new(&w);
+            let kx: Vec<Q8_24> =
+                (0..lx).map(|i| Q8_24::from_f64((i as f64 * 0.013).sin() * 0.5)).collect();
+            let kmacs = 4.0 * lh as f64 * (lx + lh) as f64;
+            let mut kscratch = StepScratch::new();
+            let mut sa = QuantLstmState::zeros(lh);
+            let mut sb = QuantLstmState::zeros(lh);
+            for _ in 0..8 {
+                kcell.step_into(&mut sa, &kx, &mut kscratch);
+                kcell.step_into_rowmajor(&mut sb, &kx, &mut kscratch);
+            }
+            assert_eq!(sa.h, sb.h, "interleaved h != rowmajor h ({lx}x{lh})");
+            assert_eq!(sa.c, sb.c, "interleaved c != rowmajor c ({lx}x{lh})");
+            let r = bench_auto(&format!("kernel step_into {lx}x{lh} rowmajor"), 20, || {
+                kcell.step_into_rowmajor(black_box(&mut sa), black_box(&kx), &mut kscratch);
+                black_box(sa.h[0]);
+            });
+            println!("{}   ({:.1} M MAC/s)", r.report(), kmacs / r.per_iter.mean / 1e6);
+            rec.add(&r, Some(kmacs));
+            let r = bench_auto(&format!("kernel step_into {lx}x{lh} interleaved"), 20, || {
+                kcell.step_into(black_box(&mut sa), black_box(&kx), &mut kscratch);
+                black_box(sa.h[0]);
+            });
+            println!("{}   ({:.1} M MAC/s)", r.report(), kmacs / r.per_iter.mean / 1e6);
+            rec.add(&r, Some(kmacs));
+
+            // Batched MMM form of the same layouts: B windows advance
+            // together, each weight block streamed once per tile of B.
+            const KB: usize = 16;
+            let kxb: Vec<Q8_24> =
+                (0..KB * lx).map(|i| Q8_24::from_f64((i as f64 * 0.007).cos() * 0.5)).collect();
+            let bmacs = KB as f64 * kmacs;
+            let mut h1 = vec![Q8_24::ZERO; KB * lh];
+            let mut c1 = vec![Q8_24::ZERO; KB * lh];
+            let mut h2 = vec![Q8_24::ZERO; KB * lh];
+            let mut c2 = vec![Q8_24::ZERO; KB * lh];
+            for _ in 0..4 {
+                kcell.step_batch_into(KB, &mut h1, &mut c1, &kxb, &mut kscratch);
+                kcell.step_batch_into_rowmajor(KB, &mut h2, &mut c2, &kxb, &mut kscratch);
+            }
+            assert_eq!(h1, h2, "batched interleaved h != rowmajor h ({lx}x{lh})");
+            assert_eq!(c1, c2, "batched interleaved c != rowmajor c ({lx}x{lh})");
+            let r = bench_auto(
+                &format!("kernel step_batch_into {lx}x{lh} B={KB} rowmajor"),
+                20,
+                || {
+                    kcell.step_batch_into_rowmajor(
+                        KB,
+                        black_box(&mut h1),
+                        &mut c1,
+                        black_box(&kxb),
+                        &mut kscratch,
+                    );
+                    black_box(h1[0]);
+                },
+            );
+            println!("{}   ({:.1} M MAC/s)", r.report(), bmacs / r.per_iter.mean / 1e6);
+            rec.add(&r, Some(bmacs));
+            let r = bench_auto(
+                &format!("kernel step_batch_into {lx}x{lh} B={KB} interleaved"),
+                20,
+                || {
+                    kcell.step_batch_into(
+                        KB,
+                        black_box(&mut h1),
+                        &mut c1,
+                        black_box(&kxb),
+                        &mut kscratch,
+                    );
+                    black_box(h1[0]);
+                },
+            );
+            println!("{}   ({:.1} M MAC/s)", r.report(), bmacs / r.per_iter.mean / 1e6);
+            rec.add(&r, Some(bmacs));
+        }
+    }
+
     println!("\n## Model forward (bit-accurate FPGA datapath, F32-D2, T=16)");
     let ae = LstmAutoencoder::random(Topology::from_name("F32-D2").unwrap(), 3);
     let mut gen = TelemetryGen::new(32, 5);
@@ -251,6 +341,19 @@ fn main() {
     rec.add(&r, Some(1.0));
     let r = bench_auto("engine F64-D6 T=64 B=1 pipelined", 20, || {
         black_box(pipeline.score(black_box(one)));
+    });
+    println!("{}", r.report());
+    rec.add(&r, Some(1.0));
+    // Same pipeline with stage workers pinned to neighbouring cores, so
+    // the layer-to-layer token handoff stays within adjacent caches.
+    // Pinning is best-effort and never changes scores (asserted).
+    let pinned = TemporalPipeline::with_options(
+        deep.clone(),
+        PipelineOptions { pin_base_core: Some(0), ..Default::default() },
+    );
+    assert_eq!(pipeline.score(one), pinned.score(one), "pinned != unpinned");
+    let r = bench_auto("engine F64-D6 T=64 B=1 pipelined pinned", 20, || {
+        black_box(pinned.score(black_box(one)));
     });
     println!("{}", r.report());
     rec.add(&r, Some(1.0));
@@ -397,7 +500,15 @@ fn main() {
             );
             let models = vec!["LSTM-AE-F32-D2".to_string()];
             let stats = if asynchronous {
-                closed_loop_async(&registry, &models, clients, per_client_outstanding, total, 16, 19)
+                closed_loop_async(
+                    &registry,
+                    &models,
+                    clients,
+                    per_client_outstanding,
+                    total,
+                    16,
+                    19,
+                )
             } else {
                 closed_loop_blocking(&registry, &models, clients, total, 16, 19)
             };

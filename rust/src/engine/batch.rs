@@ -4,9 +4,11 @@
 //! restructure of the serving throughput path (see [`super`] module docs
 //! for when the server picks this over the pipeline).
 //!
-//! Memory discipline: two flat `[T][B][width]` buffers are double-buffered
-//! across layers and two flat `[B][LH]` state buffers are reset per layer;
-//! nothing is allocated per timestep. All per-window arithmetic is
+//! Memory discipline: all working storage — the two flat `[T][B][width]`
+//! double buffers, the two flat `[B][LH]` state planes, and the kernel
+//! pre-activation scratch — lives in a [`ScratchArena`] (the caller's, or
+//! the thread-local one), so repeated batches on one worker thread do
+//! zero steady-state allocation. All per-window arithmetic is
 //! [`crate::model::lstm::QuantLstmCell::step_batch_into`], which is bit-identical to the
 //! sequential cell step, so batched scores equal
 //! [`LstmAutoencoder::score_quant`] exactly.
@@ -14,7 +16,7 @@
 use std::sync::Arc;
 
 use crate::fixed::Q8_24;
-use crate::model::lstm::StepScratch;
+use crate::model::lstm::{with_thread_arena, ScratchArena};
 use crate::model::LstmAutoencoder;
 
 /// Batched scorer over one model. Cheap to construct (shares the model's
@@ -40,6 +42,20 @@ impl BatchEngine {
     /// each window alone. Callers with mixed lengths group by `T` first
     /// (`QuantBackend` does).
     pub fn forward_batch(&self, windows: &[&[Vec<f32>]]) -> Vec<Vec<Vec<f32>>> {
+        with_thread_arena(|arena| self.forward_batch_with(windows, arena))
+    }
+
+    /// [`Self::forward_batch`] with a caller-owned [`ScratchArena`]: the
+    /// engine borrows `arena.cur`/`arena.next` as the `[T][B][width]`
+    /// double buffer, `arena.h`/`arena.c` as the state planes, and
+    /// `arena.step` for the kernel pre-activations. The `h`/`c` planes
+    /// are semantically re-zeroed per layer (initial LSTM state); the
+    /// double buffers are write-before-read and only grow.
+    pub fn forward_batch_with(
+        &self,
+        windows: &[&[Vec<f32>]],
+        arena: &mut ScratchArena,
+    ) -> Vec<Vec<Vec<f32>>> {
         let b = windows.len();
         if b == 0 {
             return Vec::new();
@@ -54,36 +70,35 @@ impl BatchEngine {
         }
         // Quantize into the flat [T][B][F] input buffer (timestep-major,
         // window-minor: one timestep's batch is contiguous for the MMM).
-        let mut cur: Vec<Q8_24> = Vec::with_capacity(t * b * f);
+        arena.cur.clear();
+        arena.cur.reserve(t * b * f);
         for ts in 0..t {
             for w in windows {
                 let row = &w[ts];
                 assert_eq!(row.len(), f, "window feature width matches the model");
-                cur.extend(row.iter().map(|&v| Q8_24::from_f32(v)));
+                arena.cur.extend(row.iter().map(|&v| Q8_24::from_f32(v)));
             }
         }
-        let mut next: Vec<Q8_24> = Vec::new();
-        let mut h: Vec<Q8_24> = Vec::new();
-        let mut c: Vec<Q8_24> = Vec::new();
-        let mut scratch = StepScratch::new();
         for cell in self.ae.quant_cells() {
             let lx = cell.w.dims.lx;
             let lh = cell.w.dims.lh;
-            h.clear();
-            h.resize(b * lh, Q8_24::ZERO);
-            c.clear();
-            c.resize(b * lh, Q8_24::ZERO);
-            next.clear();
-            next.resize(t * b * lh, Q8_24::ZERO);
+            arena.h.clear();
+            arena.h.resize(b * lh, Q8_24::ZERO);
+            arena.c.clear();
+            arena.c.resize(b * lh, Q8_24::ZERO);
+            // Output buffer is fully overwritten timestep by timestep
+            // below, so no clear() — resize only adjusts the length.
+            arena.next.resize(t * b * lh, Q8_24::ZERO);
             for ts in 0..t {
-                let x = &cur[ts * b * lx..(ts + 1) * b * lx];
-                cell.step_batch_into(b, &mut h, &mut c, x, &mut scratch);
-                next[ts * b * lh..(ts + 1) * b * lh].copy_from_slice(&h);
+                let x = &arena.cur[ts * b * lx..(ts + 1) * b * lx];
+                cell.step_batch_into(b, &mut arena.h, &mut arena.c, x, &mut arena.step);
+                arena.next[ts * b * lh..(ts + 1) * b * lh].copy_from_slice(&arena.h);
             }
-            std::mem::swap(&mut cur, &mut next);
+            std::mem::swap(&mut arena.cur, &mut arena.next);
         }
         // Last layer's width is the feature width (topology invariant);
         // scatter back to [B][T][F] and dequantize.
+        let cur = &arena.cur;
         (0..b)
             .map(|wi| {
                 (0..t)

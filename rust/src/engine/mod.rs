@@ -20,9 +20,9 @@
 //!
 //! - [`forward_in_place`] — the sequential scratch path: layer-at-a-time
 //!   over the sequence like the original scorer, but with zero per-step
-//!   allocation ([`QuantLstmCell::step_into`] + one [`StepScratch`] and
-//!   in-place row reuse). This is what `forward_quant` and
-//!   `DataflowSim::run_with_data` now run on.
+//!   allocation ([`QuantLstmCell::step_into`] + the thread-local
+//!   [`ScratchArena`] and in-place row reuse). This is what
+//!   `forward_quant` and `DataflowSim::run_with_data` now run on.
 //! - [`TemporalPipeline`] — one worker thread per LSTM layer connected by
 //!   bounded SPSC channels (`std::sync::mpsc::sync_channel`), so layer
 //!   *i* processes timestep *t* while layer *i+1* processes *t−1*. Wins
@@ -67,11 +67,11 @@ pub mod pipeline;
 pub mod pool;
 
 pub use batch::BatchEngine;
-pub use pipeline::TemporalPipeline;
+pub use pipeline::{PipelineOptions, TemporalPipeline};
 pub use pool::{PipelinePool, PooledPipeline};
 
 use crate::fixed::Q8_24;
-use crate::model::lstm::{QuantLstmCell, QuantLstmState, StepScratch};
+use crate::model::lstm::{with_thread_arena, QuantLstmCell, ScratchArena};
 
 /// Minimum model depth at which [`ExecMode::Auto`] routes single-window
 /// scoring through the [`TemporalPipeline`]: with fewer layers the
@@ -130,14 +130,23 @@ pub fn dequantize_window(seq: Vec<Vec<Q8_24>>) -> Vec<Vec<f32>> {
 /// layer-at-a-time/step-at-a-time scorer — same per-element arithmetic
 /// in the same order.
 pub fn forward_in_place(cells: &[QuantLstmCell], seq: &mut [Vec<Q8_24>]) {
-    let mut state = QuantLstmState::zeros(0);
-    let mut scratch = StepScratch::new();
+    with_thread_arena(|arena| forward_in_place_with(cells, seq, arena));
+}
+
+/// [`forward_in_place`] with a caller-owned [`ScratchArena`] — for workers
+/// (pipeline stages, benches) that hold their own arena instead of going
+/// through the thread-local one.
+pub fn forward_in_place_with(
+    cells: &[QuantLstmCell],
+    seq: &mut [Vec<Q8_24>],
+    arena: &mut ScratchArena,
+) {
     for cell in cells {
-        state.reset(cell.w.dims.lh);
+        arena.state.reset(cell.w.dims.lh);
         for xt in seq.iter_mut() {
-            cell.step_into(&mut state, xt, &mut scratch);
+            cell.step_into(&mut arena.state, xt, &mut arena.step);
             xt.clear();
-            xt.extend_from_slice(&state.h);
+            xt.extend_from_slice(&arena.state.h);
         }
     }
 }

@@ -23,11 +23,40 @@ use std::thread::JoinHandle;
 use crate::fixed::Q8_24;
 use crate::model::lstm::{QuantLstmCell, QuantLstmState, StepScratch};
 use crate::model::LstmAutoencoder;
+use crate::util::affinity;
 
 /// Default capacity, in timestep tokens, of each inter-layer FIFO.
 /// Mirrors the simulator's `SimOptions::fifo_capacity` role; a little
 /// deeper than the hardware's 2 to absorb OS scheduling jitter.
 pub const DEFAULT_FIFO_CAPACITY: usize = 8;
+
+/// Cap on recycled timestep-vector buffers kept in the endpoint free
+/// list; drained tokens beyond this just deallocate. Sized to hold a
+/// large batch's worth of tokens without letting a one-off huge batch
+/// pin memory forever.
+const TOKEN_POOL_MAX: usize = 4096;
+
+/// Construction-time knobs for a [`TemporalPipeline`] (and, via the
+/// replica pool and `QuantBackend`, for the whole serving stack).
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineOptions {
+    /// Capacity, in timestep tokens, of each inter-layer FIFO (≥ 1;
+    /// clamped at construction).
+    pub fifo_capacity: usize,
+    /// `Some(base)` pins the worker thread of layer *i* to core
+    /// `(base + i) % available_cores()`, so adjacent stages sit on
+    /// neighbouring cores and the layer *i* → *i+1* token handoff stops
+    /// bouncing cache lines across the package. Pinning is best-effort
+    /// (see [`affinity::pin_to_core`]): a refused pin runs unpinned, and
+    /// results are bit-identical either way.
+    pub pin_base_core: Option<usize>,
+}
+
+impl Default for PipelineOptions {
+    fn default() -> PipelineOptions {
+        PipelineOptions { fifo_capacity: DEFAULT_FIFO_CAPACITY, pin_base_core: None }
+    }
+}
 
 enum Token {
     /// A new window of `T` timesteps begins: reset layer state.
@@ -60,6 +89,13 @@ impl Downstream {
 struct Io {
     tx: SyncSender<Token>,
     rx: Receiver<Token>,
+    /// Free list of recycled timestep-vector buffers: drained `Step`
+    /// tokens land here and the next feed pops them instead of
+    /// allocating — in steady-state serving, feeding a window costs zero
+    /// allocations once the pool has warmed up. Buffers carry stale
+    /// contents; the feed path clears before filling (write-before-read
+    /// at the token boundary).
+    spare: Vec<Vec<Q8_24>>,
 }
 
 /// A running per-layer worker pipeline over one model's quantized cells.
@@ -77,12 +113,18 @@ pub struct TemporalPipeline {
 
 impl TemporalPipeline {
     pub fn new(ae: Arc<LstmAutoencoder>) -> TemporalPipeline {
-        Self::with_capacity(ae, DEFAULT_FIFO_CAPACITY)
+        Self::with_options(ae, PipelineOptions::default())
     }
 
     /// Build with an explicit inter-layer FIFO capacity (≥ 1).
     pub fn with_capacity(ae: Arc<LstmAutoencoder>, fifo_capacity: usize) -> TemporalPipeline {
-        let cap = fifo_capacity.max(1);
+        Self::with_options(ae, PipelineOptions { fifo_capacity, ..Default::default() })
+    }
+
+    /// Build with full [`PipelineOptions`] (FIFO capacity + stage core
+    /// pinning).
+    pub fn with_options(ae: Arc<LstmAutoencoder>, opts: PipelineOptions) -> TemporalPipeline {
+        let cap = opts.fifo_capacity.max(1);
         let depth = ae.topo.depth;
         assert!(depth >= 1, "pipeline needs at least one layer");
         let (in_tx, in_rx) = sync_channel::<Token>(cap);
@@ -99,15 +141,26 @@ impl TemporalPipeline {
                 Downstream::Fifo(tx)
             };
             let ae_ref = ae.clone();
+            let pin = opts.pin_base_core.map(|base| (base + layer) % affinity::available_cores());
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("lstm-pipe-{layer}"))
-                    .spawn(move || worker_loop(&ae_ref, layer, rx, down))
+                    .spawn(move || {
+                        if let Some(core) = pin {
+                            // Best-effort: a refused pin runs unpinned.
+                            let _ = affinity::pin_to_core(core);
+                        }
+                        worker_loop(&ae_ref, layer, rx, down)
+                    })
                     .expect("spawn pipeline worker"),
             );
         }
         drop(sink_tx); // the last worker holds the only remaining clone
-        TemporalPipeline { ae, io: Mutex::new(Io { tx: in_tx, rx: sink_rx }), workers }
+        TemporalPipeline {
+            ae,
+            io: Mutex::new(Io { tx: in_tx, rx: sink_rx, spare: Vec::new() }),
+            workers,
+        }
     }
 
     /// The model this pipeline executes.
@@ -137,11 +190,15 @@ impl TemporalPipeline {
                 assert_eq!(row.len(), f, "window {wi} feature width matches the model");
             }
         }
-        let io = self.io.lock().expect("pipeline lock");
+        let mut io = self.io.lock().expect("pipeline lock");
         for w in windows {
             io.tx.send(Token::Begin(w.len())).expect("pipeline alive");
             for row in w.iter() {
-                let xq: Vec<Q8_24> = row.iter().map(|&v| Q8_24::from_f32(v)).collect();
+                // Recycle a drained token buffer when one is spare
+                // (stale contents are cleared before the refill).
+                let mut xq = io.spare.pop().unwrap_or_default();
+                xq.clear();
+                xq.extend(row.iter().map(|&v| Q8_24::from_f32(v)));
                 io.tx.send(Token::Step(xq)).expect("pipeline alive");
             }
         }
@@ -154,7 +211,12 @@ impl TemporalPipeline {
             let mut recon = Vec::with_capacity(t);
             for _ in 0..t {
                 match io.rx.recv().expect("pipeline alive") {
-                    Token::Step(h) => recon.push(h.iter().map(|q| q.to_f32()).collect()),
+                    Token::Step(h) => {
+                        recon.push(h.iter().map(|q| q.to_f32()).collect());
+                        if io.spare.len() < TOKEN_POOL_MAX {
+                            io.spare.push(h);
+                        }
+                    }
                     _ => unreachable!("protocol: {t} steps follow Begin"),
                 }
             }
@@ -203,9 +265,16 @@ fn worker_loop(ae: &LstmAutoencoder, layer: usize, rx: Receiver<Token>, down: Do
                 state.reset(lh);
                 Token::Begin(t)
             }
-            Token::Step(x) => {
+            Token::Step(mut x) => {
                 cell.step_into(&mut state, &x, &mut scratch);
-                Token::Step(state.h.clone())
+                // Reuse the incoming token's buffer for the outgoing h:
+                // its capacity settles at max(lx, lh) after a few hops,
+                // so steady-state tokens cross the whole chain with zero
+                // allocation (the endpoint free list recycles them back
+                // into the feed).
+                x.clear();
+                x.extend_from_slice(&state.h);
+                Token::Step(x)
             }
             Token::Stop => {
                 let _ = down.send(Token::Stop);
@@ -300,6 +369,41 @@ mod tests {
         assert!(joined.is_err(), "malformed window must panic its caller");
         let good = window(4, 32, 2);
         assert_eq!(pipe.forward_quant(&good), ae.forward_quant(&good));
+    }
+
+    #[test]
+    fn pinned_pipeline_bit_identical_to_unpinned() {
+        // Pinning changes placement, never results — and on targets where
+        // pinning is unavailable it silently degrades to unpinned.
+        let topo = Topology::from_name("F64-D6").unwrap();
+        let ae = Arc::new(LstmAutoencoder::random(topo, 8));
+        let pinned = TemporalPipeline::with_options(
+            ae.clone(),
+            PipelineOptions { pin_base_core: Some(0), ..Default::default() },
+        );
+        for t in [1usize, 7, 33] {
+            let x = window(t, 64, 80 + t as u64);
+            assert_eq!(pinned.forward_quant(&x), ae.forward_quant(&x), "T={t}");
+        }
+    }
+
+    #[test]
+    fn token_recycling_keeps_batches_bit_identical() {
+        // Run enough back-to-back batches that the endpoint free list is
+        // exercised (drain refills it, feed drains it) and make sure
+        // recycled buffers never leak stale timesteps.
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let ae = Arc::new(LstmAutoencoder::random(topo, 13));
+        let pipe = TemporalPipeline::new(ae.clone());
+        for round in 0..4u64 {
+            let wins: Vec<Vec<Vec<f32>>> =
+                (0..3).map(|i| window(5 + i, 32, 300 + 10 * round + i as u64)).collect();
+            let refs: Vec<&[Vec<f32>]> = wins.iter().map(|w| w.as_slice()).collect();
+            let out = pipe.forward_batch(&refs);
+            for (i, w) in wins.iter().enumerate() {
+                assert_eq!(out[i], ae.forward_quant(w), "round {round} window {i}");
+            }
+        }
     }
 
     #[test]

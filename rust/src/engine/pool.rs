@@ -28,7 +28,7 @@ use std::ops::Deref;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 
-use super::pipeline::TemporalPipeline;
+use super::pipeline::{PipelineOptions, TemporalPipeline};
 use crate::model::LstmAutoencoder;
 
 struct Slot {
@@ -41,9 +41,9 @@ struct Slot {
 }
 
 impl Slot {
-    fn fresh(ae: Arc<LstmAutoencoder>, fifo_capacity: usize) -> Arc<Slot> {
+    fn fresh(ae: Arc<LstmAutoencoder>, opts: PipelineOptions) -> Arc<Slot> {
         Arc::new(Slot {
-            pipe: TemporalPipeline::with_capacity(ae, fifo_capacity),
+            pipe: TemporalPipeline::with_options(ae, opts),
             inflight: AtomicUsize::new(0),
             uses: AtomicU64::new(0),
         })
@@ -55,7 +55,7 @@ impl Slot {
 pub struct PipelinePool {
     /// The model every replica executes (kept so growth can build more).
     ae: Arc<LstmAutoencoder>,
-    fifo_capacity: usize,
+    opts: PipelineOptions,
     /// Current replica set. Checkout takes the read lock; resizing takes
     /// the write lock, so a resize waits out in-progress checkouts (the
     /// scan, not the scoring — scoring happens after the lock drops).
@@ -88,9 +88,9 @@ impl Drop for PooledPipeline {
 }
 
 impl PipelinePool {
-    /// Pool of `replicas` pipelines (≥ 1) with the default FIFO capacity.
+    /// Pool of `replicas` pipelines (≥ 1) with default options.
     pub fn new(ae: Arc<LstmAutoencoder>, replicas: usize) -> PipelinePool {
-        Self::with_capacity(ae, replicas, super::pipeline::DEFAULT_FIFO_CAPACITY)
+        Self::with_options(ae, replicas, PipelineOptions::default())
     }
 
     /// Pool with an explicit inter-layer FIFO capacity per replica.
@@ -99,8 +99,39 @@ impl PipelinePool {
         replicas: usize,
         fifo_capacity: usize,
     ) -> PipelinePool {
-        let slots = (0..replicas.max(1)).map(|_| Slot::fresh(ae.clone(), fifo_capacity)).collect();
-        PipelinePool { ae, fifo_capacity, slots: RwLock::new(slots), cursor: AtomicUsize::new(0) }
+        Self::with_options(ae, replicas, PipelineOptions { fifo_capacity, ..Default::default() })
+    }
+
+    /// Pool with full [`PipelineOptions`] per replica. When pinning is
+    /// on, replica *r*'s layers start at core `base + r·depth`, so
+    /// replicas tile across the core set instead of stacking every
+    /// replica's layer 0 on the same core (assignments wrap modulo the
+    /// online core count inside the pipeline).
+    pub fn with_options(
+        ae: Arc<LstmAutoencoder>,
+        replicas: usize,
+        opts: PipelineOptions,
+    ) -> PipelinePool {
+        let pool =
+            PipelinePool { ae, opts, slots: RwLock::new(Vec::new()), cursor: AtomicUsize::new(0) };
+        {
+            let mut slots = pool.slots.write().unwrap();
+            for r in 0..replicas.max(1) {
+                slots.push(Slot::fresh(pool.ae.clone(), pool.replica_opts(r)));
+            }
+        }
+        pool
+    }
+
+    /// Options for replica index `r`: pin bases tile by model depth.
+    fn replica_opts(&self, r: usize) -> PipelineOptions {
+        PipelineOptions {
+            pin_base_core: self
+                .opts
+                .pin_base_core
+                .map(|base| base + r * self.ae.topo.depth),
+            ..self.opts
+        }
     }
 
     /// The model every replica executes.
@@ -133,7 +164,8 @@ impl PipelinePool {
         let want = replicas.max(1);
         let mut slots = self.slots.write().unwrap();
         while slots.len() < want {
-            slots.push(Slot::fresh(self.ae.clone(), self.fifo_capacity));
+            let r = slots.len();
+            slots.push(Slot::fresh(self.ae.clone(), self.replica_opts(r)));
         }
         slots.truncate(want);
         slots.len()

@@ -22,8 +22,10 @@
 //!             [--async] closed-loop driver through the async ticket front:
 //!             a handful of client threads sustain thousands of outstanding
 //!             requests ([--clients 4] [--outstanding 1024])
+//!             [--pin-cores] pin pipeline stage workers so layer i and i+1
+//!             sit on neighbouring cores ([--pin-base N] first core)
 //!   fleet serve   --bind 127.0.0.1:7070 [--replicas 2] [--mode auto] [--seed 7]
-//!             [--autoscale ...] [--report-every-s N]
+//!             [--autoscale ...] [--report-every-s N] [--pin-cores [--pin-base N]]
 //!             run this process as a network shard: all four paper topologies
 //!             behind the wire protocol, until killed
 //!   fleet connect --shards a1:p1,a2:p2 [--requests N] [--rate R] [--timesteps T]
@@ -49,7 +51,7 @@ use lstm_ae_accel::baselines::cpu as cpu_baseline;
 use lstm_ae_accel::model::Topology;
 use lstm_ae_accel::report;
 use lstm_ae_accel::runtime::Runtime;
-use lstm_ae_accel::engine::ExecMode;
+use lstm_ae_accel::engine::{ExecMode, PipelineOptions};
 use lstm_ae_accel::net::{ShardServer, WIRE_VERSION};
 use lstm_ae_accel::server::{
     self, AnomalyServer, AutoscalePolicy, Backend, ModelRegistry, PjrtBackend, QuantBackend,
@@ -112,6 +114,17 @@ fn print_help() {
 
 fn topo_from(args: &Args) -> Result<Topology> {
     Topology::from_name(args.get_or("model", "F32-D2"))
+}
+
+/// Engine knobs shared by the fleet roles: `--pin-cores` pins pipeline
+/// stage workers (layer i and i+1 on neighbouring cores), `--pin-base N`
+/// picks the first core of the assignment (default 0). Pinning is
+/// best-effort and never changes scores.
+fn engine_options(args: &Args) -> PipelineOptions {
+    PipelineOptions {
+        pin_base_core: args.has("pin-cores").then(|| args.get_usize("pin-base", 0)),
+        ..Default::default()
+    }
 }
 
 fn cmd_models() -> Result<()> {
@@ -500,8 +513,12 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             args.get_usize("max-workers", 6),
         )
     });
-    let registry = ModelRegistry::paper_fleet_with(seed, mode, replicas, policy);
+    let engine = engine_options(args);
+    let registry = ModelRegistry::paper_fleet_opts(seed, mode, replicas, policy, engine);
     let models: Vec<String> = registry.models().map(String::from).collect();
+    if let Some(base) = engine.pin_base_core {
+        println!("core pinning: pipeline stage workers pinned from core {base} up");
+    }
     if autoscale {
         let budget = args.get_usize("budget", 0);
         let tick = std::time::Duration::from_millis(args.get_u64("tick-ms", 20));
@@ -628,7 +645,11 @@ fn cmd_fleet_serve(args: &Args) -> Result<()> {
             args.get_usize("max-workers", 6),
         )
     });
-    let registry = Arc::new(ModelRegistry::paper_fleet_with(seed, mode, replicas, policy));
+    let engine = engine_options(args);
+    let registry = Arc::new(ModelRegistry::paper_fleet_opts(seed, mode, replicas, policy, engine));
+    if let Some(base) = engine.pin_base_core {
+        println!("core pinning: pipeline stage workers pinned from core {base} up");
+    }
     if autoscale {
         let budget = args.get_usize("budget", 0);
         let tick = std::time::Duration::from_millis(args.get_u64("tick-ms", 20));

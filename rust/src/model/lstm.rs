@@ -8,7 +8,16 @@
 //!   per dot product, saturating element-wise ops). The dataflow simulator
 //!   uses this for functional output.
 //!
+//! The quantized kernels run over a **gate-interleaved weight layout**
+//! (`[j][k][4]`, see `QuantLayerWeights`) so the four gate dot products of
+//! one output element share a single streaming pass over `x`/`h`; the
+//! pre-interleave row-major kernels are kept as `*_rowmajor` reference
+//! oracles. Reusable buffers live in [`StepScratch`] / [`ScratchArena`]
+//! (per-worker, grow-only, write-before-read).
+//!
 //! Gate order everywhere: `i, f, g, o` (input, forget, candidate, output).
+
+use std::cell::RefCell;
 
 use crate::activations::Pwl;
 use crate::fixed::Q8_24;
@@ -68,7 +77,7 @@ pub fn lstm_step_f32(w: &LayerWeights, state: &LstmState, x: &[f32]) -> LstmStat
 }
 
 /// Quantized state on the Q8.24 grid.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct QuantLstmState {
     pub h: Vec<Q8_24>,
     pub c: Vec<Q8_24>,
@@ -109,13 +118,133 @@ impl StepScratch {
         StepScratch { pre: Vec::new() }
     }
 
-    /// The pre-activation buffer, cleared and sized to `n` entries.
+    /// The pre-activation buffer sized to `n` entries, **without** zeroing.
+    ///
+    /// Write-before-read invariant: every kernel that borrows this buffer
+    /// fully writes `pre[..n]` in its MVM phase before the element-wise
+    /// phase reads any of it, so stale values from earlier timesteps (or
+    /// other layer widths, or the other kernel layout) are never observed.
+    /// The previous `clear()+resize()` re-zeroed `4·LH` (or `B·4·LH`)
+    /// entries on every timestep for nothing; this only pays a fill when
+    /// the buffer grows. Any new kernel taking a `StepScratch` must keep
+    /// the invariant.
     fn pre(&mut self, n: usize) -> &mut [Q8_24] {
-        self.pre.clear();
-        self.pre.resize(n, Q8_24::ZERO);
-        &mut self.pre
+        if self.pre.len() < n {
+            self.pre.resize(n, Q8_24::ZERO);
+        }
+        &mut self.pre[..n]
     }
 }
+
+/// Per-worker scratch arena: every reusable buffer on the engine hot paths
+/// in one place, so a pipeline-stage worker, batch-engine call, or
+/// convenience-wrapper caller does zero steady-state allocation.
+///
+/// Field groups (all grow-only, reused across calls):
+/// - `step` — the kernel pre-activation scratch ([`StepScratch`]).
+/// - `state` — a recurrent h/c state for sequential forward passes.
+/// - `h`/`c` — the batch engine's `[B][LH]` state planes.
+/// - `cur`/`next` — the batch engine's `[T][B][width]` activation
+///   double-buffer.
+///
+/// Fields are public so callers can split-borrow them in one expression,
+/// e.g. `cell.step_batch_into(b, &mut a.h, &mut a.c, &a.cur, &mut a.step)`.
+#[derive(Default)]
+pub struct ScratchArena {
+    pub step: StepScratch,
+    pub state: QuantLstmState,
+    pub h: Vec<Q8_24>,
+    pub c: Vec<Q8_24>,
+    pub cur: Vec<Q8_24>,
+    pub next: Vec<Q8_24>,
+}
+
+impl ScratchArena {
+    pub fn new() -> ScratchArena {
+        ScratchArena::default()
+    }
+}
+
+thread_local! {
+    static THREAD_ARENA: RefCell<ScratchArena> = RefCell::new(ScratchArena::new());
+}
+
+/// Run `f` with this thread's shared [`ScratchArena`].
+///
+/// The allocating convenience paths ([`QuantLstmCell::step`],
+/// `engine::forward_in_place`, the batch engine's public entry) borrow the
+/// arena through here so repeated calls on one thread reuse one set of
+/// buffers instead of reallocating per call. A re-entrant call (an `f`
+/// that itself reaches `with_thread_arena` again) gets a fresh temporary
+/// arena rather than a `RefCell` borrow panic.
+pub fn with_thread_arena<R>(f: impl FnOnce(&mut ScratchArena) -> R) -> R {
+    THREAD_ARENA.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut arena) => f(&mut arena),
+        Err(_) => f(&mut ScratchArena::new()),
+    })
+}
+
+/// Four-lane fused MAC: the four gate dot products for one output element
+/// `j`, fed by a single streaming pass over `x` and `h` against the
+/// gate-interleaved weight block for `j` (`[k][4]` chunks). Per-gate
+/// accumulation is wide (2^48 scale) with a single rounding per dot
+/// product, and the `(Wx·x + bx) + (Wh·h + bh)` combination order matches
+/// the row-major reference exactly — integer MACs are exact and each
+/// gate's partial sums run in the same `k` order, so the result is
+/// bit-identical to four separate row dot products.
+#[inline]
+fn fused_rows(
+    wxj: &[Q8_24],
+    whj: &[Q8_24],
+    bx4: &[Q8_24],
+    bh4: &[Q8_24],
+    x: &[Q8_24],
+    h: &[Q8_24],
+    out: &mut [Q8_24],
+) {
+    let mut ax = [0i64; 4];
+    for (w4, v) in wxj.chunks_exact(4).zip(x) {
+        let v = v.0 as i64;
+        ax[0] += w4[0].0 as i64 * v;
+        ax[1] += w4[1].0 as i64 * v;
+        ax[2] += w4[2].0 as i64 * v;
+        ax[3] += w4[3].0 as i64 * v;
+    }
+    let mut ah = [0i64; 4];
+    for (w4, v) in whj.chunks_exact(4).zip(h) {
+        let v = v.0 as i64;
+        ah[0] += w4[0].0 as i64 * v;
+        ah[1] += w4[1].0 as i64 * v;
+        ah[2] += w4[2].0 as i64 * v;
+        ah[3] += w4[3].0 as i64 * v;
+    }
+    for g in 0..4 {
+        let mx = Q8_24::from_wide(ax[g]).add(bx4[g]);
+        let mh = Q8_24::from_wide(ah[g]).add(bh4[g]);
+        out[g] = mx.add(mh);
+    }
+}
+
+/// Element-wise gate phase over a `[j][4]` gate-minor pre-activation
+/// buffer: `c[j] = f·c[j] + i·g`, `h[j] = o·tanh(c[j])`, all saturating.
+#[inline]
+fn gates_apply(sigmoid: &Pwl, tanh: &Pwl, pre: &[Q8_24], h: &mut [Q8_24], c: &mut [Q8_24]) {
+    for ((p, cj), hj) in pre.chunks_exact(4).zip(c.iter_mut()).zip(h.iter_mut()) {
+        let i = sigmoid.eval_q(p[0]);
+        let f = sigmoid.eval_q(p[1]);
+        let g = tanh.eval_q(p[2]);
+        let o = sigmoid.eval_q(p[3]);
+        *cj = f.mul(*cj).add(i.mul(g));
+        *hj = o.mul(tanh.eval_q(*cj));
+    }
+}
+
+/// Batch-tile width for [`QuantLstmCell::step_batch_into`]: the MVM phase
+/// is blocked over `B` in tiles of this many windows so a tile's `x`/`h`
+/// rows stay L1-resident across all `LH` interleaved weight blocks, while
+/// each weight block is streamed once per tile rather than once per
+/// window.
+const BATCH_TILE: usize = 8;
 
 /// The FPGA datapath model for one LSTM layer: quantized weights + shared
 /// PWL tables. Construct once, step per timestep.
@@ -136,11 +265,14 @@ impl QuantLstmCell {
     ///
     /// Allocating convenience wrapper over [`Self::step_into`]; the
     /// serving hot paths (engine, simulator functional pass) use
-    /// `step_into` directly with reused buffers.
+    /// `step_into` directly with reused buffers. The pre-activation
+    /// scratch comes from the thread-local [`ScratchArena`] (see
+    /// [`with_thread_arena`]), so repeated `step` calls — the simulator's
+    /// functional pass, doctests, examples — stop paying a fresh
+    /// allocation per timestep; only the returned state allocates.
     pub fn step(&self, state: &QuantLstmState, x: &[Q8_24]) -> QuantLstmState {
         let mut next = state.clone();
-        let mut scratch = StepScratch::new();
-        self.step_into(&mut next, x, &mut scratch);
+        with_thread_arena(|arena| self.step_into(&mut next, x, &mut arena.step));
         next
     }
 
@@ -152,16 +284,55 @@ impl QuantLstmCell {
     /// written within each element — the same read/write discipline the
     /// FPGA datapath has between its MVM and activation stages.
     ///
-    /// Row dot products run over contiguous slices with iterator zips so
-    /// LLVM can elide bounds checks and vectorize the i32×i32→i64 MACs
-    /// (≈1.9x over the original indexed loops; EXPERIMENTS.md §Perf).
+    /// The MVM phase runs over the gate-interleaved layout
+    /// (`QuantLayerWeights::wx_il`/`wh_il`): for each output element `j`,
+    /// one streaming pass over `x` and one over `h` feed all four gate
+    /// dot products via [`fused_rows`], so `x`/`h` are read once per
+    /// element instead of four times and the inner loop presents four
+    /// contiguous i32 lanes to the autovectorizer. Bit-identical to the
+    /// row-major reference ([`Self::step_into_rowmajor`]) — enforced by
+    /// the layout-equivalence property suite.
     pub fn step_into(&self, state: &mut QuantLstmState, x: &[Q8_24], scratch: &mut StepScratch) {
         let lh = self.w.dims.lh;
         let lx = self.w.dims.lx;
         assert_eq!(x.len(), lx);
         assert_eq!(state.h.len(), lh);
         assert_eq!(state.c.len(), lh);
-        // Gate pre-activations for all 4·LH rows, row-contiguous.
+        // Gate pre-activations, `[j][4]` gate-minor; fully written below
+        // before `gates_apply` reads them (scratch is not zeroed).
+        let pre = scratch.pre(4 * lh);
+        for j in 0..lh {
+            fused_rows(
+                &self.w.wx_il[j * 4 * lx..(j + 1) * 4 * lx],
+                &self.w.wh_il[j * 4 * lh..(j + 1) * 4 * lh],
+                &self.w.bx_il[j * 4..j * 4 + 4],
+                &self.w.bh_il[j * 4..j * 4 + 4],
+                x,
+                &state.h,
+                &mut pre[j * 4..j * 4 + 4],
+            );
+        }
+        gates_apply(&self.sigmoid, &self.tanh, pre, &mut state.h, &mut state.c);
+    }
+
+    /// Row-major reference kernel: the pre-interleave implementation, kept
+    /// as the layout-equivalence oracle for the property suite and as the
+    /// baseline row in `benches/hotpath.rs`. Arithmetic is identical to
+    /// [`Self::step_into`] (same per-gate MAC order, same rounding and
+    /// combination discipline); only the weight traversal differs.
+    pub fn step_into_rowmajor(
+        &self,
+        state: &mut QuantLstmState,
+        x: &[Q8_24],
+        scratch: &mut StepScratch,
+    ) {
+        let lh = self.w.dims.lh;
+        let lx = self.w.dims.lx;
+        assert_eq!(x.len(), lx);
+        assert_eq!(state.h.len(), lh);
+        assert_eq!(state.c.len(), lh);
+        // Gate pre-activations for all 4·LH rows, row-contiguous; fully
+        // written before the element-wise loop reads them.
         let pre = scratch.pre(4 * lh);
         for (row, p) in pre.iter_mut().enumerate() {
             let wx_row = &self.w.wx[row * lx..(row + 1) * lx];
@@ -187,11 +358,13 @@ impl QuantLstmCell {
     }
 
     /// `B` independent windows stepped through this layer at once — the
-    /// MVM → MMM restructure of the throughput path. Each of the `4·LH`
-    /// weight rows is streamed **once** across the whole batch (the row
-    /// stays L1-resident over the inner loop), instead of `B` times as
-    /// repeated [`Self::step_into`] calls would; arithmetic per window is
-    /// exactly that of `step_into`, so results are bit-identical.
+    /// MVM → MMM restructure of the throughput path, over the
+    /// gate-interleaved layout and blocked over `B` in [`BATCH_TILE`]
+    /// tiles: within a tile, element `j`'s four-row weight block streams
+    /// once across the tile's windows (block L1-resident over the inner
+    /// loop) while the tile's `x`/`h` rows stay hot across all `LH`
+    /// blocks. Arithmetic per window is exactly that of
+    /// [`Self::step_into`], so results are bit-identical.
     ///
     /// Layout: `x` is `[B][LX]` row-major, `h`/`c` are `[B][LH]` row-major
     /// and are updated in place.
@@ -209,8 +382,62 @@ impl QuantLstmCell {
         assert_eq!(h.len(), b * lh);
         assert_eq!(c.len(), b * lh);
         let g4 = 4 * lh;
-        // Pre-activations, `[B][4·LH]` row-major so the element-wise
-        // phase walks each window contiguously.
+        // Pre-activations, `[B][LH][4]` — per-window gate-minor, so the
+        // element-wise phase walks each window contiguously. Fully written
+        // below before it is read (scratch is not zeroed).
+        let pre = scratch.pre(b * g4);
+        for tile_start in (0..b).step_by(BATCH_TILE) {
+            let tile_end = (tile_start + BATCH_TILE).min(b);
+            for j in 0..lh {
+                let wxj = &self.w.wx_il[j * 4 * lx..(j + 1) * 4 * lx];
+                let whj = &self.w.wh_il[j * 4 * lh..(j + 1) * 4 * lh];
+                let bx4 = &self.w.bx_il[j * 4..j * 4 + 4];
+                let bh4 = &self.w.bh_il[j * 4..j * 4 + 4];
+                for wi in tile_start..tile_end {
+                    let base = wi * g4 + j * 4;
+                    fused_rows(
+                        wxj,
+                        whj,
+                        bx4,
+                        bh4,
+                        &x[wi * lx..(wi + 1) * lx],
+                        &h[wi * lh..(wi + 1) * lh],
+                        &mut pre[base..base + 4],
+                    );
+                }
+            }
+        }
+        for wi in 0..b {
+            gates_apply(
+                &self.sigmoid,
+                &self.tanh,
+                &pre[wi * g4..(wi + 1) * g4],
+                &mut h[wi * lh..(wi + 1) * lh],
+                &mut c[wi * lh..(wi + 1) * lh],
+            );
+        }
+    }
+
+    /// Row-major reference for [`Self::step_batch_into`] — the
+    /// pre-interleave batched kernel (each of the `4·LH` weight rows
+    /// streamed once across the whole batch), kept as the
+    /// layout-equivalence oracle and bench baseline.
+    pub fn step_batch_into_rowmajor(
+        &self,
+        b: usize,
+        h: &mut [Q8_24],
+        c: &mut [Q8_24],
+        x: &[Q8_24],
+        scratch: &mut StepScratch,
+    ) {
+        let lh = self.w.dims.lh;
+        let lx = self.w.dims.lx;
+        assert_eq!(x.len(), b * lx);
+        assert_eq!(h.len(), b * lh);
+        assert_eq!(c.len(), b * lh);
+        let g4 = 4 * lh;
+        // Pre-activations, `[B][4·LH]` row-major; fully written before the
+        // element-wise loop reads them.
         let pre = scratch.pre(b * g4);
         for row in 0..g4 {
             let wx_row = &self.w.wx[row * lx..(row + 1) * lx];
@@ -388,6 +615,93 @@ mod tests {
         cb.step_into(&mut sb, &xb, &mut scratch);
         cs.step_into(&mut ss, &xs, &mut scratch); // shrink after grow
         assert_eq!(ss.h, cs.step(&QuantLstmState::zeros(4), &xs).h);
+    }
+
+    #[test]
+    fn interleaved_matches_rowmajor_reference() {
+        // The gate-interleaved kernel and the row-major oracle must agree
+        // bit-for-bit across random shapes, including lh=1 and lx≠lh.
+        props("layout_equiv_step", 48, |g| {
+            let lx = 1 + g.usize_in(0, 16);
+            let lh = 1 + g.usize_in(0, 16);
+            let w = mk(lx, lh, g.case as u64 + 4100);
+            let cell = QuantLstmCell::new(&w);
+            let mut si = QuantLstmState::zeros(lh);
+            let mut sr = QuantLstmState::zeros(lh);
+            let mut sc_i = StepScratch::new();
+            let mut sc_r = StepScratch::new();
+            for step_i in 0..4 {
+                let x: Vec<Q8_24> =
+                    (0..lx).map(|_| Q8_24::from_f64(g.f64_in(-2.0, 2.0))).collect();
+                cell.step_into(&mut si, &x, &mut sc_i);
+                cell.step_into_rowmajor(&mut sr, &x, &mut sc_r);
+                assert_eq!(si.h, sr.h, "h diverged at step {step_i}");
+                assert_eq!(si.c, sr.c, "c diverged at step {step_i}");
+            }
+        });
+    }
+
+    #[test]
+    fn batched_interleaved_matches_rowmajor_reference() {
+        props("layout_equiv_batch", 32, |g| {
+            let lx = 1 + g.usize_in(0, 12);
+            let lh = 1 + g.usize_in(0, 12);
+            let b = 1 + g.usize_in(0, 11); // crosses the BATCH_TILE=8 boundary
+            let w = mk(lx, lh, g.case as u64 + 5200);
+            let cell = QuantLstmCell::new(&w);
+            let mut hi = vec![Q8_24::ZERO; b * lh];
+            let mut ci = vec![Q8_24::ZERO; b * lh];
+            let mut hr = hi.clone();
+            let mut cr = ci.clone();
+            let mut sc_i = StepScratch::new();
+            let mut sc_r = StepScratch::new();
+            for _ in 0..3 {
+                let flat: Vec<Q8_24> =
+                    (0..b * lx).map(|_| Q8_24::from_f64(g.f64_in(-2.0, 2.0))).collect();
+                cell.step_batch_into(b, &mut hi, &mut ci, &flat, &mut sc_i);
+                cell.step_batch_into_rowmajor(b, &mut hr, &mut cr, &flat, &mut sc_r);
+                assert_eq!(hi, hr);
+                assert_eq!(ci, cr);
+            }
+        });
+    }
+
+    #[test]
+    fn shared_scratch_across_kernel_layouts() {
+        // One scratch alternates between the interleaved and row-major
+        // kernels (whose pre-activation layouts differ) without zeroing in
+        // between; write-before-read means stale contents never leak.
+        let w = mk(8, 8, 31);
+        let cell = QuantLstmCell::new(&w);
+        let x: Vec<Q8_24> = (0..8).map(|i| Q8_24::from_f64(0.07 * i as f64 - 0.2)).collect();
+        let mut shared = StepScratch::new();
+        let mut sa = QuantLstmState::zeros(8);
+        cell.step_into(&mut sa, &x, &mut shared);
+        let mut sb = QuantLstmState::zeros(8);
+        cell.step_into_rowmajor(&mut sb, &x, &mut shared);
+        assert_eq!(sa.h, sb.h);
+        assert_eq!(sa.c, sb.c);
+        // And back again, against a fresh-scratch run.
+        let mut sc = sa.clone();
+        cell.step_into(&mut sc, &x, &mut shared);
+        let mut sd = sa.clone();
+        cell.step_into(&mut sd, &x, &mut StepScratch::new());
+        assert_eq!(sc.h, sd.h);
+        assert_eq!(sc.c, sd.c);
+    }
+
+    #[test]
+    fn thread_arena_is_reentrant_safe() {
+        // step() borrows the thread arena; calling it from inside a
+        // with_thread_arena scope must not panic (falls back to a fresh
+        // temporary arena).
+        let w = mk(4, 4, 33);
+        let cell = QuantLstmCell::new(&w);
+        let x: Vec<Q8_24> = (0..4).map(|i| Q8_24::from_f64(0.1 * i as f64)).collect();
+        let outer = cell.step(&QuantLstmState::zeros(4), &x);
+        let inner = with_thread_arena(|_| cell.step(&QuantLstmState::zeros(4), &x));
+        assert_eq!(outer.h, inner.h);
+        assert_eq!(outer.c, inner.c);
     }
 
     #[test]

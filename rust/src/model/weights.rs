@@ -60,26 +60,86 @@ impl LayerWeights {
     }
 
     /// Quantize all parameters onto the Q8.24 grid (what the FPGA stores
-    /// in BRAM).
+    /// in BRAM) and build the gate-interleaved kernel layout.
     pub fn quantized(&self) -> QuantLayerWeights {
-        QuantLayerWeights {
-            dims: self.dims,
-            wx: self.wx.iter().map(|&v| Q8_24::from_f32(v)).collect(),
-            wh: self.wh.iter().map(|&v| Q8_24::from_f32(v)).collect(),
-            bx: self.bx.iter().map(|&v| Q8_24::from_f32(v)).collect(),
-            bh: self.bh.iter().map(|&v| Q8_24::from_f32(v)).collect(),
-        }
+        QuantLayerWeights::from_rows(
+            self.dims,
+            self.wx.iter().map(|&v| Q8_24::from_f32(v)).collect(),
+            self.wh.iter().map(|&v| Q8_24::from_f32(v)).collect(),
+            self.bx.iter().map(|&v| Q8_24::from_f32(v)).collect(),
+            self.bh.iter().map(|&v| Q8_24::from_f32(v)).collect(),
+        )
     }
 }
 
-/// One layer's parameters on the Q8.24 grid.
+/// One layer's parameters on the Q8.24 grid, stored twice:
+///
+/// - **Row-major** (`wx`/`wh`/`bx`/`bh`) — the interchange layout,
+///   `[gate*lh + j][k]` with gate order i, f, g, o. The reference kernels
+///   and the weight-format tests read this form.
+/// - **Gate-interleaved** (`wx_il`/`wh_il`/`bx_il`/`bh_il`) — the kernel
+///   layout: for each output element `j`, the four gates' weights for the
+///   same input `k` sit adjacently (`[j][k][4]`), so one streaming pass
+///   over `x`/`h` feeds all four gate dot products of `j` and the
+///   autovectorizer gets four contiguous i32 lanes per load. Built once at
+///   quantization time; the duplication is ~2x weight BRAM, the same trade
+///   the FPGA makes when it banks weights per MVM unit.
 #[derive(Clone, Debug)]
 pub struct QuantLayerWeights {
     pub dims: LayerDims,
+    /// Row-major `[4*lh][lx]` input weights (interchange layout).
     pub wx: Vec<Q8_24>,
+    /// Row-major `[4*lh][lh]` hidden weights (interchange layout).
     pub wh: Vec<Q8_24>,
+    /// Row-major `[4*lh]` input bias.
     pub bx: Vec<Q8_24>,
+    /// Row-major `[4*lh]` hidden bias.
     pub bh: Vec<Q8_24>,
+    /// Gate-interleaved `[lh][lx][4]` input weights:
+    /// `wx_il[(j*lx + k)*4 + g] == wx[(g*lh + j)*lx + k]`.
+    pub wx_il: Vec<Q8_24>,
+    /// Gate-interleaved `[lh][lh][4]` hidden weights.
+    pub wh_il: Vec<Q8_24>,
+    /// Gate-interleaved `[lh][4]` input bias: `bx_il[j*4 + g] == bx[g*lh + j]`.
+    pub bx_il: Vec<Q8_24>,
+    /// Gate-interleaved `[lh][4]` hidden bias.
+    pub bh_il: Vec<Q8_24>,
+}
+
+impl QuantLayerWeights {
+    /// Build from row-major parameters, deriving the gate-interleaved
+    /// mirror arrays. All construction goes through here so the two
+    /// layouts can never disagree.
+    pub fn from_rows(
+        dims: LayerDims,
+        wx: Vec<Q8_24>,
+        wh: Vec<Q8_24>,
+        bx: Vec<Q8_24>,
+        bh: Vec<Q8_24>,
+    ) -> QuantLayerWeights {
+        let (lx, lh) = (dims.lx, dims.lh);
+        assert_eq!(wx.len(), 4 * lh * lx);
+        assert_eq!(wh.len(), 4 * lh * lh);
+        assert_eq!(bx.len(), 4 * lh);
+        assert_eq!(bh.len(), 4 * lh);
+        let interleave = |rows: &[Q8_24], width: usize| -> Vec<Q8_24> {
+            let mut out = vec![Q8_24::ZERO; 4 * lh * width];
+            for g in 0..4 {
+                for j in 0..lh {
+                    let row = g * lh + j;
+                    for k in 0..width {
+                        out[(j * width + k) * 4 + g] = rows[row * width + k];
+                    }
+                }
+            }
+            out
+        };
+        let wx_il = interleave(&wx, lx);
+        let wh_il = interleave(&wh, lh);
+        let bx_il = interleave(&bx, 1);
+        let bh_il = interleave(&bh, 1);
+        QuantLayerWeights { dims, wx, wh, bx, bh, wx_il, wh_il, bx_il, bh_il }
+    }
 }
 
 /// A full model's weights.
@@ -146,8 +206,9 @@ impl ModelWeights {
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::new();
         let push_u32 = |out: &mut Vec<u8>, v: u32| out.extend_from_slice(&v.to_le_bytes());
-        let push_f32s =
-            |out: &mut Vec<u8>, vs: &[f32]| vs.iter().for_each(|v| out.extend_from_slice(&v.to_le_bytes()));
+        let push_f32s = |out: &mut Vec<u8>, vs: &[f32]| {
+            vs.iter().for_each(|v| out.extend_from_slice(&v.to_le_bytes()))
+        };
         push_u32(&mut out, WEIGHTS_MAGIC);
         push_u32(&mut out, WEIGHTS_VERSION);
         push_u32(&mut out, self.layers.len() as u32);
@@ -258,6 +319,29 @@ mod tests {
         let w = ModelWeights::random(&t2, 1);
         assert!(w.validate(&t6).is_err());
         assert!(w.validate(&t2).is_ok());
+    }
+
+    #[test]
+    fn interleaved_layout_mirrors_row_major() {
+        let topo = Topology::from_name("F64-D6").unwrap();
+        let w = ModelWeights::random(&topo, 11);
+        for layer in &w.layers {
+            let q = layer.quantized();
+            let (lx, lh) = (q.dims.lx, q.dims.lh);
+            for g in 0..4 {
+                for j in 0..lh {
+                    let row = g * lh + j;
+                    for k in 0..lx {
+                        assert_eq!(q.wx_il[(j * lx + k) * 4 + g], q.wx[row * lx + k]);
+                    }
+                    for k in 0..lh {
+                        assert_eq!(q.wh_il[(j * lh + k) * 4 + g], q.wh[row * lh + k]);
+                    }
+                    assert_eq!(q.bx_il[j * 4 + g], q.bx[row]);
+                    assert_eq!(q.bh_il[j * 4 + g], q.bh[row]);
+                }
+            }
+        }
     }
 
     #[test]

@@ -131,7 +131,10 @@ mod tests {
             let check = |platform: &str, paper: f64| {
                 let d = table3_derived(model, ti, platform).unwrap();
                 let rel = (d - paper).abs() / paper;
-                assert!(rel < 0.08, "{model} T={t} {platform}: derived {d:.3} paper {paper} ({rel:.2})");
+                assert!(
+                    rel < 0.08,
+                    "{model} T={t} {platform}: derived {d:.3} paper {paper} ({rel:.2})"
+                );
             };
             check("fpga", fpga);
             check("cpu", cpu);

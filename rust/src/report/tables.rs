@@ -36,8 +36,9 @@ pub fn fpga_platform_latency_ms(topo: &Topology, t: usize) -> f64 {
 /// Table 1: FPGA resource utilization (%) and RH_m — model vs paper.
 pub fn table1() -> String {
     let dev = FpgaDevice::ZCU104;
-    let mut t = Table::new("Table 1 — FPGA resource utilization (%) and reuse factor RH_m (model vs paper)")
-        .header(&["Name", "RH_m", "LUT%", "FF%", "BRAM%", "DSP%", "fits"]);
+    let mut t =
+        Table::new("Table 1 — FPGA resource utilization (%) and reuse factor RH_m (model vs paper)")
+            .header(&["Name", "RH_m", "LUT%", "FF%", "BRAM%", "DSP%", "fits"]);
     for (name, rh_m, lut_p, ff_p, bram_p, dsp_p) in paper_data::TABLE1 {
         let topo = Topology::from_name(name).unwrap();
         let cfg = BalancedConfig::balance(&topo, rh_m);
@@ -136,7 +137,15 @@ pub fn table3() -> String {
             "Table 3 — Energy per timestep (mJ), {} (P_fpga model {:.1} W)",
             col.model, p_fpga
         ))
-        .header(&["T", "FPGA(sim+ovh)", "CPU(model)", "GPU(model)", "FPGA(paper*)", "CPU(paper*)", "GPU(paper*)"]);
+        .header(&[
+            "T",
+            "FPGA(sim+ovh)",
+            "CPU(model)",
+            "GPU(model)",
+            "FPGA(paper*)",
+            "CPU(paper*)",
+            "GPU(paper*)",
+        ]);
         for (i, &steps) in paper_data::TIMESTEPS.iter().enumerate() {
             // Platform-adjusted latency: consistent with the paper's
             // wall-clock energy accounting.

@@ -190,8 +190,9 @@ impl LaneTrack {
 fn decide(policy: &AutoscalePolicy, sample: &LaneSample, track: &mut LaneTrack) -> ScaleDecision {
     let pressure = sample.shed_delta > 0
         || sample.queue_depth as f64 >= policy.up_queue_frac * sample.queue_capacity as f64;
-    let quiet =
-        sample.shed_delta == 0 && sample.queue_depth == 0 && sample.idle_frac >= policy.down_idle_frac;
+    let quiet = sample.shed_delta == 0
+        && sample.queue_depth == 0
+        && sample.idle_frac >= policy.down_idle_frac;
     if pressure {
         track.down_streak = 0;
         track.up_streak += 1;

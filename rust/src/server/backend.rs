@@ -4,7 +4,7 @@ use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 
-use crate::engine::{BatchEngine, ExecMode, PipelinePool, PIPELINE_MIN_DEPTH};
+use crate::engine::{BatchEngine, ExecMode, PipelineOptions, PipelinePool, PIPELINE_MIN_DEPTH};
 use crate::model::LstmAutoencoder;
 use crate::runtime::Runtime;
 use crate::workload::Window;
@@ -182,6 +182,19 @@ impl QuantBackend {
     /// models, `Pipelined`); lanes with several workers should size it to
     /// the worker count so pipelined scoring runs worker-parallel.
     pub fn with_options(ae: LstmAutoencoder, mode: ExecMode, replicas: usize) -> QuantBackend {
+        Self::with_engine_options(ae, mode, replicas, PipelineOptions::default())
+    }
+
+    /// [`Self::with_options`] plus per-replica [`PipelineOptions`] (FIFO
+    /// capacity, stage core pinning) threaded into the pool. Only modes
+    /// that can route to the pipeline build one; otherwise `engine` is
+    /// ignored.
+    pub fn with_engine_options(
+        ae: LstmAutoencoder,
+        mode: ExecMode,
+        replicas: usize,
+        engine: PipelineOptions,
+    ) -> QuantBackend {
         let ae = Arc::new(ae);
         let wants_pipeline = match mode {
             ExecMode::Pipelined => true,
@@ -189,7 +202,7 @@ impl QuantBackend {
             ExecMode::Sequential | ExecMode::Batched => false,
         };
         let pool = if wants_pipeline {
-            Some(PipelinePool::new(ae.clone(), replicas))
+            Some(PipelinePool::with_options(ae.clone(), replicas, engine))
         } else {
             None
         };

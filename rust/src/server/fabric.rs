@@ -32,7 +32,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::engine::{ExecMode, PIPELINE_MIN_DEPTH};
+use crate::engine::{ExecMode, PipelineOptions, PIPELINE_MIN_DEPTH};
 use crate::model::{LstmAutoencoder, Topology};
 use crate::util::table::Table;
 use crate::workload::Window;
@@ -811,14 +811,45 @@ impl ModelRegistry {
         replicas: usize,
         autoscale: Option<AutoscalePolicy>,
     ) -> ModelRegistry {
+        Self::paper_fleet_opts(base_seed, mode, replicas, autoscale, PipelineOptions::default())
+    }
+
+    /// [`Self::paper_fleet_with`] plus fleet-wide engine options. When
+    /// `engine.pin_base_core` is set, each lane that actually builds a
+    /// pipeline pool is assigned a disjoint run of cores starting where
+    /// the previous pooled lane's replicas end (`depth × replicas` cores
+    /// per lane, wrapping modulo the online core count inside the
+    /// pipeline), so two lanes' stage workers never contend for a pin.
+    pub fn paper_fleet_opts(
+        base_seed: u64,
+        mode: ExecMode,
+        replicas: usize,
+        autoscale: Option<AutoscalePolicy>,
+        engine: PipelineOptions,
+    ) -> ModelRegistry {
         let mut reg = ModelRegistry::new();
+        let mut next_core = engine.pin_base_core;
         for (i, topo) in Topology::paper_models().into_iter().enumerate() {
             let ae = LstmAutoencoder::random(topo.clone(), base_seed + i as u64);
-            // `replicas` is passed unconditionally: `with_options` only
-            // builds the pool when `mode` can route to the pipeline, so
-            // shallow Auto lanes stay pool-free while Pipelined mode
+            // Only lanes that will build a pool consume core budget.
+            let pooled = match mode {
+                ExecMode::Pipelined => true,
+                ExecMode::Auto => topo.depth >= PIPELINE_MIN_DEPTH,
+                ExecMode::Sequential | ExecMode::Batched => false,
+            };
+            let lane_engine = PipelineOptions {
+                pin_base_core: if pooled { next_core } else { None },
+                ..engine
+            };
+            if pooled {
+                next_core = next_core.map(|c| c + topo.depth * replicas.max(1));
+            }
+            // `replicas` is passed unconditionally: `with_engine_options`
+            // only builds the pool when `mode` can route to the pipeline,
+            // so shallow Auto lanes stay pool-free while Pipelined mode
             // gets its replicas at every depth.
-            let backend = Arc::new(QuantBackend::with_options(ae, mode, replicas));
+            let backend =
+                Arc::new(QuantBackend::with_engine_options(ae, mode, replicas, lane_engine));
             let cfg = ServerConfig {
                 autoscale: autoscale.clone(),
                 ..Self::paper_lane_config(&topo, replicas)

@@ -1,6 +1,7 @@
 //! From-scratch substrates: deterministic PRNGs, a minimal JSON
 //! reader/writer, a property-testing mini-framework, paper-style ASCII
-//! tables, summary statistics, and a tiny CLI argument parser.
+//! tables, summary statistics, a tiny CLI argument parser, and a
+//! core-pinning helper.
 //!
 //! The offline vendor set ships only `xla` + `anyhow`, so everything a
 //! well-maintained systems repo would normally pull from crates.io
@@ -15,3 +16,4 @@ pub mod stats;
 pub mod cli;
 pub mod timer;
 pub mod linalg;
+pub mod affinity;

@@ -51,7 +51,13 @@ pub fn fmt_secs(s: f64) -> String {
 /// Time `f` with `warmup` untimed runs then `samples` timed batches; each
 /// sample runs `f` `batch` times and the per-iteration time is the batch
 /// mean. Keeps total runtime bounded while giving stable percentiles.
-pub fn bench(name: &str, warmup: usize, samples: usize, batch: usize, mut f: impl FnMut()) -> BenchResult {
+pub fn bench(
+    name: &str,
+    warmup: usize,
+    samples: usize,
+    batch: usize,
+    mut f: impl FnMut(),
+) -> BenchResult {
     for _ in 0..warmup {
         f();
     }

@@ -173,7 +173,9 @@ impl TelemetryGen {
                 for _ in 0..n_spikes {
                     let ti = self.rng.below(t as u64) as usize;
                     let fi = self.rng.below(self.features as u64) as usize;
-                    let mag = self.rng.uniform(1.5, 3.0) * if self.rng.next_f64() < 0.5 { -1.0 } else { 1.0 };
+                    let mag = self.rng.uniform(1.5, 3.0);
+                    let sign = if self.rng.next_f64() < 0.5 { -1.0 } else { 1.0 };
+                    let mag = mag * sign;
                     w.data[ti][fi] += mag as f32;
                 }
             }

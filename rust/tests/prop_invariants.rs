@@ -9,8 +9,11 @@ use lstm_ae_accel::accel::multi::run_batch;
 use lstm_ae_accel::accel::optimizer::{evaluate, optimize, Objective};
 use lstm_ae_accel::accel::platform::FpgaDevice;
 use lstm_ae_accel::accel::reuse::BalancedConfig;
-use lstm_ae_accel::engine::{BatchEngine, TemporalPipeline};
+use lstm_ae_accel::engine::{BatchEngine, PipelineOptions, TemporalPipeline};
 use lstm_ae_accel::fixed::Q8_24;
+use lstm_ae_accel::model::lstm::{QuantLstmCell, QuantLstmState, StepScratch};
+use lstm_ae_accel::model::topology::LayerDims;
+use lstm_ae_accel::model::weights::LayerWeights;
 use lstm_ae_accel::model::{LstmAutoencoder, ModelWeights, Topology};
 use lstm_ae_accel::util::json::Json;
 use lstm_ae_accel::util::prop::props;
@@ -156,6 +159,140 @@ fn engine_agrees_with_dataflow_sim_functional_output() {
         assert_eq!(sim_out, ae.forward_quant(&x), "sim vs golden");
         let pipe = TemporalPipeline::new(ae.clone());
         assert_eq!(sim_out, pipe.forward_quant(&x), "sim vs pipeline");
+    });
+}
+
+#[test]
+fn interleaved_kernels_bit_identical_on_paper_topologies() {
+    // Layout equivalence at the paper's four operating points: the
+    // gate-interleaved kernels must reproduce the row-major reference
+    // to the bit on every layer of every paper model — single-step and
+    // batched, with batch sizes straddling the kernel's B-tile.
+    for topo in Topology::paper_models() {
+        let name = topo.name.clone();
+        let ae = LstmAutoencoder::random(topo, 91);
+        let mut rng = Xoshiro256::seeded(17);
+        let mut scratch = StepScratch::new();
+        for (li, cell) in ae.quant_cells().iter().enumerate() {
+            let (lx, lh) = (cell.w.dims.lx, cell.w.dims.lh);
+            let mut a = QuantLstmState::zeros(lh);
+            let mut b = QuantLstmState::zeros(lh);
+            for _ in 0..3 {
+                let x: Vec<Q8_24> =
+                    (0..lx).map(|_| Q8_24::from_f64(rng.uniform(-2.0, 2.0))).collect();
+                cell.step_into(&mut a, &x, &mut scratch);
+                cell.step_into_rowmajor(&mut b, &x, &mut scratch);
+                assert_eq!(a.h, b.h, "{name} layer {li}: h diverged");
+                assert_eq!(a.c, b.c, "{name} layer {li}: c diverged");
+            }
+            for bsz in [1usize, 7, 9] {
+                let xb: Vec<Q8_24> =
+                    (0..bsz * lx).map(|_| Q8_24::from_f64(rng.uniform(-2.0, 2.0))).collect();
+                let mut h1 = vec![Q8_24::ZERO; bsz * lh];
+                let mut c1 = vec![Q8_24::ZERO; bsz * lh];
+                let mut h2 = vec![Q8_24::ZERO; bsz * lh];
+                let mut c2 = vec![Q8_24::ZERO; bsz * lh];
+                for _ in 0..3 {
+                    cell.step_batch_into(bsz, &mut h1, &mut c1, &xb, &mut scratch);
+                    cell.step_batch_into_rowmajor(bsz, &mut h2, &mut c2, &xb, &mut scratch);
+                }
+                assert_eq!(h1, h2, "{name} layer {li} B={bsz}: batched h diverged");
+                assert_eq!(c1, c2, "{name} layer {li} B={bsz}: batched c diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn interleaved_kernels_bit_identical_on_edge_shapes() {
+    // The shapes most likely to break an interleave or tiling bug:
+    // lh = 1 (a single four-lane block), lx ≠ lh (rectangular weights),
+    // B = 1 (degenerate tile), and batch sizes straddling BATCH_TILE.
+    props("layout_edge_shapes", 48, |g| {
+        let lx = g.usize_in(1, 24);
+        let lh = if g.bool() { 1 } else { g.usize_in(1, 24) };
+        let mut rng = Xoshiro256::seeded(g.case as u64 + 3);
+        let w = LayerWeights::random(LayerDims { lx, lh }, &mut rng);
+        let cell = QuantLstmCell::new(&w);
+        let mut scratch = StepScratch::new();
+
+        let mut a = QuantLstmState::zeros(lh);
+        let mut b = QuantLstmState::zeros(lh);
+        for _ in 0..4 {
+            let x: Vec<Q8_24> = (0..lx).map(|_| Q8_24::from_f64(rng.uniform(-3.0, 3.0))).collect();
+            cell.step_into(&mut a, &x, &mut scratch);
+            cell.step_into_rowmajor(&mut b, &x, &mut scratch);
+        }
+        assert_eq!(a.h, b.h, "{lx}x{lh}: h diverged");
+        assert_eq!(a.c, b.c, "{lx}x{lh}: c diverged");
+
+        let bsz = *g.choose(&[1usize, 2, 7, 8, 9, 13]);
+        let xb: Vec<Q8_24> =
+            (0..bsz * lx).map(|_| Q8_24::from_f64(rng.uniform(-3.0, 3.0))).collect();
+        let mut h1 = vec![Q8_24::ZERO; bsz * lh];
+        let mut c1 = vec![Q8_24::ZERO; bsz * lh];
+        let mut h2 = vec![Q8_24::ZERO; bsz * lh];
+        let mut c2 = vec![Q8_24::ZERO; bsz * lh];
+        for _ in 0..4 {
+            cell.step_batch_into(bsz, &mut h1, &mut c1, &xb, &mut scratch);
+            cell.step_batch_into_rowmajor(bsz, &mut h2, &mut c2, &xb, &mut scratch);
+        }
+        assert_eq!(h1, h2, "{lx}x{lh} B={bsz}: batched h diverged");
+        assert_eq!(c1, c2, "{lx}x{lh} B={bsz}: batched c diverged");
+    });
+}
+
+#[test]
+fn mixed_length_batches_bit_identical_through_backend() {
+    // Mixed-T batches take every routing branch of the quant backend
+    // (length-grouped MMM, pooled pipeline pass over the singletons);
+    // all of them sit on the interleaved kernels and must reproduce the
+    // sequential scorer bit for bit.
+    use lstm_ae_accel::server::{Backend, QuantBackend};
+    use lstm_ae_accel::workload::Window;
+    props("mixed_t_backend", 8, |g| {
+        let Some(topo) = random_topo(g) else { return };
+        let f = topo.features;
+        let ae = LstmAutoencoder::random(topo, g.case as u64 + 51);
+        let windows: Vec<Window> = (0..g.usize_in(2, 6))
+            .map(|_| {
+                let t = *g.choose(&[1usize, 2, 5, 5, 9]); // repeats force grouping
+                Window {
+                    data: (0..t).map(|_| g.vec_f32(f, -2.0, 2.0)).collect(),
+                    anomaly: None,
+                }
+            })
+            .collect();
+        let golden: Vec<u64> = windows.iter().map(|w| ae.score_quant(&w.data).to_bits()).collect();
+        let backend = QuantBackend::new(ae);
+        let refs: Vec<&Window> = windows.iter().collect();
+        let got = backend.score_batch(&refs);
+        for (want, s) in golden.into_iter().zip(got) {
+            assert_eq!(s.to_bits(), want, "mixed-T batch diverged from sequential scorer");
+        }
+    });
+}
+
+#[test]
+fn pinned_pipeline_bit_identical_to_unpinned() {
+    // Core pinning is a scheduling hint, never a numeric change: the
+    // pinned pipeline must reproduce the unpinned one (and thus
+    // forward_quant) exactly, whatever cores the mask lands on.
+    props("pinned_identity", 6, |g| {
+        let Some(topo) = random_topo(g) else { return };
+        let f = topo.features;
+        let ae = Arc::new(LstmAutoencoder::random(topo, g.case as u64 + 23));
+        let t = *g.choose(&[1usize, 3, 11]);
+        let x: Vec<Vec<f32>> = (0..t).map(|_| g.vec_f32(f, -2.0, 2.0)).collect();
+        let golden = ae.forward_quant(&x);
+        let pinned = TemporalPipeline::with_options(
+            ae.clone(),
+            PipelineOptions {
+                pin_base_core: Some(g.usize_in(0, 3)),
+                ..Default::default()
+            },
+        );
+        assert_eq!(pinned.forward_quant(&x), golden, "pinned pipeline diverged");
     });
 }
 

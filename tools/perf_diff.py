@@ -1,0 +1,120 @@
+#!/usr/bin/env python3
+"""Perf gate over BENCH_hotpath.json: fresh run vs committed baseline.
+
+CI runs the hotpath bench (which rewrites BENCH_hotpath.json next to the
+manifest), recovers the committed baseline via `git show HEAD:...`, and
+calls this script with both. Rows whose name starts with the gated
+prefix (default ``kernel ``) are the contract: any of them regressing
+more than ``--max-regress`` in ns/iter fails the job. Everything else is
+reported but advisory — end-to-end rows (server closed loops, autoscaler
+scenarios) are too noisy on shared runners to gate on.
+
+The gate disarms itself, exit 0 with a notice, when the baseline is
+absent, unparsable, marked ``"provisional": true``, or has no results —
+so landing the tooling does not require timed numbers in the same PR,
+and re-baselining is one commit of the refreshed JSON.
+
+Stdlib only; no third-party imports.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_results(path: str) -> dict | None:
+    """Return the results map, or None when the gate should disarm."""
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"perf gate disarmed: cannot read baseline {path}: {e}")
+        return None
+    if not isinstance(doc, dict):
+        print(f"perf gate disarmed: {path} is not an object")
+        return None
+    if doc.get("provisional"):
+        print(f"perf gate disarmed: {path} is marked provisional")
+        return None
+    results = doc.get("results")
+    if not isinstance(results, dict) or not results:
+        print(f"perf gate disarmed: {path} has no results")
+        return None
+    return results
+
+
+def ns_per_iter(row) -> float | None:
+    if isinstance(row, dict):
+        v = row.get("ns_per_iter")
+        if isinstance(v, (int, float)) and v > 0:
+            return float(v)
+    return None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed BENCH_hotpath.json (git show HEAD:...)")
+    ap.add_argument("fresh", help="BENCH_hotpath.json written by this run")
+    ap.add_argument(
+        "--max-regress",
+        type=float,
+        default=0.15,
+        help="fractional ns/iter regression that fails a gated row (default 0.15)",
+    )
+    ap.add_argument(
+        "--prefix",
+        default="kernel ",
+        help='row-name prefix that is gated (default "kernel "); other rows are advisory',
+    )
+    args = ap.parse_args()
+
+    base = load_results(args.baseline)
+    if base is None:
+        return 0
+    fresh = load_results(args.fresh)
+    if fresh is None:
+        print("perf gate error: fresh bench output unusable", file=sys.stderr)
+        return 1
+
+    failures = []
+    common = [n for n in fresh if n in base]
+    if not common:
+        print("perf gate disarmed: no rows in common with the baseline")
+        return 0
+    width = max(len(n) for n in common)
+    print(f"{'row':<{width}}  {'base ns':>12}  {'fresh ns':>12}  {'delta':>8}  gate")
+    for name in sorted(common):
+        b, f = ns_per_iter(base[name]), ns_per_iter(fresh[name])
+        if b is None or f is None:
+            continue  # scenario rows (shed counts etc.) carry no timing
+        delta = f / b - 1.0
+        gated = name.startswith(args.prefix)
+        verdict = "ok"
+        if gated and delta > args.max_regress:
+            verdict = "FAIL"
+            failures.append((name, delta))
+        print(
+            f"{name:<{width}}  {b:>12.1f}  {f:>12.1f}  {delta:>+7.1%}  "
+            f"{verdict if gated else '-'}"
+        )
+
+    missing = [n for n in base if n not in fresh and n.startswith(args.prefix)]
+    for name in missing:
+        print(f"{name}: gated row missing from fresh run")
+        failures.append((name, float("inf")))
+
+    if failures:
+        print(
+            f"\nperf gate FAILED: {len(failures)} gated row(s) regressed "
+            f"beyond {args.max_regress:.0%}",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"\nperf gate passed ({len(common)} rows compared)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
