@@ -104,6 +104,7 @@ fn main() {
         queue_capacity: args.get_usize("queue", 1024),
         threshold,
         autoscale: None,
+        cache: None,
     };
     let srv = AnomalyServer::start(backend, cfg);
     let mut gen = mk_gen(55);

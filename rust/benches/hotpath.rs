@@ -21,19 +21,21 @@ use lstm_ae_accel::accel::dataflow::DataflowSim;
 use lstm_ae_accel::accel::latency::LatencyModel;
 use lstm_ae_accel::accel::reuse::BalancedConfig;
 use lstm_ae_accel::activations::Pwl;
-use lstm_ae_accel::engine::{BatchEngine, PipelineOptions, PipelinePool, TemporalPipeline};
+use lstm_ae_accel::engine::{
+    BatchEngine, ExecMode, PipelineOptions, PipelinePool, TemporalPipeline,
+};
 use lstm_ae_accel::fixed::{dot_q, Q8_24};
 use lstm_ae_accel::model::lstm::{QuantLstmCell, QuantLstmState, StepScratch};
 use lstm_ae_accel::model::{LstmAutoencoder, Topology};
 use lstm_ae_accel::net::ShardServer;
 use lstm_ae_accel::server::{
-    AnomalyServer, AutoscalePolicy, ModelRegistry, QuantBackend, ServerConfig, ShardRouter,
-    ThrottledBackend,
+    AnomalyServer, AutoscalePolicy, CacheConfig, ModelRegistry, QuantBackend, ServerConfig,
+    ShardRouter, ThrottledBackend,
 };
 use lstm_ae_accel::util::json::Json;
 use lstm_ae_accel::util::timer::{bench, bench_auto, black_box, BenchResult};
 use lstm_ae_accel::workload::trace::{
-    closed_loop_async, closed_loop_blocking, rotating_hot_poisson,
+    closed_loop_async, closed_loop_blocking, replay_async, rotating_hot_poisson, zipf_poisson,
 };
 use lstm_ae_accel::workload::TelemetryGen;
 
@@ -449,6 +451,7 @@ fn main() {
             queue_capacity: 1024, // 512 in flight: sized to never shed
             threshold: 0.1,
             autoscale: None,
+            cache: None,
         },
     );
     let mut gen = TelemetryGen::new(32, 11);
@@ -496,6 +499,7 @@ fn main() {
                     queue_capacity: 1024,
                     threshold: 0.1,
                     autoscale: None,
+                    cache: None,
                 },
             );
             let models = vec!["LSTM-AE-F32-D2".to_string()];
@@ -572,6 +576,7 @@ fn main() {
                     queue_capacity: 16,
                     threshold: 1.0,
                     autoscale: policy.clone(),
+                    cache: None,
                 },
             );
         }
@@ -643,6 +648,7 @@ fn main() {
                     queue_capacity: 4096,
                     threshold: 0.1,
                     autoscale: None,
+                    cache: None,
                 },
             );
             registry
@@ -698,6 +704,66 @@ fn main() {
                     ("wall_s", wall),
                 ],
             );
+        }
+    }
+
+    println!("\n## Score cache: Zipf-skewed replay, cold vs cached (same trace)");
+    // The single-flight score cache's headline numbers: the identical
+    // Zipf(s=1.1) trace through the paper fleet uncached ("cold" — every
+    // request occupies a batch slot) and with the default cache on
+    // ("zipf" — repeats are served from cache or coalesced onto an
+    // in-flight leader). batch_slots is the figure the cache exists to
+    // shrink; hit/coalesce counts record how. EXPERIMENTS.md §Perf
+    // entry 12 tracks these rows.
+    {
+        let topos = Topology::paper_models();
+        let models: Vec<String> = topos.iter().map(|m| m.name.clone()).collect();
+        let trace = zipf_poisson(&topos, 61, 8000.0, 2000, 8, 64, 1.1);
+        for cached in [false, true] {
+            let registry = if cached {
+                ModelRegistry::paper_fleet_opts(
+                    61,
+                    ExecMode::Auto,
+                    2,
+                    None,
+                    PipelineOptions::default(),
+                    Some(CacheConfig::default()),
+                )
+            } else {
+                ModelRegistry::paper_fleet(61, ExecMode::Auto, 2)
+            };
+            let stats = replay_async(&registry, &models, trace.clone());
+            let wall = stats.wall.as_secs_f64().max(1e-9);
+            let (mut hits, mut coalesced, mut slots) = (0u64, 0u64, 0u64);
+            for m in &models {
+                let lm = registry.lane(m).unwrap().metrics();
+                hits += lm.cache_hits();
+                coalesced += lm.coalesced();
+                slots += lm.batched_windows();
+            }
+            let name = if cached {
+                "cache zipf fleet T=8 n=2000 pool=64"
+            } else {
+                "cache cold fleet T=8 n=2000 pool=64"
+            };
+            println!(
+                "{name}: {} completed in {wall:.3}s ({:.0}/s) | {slots} batch slots | \
+                 {hits} hits, {coalesced} coalesced",
+                stats.completed,
+                stats.completed as f64 / wall
+            );
+            rec.add_scalars(
+                name,
+                &[
+                    ("completed", stats.completed as f64),
+                    ("throughput_per_s", stats.completed as f64 / wall),
+                    ("batch_slots", slots as f64),
+                    ("cache_hits", hits as f64),
+                    ("coalesced", coalesced as f64),
+                    ("wall_s", wall),
+                ],
+            );
+            registry.shutdown();
         }
     }
 

@@ -24,13 +24,20 @@
 //!             requests ([--clients 4] [--outstanding 1024])
 //!             [--pin-cores] pin pipeline stage workers so layer i and i+1
 //!             sit on neighbouring cores ([--pin-base N] first core)
+//!             [--cache-entries N] per-lane exact-match score cache with
+//!             single-flight coalescing (0 = off, the default;
+//!             [--cache-bytes B] caps resident key bytes, default 64 MiB)
 //!   fleet serve   --bind 127.0.0.1:7070 [--replicas 2] [--mode auto] [--seed 7]
 //!             [--autoscale ...] [--report-every-s N] [--pin-cores [--pin-base N]]
+//!             [--cache-entries N [--cache-bytes B]]
 //!             run this process as a network shard: all four paper topologies
 //!             behind the wire protocol, until killed
 //!   fleet connect --shards a1:p1,a2:p2 [--requests N] [--rate R] [--timesteps T]
 //!             [--seed 7] [--report] drive the Poisson trace across a shard
 //!             fleet; exits nonzero on accounting mismatch or lost requests
+//!             [--zipf-pool P] draw windows from a Zipf(s=1.1) pool of P benign
+//!             windows per model instead of fresh ones — the repeat-heavy
+//!             trace that exercises the server-side score cache
 //!             [--heartbeat-ms 250] [--suspect-after 3] [--dead-after 6]
 //!             [--reconnect-max-backoff 5000] control-plane tuning: probe
 //!             cadence, missed-probe demotion thresholds, redial backoff cap
@@ -54,13 +61,14 @@ use lstm_ae_accel::runtime::Runtime;
 use lstm_ae_accel::engine::{ExecMode, PipelineOptions};
 use lstm_ae_accel::net::{ShardServer, WIRE_VERSION};
 use lstm_ae_accel::server::{
-    self, AnomalyServer, AutoscalePolicy, Backend, ModelRegistry, PjrtBackend, QuantBackend,
-    RouterConfig, ServerConfig, ShardRouter, SubmitError,
+    self, AnomalyServer, AutoscalePolicy, Backend, CacheConfig, ModelRegistry, PjrtBackend,
+    QuantBackend, RouterConfig, ServerConfig, ShardRouter, SubmitError,
 };
 use lstm_ae_accel::util::cli::Args;
 use lstm_ae_accel::util::table::Table;
 use lstm_ae_accel::workload::trace::{
     closed_loop_async, merged_poisson, poisson_trace, replay_fleet, rotating_hot_poisson,
+    zipf_poisson,
 };
 use lstm_ae_accel::workload::TelemetryGen;
 use lstm_ae_accel::model::LstmAutoencoder;
@@ -125,6 +133,18 @@ fn engine_options(args: &Args) -> PipelineOptions {
         pin_base_core: args.has("pin-cores").then(|| args.get_usize("pin-base", 0)),
         ..Default::default()
     }
+}
+
+/// Per-lane score-cache knobs shared by the fleet roles: `--cache-entries N`
+/// turns on the exact-match cache with single-flight coalescing (0, the
+/// default, leaves lanes uncached), `--cache-bytes B` caps resident key
+/// bytes (default 64 MiB).
+fn cache_options(args: &Args) -> Option<CacheConfig> {
+    let entries = args.get_usize("cache-entries", 0);
+    (entries > 0).then(|| CacheConfig {
+        entries,
+        bytes: args.get_usize("cache-bytes", CacheConfig::default().bytes),
+    })
 }
 
 fn cmd_models() -> Result<()> {
@@ -400,6 +420,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_capacity: args.get_usize("queue", 1024),
         threshold: args.get_f64("threshold", 0.0), // calibrated below
         autoscale: None,
+        cache: None,
     };
 
     // Backend: PJRT artifact if available, else quantized golden model.
@@ -514,10 +535,19 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         )
     });
     let engine = engine_options(args);
-    let registry = ModelRegistry::paper_fleet_opts(seed, mode, replicas, policy, engine);
+    let cache = cache_options(args);
+    let registry =
+        ModelRegistry::paper_fleet_opts(seed, mode, replicas, policy, engine, cache.clone());
     let models: Vec<String> = registry.models().map(String::from).collect();
     if let Some(base) = engine.pin_base_core {
         println!("core pinning: pipeline stage workers pinned from core {base} up");
+    }
+    if let Some(c) = &cache {
+        println!(
+            "score cache: {} entries / {} MiB per lane, single-flight coalescing on",
+            c.entries,
+            c.bytes >> 20
+        );
     }
     if autoscale {
         let budget = args.get_usize("budget", 0);
@@ -646,9 +676,24 @@ fn cmd_fleet_serve(args: &Args) -> Result<()> {
         )
     });
     let engine = engine_options(args);
-    let registry = Arc::new(ModelRegistry::paper_fleet_opts(seed, mode, replicas, policy, engine));
+    let cache = cache_options(args);
+    let registry = Arc::new(ModelRegistry::paper_fleet_opts(
+        seed,
+        mode,
+        replicas,
+        policy,
+        engine,
+        cache.clone(),
+    ));
     if let Some(base) = engine.pin_base_core {
         println!("core pinning: pipeline stage workers pinned from core {base} up");
+    }
+    if let Some(c) = &cache {
+        println!(
+            "score cache: {} entries / {} MiB per lane, single-flight coalescing on",
+            c.entries,
+            c.bytes >> 20
+        );
     }
     if autoscale {
         let budget = args.get_usize("budget", 0);
@@ -707,14 +752,28 @@ fn cmd_fleet_connect(args: &Args) -> Result<()> {
         .map_err(|e| anyhow!("connect {shards:?}: {e}"))?;
     let topos = Topology::paper_models();
     let models: Vec<String> = topos.iter().map(|m| m.name.clone()).collect();
-    let merged =
-        merged_poisson(&topos, seed.wrapping_add(40), rate, n, timesteps, anomaly_rate);
+    // --zipf-pool P swaps the fresh-window Poisson mix for a repeat-heavy
+    // trace: windows drawn Zipf(s=1.1) from a pool of P benign windows per
+    // model. Arrival times stay Poisson, so offered load is comparable —
+    // only the window population changes, which is exactly what the
+    // server-side score cache keys on.
+    let zipf_pool = args.get_usize("zipf-pool", 0);
+    let merged = if zipf_pool > 0 {
+        zipf_poisson(&topos, seed.wrapping_add(40), rate, n, timesteps, zipf_pool, 1.1)
+    } else {
+        merged_poisson(&topos, seed.wrapping_add(40), rate, n, timesteps, anomaly_rate)
+    };
     println!(
         "fleet connect: {} requests over {} models @ {rate:.0} rps aggregate, \
-         T={timesteps}, {} shard(s)",
+         T={timesteps}, {} shard(s){}",
         merged.len(),
         models.len(),
-        router.len()
+        router.len(),
+        if zipf_pool > 0 {
+            format!(", zipf pool {zipf_pool}/model (s=1.1)")
+        } else {
+            String::new()
+        }
     );
     let stats = replay_fleet(&router, &models, merged, true);
     let wall = stats.wall.as_secs_f64().max(1e-9);

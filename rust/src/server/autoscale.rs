@@ -436,6 +436,7 @@ mod tests {
             queue_capacity: 64,
             threshold: 1.0,
             autoscale: Some(policy),
+            cache: None,
         };
         let lane = Arc::new(Lane::start(
             "hot",
@@ -496,6 +497,7 @@ mod tests {
                     queue_capacity: 64,
                     threshold: 1.0,
                     autoscale: Some(policy.clone()),
+                    cache: None,
                 },
             ))
         };

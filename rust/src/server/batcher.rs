@@ -131,7 +131,7 @@ mod tests {
     fn req(id: u64) -> (Request, std::sync::mpsc::Receiver<Response>) {
         let (reply, rx): (Sender<Response>, _) = channel();
         let window = Window { data: vec![vec![0.0f32]], anomaly: None };
-        (Request { id, window, submitted: Instant::now(), reply }, rx)
+        (Request { id, window, submitted: Instant::now(), key: None, reply }, rx)
     }
 
     fn spawn_batcher(

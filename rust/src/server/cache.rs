@@ -1,0 +1,358 @@
+//! Exact-match window score cache with single-flight coalescing.
+//!
+//! The cheapest timestep is the one never recomputed: periodic sensors,
+//! retry storms, and fan-out dashboards resubmit identical windows
+//! constantly. Because the whole stack is bit-deterministic (same window
+//! bytes → same `f64` score, see `integration_bitexact.rs`), an
+//! exact-match cache preserves every correctness guarantee trivially —
+//! a hit returns the very bits the backend would have produced.
+//!
+//! Two mechanisms live here, both per-lane:
+//!
+//! - **LRU score cache** — keyed by the raw bit pattern of the window
+//!   (`window_key`), capped by entry count and resident bytes. The key
+//!   encoding is injective (length-prefixed rows of `f32::to_bits`), so
+//!   collision safety needs no hashing argument: the full encoding IS
+//!   the `HashMap` key.
+//! - **Single-flight map** — concurrent submits of a window already being
+//!   scored attach to the leader's completion instead of occupying batch
+//!   slots. The leader registers before admission (under the map lock, so
+//!   exactly one leader exists per key) and fans its outcome — success or
+//!   failure — out to followers via `release`. Blocking submitters never
+//!   lead: a blocking leader has no completion hook, so a worker panic
+//!   would strand its followers forever.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+
+use super::front::TicketShared;
+use super::{Completion, Response};
+use crate::workload::Window;
+
+/// Per-lane score-cache sizing. `entries == 0` disables caching for the
+/// lane entirely (no lookup, no coalescing).
+#[derive(Clone, Debug)]
+pub struct CacheConfig {
+    /// Maximum number of resident entries.
+    pub entries: usize,
+    /// Maximum resident bytes (keys + bookkeeping overhead).
+    pub bytes: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> CacheConfig {
+        CacheConfig { entries: 4096, bytes: 64 << 20 }
+    }
+}
+
+/// Injective encoding of a window's raw sample bits. Shared by the cache
+/// map and the in-flight map; `Arc` so clones are pointer-sized.
+pub(crate) type CacheKey = Arc<[u32]>;
+
+/// Encode a window's data as a length-prefixed bit string: row count,
+/// then per row its length followed by each sample's `to_bits()`. The
+/// prefixes make the encoding injective across layouts — `[[1,2],[3]]`
+/// and `[[1],[2,3]]` differ even though the flat samples match. The
+/// anomaly label is deliberately excluded: scoring depends only on the
+/// data, and cached scores must not split on metadata.
+pub(crate) fn window_key(w: &Window) -> CacheKey {
+    let total: usize = w.data.iter().map(Vec::len).sum();
+    let mut out = Vec::with_capacity(1 + w.data.len() + total);
+    out.push(w.data.len() as u32);
+    for row in &w.data {
+        out.push(row.len() as u32);
+        out.extend(row.iter().map(|v| v.to_bits()));
+    }
+    out.into()
+}
+
+/// Flat bookkeeping estimate per entry: two map slots, an `Arc` header,
+/// the `Entry` struct. Keeps the byte cap honest without pretending to
+/// allocator-level precision.
+const ENTRY_OVERHEAD: usize = 96;
+
+fn key_bytes(key: &CacheKey) -> usize {
+    key.len() * 4 + ENTRY_OVERHEAD
+}
+
+struct Entry {
+    score: f64,
+    /// Recency tick; also the entry's key in `recency`.
+    tick: u64,
+    bytes: usize,
+}
+
+struct LruInner {
+    map: HashMap<CacheKey, Entry>,
+    /// tick → key, ordered oldest-first; eviction pops the front.
+    recency: BTreeMap<u64, CacheKey>,
+    tick: u64,
+    resident: usize,
+}
+
+/// A submitter waiting on another request's in-flight score.
+pub(crate) enum Follower {
+    /// Async submitter: complete its ticket slot directly.
+    Async { id: u64, slot: Arc<TicketShared> },
+    /// Blocking submitter: forward the response over its reply channel.
+    /// On leader failure the sender is simply dropped, which errors the
+    /// follower's `recv` — `score_blocking` reports that as `Closed`.
+    Blocking { id: u64, reply: Sender<Response> },
+}
+
+/// Per-lane cache + single-flight state. All methods are lock-internal
+/// and safe to call from any thread.
+pub(crate) struct LaneCache {
+    cfg: CacheConfig,
+    lru: Mutex<LruInner>,
+    inflight: Mutex<HashMap<CacheKey, Vec<Follower>>>,
+}
+
+impl LaneCache {
+    pub(crate) fn new(cfg: CacheConfig) -> LaneCache {
+        LaneCache {
+            cfg,
+            lru: Mutex::new(LruInner {
+                map: HashMap::new(),
+                recency: BTreeMap::new(),
+                tick: 0,
+                resident: 0,
+            }),
+            inflight: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Cached score for `key`, refreshing its recency on a hit.
+    pub(crate) fn lookup(&self, key: &CacheKey) -> Option<f64> {
+        let mut lru = self.lru.lock().unwrap();
+        let inner = &mut *lru;
+        inner.tick += 1;
+        let tick = inner.tick;
+        let entry = inner.map.get_mut(key)?;
+        let old = std::mem::replace(&mut entry.tick, tick);
+        inner.recency.remove(&old);
+        inner.recency.insert(tick, key.clone());
+        Some(entry.score)
+    }
+
+    /// Insert (or refresh) a scored entry, then evict oldest-first until
+    /// both caps hold. Returns the number of evictions performed.
+    pub(crate) fn insert(&self, key: CacheKey, score: f64) -> u64 {
+        let bytes = key_bytes(&key);
+        let mut lru = self.lru.lock().unwrap();
+        let inner = &mut *lru;
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(prev) = inner.map.insert(key.clone(), Entry { score, tick, bytes }) {
+            inner.recency.remove(&prev.tick);
+            inner.resident = inner.resident.saturating_sub(prev.bytes);
+        }
+        inner.recency.insert(tick, key);
+        inner.resident += bytes;
+        let mut evicted = 0u64;
+        while inner.map.len() > self.cfg.entries || inner.resident > self.cfg.bytes {
+            let Some((&oldest, _)) = inner.recency.iter().next() else { break };
+            let victim = inner.recency.remove(&oldest).expect("tick present");
+            if let Some(e) = inner.map.remove(&victim) {
+                inner.resident = inner.resident.saturating_sub(e.bytes);
+            }
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// Single-flight election: returns `true` if the caller became the
+    /// leader for `key` (it must go on to submit, then `release`).
+    /// Otherwise the built follower was attached to the existing flight
+    /// and the caller must NOT submit. The whole decision happens under
+    /// the in-flight map lock, so exactly one caller leads per key.
+    pub(crate) fn lead_or_attach(
+        &self,
+        key: &CacheKey,
+        follower: impl FnOnce() -> Follower,
+    ) -> bool {
+        use std::collections::hash_map::Entry as MapEntry;
+        let mut inflight = self.inflight.lock().unwrap();
+        match inflight.entry(key.clone()) {
+            MapEntry::Occupied(mut e) => {
+                e.get_mut().push(follower());
+                false
+            }
+            MapEntry::Vacant(v) => {
+                v.insert(Vec::new());
+                true
+            }
+        }
+    }
+
+    /// Attach-only variant for blocking submitters: joins an existing
+    /// flight but never starts one. Returns whether it attached.
+    pub(crate) fn attach(&self, key: &CacheKey, follower: impl FnOnce() -> Follower) -> bool {
+        let mut inflight = self.inflight.lock().unwrap();
+        if let Some(fs) = inflight.get_mut(key) {
+            fs.push(follower());
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Fan the leader's outcome out to every follower and retire the
+    /// flight. Followers are completed OUTSIDE the map lock — ticket
+    /// callbacks may re-enter submission paths. Idempotent on a key with
+    /// no flight (leader admission failure after a racing release).
+    pub(crate) fn release(&self, key: &CacheKey, outcome: &Completion) {
+        let followers = { self.inflight.lock().unwrap().remove(key).unwrap_or_default() };
+        for f in followers {
+            match (f, outcome) {
+                (Follower::Async { id, slot }, Ok(r)) => {
+                    slot.complete(Ok(Response { id, ..r.clone() }));
+                }
+                (Follower::Async { slot, .. }, Err(e)) => {
+                    slot.complete(Err(e.clone()));
+                }
+                (Follower::Blocking { id, reply }, Ok(r)) => {
+                    let _ = reply.send(Response { id, ..r.clone() });
+                }
+                // Dropping the sender errors the follower's recv.
+                (Follower::Blocking { .. }, Err(_)) => {}
+            }
+        }
+    }
+
+    /// Number of flights currently open (leaders submitted, not yet
+    /// released). Diagnostic; used by tests to prove no leaked flights.
+    pub(crate) fn flights(&self) -> usize {
+        self.inflight.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::front::Ticket;
+    use super::super::SubmitError;
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn win(data: Vec<Vec<f32>>) -> Window {
+        Window { data, anomaly: None }
+    }
+
+    #[test]
+    fn window_key_separates_layout_nan_bits_and_signed_zero() {
+        let nan_a = f32::from_bits(0x7FC0_0001);
+        let nan_b = f32::from_bits(0x7FC0_0002);
+        let windows = vec![
+            win(vec![vec![1.0, 2.0], vec![3.0]]),
+            win(vec![vec![1.0], vec![2.0, 3.0]]),
+            win(vec![vec![1.0, 2.0, 3.0]]),
+            win(vec![vec![1.0], vec![2.0], vec![3.0]]),
+            win(vec![vec![], vec![5.0]]),
+            win(vec![vec![5.0], vec![]]),
+            win(vec![vec![5.0]]),
+            win(vec![vec![0.0]]),
+            win(vec![vec![-0.0]]),
+            win(vec![vec![nan_a]]),
+            win(vec![vec![nan_b]]),
+        ];
+        let keys: Vec<CacheKey> = windows.iter().map(window_key).collect();
+        for i in 0..keys.len() {
+            for j in (i + 1)..keys.len() {
+                assert_ne!(keys[i], keys[j], "windows {i} and {j} collide");
+            }
+        }
+        // Identical bits key identically, and the anomaly label is ignored.
+        let mut labeled = win(vec![vec![nan_a]]);
+        labeled.anomaly = Some(crate::workload::AnomalyKind::Spike);
+        assert_eq!(window_key(&windows[9]), window_key(&labeled));
+    }
+
+    #[test]
+    fn lru_evicts_oldest_first_and_lookup_refreshes() {
+        let cache = LaneCache::new(CacheConfig { entries: 2, bytes: usize::MAX });
+        let (a, b) = (window_key(&win(vec![vec![1.0]])), window_key(&win(vec![vec![2.0]])));
+        let (c, d) = (window_key(&win(vec![vec![3.0]])), window_key(&win(vec![vec![4.0]])));
+        assert_eq!(cache.insert(a.clone(), 0.1), 0);
+        assert_eq!(cache.insert(b.clone(), 0.2), 0);
+        assert_eq!(cache.lookup(&a), Some(0.1)); // refresh: b is now oldest
+        assert_eq!(cache.insert(c.clone(), 0.3), 1);
+        assert_eq!(cache.lookup(&b), None);
+        assert_eq!(cache.lookup(&a), Some(0.1)); // refresh again: c oldest
+        assert_eq!(cache.insert(d, 0.4), 1);
+        assert_eq!(cache.lookup(&c), None);
+        assert_eq!(cache.lookup(&a), Some(0.1));
+    }
+
+    #[test]
+    fn byte_cap_bounds_resident_size() {
+        let probe = window_key(&win(vec![vec![0.0]]));
+        let cache = LaneCache::new(CacheConfig {
+            entries: usize::MAX,
+            bytes: key_bytes(&probe) * 3,
+        });
+        for i in 0..10u32 {
+            cache.insert(window_key(&win(vec![vec![i as f32]])), i as f64);
+        }
+        // Only the 3 newest single-sample keys fit under the byte cap.
+        for i in 0..7u32 {
+            assert_eq!(cache.lookup(&window_key(&win(vec![vec![i as f32]]))), None);
+        }
+        for i in 7..10u32 {
+            assert_eq!(
+                cache.lookup(&window_key(&win(vec![vec![i as f32]]))),
+                Some(i as f64)
+            );
+        }
+    }
+
+    #[test]
+    fn flights_lead_attach_release_ok_and_err() {
+        let cache = LaneCache::new(CacheConfig::default());
+        let key = window_key(&win(vec![vec![7.0]]));
+
+        // First caller leads; its follower closure must not run.
+        assert!(cache.lead_or_attach(&key, || unreachable!("leader builds no follower")));
+        assert_eq!(cache.flights(), 1);
+
+        // An async and a blocking follower attach to the open flight.
+        let (ticket, slot) = Ticket::raw(5, Arc::from("t"));
+        assert!(!cache.lead_or_attach(&key, || Follower::Async { id: 5, slot }));
+        let (reply, rx) = channel();
+        assert!(cache.attach(&key, || Follower::Blocking { id: 9, reply }));
+        // Blocking attach on a fresh key refuses to lead.
+        let fresh = window_key(&win(vec![vec![8.0]]));
+        let (lonely, _lonely_rx) = channel::<Response>();
+        assert!(!cache.attach(&fresh, || Follower::Blocking { id: 1, reply: lonely }));
+
+        // Release Ok: both followers see the score under their own id.
+        let resp = Response {
+            id: 1,
+            score: 0.5,
+            is_anomaly: false,
+            queue_us: 1.0,
+            service_us: 2.0,
+            e2e_us: 3.0,
+        };
+        cache.release(&key, &Ok(resp));
+        assert_eq!(cache.flights(), 0);
+        let got = ticket.wait().expect("async follower completed");
+        assert_eq!((got.id, got.score), (5, 0.5));
+        let got = rx.recv().expect("blocking follower completed");
+        assert_eq!((got.id, got.score), (9, 0.5));
+
+        // Release Err: async follower poisoned, blocking sender dropped.
+        assert!(cache.lead_or_attach(&key, || unreachable!()));
+        let (ticket, slot) = Ticket::raw(11, Arc::from("t"));
+        assert!(!cache.lead_or_attach(&key, || Follower::Async { id: 11, slot }));
+        let (reply, rx) = channel();
+        assert!(cache.attach(&key, || Follower::Blocking { id: 12, reply }));
+        cache.release(&key, &Err(SubmitError::Cancelled));
+        assert_eq!(ticket.wait(), Err(SubmitError::Cancelled));
+        assert!(rx.recv().is_err(), "blocking follower's sender must be dropped");
+
+        // Releasing a key with no flight is a no-op.
+        cache.release(&key, &Err(SubmitError::Closed));
+        assert_eq!(cache.flights(), 0);
+    }
+}

@@ -37,6 +37,7 @@ use crate::model::{LstmAutoencoder, Topology};
 use crate::util::table::Table;
 use crate::workload::Window;
 
+use super::cache::{window_key, CacheConfig, CacheKey, Follower, LaneCache};
 use super::front::{CancelSet, CompletionRouter};
 use super::{
     batcher, Autoscaler, AutoscalePolicy, Backend, BatcherMsg, QuantBackend, Request, Response,
@@ -99,6 +100,9 @@ struct WorkerSet {
     /// The lane's cancelled-request marks; workers drop marked requests
     /// from a batch before scoring it.
     cancels: CancelSet,
+    /// The lane's score cache, shared with the submit paths: workers
+    /// populate it after scoring cache-miss requests.
+    cache: Option<Arc<LaneCache>>,
     /// Producer side of the batch queue, kept so retirement messages can
     /// be injected behind the batcher's traffic. Dropped (`None`) at
     /// shutdown so workers see a disconnected channel and exit.
@@ -124,12 +128,13 @@ impl WorkerSet {
         let metrics = self.metrics.clone();
         let threshold = self.threshold;
         let cancels = self.cancels.clone();
+        let cache = self.cache.clone();
         let alive = self.alive.clone();
         let pending_retire = self.pending_retire.clone();
         let handle = std::thread::Builder::new()
             .name(format!("scr{wid}:{}", self.lane))
             .spawn(move || {
-                worker_loop(backend, rx, metrics, threshold, cancels, alive, pending_retire)
+                worker_loop(backend, rx, metrics, threshold, cancels, cache, alive, pending_retire)
             })
             .expect("spawn worker");
         let mut handles = self.handles.lock().unwrap();
@@ -210,6 +215,10 @@ pub struct Lane {
     /// The async front's completion router: one thread multiplexing every
     /// [`Lane::submit_async`] reply on this lane (see [`super::front`]).
     front: CompletionRouter,
+    /// The lane's exact-match score cache + single-flight map, when the
+    /// config enables one (see [`super::cache`]). Shared with the worker
+    /// set, which populates it after scoring miss requests.
+    cache: Option<Arc<LaneCache>>,
     /// Autoscaling decisions applied to this lane (scale-ups, downs).
     scale_ups: AtomicU64,
     scale_downs: AtomicU64,
@@ -234,6 +243,12 @@ impl Lane {
         // One cancel set per lane, shared by tickets (writers), the
         // batcher, the workers, and the completion router (consumers).
         let cancels: CancelSet = Arc::default();
+        // `entries == 0` means off — the CLI's `--cache-entries 0`.
+        let cache = cfg
+            .cache
+            .as_ref()
+            .filter(|c| c.entries > 0)
+            .map(|c| Arc::new(LaneCache::new(c.clone())));
         let batcher = {
             let cfg2 = cfg.clone();
             let out = batch_tx.clone();
@@ -250,6 +265,7 @@ impl Lane {
             metrics: metrics.clone(),
             threshold: cfg.threshold,
             cancels: cancels.clone(),
+            cache: cache.clone(),
             batch_tx: Mutex::new(Some(batch_tx)),
             batch_rx,
             alive: Arc::new(AtomicUsize::new(0)),
@@ -273,6 +289,7 @@ impl Lane {
             batcher: Mutex::new(Some(batcher)),
             workers,
             front,
+            cache,
             scale_ups: AtomicU64::new(0),
             scale_downs: AtomicU64::new(0),
         }
@@ -358,6 +375,7 @@ impl Lane {
         &self,
         id: u64,
         window: Window,
+        key: Option<CacheKey>,
         reply: std::sync::mpsc::Sender<Response>,
     ) -> Result<(), SubmitError> {
         // Held across the send so a concurrent shutdown cannot slot its
@@ -373,7 +391,7 @@ impl Lane {
             self.metrics.on_rejected_closed();
             return Err(SubmitError::Closed);
         }
-        let req = Request { id, window, submitted: Instant::now(), reply };
+        let req = Request { id, window, submitted: Instant::now(), key, reply };
         match self.tx.try_send(BatcherMsg::Req(req)) {
             Ok(()) => {
                 self.metrics.on_submit();
@@ -398,10 +416,64 @@ impl Lane {
     /// [`SubmitError::Closed`] after shutdown — never blocks, never
     /// queues unboundedly.
     pub fn try_submit(&self, window: Window) -> Result<Receiver<Response>, SubmitError> {
+        let started = Instant::now();
         let (reply, rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.submit_inner(id, window, reply)?;
+        if let Some(cache) = &self.cache {
+            // Same fast-fail gate rule as submit_inner, checked up front:
+            // a closed lane never answers from its cache.
+            if !self.gate_open() {
+                self.metrics.on_rejected_closed();
+                return Err(SubmitError::Closed);
+            }
+            let key = window_key(&window);
+            if let Some(score) = cache.lookup(&key) {
+                self.metrics.on_cache_hit();
+                let _ = reply.send(self.cached_response(id, score, started));
+                return Ok(rx);
+            }
+            // Blocking submits only ever *join* a flight — a blocking
+            // leader has no completion hook, so a worker panic would
+            // strand its followers. A blocking miss with no open flight
+            // takes the normal admission path (two concurrent blocking
+            // misses may both score; bit-identity makes that harmless).
+            if cache.attach(&key, || Follower::Blocking { id, reply: reply.clone() }) {
+                self.metrics.on_coalesced();
+                return Ok(rx);
+            }
+            self.submit_inner(id, window, Some(key), reply)?;
+            return Ok(rx);
+        }
+        self.submit_inner(id, window, None, reply)?;
         Ok(rx)
+    }
+
+    /// Whether the admission gate is open right now (same fast-fail rule
+    /// as `submit_inner`: a write-locked gate means teardown in progress).
+    fn gate_open(&self) -> bool {
+        match self.accepting.try_read() {
+            Ok(g) => *g,
+            Err(_) => false,
+        }
+    }
+
+    /// A response synthesized from a cached score: zero queue/service
+    /// time (the request never entered the lane), real e2e wall time.
+    fn cached_response(&self, id: u64, score: f64, started: Instant) -> Response {
+        Response {
+            id,
+            score,
+            is_anomaly: score > self.threshold,
+            queue_us: 0.0,
+            service_us: 0.0,
+            e2e_us: started.elapsed().as_secs_f64() * 1e6,
+        }
+    }
+
+    /// Single-flight entries currently open on this lane (leaders
+    /// submitted, outcome not yet fanned out). Zero when uncached.
+    pub fn coalescing_inflight(&self) -> usize {
+        self.cache.as_ref().map_or(0, |c| c.flights())
     }
 
     /// Nonblocking submit: returns a [`Ticket`] immediately instead of a
@@ -413,7 +485,63 @@ impl Lane {
     /// client thread can hold thousands of requests in flight. See
     /// [`super::front`] for the ticket lifecycle.
     pub fn submit_async(&self, window: Window) -> Result<Ticket, SubmitError> {
+        let started = Instant::now();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let Some(cache) = self.cache.clone() else {
+            return self.submit_async_direct(id, window, None);
+        };
+        // Same fast-fail gate rule as submit_inner, checked up front: a
+        // closed lane never answers from its cache.
+        if !self.gate_open() {
+            self.metrics.on_rejected_closed();
+            return Err(SubmitError::Closed);
+        }
+        let key = window_key(&window);
+        if let Some(score) = cache.lookup(&key) {
+            self.metrics.on_cache_hit();
+            let (ticket, slot) = Ticket::raw(id, self.front.lane_name());
+            slot.complete(Ok(self.cached_response(id, score, started)));
+            return Ok(ticket);
+        }
+        // Single-flight election under the map lock: exactly one of N
+        // concurrent same-key submits leads; the rest attach raw tickets
+        // the leader's outcome will complete.
+        let mut follower = None;
+        let leads = cache.lead_or_attach(&key, || {
+            let (ticket, slot) = Ticket::raw(id, self.front.lane_name());
+            follower = Some(ticket);
+            Follower::Async { id, slot }
+        });
+        if !leads {
+            self.metrics.on_coalesced();
+            return Ok(follower.expect("attaching built a follower ticket"));
+        }
+        match self.submit_async_direct(id, window, Some(key.clone())) {
+            Ok(ticket) => {
+                // Fan the leader's outcome — Ok, Cancelled, or the exit
+                // drain's Closed after a worker panic — out to followers.
+                // `observe` fires even if completion raced this attach.
+                let fan = cache.clone();
+                ticket.observe(move |outcome| fan.release(&key, outcome));
+                Ok(ticket)
+            }
+            Err(e) => {
+                // The leader never entered the lane (shed/closed):
+                // poison any followers that raced in behind it.
+                cache.release(&key, &Err(e.clone()));
+                Err(e)
+            }
+        }
+    }
+
+    /// The uncached async submit: issue a router slot, then run the
+    /// shared admission path.
+    fn submit_async_direct(
+        &self,
+        id: u64,
+        window: Window,
+        key: Option<CacheKey>,
+    ) -> Result<Ticket, SubmitError> {
         // Register the completion slot before the request can enter the
         // queue, so the reply can never beat the registration.
         let (ticket, reply) = match self.front.issue(id) {
@@ -425,7 +553,7 @@ impl Lane {
                 return Err(e);
             }
         };
-        match self.submit_inner(id, window, reply) {
+        match self.submit_inner(id, window, key, reply) {
             Ok(()) => Ok(ticket),
             Err(e) => {
                 self.front.revoke(id);
@@ -502,12 +630,17 @@ impl Drop for WorkerExitGuard {
     }
 }
 
+// Eight parameters because the worker IS the junction of every lane
+// subsystem (backend, queue, metrics, cancellation, cache, lifecycle);
+// a params struct would only add noise at the single call site.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     backend: Arc<dyn Backend>,
     rx: Arc<Mutex<Receiver<WorkerMsg>>>,
     metrics: Arc<ServerMetrics>,
     threshold: f64,
     cancels: CancelSet,
+    cache: Option<Arc<LaneCache>>,
     alive: Arc<AtomicUsize>,
     pending_retire: Arc<AtomicUsize>,
 ) {
@@ -564,6 +697,17 @@ fn worker_loop(
                 e2e_us,
             };
             metrics.on_response(&resp);
+            // Populate the cache BEFORE replying: by the time any waiter
+            // (or coalesced follower) observes this response, a repeat of
+            // the same window is already a hit — the miss→hit sequence
+            // in the integration tests is deterministic because of this
+            // ordering.
+            if let (Some(cache), Some(key)) = (&cache, &req.key) {
+                let evicted = cache.insert(key.clone(), score);
+                if evicted > 0 {
+                    metrics.on_cache_evictions(evicted);
+                }
+            }
             let _ = req.reply.send(resp);
         }
     }
@@ -687,8 +831,10 @@ impl ModelRegistry {
             "workers",
             "repl",
             "scale +/-",
+            "cache h/c",
         ]);
         let (mut sub, mut shed, mut comp, mut anom) = (0u64, 0u64, 0u64, 0u64);
+        let (mut hits, mut coal) = (0u64, 0u64);
         for lane in self.lanes.values() {
             let m = lane.metrics();
             let (p50, p95, _) = m.e2e_percentiles_us();
@@ -706,15 +852,20 @@ impl ModelRegistry {
                 lane.workers().to_string(),
                 lane.pipeline_replicas().map_or_else(|| "-".to_string(), |r| r.to_string()),
                 format!("{ups}/{downs}"),
+                format!("{}/{}", m.cache_hits(), m.coalesced()),
             ]);
             sub += m.submitted();
             shed += m.shed();
             comp += m.completed();
             anom += m.anomalies();
+            hits += m.cache_hits();
+            coal += m.coalesced();
         }
+        // Cache totals are always in the footer (even at zero) so soak
+        // harnesses can grep one stable line for the hit count.
         format!(
-            "{}fleet: {sub} submitted, {shed} shed, {comp} completed, {anom} flagged \
-             across {} lanes\n",
+            "{}fleet: {sub} submitted, {shed} shed, {comp} completed, {anom} flagged, \
+             {hits} cache hits, {coal} coalesced across {} lanes\n",
             t.render(),
             self.lanes.len()
         )
@@ -811,7 +962,14 @@ impl ModelRegistry {
         replicas: usize,
         autoscale: Option<AutoscalePolicy>,
     ) -> ModelRegistry {
-        Self::paper_fleet_opts(base_seed, mode, replicas, autoscale, PipelineOptions::default())
+        Self::paper_fleet_opts(
+            base_seed,
+            mode,
+            replicas,
+            autoscale,
+            PipelineOptions::default(),
+            None,
+        )
     }
 
     /// [`Self::paper_fleet_with`] plus fleet-wide engine options. When
@@ -820,12 +978,15 @@ impl ModelRegistry {
     /// the previous pooled lane's replicas end (`depth × replicas` cores
     /// per lane, wrapping modulo the online core count inside the
     /// pipeline), so two lanes' stage workers never contend for a pin.
+    /// `cache` applies the same score-cache config to every lane (`None`
+    /// runs the fleet uncached — the default everywhere else).
     pub fn paper_fleet_opts(
         base_seed: u64,
         mode: ExecMode,
         replicas: usize,
         autoscale: Option<AutoscalePolicy>,
         engine: PipelineOptions,
+        cache: Option<CacheConfig>,
     ) -> ModelRegistry {
         let mut reg = ModelRegistry::new();
         let mut next_core = engine.pin_base_core;
@@ -852,6 +1013,7 @@ impl ModelRegistry {
                 Arc::new(QuantBackend::with_engine_options(ae, mode, replicas, lane_engine));
             let cfg = ServerConfig {
                 autoscale: autoscale.clone(),
+                cache: cache.clone(),
                 ..Self::paper_lane_config(&topo, replicas)
             };
             reg.register(&topo.name, backend, cfg);
@@ -872,6 +1034,7 @@ impl ModelRegistry {
             queue_capacity: 1024,
             threshold: 0.05,
             autoscale: None,
+            cache: None,
         }
     }
 }
@@ -939,6 +1102,7 @@ mod tests {
             queue_capacity: 2,
             threshold: 1.0,
             autoscale: None,
+            cache: None,
         };
         let lane = Lane::start("gated", backend, cfg);
         // Worker blocks on the first batch; the batch queue (cap 2), the
@@ -1016,6 +1180,7 @@ mod tests {
             queue_capacity: 64,
             threshold: 1.0,
             autoscale: None,
+            cache: None,
         };
         let lane = Lane::start("panicky", Arc::new(PanickingBackend), cfg);
         assert_eq!(lane.workers(), 2);
@@ -1051,6 +1216,7 @@ mod tests {
             queue_capacity: 2,
             threshold: 1.0,
             autoscale: None,
+            cache: None,
         };
         let lane = Lane::start("conserve", backend, cfg);
         let attempts = 16u64;
@@ -1134,6 +1300,7 @@ mod tests {
             queue_capacity: 64,
             threshold: 1.0,
             autoscale: None,
+            cache: None,
         };
         let lane = Lane::start("cancel", backend, cfg);
         // First request occupies the worker behind the gate...

@@ -59,6 +59,11 @@ pub type Completion = Result<Response, SubmitError>;
 
 type Callback = Box<dyn FnOnce(Completion) + Send + 'static>;
 
+/// Internal completion observer (used by the score cache's single-flight
+/// fan-out): runs on the completing thread *before* the user-facing
+/// callback and set hook, borrowing the outcome rather than consuming it.
+type Observer = Box<dyn FnOnce(&Completion) + Send + 'static>;
+
 /// Hook installed by [`CompletionSet::add`]: on completion the router
 /// pushes `(key, outcome)` into the set's ready queue.
 struct SetHook {
@@ -69,6 +74,7 @@ struct SetHook {
 #[derive(Default)]
 struct TicketState {
     outcome: Option<Completion>,
+    observer: Option<Observer>,
     callback: Option<Callback>,
     hook: Option<SetHook>,
 }
@@ -91,19 +97,45 @@ impl TicketShared {
     /// Resolve the slot. Called exactly once per ticket — by the router
     /// on delivery, or by the router's exit drain with `Err(Closed)`.
     pub(crate) fn complete(&self, outcome: Completion) {
-        let (callback, hook) = {
+        let (observer, callback, hook) = {
             let mut st = self.state.lock().unwrap();
             debug_assert!(st.outcome.is_none(), "a ticket completes exactly once");
             st.outcome = Some(outcome.clone());
-            (st.callback.take(), st.hook.take())
+            (st.observer.take(), st.callback.take(), st.hook.take())
         };
         self.cond.notify_all();
+        // Observer first: single-flight followers must see the outcome no
+        // later than any user callback that might resubmit the window.
+        if let Some(obs) = observer {
+            obs(&outcome);
+        }
         if let Some(cb) = callback {
             cb(outcome.clone());
         }
         if let Some(h) = hook {
             h.set.push(h.key, outcome);
         }
+    }
+
+    /// Register an internal observer; if the outcome already arrived, `f`
+    /// runs immediately on the calling thread (so attach-after-delivery
+    /// races still fire exactly once).
+    pub(crate) fn observe<F>(&self, f: F)
+    where
+        F: FnOnce(&Completion) + Send + 'static,
+    {
+        let outcome = {
+            let mut st = self.state.lock().unwrap();
+            match st.outcome.clone() {
+                Some(o) => o,
+                None => {
+                    debug_assert!(st.observer.is_none(), "one observer per ticket");
+                    st.observer = Some(Box::new(f));
+                    return;
+                }
+            }
+        };
+        f(&outcome);
     }
 }
 
@@ -235,6 +267,16 @@ impl Ticket {
         }
     }
 
+    /// Register the ticket's internal completion observer (see
+    /// [`TicketShared::observe`]); the lane attaches the score cache's
+    /// single-flight fan-out here after a leader submission.
+    pub(crate) fn observe<F>(&self, f: F)
+    where
+        F: FnOnce(&Completion) + Send + 'static,
+    {
+        self.shared.observe(f);
+    }
+
     /// Cancel a still-queued request: actively **removes** it from the
     /// lane (the batcher and workers drop a marked request instead of
     /// scoring it, counting it in
@@ -354,6 +396,12 @@ impl CompletionRouter {
     /// Async submissions currently awaiting delivery (registered slots).
     pub(crate) fn inflight(&self) -> usize {
         self.slots.lock().unwrap().len()
+    }
+
+    /// The lane name shared into issued tickets — also used for raw
+    /// tickets the lane completes itself (cache hits).
+    pub(crate) fn lane_name(&self) -> Arc<str> {
+        self.name.clone()
     }
 
     /// Drop the retained sender and join the router thread. Call only
@@ -588,6 +636,27 @@ mod tests {
         let (tx, rx) = channel();
         t.on_complete(move |o| tx.send(o.is_err()).unwrap());
         assert!(rx.try_recv().unwrap(), "late registration must fire synchronously");
+    }
+
+    #[test]
+    fn observer_runs_before_callback_and_immediately_when_late() {
+        // Registered before completion: observer fires at delivery, and
+        // strictly before the user callback.
+        let log: Arc<Mutex<Vec<(&str, bool)>>> = Arc::default();
+        let (t, slot) = ticket(1);
+        let l = log.clone();
+        t.observe(move |o| l.lock().unwrap().push(("observer", o.is_ok())));
+        let l = log.clone();
+        t.on_complete(move |o| l.lock().unwrap().push(("callback", o.is_ok())));
+        slot.complete(Ok(resp(1, 0.5)));
+        assert_eq!(*log.lock().unwrap(), vec![("observer", true), ("callback", true)]);
+        // Registered after completion: fires synchronously on the caller.
+        let (t, slot) = ticket(2);
+        slot.complete(Err(SubmitError::Closed));
+        let log: Arc<Mutex<Vec<bool>>> = Arc::default();
+        let l = log.clone();
+        t.observe(move |o| l.lock().unwrap().push(o.is_err()));
+        assert_eq!(*log.lock().unwrap(), vec![true], "late observe must fire synchronously");
     }
 
     #[test]

@@ -54,6 +54,16 @@ pub struct ServerMetrics {
     shards_suspect: AtomicUsize,
     shards_draining: AtomicUsize,
     shards_down: AtomicUsize,
+    /// Submissions answered straight from the lane's score cache — never
+    /// admitted, so counted beside (not inside) `submitted`: the call-level
+    /// accounting becomes calls = `submitted` + `shed` + `rejected_closed`
+    /// + `cache_hits` + `coalesced`.
+    cache_hits: AtomicU64,
+    /// Submissions that attached to an in-flight identical window
+    /// (single-flight followers) instead of occupying a batch slot.
+    coalesced: AtomicU64,
+    /// Entries evicted from the score cache (entry-count or byte cap).
+    cache_evictions: AtomicU64,
     completed: AtomicU64,
     anomalies: AtomicU64,
     batches: AtomicU64,
@@ -94,6 +104,9 @@ impl ServerMetrics {
             shards_suspect: AtomicUsize::new(0),
             shards_draining: AtomicUsize::new(0),
             shards_down: AtomicUsize::new(0),
+            cache_hits: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            cache_evictions: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             anomalies: AtomicU64::new(0),
             batches: AtomicU64::new(0),
@@ -176,6 +189,21 @@ impl ServerMetrics {
         self.shards_suspect.store(suspect, Ordering::Relaxed);
         self.shards_draining.store(draining, Ordering::Relaxed);
         self.shards_down.store(down, Ordering::Relaxed);
+    }
+
+    /// A submission was answered from the score cache without admission.
+    pub fn on_cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A submission attached to an in-flight identical window.
+    pub fn on_coalesced(&self) {
+        self.coalesced.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` entries were evicted from the score cache by one insert.
+    pub fn on_cache_evictions(&self, n: u64) {
+        self.cache_evictions.fetch_add(n, Ordering::Relaxed);
     }
 
     /// The batcher popped one request out of the admission queue.
@@ -284,6 +312,22 @@ impl ServerMetrics {
         )
     }
 
+    /// Submissions answered from the score cache (never admitted).
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    /// Submissions that rode an in-flight identical window to completion
+    /// (single-flight followers — zero batch slots occupied).
+    pub fn coalesced(&self) -> u64 {
+        self.coalesced.load(Ordering::Relaxed)
+    }
+
+    /// Score-cache entries evicted so far (entry-count or byte cap).
+    pub fn cache_evictions(&self) -> u64 {
+        self.cache_evictions.load(Ordering::Relaxed)
+    }
+
     pub fn completed(&self) -> u64 {
         self.completed.load(Ordering::Relaxed)
     }
@@ -363,6 +407,14 @@ impl ServerMetrics {
         }
         if self.shard_failovers() > 0 {
             extra.push_str(&format!(" | {} shard failovers", self.shard_failovers()));
+        }
+        if self.cache_hits() + self.coalesced() + self.cache_evictions() > 0 {
+            extra.push_str(&format!(
+                " | cache: {} hits, {} coalesced, {} evictions",
+                self.cache_hits(),
+                self.coalesced(),
+                self.cache_evictions(),
+            ));
         }
         if self.health_probes() > 0 {
             extra.push_str(&format!(
@@ -484,6 +536,22 @@ mod tests {
         let report = m.report();
         assert!(report.contains("2 cancelled"), "{report}");
         assert!(report.contains("1 shard failovers"), "{report}");
+    }
+
+    #[test]
+    fn cache_counters_surface_in_the_report() {
+        let m = ServerMetrics::new();
+        assert_eq!((m.cache_hits(), m.coalesced(), m.cache_evictions()), (0, 0, 0));
+        assert!(!m.report().contains("cache:"), "quiet report must omit the cache segment");
+        m.on_cache_hit();
+        m.on_cache_hit();
+        m.on_coalesced();
+        m.on_cache_evictions(3);
+        assert_eq!(m.cache_hits(), 2);
+        assert_eq!(m.coalesced(), 1);
+        assert_eq!(m.cache_evictions(), 3);
+        let report = m.report();
+        assert!(report.contains("cache: 2 hits, 1 coalesced, 3 evictions"), "{report}");
     }
 
     #[test]

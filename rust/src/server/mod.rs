@@ -60,6 +60,7 @@
 pub mod autoscale;
 pub mod backend;
 pub mod batcher;
+pub mod cache;
 pub mod fabric;
 pub mod front;
 pub mod metrics;
@@ -67,6 +68,7 @@ pub mod shard;
 
 pub use autoscale::{Autoscaler, AutoscalePolicy, ScaleDecision};
 pub use backend::{Backend, PjrtBackend, QuantBackend, ThrottledBackend};
+pub use cache::CacheConfig;
 pub use fabric::{FleetLoad, Lane, ModelRegistry, SubmitError};
 pub use front::{Completion, CompletionSet, Ticket};
 pub use metrics::ServerMetrics;
@@ -120,6 +122,10 @@ pub struct ServerConfig {
     /// backend's pipeline-replica pool, where one exists) between the
     /// policy's bounds. See [`autoscale`].
     pub autoscale: Option<AutoscalePolicy>,
+    /// Per-lane exact-match score cache + single-flight coalescing (see
+    /// [`cache`]). `None` (the default) runs the lane uncached; a config
+    /// with `entries == 0` is also treated as off.
+    pub cache: Option<CacheConfig>,
 }
 
 impl Default for ServerConfig {
@@ -131,6 +137,7 @@ impl Default for ServerConfig {
             queue_capacity: 1024,
             threshold: 0.05,
             autoscale: None,
+            cache: None,
         }
     }
 }
@@ -153,6 +160,9 @@ pub(crate) struct Request {
     id: u64,
     window: Window,
     submitted: Instant,
+    /// Cache key for worker-side population — present exactly when the
+    /// lane's score cache admitted this request as a miss.
+    key: Option<cache::CacheKey>,
     reply: Sender<Response>,
 }
 

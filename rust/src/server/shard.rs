@@ -59,6 +59,22 @@
 //!
 //! Membership is dynamic the other way too: [`ShardRouter::add_shard`]
 //! admits a new shard into a running fleet.
+//!
+//! # Why routing is not cache-aware
+//!
+//! Shards may run per-lane score caches (`--cache-entries`), and one
+//! could imagine key-affinity routing — hash the window, pin it to a
+//! shard — to concentrate hits. The router deliberately does **not** do
+//! this. Key affinity fights both pillars above: it overrides the
+//! power-of-two health-weighted choice (a hot key would keep hammering
+//! its home shard no matter how backlogged), and it breaks down exactly
+//! when the control plane matters most — on suspect/dead demotion the
+//! affinity map would need rehashing, turning every failover into a
+//! fleet-wide cache invalidation. Instead caches live server-side, one
+//! per lane: each shard warms independently, a repeat-heavy trace still
+//! hits on every shard it lands on (duplicating some resident bytes,
+//! bounded by `--cache-bytes`), and routing stays a pure load/health
+//! decision that keeps working unchanged through failover and rejoin.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};

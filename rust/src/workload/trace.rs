@@ -146,6 +146,59 @@ pub fn rotating_hot_poisson(
         .collect()
 }
 
+/// A Zipf-skewed repeat-heavy trace for score-cache experiments: one
+/// global Poisson arrival stream at `total_rate`, each arrival routed
+/// uniformly to a model and drawing its window from that model's fixed
+/// pool of `pool` pre-generated benign windows with Zipf(`s`) rank
+/// probabilities — rank `k` (1-based) arrives with probability
+/// `∝ 1/k^s`. At `s ≈ 1.1` the head ranks dominate, so identical
+/// windows repeat constantly: the periodic-sensor / retry-storm /
+/// dashboard-fan-out shape an exact-match cache exists for.
+///
+/// Deterministic for a given `base_seed`: pools derive from
+/// `base_seed + i` per model (the [`merged_poisson`] convention), the
+/// arrival/rank stream from `base_seed + 3000`. Windows for model `i`
+/// are drawn at that model's feature width.
+pub fn zipf_poisson(
+    models: &[Topology],
+    base_seed: u64,
+    total_rate: f64,
+    total_n: usize,
+    t: usize,
+    pool: usize,
+    s: f64,
+) -> Vec<(usize, TimedRequest)> {
+    assert!(!models.is_empty(), "zipf_poisson needs at least one model");
+    assert!(total_rate > 0.0 && pool >= 1);
+    let pools: Vec<Vec<Window>> = models
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            let mut gen = TelemetryGen::new(m.features, base_seed + i as u64);
+            (0..pool).map(|_| gen.benign_window(t)).collect()
+        })
+        .collect();
+    // Zipf CDF over ranks (unnormalized; draws scale by the total mass).
+    let mut cdf = Vec::with_capacity(pool);
+    let mut acc = 0.0f64;
+    for k in 0..pool {
+        acc += 1.0 / ((k + 1) as f64).powf(s);
+        cdf.push(acc);
+    }
+    let total = acc;
+    let mut rng = Xoshiro256::seeded(base_seed.wrapping_add(3000));
+    let mut at = 0.0f64;
+    (0..total_n)
+        .map(|i| {
+            at += rng.exponential(total_rate);
+            let mi = rng.below(models.len() as u64) as usize;
+            let u = rng.next_f64() * total;
+            let rank = cdf.partition_point(|&c| c < u).min(pool - 1);
+            (mi, TimedRequest { at_s: at, window: pools[mi][rank].clone(), id: i as u64 })
+        })
+        .collect()
+}
+
 /// Outcome of an open-loop async replay ([`replay_async`]). Admission
 /// accounting is exhaustive: `accepted + shed + rejected` equals the
 /// trace length, and after the trailing drain `completed + failed`
@@ -727,6 +780,51 @@ mod tests {
         let trace = rotating_hot_poisson(&models, 3, 500.0, 100, 2, 0.0, 1.0, 50);
         assert!(trace[..50].iter().all(|(mi, _)| *mi == 0));
         assert!(trace[50..].iter().all(|(mi, _)| *mi == 1));
+    }
+
+    #[test]
+    fn zipf_trace_is_skewed_ordered_and_repeat_heavy() {
+        let models = Topology::paper_models();
+        let n = 2000;
+        let pool = 64;
+        let trace = zipf_poisson(&models, 17, 2000.0, n, 4, pool, 1.1);
+        assert_eq!(trace.len(), n);
+        // Arrival-ordered (single global stream).
+        for w in trace.windows(2) {
+            assert!(w[1].1.at_s >= w[0].1.at_s);
+        }
+        // Windows carry each model's feature width.
+        for (mi, req) in &trace {
+            assert_eq!(req.window.data[0].len(), models[*mi].features);
+        }
+        // Zipf head dominance: count occurrences of each distinct window
+        // (by raw bits). For s = 1.1 over a pool of 64 the top rank holds
+        // ~24% of the per-model mass; 15% is a comfortable floor, while a
+        // uniform draw would sit near 1/64 ≈ 1.6%.
+        let mut counts: HashMap<Vec<u32>, usize> = HashMap::new();
+        for (mi, req) in &trace {
+            let mut bits: Vec<u32> = vec![*mi as u32];
+            for row in &req.window.data {
+                bits.extend(row.iter().map(|v| v.to_bits()));
+            }
+            *counts.entry(bits).or_insert(0) += 1;
+        }
+        assert!(
+            counts.len() < n,
+            "a repeat-heavy trace must reuse windows ({} distinct of {n})",
+            counts.len()
+        );
+        assert!(
+            counts.len() > models.len(),
+            "the tail must still appear ({} distinct)",
+            counts.len()
+        );
+        let top = *counts.values().max().unwrap();
+        assert!(
+            top as f64 > 0.15 * (n as f64 / models.len() as f64),
+            "head rank must dominate its lane: top {top} of {n} over {} models",
+            models.len()
+        );
     }
 
     #[test]

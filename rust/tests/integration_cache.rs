@@ -1,0 +1,510 @@
+//! Integration: the per-lane score cache with single-flight coalescing —
+//! hit, miss, and coalesced paths are bit-identical to
+//! `ExecMode::Sequential` across all four paper topologies, admission
+//! accounting extends conservatively to the new counters, followers of a
+//! cancelled or panicked leader resolve `Err` instead of hanging, and a
+//! Zipf-skewed replay occupies strictly fewer batch slots than the same
+//! trace uncached at equal offered load.
+
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+use lstm_ae_accel::engine::{ExecMode, PipelineOptions};
+use lstm_ae_accel::model::{LstmAutoencoder, Topology};
+use lstm_ae_accel::server::{
+    Backend, CacheConfig, ModelRegistry, QuantBackend, ServerConfig, SubmitError,
+};
+use lstm_ae_accel::workload::trace::{replay_async, zipf_poisson};
+use lstm_ae_accel::workload::{TelemetryGen, Window};
+
+fn wait_for(mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !cond() {
+        if Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    true
+}
+
+/// Real quantized scoring behind a gate: the worker blocks inside
+/// `score_batch` until the test drops the gate sender, making in-flight
+/// (coalescible) windows deterministic while scores stay bit-checkable
+/// against `score_quant`.
+struct GatedQuant {
+    inner: QuantBackend,
+    gate: Mutex<Receiver<()>>,
+}
+
+impl Backend for GatedQuant {
+    fn name(&self) -> String {
+        "gated-quant".into()
+    }
+
+    fn score_batch(&self, windows: &[&Window]) -> Vec<f64> {
+        let _ = self.gate.lock().unwrap().recv();
+        self.inner.score_batch(windows)
+    }
+}
+
+/// Gate-only backend for accounting tests where the score value is
+/// irrelevant: every window scores 0.0 once the gate drops.
+struct GatedZero {
+    gate: Mutex<Receiver<()>>,
+}
+
+impl Backend for GatedZero {
+    fn name(&self) -> String {
+        "gated-zero".into()
+    }
+
+    fn score_batch(&self, windows: &[&Window]) -> Vec<f64> {
+        let _ = self.gate.lock().unwrap().recv();
+        vec![0.0; windows.len()]
+    }
+}
+
+/// Panics on the marker window — kills its worker mid-batch (same idiom
+/// as the orphaned-ticket test in integration_front).
+struct PanickingBackend;
+
+impl Backend for PanickingBackend {
+    fn name(&self) -> String {
+        "panicking".into()
+    }
+
+    fn score_batch(&self, windows: &[&Window]) -> Vec<f64> {
+        if windows.iter().any(|w| w.data[0][0] == 666.0) {
+            panic!("injected backend failure (expected by integration_cache)");
+        }
+        vec![0.0; windows.len()]
+    }
+}
+
+#[test]
+fn cached_paths_are_bit_identical_to_sequential_on_all_paper_topologies() {
+    // Four lanes with the default cache on, plus per-model reference
+    // scorers rebuilt from the same seeds: the miss path (scored by the
+    // lane), the async hit path (served from cache), and the blocking
+    // hit path must all return the exact `score_quant` bits.
+    let mut registry = ModelRegistry::new();
+    let mut refs = Vec::new();
+    for (i, topo) in Topology::paper_models().into_iter().enumerate() {
+        let seed = 700 + i as u64;
+        let backend = Arc::new(QuantBackend::with_options(
+            LstmAutoencoder::random(topo.clone(), seed),
+            ExecMode::Auto,
+            2,
+        ));
+        let cfg = ServerConfig {
+            cache: Some(CacheConfig::default()),
+            ..ModelRegistry::paper_lane_config(&topo, 2)
+        };
+        registry.register(&topo.name, backend, cfg);
+        let reference = LstmAutoencoder::random(topo.clone(), seed);
+        let gen = TelemetryGen::new(topo.features, 760 + i as u64);
+        refs.push((topo.name, reference, gen));
+    }
+    for (name, reference, gen) in refs.iter_mut() {
+        for t in [4usize, 8, 6, 1] {
+            let w = gen.benign_window(t);
+            let want = reference.score_quant(&w.data).to_bits();
+            // Miss: the lane backend scores the window, and the worker
+            // populates the cache before replying — so by the time this
+            // wait returns, the next submit of `w` is a guaranteed hit.
+            let miss = registry
+                .submit_async(name, w.clone())
+                .expect("admitted")
+                .wait()
+                .expect("miss completes");
+            assert_eq!(miss.score.to_bits(), want, "{name}: miss path must match sequential");
+            let hit = registry
+                .submit_async(name, w.clone())
+                .expect("admitted")
+                .wait()
+                .expect("cached hit completes");
+            assert_eq!(hit.score.to_bits(), want, "{name}: async hit must match sequential");
+            let blocking = registry.submit(name, w).expect("admitted").recv().expect("reply");
+            assert_eq!(
+                blocking.score.to_bits(),
+                want,
+                "{name}: blocking hit must match sequential"
+            );
+        }
+        let m = registry.lane(name).unwrap().metrics();
+        assert_eq!(m.submitted(), 4, "{name}: only the four misses occupy the lane");
+        assert_eq!(m.cache_hits(), 8, "{name}: one async + one blocking hit per window");
+        assert_eq!(m.coalesced(), 0, "{name}: nothing was in flight at submit time");
+    }
+    registry.shutdown();
+}
+
+#[test]
+fn coalesced_followers_score_bit_identical_across_topologies() {
+    // Per topology: a gated plug occupies the single worker, a leader
+    // window queues behind it, then three async followers and one
+    // blocking follower coalesce onto the leader's flight. Dropping the
+    // gate must fan the leader's exact score bits out to all five.
+    for (i, topo) in Topology::paper_models().into_iter().enumerate() {
+        let seed = 720 + i as u64;
+        let (gate_tx, gate_rx) = channel::<()>();
+        let backend = Arc::new(GatedQuant {
+            inner: QuantBackend::with_options(
+                LstmAutoencoder::random(topo.clone(), seed),
+                ExecMode::Auto,
+                2,
+            ),
+            gate: Mutex::new(gate_rx),
+        });
+        let mut registry = ModelRegistry::new();
+        let cfg = ServerConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(1),
+            workers: 1,
+            queue_capacity: 64,
+            threshold: 0.05,
+            autoscale: None,
+            cache: Some(CacheConfig::default()),
+        };
+        registry.register(&topo.name, backend, cfg);
+        let lane = registry.lane(&topo.name).unwrap();
+        let reference = LstmAutoencoder::random(topo.clone(), seed);
+        let mut gen = TelemetryGen::new(topo.features, 820 + i as u64);
+        let plug = gen.benign_window(4);
+        let w = gen.benign_window(6);
+        let want = reference.score_quant(&w.data).to_bits();
+
+        let plug_ticket = registry.submit_async(&topo.name, plug).expect("plug admitted");
+        let leader = registry.submit_async(&topo.name, w.clone()).expect("leader admitted");
+        let followers: Vec<_> = (0..3)
+            .map(|_| registry.submit_async(&topo.name, w.clone()).expect("follower attaches"))
+            .collect();
+        let blocking_rx = registry.submit(&topo.name, w.clone()).expect("blocking attaches");
+        let m = lane.metrics();
+        assert_eq!(m.submitted(), 2, "{}: plug + leader only", topo.name);
+        assert_eq!(m.coalesced(), 4, "{}: three async + one blocking", topo.name);
+        assert_eq!(m.cache_hits(), 0, "{}", topo.name);
+        assert_eq!(lane.coalescing_inflight(), 1, "{}: one keyed flight", topo.name);
+
+        drop(gate_tx);
+        assert!(plug_ticket.wait().is_ok());
+        let got = leader.wait().expect("leader completes").score.to_bits();
+        assert_eq!(got, want, "{}: leader must match sequential", topo.name);
+        for f in &followers {
+            let r = f.wait().expect("follower completes");
+            assert_eq!(r.score.to_bits(), want, "{}: follower bits must match", topo.name);
+        }
+        let b = blocking_rx.recv().expect("blocking follower gets the fanned-out reply");
+        assert_eq!(b.score.to_bits(), want, "{}: blocking follower bits must match", topo.name);
+        assert_eq!(m.batched_windows(), 2, "{}: coalescing freed four batch slots", topo.name);
+        assert_eq!(lane.coalescing_inflight(), 0, "{}", topo.name);
+        registry.shutdown();
+    }
+}
+
+#[test]
+fn barrier_coalescing_takes_one_batch_slot_for_n_concurrent_submits() {
+    // N threads released by a barrier all submit the same window while
+    // the worker is gated: exactly one leads (occupying the only batch
+    // slot ever used), the rest coalesce, and everyone gets identical
+    // score bits.
+    const N: usize = 8;
+    let topo = Topology::from_name("F32-D2").unwrap();
+    let seed = 730u64;
+    let (gate_tx, gate_rx) = channel::<()>();
+    let backend = Arc::new(GatedQuant {
+        inner: QuantBackend::with_options(
+            LstmAutoencoder::random(topo.clone(), seed),
+            ExecMode::Auto,
+            2,
+        ),
+        gate: Mutex::new(gate_rx),
+    });
+    let mut registry = ModelRegistry::new();
+    let cfg = ServerConfig {
+        max_batch: 1,
+        max_wait: Duration::from_micros(1),
+        workers: 1,
+        queue_capacity: 64,
+        threshold: 0.05,
+        autoscale: None,
+        cache: Some(CacheConfig::default()),
+    };
+    registry.register(&topo.name, backend, cfg);
+    let lane = registry.lane(&topo.name).unwrap();
+    let reference = LstmAutoencoder::random(topo.clone(), seed);
+    let mut gen = TelemetryGen::new(topo.features, 831);
+    let w = gen.benign_window(8);
+    let want = reference.score_quant(&w.data).to_bits();
+
+    let barrier = Barrier::new(N);
+    let tickets = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for _ in 0..N {
+            let wc = w.clone();
+            let barrier = &barrier;
+            let tickets = &tickets;
+            let registry = &registry;
+            s.spawn(move || {
+                barrier.wait();
+                let t = registry.submit_async("F32-D2", wc).expect("admitted or coalesced");
+                tickets.lock().unwrap().push(t);
+            });
+        }
+    });
+    let tickets = tickets.into_inner().unwrap();
+    assert_eq!(tickets.len(), N);
+    let m = lane.metrics();
+    assert_eq!(m.submitted(), 1, "exactly one leader occupies a batch slot");
+    assert_eq!(m.coalesced(), (N - 1) as u64, "everyone else attaches");
+    assert_eq!(lane.coalescing_inflight(), 1);
+
+    drop(gate_tx);
+    for t in &tickets {
+        let r = t.wait().expect("leader and followers all complete");
+        assert_eq!(r.score.to_bits(), want, "all N redemptions carry identical bits");
+    }
+    assert!(wait_for(|| m.completed() == 1));
+    assert_eq!(m.batched_windows(), 1, "one slot served all {N} submits");
+    assert_eq!(lane.coalescing_inflight(), 0);
+    assert!(wait_for(|| lane.async_inflight() == 0));
+    registry.shutdown();
+}
+
+#[test]
+fn admission_accounting_conserves_with_cache_counters() {
+    // Every call terminates in exactly one of: submitted (a batch-slot
+    // occupancy), shed, rejected_closed, cache_hits, coalesced — and the
+    // accepted-work law `submitted == completed + cancelled` is untouched
+    // by the cache.
+    let (gate_tx, gate_rx) = channel::<()>();
+    let backend = Arc::new(GatedZero { gate: Mutex::new(gate_rx) });
+    let mut registry = ModelRegistry::new();
+    let cfg = ServerConfig {
+        max_batch: 1,
+        max_wait: Duration::from_micros(1),
+        workers: 1,
+        queue_capacity: 2,
+        threshold: 1.0,
+        autoscale: None,
+        cache: Some(CacheConfig::default()),
+    };
+    registry.register("gated", backend, cfg);
+    let lane = registry.lane("gated").unwrap();
+    let hot = Window { data: vec![vec![7.0f32]], anomaly: None };
+    let mut calls = 0u64;
+    let mut tickets = Vec::new();
+    // Five submits of one window: one leads, four coalesce — none of the
+    // four occupies a queue slot, so they cannot shed.
+    for _ in 0..5 {
+        tickets.push(registry.submit_async("gated", hot.clone()).expect("lead or coalesce"));
+        calls += 1;
+    }
+    assert_eq!(lane.metrics().submitted(), 1);
+    assert_eq!(lane.metrics().coalesced(), 4);
+    // Distinct windows behind the gated worker until the bounded queue
+    // sheds: shed leaders must release their flight (nothing leaks).
+    let mut shed = 0u64;
+    for i in 0..6 {
+        let w = Window { data: vec![vec![100.0 + i as f32]], anomaly: None };
+        match registry.submit_async("gated", w) {
+            Ok(t) => tickets.push(t),
+            Err(SubmitError::Overloaded) => shed += 1,
+            Err(e) => panic!("unexpected {e}"),
+        }
+        calls += 1;
+    }
+    assert!(shed > 0, "six distinct windows must overflow a 2-deep queue");
+    // Accepted leaders (hot + each admitted distinct window) hold live
+    // flight entries behind the gate; shed leaders must have released
+    // theirs on the spot.
+    assert_eq!(lane.coalescing_inflight(), tickets.len() - 4, "shed leaders release flights");
+
+    drop(gate_tx);
+    for t in &tickets {
+        assert!(t.wait().is_ok(), "accepted and coalesced work all completes");
+    }
+    // The hot window is now resident: one more call is a pure hit.
+    let r = registry
+        .submit_async("gated", hot.clone())
+        .expect("cached")
+        .wait()
+        .expect("hit completes");
+    calls += 1;
+    assert_eq!(r.score, 0.0);
+    assert_eq!(lane.metrics().cache_hits(), 1);
+
+    registry.shutdown();
+    // Closed-lane rejections flow through the cached admission path's
+    // gate pre-check: a closed lane never serves from cache.
+    for _ in 0..2 {
+        assert!(matches!(
+            registry.submit_async("gated", hot.clone()),
+            Err(SubmitError::Closed)
+        ));
+        calls += 1;
+    }
+    assert!(matches!(registry.submit("gated", hot.clone()), Err(SubmitError::Closed)));
+    calls += 1;
+
+    let m = lane.metrics();
+    assert_eq!(m.shed(), shed);
+    assert_eq!(m.rejected_closed(), 3);
+    assert_eq!(
+        calls,
+        m.submitted() + m.shed() + m.rejected_closed() + m.cache_hits() + m.coalesced(),
+        "call-level conservation with the cache counters"
+    );
+    assert_eq!(m.cancelled(), 0);
+    assert_eq!(m.submitted(), m.completed() + m.cancelled(), "accepted-work law unchanged");
+}
+
+#[test]
+fn followers_on_a_panicked_leader_resolve_closed_not_hang() {
+    // The leader's worker dies without replying; its flight entry stays
+    // until shutdown's router drain poisons the leader with `Closed`,
+    // whose observer must fan the error out: async followers resolve
+    // `Err(Closed)`, the blocking follower's channel disconnects, and no
+    // router slot or flight entry leaks.
+    let mut registry = ModelRegistry::new();
+    let cfg = ServerConfig {
+        max_batch: 1,
+        max_wait: Duration::from_micros(1),
+        workers: 1,
+        queue_capacity: 64,
+        threshold: 1.0,
+        autoscale: None,
+        cache: Some(CacheConfig::default()),
+    };
+    registry.register("panicky", Arc::new(PanickingBackend), cfg);
+    let lane = registry.lane("panicky").unwrap();
+    let poison = Window { data: vec![vec![666.0f32]], anomaly: None };
+    let leader = registry.submit_async("panicky", poison.clone()).expect("admitted");
+    let follower = registry.submit_async("panicky", poison.clone()).expect("attaches");
+    let blocking_rx = registry.submit("panicky", poison.clone()).expect("attaches");
+    assert_eq!(lane.metrics().coalesced(), 2);
+    assert!(wait_for(|| lane.metrics().worker_panics() == 1), "panic must be counted");
+    // Nobody hangs on a bounded wait, nobody resolves early.
+    assert!(leader.wait_timeout(Duration::from_millis(100)).is_none());
+    assert!(follower.wait_timeout(Duration::from_millis(100)).is_none());
+    assert_eq!(lane.coalescing_inflight(), 1);
+    registry.shutdown();
+    assert_eq!(leader.wait().unwrap_err(), SubmitError::Closed);
+    assert_eq!(follower.wait().unwrap_err(), SubmitError::Closed);
+    assert!(blocking_rx.recv().is_err(), "blocking follower's sender is dropped on Err");
+    assert_eq!(lane.async_inflight(), 0, "no leaked router slots");
+    assert_eq!(lane.coalescing_inflight(), 0, "no leaked flight entries");
+}
+
+#[test]
+fn followers_on_a_cancelled_leader_resolve_cancelled() {
+    let (gate_tx, gate_rx) = channel::<()>();
+    let backend = Arc::new(GatedZero { gate: Mutex::new(gate_rx) });
+    let mut registry = ModelRegistry::new();
+    let cfg = ServerConfig {
+        max_batch: 1,
+        max_wait: Duration::from_micros(1),
+        workers: 1,
+        queue_capacity: 64,
+        threshold: 1.0,
+        autoscale: None,
+        cache: Some(CacheConfig::default()),
+    };
+    registry.register("gated", backend, cfg);
+    let lane = registry.lane("gated").unwrap();
+    let plug = Window { data: vec![vec![1.0f32]], anomaly: None };
+    let hot = Window { data: vec![vec![2.0f32]], anomaly: None };
+    let plug_ticket = registry.submit_async("gated", plug).expect("admitted");
+    let leader = registry.submit_async("gated", hot.clone()).expect("admitted");
+    let follower = registry.submit_async("gated", hot.clone()).expect("attaches");
+    assert_eq!(lane.metrics().coalesced(), 1);
+    // The leader is still queued behind the gated plug, so the cancel
+    // wins — and its observer must poison the follower immediately.
+    assert!(leader.cancel(), "leader is still queued");
+    assert_eq!(leader.wait().unwrap_err(), SubmitError::Cancelled);
+    assert_eq!(follower.wait().unwrap_err(), SubmitError::Cancelled);
+    assert_eq!(lane.coalescing_inflight(), 0, "cancel released the flight");
+
+    drop(gate_tx);
+    assert!(plug_ticket.wait().is_ok());
+    let m = lane.metrics();
+    assert!(wait_for(|| m.cancelled() == 1), "batcher counts the skipped request");
+    assert!(wait_for(|| m.completed() == 1));
+    assert_eq!(m.submitted(), 2);
+    assert_eq!(m.submitted(), m.completed() + m.cancelled());
+    // The cancelled window was never scored, so nothing of it was
+    // cached: a resubmit is a fresh miss that completes normally.
+    assert!(registry.submit_async("gated", hot.clone()).expect("fresh leader").wait().is_ok());
+    assert_eq!(m.cache_hits(), 0);
+    assert_eq!(m.submitted(), 3);
+    registry.shutdown();
+}
+
+#[test]
+fn zipf_replay_hits_and_uses_strictly_fewer_batch_slots_than_uncached() {
+    // The acceptance bar: the same Zipf-skewed trace through an uncached
+    // and a cached paper fleet at equal offered load — the cached fleet
+    // must show a nonzero hit+coalesce rate and occupy strictly fewer
+    // batch slots, with both fleets conserving and flagging identically.
+    let topos = Topology::paper_models();
+    let models: Vec<String> = topos.iter().map(|m| m.name.clone()).collect();
+    let trace = zipf_poisson(&topos, 41, 4000.0, 600, 4, 32, 1.1);
+    let n = trace.len() as u64;
+
+    let uncached = ModelRegistry::paper_fleet(41, ExecMode::Auto, 2);
+    let u_stats = replay_async(&uncached, &models, trace.clone());
+    let cached = ModelRegistry::paper_fleet_opts(
+        41,
+        ExecMode::Auto,
+        2,
+        None,
+        PipelineOptions::default(),
+        Some(CacheConfig::default()),
+    );
+    let c_stats = replay_async(&cached, &models, trace);
+
+    // Paper-fleet queues (1024) dwarf the 600-request trace, so nothing
+    // sheds and the slot counts below are exact, not racy.
+    for stats in [&u_stats, &c_stats] {
+        assert_eq!(stats.accepted + stats.shed + stats.rejected, n);
+        assert_eq!(stats.shed, 0);
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.completed, n);
+    }
+    assert_eq!(
+        u_stats.flagged, c_stats.flagged,
+        "bit-identical scoring implies identical anomaly flags"
+    );
+
+    let slots = |reg: &ModelRegistry| -> u64 {
+        models.iter().map(|m| reg.lane(m).unwrap().metrics().batched_windows()).sum()
+    };
+    let hits: u64 =
+        models.iter().map(|m| cached.lane(m).unwrap().metrics().cache_hits()).sum();
+    let coalesced: u64 =
+        models.iter().map(|m| cached.lane(m).unwrap().metrics().coalesced()).sum();
+    assert_eq!(slots(&uncached), n, "uncached: every request occupies a batch slot");
+    assert!(hits + coalesced > 0, "a 32-window/model Zipf pool must repeat");
+    assert!(
+        slots(&cached) < slots(&uncached),
+        "cached fleet must occupy strictly fewer batch slots ({} vs {})",
+        slots(&cached),
+        slots(&uncached)
+    );
+    assert_eq!(
+        slots(&cached) + hits + coalesced,
+        n,
+        "every request is exactly one of scored / hit / coalesced"
+    );
+    for reg in [&uncached, &cached] {
+        for m in &models {
+            let lm = reg.lane(m).unwrap().metrics();
+            assert_eq!(lm.submitted(), lm.completed() + lm.cancelled(), "{m}");
+        }
+    }
+    uncached.shutdown();
+    cached.shutdown();
+}

@@ -34,6 +34,7 @@ fn serve_trace(
         queue_capacity: 1024,
         threshold,
         autoscale: None,
+        cache: None,
     };
     let srv = AnomalyServer::start(backend, cfg);
     let mut gen = mk_gen(6);
@@ -102,6 +103,7 @@ fn batcher_amortizes_under_burst() {
         queue_capacity: 1024,
         threshold: 1.0,
         autoscale: None,
+        cache: None,
     };
     let srv = AnomalyServer::start(backend, cfg);
     let mut gen = TelemetryGen::new(32, 8);

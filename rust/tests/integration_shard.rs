@@ -78,6 +78,7 @@ fn remote_shed_resolves_tickets_overloaded_and_lane_recovers() {
             queue_capacity: 2,
             threshold: 1.0,
             autoscale: None,
+            cache: None,
         },
     );
     let server = ShardServer::bind("127.0.0.1:0", Arc::new(registry)).expect("bind");

@@ -7,12 +7,19 @@ calls this script with both. Rows whose name starts with the gated
 prefix (default ``kernel ``) are the contract: any of them regressing
 more than ``--max-regress`` in ns/iter fails the job. Everything else is
 reported but advisory — end-to-end rows (server closed loops, autoscaler
-scenarios) are too noisy on shared runners to gate on.
+scenarios, the score-cache replay) are too noisy on shared runners to
+gate on.
 
 The gate disarms itself, exit 0 with a notice, when the baseline is
 absent, unparsable, marked ``"provisional": true``, or has no results —
-so landing the tooling does not require timed numbers in the same PR,
-and re-baselining is one commit of the refreshed JSON.
+so landing the tooling does not require timed numbers in the same PR.
+Re-baselining is the `bench-rebaseline` workflow_dispatch job (one click
+on the reference runner), or locally: run ``cargo bench --bench
+hotpath`` and commit the rewritten JSON.
+
+``--self-test`` runs the gate logic over synthetic baseline/fresh pairs
+(pass, beyond-threshold regression, missing gated row, noisy advisory
+row) and needs no files — CI executes it before trusting the real gate.
 
 Stdlib only; no third-party imports.
 """
@@ -53,31 +60,12 @@ def ns_per_iter(row) -> float | None:
     return None
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("baseline", help="committed BENCH_hotpath.json (git show HEAD:...)")
-    ap.add_argument("fresh", help="BENCH_hotpath.json written by this run")
-    ap.add_argument(
-        "--max-regress",
-        type=float,
-        default=0.15,
-        help="fractional ns/iter regression that fails a gated row (default 0.15)",
-    )
-    ap.add_argument(
-        "--prefix",
-        default="kernel ",
-        help='row-name prefix that is gated (default "kernel "); other rows are advisory',
-    )
-    args = ap.parse_args()
+def compare(base: dict, fresh: dict, max_regress: float, prefix: str) -> int:
+    """Gate `fresh` against `base`; prints the table, returns an exit code.
 
-    base = load_results(args.baseline)
-    if base is None:
-        return 0
-    fresh = load_results(args.fresh)
-    if fresh is None:
-        print("perf gate error: fresh bench output unusable", file=sys.stderr)
-        return 1
-
+    Disarms (0) when the runs share no rows; fails (1) when any gated row
+    regresses beyond `max_regress` or is missing from the fresh run.
+    """
     failures = []
     common = [n for n in fresh if n in base]
     if not common:
@@ -90,9 +78,9 @@ def main() -> int:
         if b is None or f is None:
             continue  # scenario rows (shed counts etc.) carry no timing
         delta = f / b - 1.0
-        gated = name.startswith(args.prefix)
+        gated = name.startswith(prefix)
         verdict = "ok"
-        if gated and delta > args.max_regress:
+        if gated and delta > max_regress:
             verdict = "FAIL"
             failures.append((name, delta))
         print(
@@ -100,7 +88,7 @@ def main() -> int:
             f"{verdict if gated else '-'}"
         )
 
-    missing = [n for n in base if n not in fresh and n.startswith(args.prefix)]
+    missing = [n for n in base if n not in fresh and n.startswith(prefix)]
     for name in missing:
         print(f"{name}: gated row missing from fresh run")
         failures.append((name, float("inf")))
@@ -108,12 +96,105 @@ def main() -> int:
     if failures:
         print(
             f"\nperf gate FAILED: {len(failures)} gated row(s) regressed "
-            f"beyond {args.max_regress:.0%}",
+            f"beyond {max_regress:.0%}",
             file=sys.stderr,
         )
         return 1
     print(f"\nperf gate passed ({len(common)} rows compared)")
     return 0
+
+
+def self_test() -> int:
+    """Exercise the gate on synthetic pairs; exit 0 only if all behave."""
+    kernel = {"kernel step_into 64x64 interleaved": {"ns_per_iter": 1000.0}}
+    advisory = {"server closed-loop": {"ns_per_iter": 1000.0}}
+    scalars = {"cache zipf fleet": {"batch_slots": 128.0}}
+
+    def scaled(rows: dict, factor: float) -> dict:
+        return {
+            n: {k: v * factor if k == "ns_per_iter" else v for k, v in r.items()}
+            for n, r in rows.items()
+        }
+
+    cases = [
+        # (description, base, fresh, expected exit code)
+        ("within threshold passes", kernel, scaled(kernel, 1.10), 0),
+        ("beyond threshold fails", kernel, scaled(kernel, 1.20), 1),
+        ("improvement passes", kernel, scaled(kernel, 0.50), 0),
+        (
+            "missing gated row fails",
+            {**kernel, **advisory},
+            dict(advisory),
+            1,
+        ),
+        (
+            "noisy advisory row stays advisory",
+            {**kernel, **advisory},
+            {**scaled(kernel, 1.0), **scaled(advisory, 2.0)},
+            0,
+        ),
+        (
+            "timing-free scalar rows are skipped",
+            {**kernel, **scalars},
+            {**scaled(kernel, 1.0), **scalars},
+            0,
+        ),
+        ("disjoint runs disarm", kernel, advisory, 0),
+    ]
+    bad = 0
+    for desc, base, fresh, want in cases:
+        print(f"--- self-test: {desc} (expect exit {want})")
+        got = compare(base, fresh, max_regress=0.15, prefix="kernel ")
+        if got != want:
+            print(f"SELF-TEST FAILED: {desc}: exit {got}, wanted {want}", file=sys.stderr)
+            bad += 1
+        print()
+    if bad:
+        print(f"perf gate self-test: {bad} case(s) FAILED", file=sys.stderr)
+        return 1
+    print(f"perf gate self-test passed ({len(cases)} cases)")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "baseline",
+        nargs="?",
+        help="committed BENCH_hotpath.json (git show HEAD:...)",
+    )
+    ap.add_argument("fresh", nargs="?", help="BENCH_hotpath.json written by this run")
+    ap.add_argument(
+        "--max-regress",
+        type=float,
+        default=0.15,
+        help="fractional ns/iter regression that fails a gated row (default 0.15)",
+    )
+    ap.add_argument(
+        "--prefix",
+        default="kernel ",
+        help='row-name prefix that is gated (default "kernel "); other rows are advisory',
+    )
+    ap.add_argument(
+        "--self-test",
+        action="store_true",
+        help="run the gate over synthetic baseline/fresh pairs and exit",
+    )
+    args = ap.parse_args()
+
+    if args.self_test:
+        return self_test()
+    if args.baseline is None or args.fresh is None:
+        ap.error("baseline and fresh are required unless --self-test")
+
+    base = load_results(args.baseline)
+    if base is None:
+        return 0
+    fresh = load_results(args.fresh)
+    if fresh is None:
+        print("perf gate error: fresh bench output unusable", file=sys.stderr)
+        return 1
+    return compare(base, fresh, args.max_regress, args.prefix)
 
 
 if __name__ == "__main__":
