@@ -22,7 +22,8 @@ use lstm_ae_accel::accel::latency::LatencyModel;
 use lstm_ae_accel::accel::reuse::BalancedConfig;
 use lstm_ae_accel::activations::Pwl;
 use lstm_ae_accel::engine::{
-    BatchEngine, ExecMode, PipelineOptions, PipelinePool, TemporalPipeline,
+    step_session, BatchEngine, ExecMode, PipelineOptions, PipelinePool, SessionState,
+    TemporalPipeline,
 };
 use lstm_ae_accel::fixed::{dot_q, Q8_24};
 use lstm_ae_accel::model::lstm::{QuantLstmCell, QuantLstmState, StepScratch};
@@ -283,6 +284,37 @@ fn main() {
     println!("{}", r.report());
     rec.add(&r, None);
 
+    println!("\n## Streaming sessions: O(1) step vs O(T) rescore (F32-D2, W=64)");
+    // The stateful-scoring asymptotics: one step_session call advances the
+    // carried per-layer state and rescores the trailing ring against a
+    // single fresh forward row — O(1) in the stream's history — while the
+    // stateless equivalent re-runs the whole window from zero on every
+    // sample. Bit-identity of the two paths is enforced by the property
+    // suite; these rows only time them (and are deliberately not "kernel "
+    // rows — the CI perf gate tracks kernels, these track serving shape).
+    {
+        let sae =
+            Arc::new(LstmAutoencoder::random(Topology::from_name("F32-D2").unwrap(), 23));
+        let mut sgen = TelemetryGen::new(32, 31);
+        const SW: usize = 64;
+        let warm = sgen.benign_window(SW);
+        let mut sess = SessionState::new(&sae, SW);
+        for row in &warm.data {
+            step_session(&sae, &mut sess, row);
+        }
+        let next = sgen.benign_window(1).data.remove(0);
+        let r = bench_auto(&format!("stream step F32-D2 W={SW}"), 20, || {
+            black_box(step_session(&sae, &mut sess, black_box(&next)));
+        });
+        println!("{}   ({:.1} k samples/s)", r.report(), 1.0 / r.per_iter.mean / 1e3);
+        rec.add(&r, Some(1.0));
+        let r = bench_auto(&format!("stream rescore F32-D2 W={SW}"), 20, || {
+            black_box(sae.score_quant(black_box(&warm.data)));
+        });
+        println!("{}   ({:.1} k windows/s)", r.report(), 1.0 / r.per_iter.mean / 1e3);
+        rec.add(&r, Some(1.0));
+    }
+
     println!("\n## Temporal-pipeline engine vs sequential (F64-D6 deep model)");
     // The paper's architectural claim in software: per-layer workers
     // overlapping timesteps (pipelined) and weight-reuse batching (MMM)
@@ -450,8 +482,7 @@ fn main() {
             workers: 4,
             queue_capacity: 1024, // 512 in flight: sized to never shed
             threshold: 0.1,
-            autoscale: None,
-            cache: None,
+            ..Default::default()
         },
     );
     let mut gen = TelemetryGen::new(32, 11);
@@ -498,8 +529,7 @@ fn main() {
                     workers: 4,
                     queue_capacity: 1024,
                     threshold: 0.1,
-                    autoscale: None,
-                    cache: None,
+                    ..Default::default()
                 },
             );
             let models = vec!["LSTM-AE-F32-D2".to_string()];
@@ -576,7 +606,7 @@ fn main() {
                     queue_capacity: 16,
                     threshold: 1.0,
                     autoscale: policy.clone(),
-                    cache: None,
+                    ..Default::default()
                 },
             );
         }
@@ -647,8 +677,7 @@ fn main() {
                     workers: 4,
                     queue_capacity: 4096,
                     threshold: 0.1,
-                    autoscale: None,
-                    cache: None,
+                    ..Default::default()
                 },
             );
             registry

@@ -65,10 +65,12 @@
 pub mod batch;
 pub mod pipeline;
 pub mod pool;
+pub mod session;
 
 pub use batch::BatchEngine;
 pub use pipeline::{PipelineOptions, TemporalPipeline};
 pub use pool::{PipelinePool, PooledPipeline};
+pub use session::{step_session, step_sessions_batch, SessionState};
 
 use crate::fixed::Q8_24;
 use crate::model::lstm::{with_thread_arena, QuantLstmCell, ScratchArena};

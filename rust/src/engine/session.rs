@@ -1,0 +1,350 @@
+//! Streaming sessions: incremental scoring with carried LSTM state.
+//!
+//! Every other engine path consumes a complete `[T][F]` window and runs
+//! all `T` timesteps from zero state. A **session** instead carries the
+//! per-layer quantized h/c state across calls, so each arriving sample
+//! advances the whole layer stack by exactly one timestep — the
+//! O(T) → O(1) per-sample restructure of the serving hot path, and the
+//! software analog of the paper's always-resident recurrent datapath
+//! (the accelerator never re-fills its pipeline between timesteps of a
+//! live feed; neither does a session).
+//!
+//! ```text
+//!             sample x_k (one [F] row)
+//!                  │ quantize (Q8.24)
+//!                  ▼
+//!   ┌─ LSTM_0 ────┐  h/c carried    ┌─ LSTM_1 ────┐        ┌─ LSTM_{N−1} ┐
+//!   │ step_into   │ ──────────────► │ step_into   │ ─ … ─► │ step_into   │
+//!   │ (state[0])  │  from step k−1  │ (state[1])  │        │ (state[N−1])│
+//!   └─────────────┘                 └─────────────┘        └──────┬──────┘
+//!                                                                 │ dequantize
+//!                      ring of the last W (input, recon) rows ◄───┘
+//!                      score = flat MSE over the ring
+//! ```
+//!
+//! # Bit-identity contract
+//!
+//! The step path is **bit-identical** to re-running the session's entire
+//! sample history through [`crate::model::LstmAutoencoder::forward_quant`]
+//! from zero state: the per-timestep arithmetic is
+//! [`QuantLstmCell::step_into`] either way, and traversal order does not
+//! matter for integer recurrences whose layer-`i` output at timestep `t`
+//! depends only on inputs `0..=t` (the property
+//! `incremental_scores_match_full_rescore_on_all_paper_topologies`
+//! pins this down, window by window). The session score after `k` steps
+//! equals the flat-order MSE over the **last `min(k, W)`** (input,
+//! reconstruction) row pairs — exactly what an `ExecMode::Sequential`
+//! re-run of the full history followed by a trailing-window MSE produces,
+//! down to f64 association order (the ring stores rows, never
+//! pre-reduced per-row partials, precisely so the accumulation order
+//! matches [`LstmAutoencoder::mse`]).
+//!
+//! The batched entry [`step_sessions_batch`] advances `B` distinct
+//! sessions of one model together through
+//! [`QuantLstmCell::step_batch_into`] — per-session results are
+//! bit-identical to `B` separate [`step_session`] calls (the kernel-level
+//! property `step_batch_into_bit_identical_per_window` lifts directly).
+
+use std::collections::VecDeque;
+
+use crate::fixed::Q8_24;
+use crate::model::lstm::{with_thread_arena, QuantLstmCell, QuantLstmState};
+use crate::model::LstmAutoencoder;
+
+/// Carried state of one stream session: per-layer quantized h/c planes
+/// plus the sliding ring of recent (input, reconstruction) rows the
+/// score is computed over.
+///
+/// Snapshot semantics: the layer states are exactly the
+/// [`QuantLstmState`]s a sequential forward pass over the session's full
+/// sample history would hold after its last timestep, so a session can
+/// be advanced by any mix of [`step_session`] and [`step_sessions_batch`]
+/// calls without ever diverging from the full re-run.
+#[derive(Clone, Debug)]
+pub struct SessionState {
+    /// One carried h/c state per LSTM layer, in stack order.
+    layers: Vec<QuantLstmState>,
+    /// The last ≤ `window` (input row, reconstruction row) pairs, oldest
+    /// first — f32 rows, so the score recomputes with the exact flat
+    /// element order of [`LstmAutoencoder::mse`].
+    ring: VecDeque<(Vec<f32>, Vec<f32>)>,
+    /// Sliding-window length `W` the score covers.
+    window: usize,
+    /// Samples consumed since open (or the last [`Self::reset`]).
+    steps: u64,
+}
+
+impl SessionState {
+    /// A fresh session over `ae`'s layer stack scoring a sliding window
+    /// of `window` samples (clamped to ≥ 1). All-zero state: the first
+    /// `step` behaves exactly like timestep 0 of a cold window.
+    pub fn new(ae: &LstmAutoencoder, window: usize) -> SessionState {
+        SessionState {
+            layers: ae
+                .quant_cells()
+                .iter()
+                .map(|cell| QuantLstmState::zeros(cell.w.dims.lh))
+                .collect(),
+            ring: VecDeque::with_capacity(window.max(1)),
+            window: window.max(1),
+            steps: 0,
+        }
+    }
+
+    /// Zero every layer state and drop the ring — the documented
+    /// **failover reset semantic**: a session reopened on another shard
+    /// (or re-created after eviction) starts cold, exactly as if newly
+    /// opened, and its next scores are those of a fresh stream.
+    pub fn reset(&mut self) {
+        for st in &mut self.layers {
+            let lh = st.h.len();
+            st.reset(lh);
+        }
+        self.ring.clear();
+        self.steps = 0;
+    }
+
+    /// Samples consumed since open or the last [`Self::reset`].
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// The sliding-window length `W` the score covers.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// The current score: MSE over the ring's ≤ `W` (input,
+    /// reconstruction) row pairs, oldest first, accumulated in the exact
+    /// flat element order of [`LstmAutoencoder::mse`] (one f64
+    /// accumulator across all elements — never per-row partials, which
+    /// would change f64 association and break bit-identity with the
+    /// full-window re-run). Zero while no sample has arrived.
+    pub fn score(&self) -> f64 {
+        let mut sum = 0.0f64;
+        let mut n = 0usize;
+        for (x, r) in &self.ring {
+            for (&u, &v) in x.iter().zip(r) {
+                let d = (u - v) as f64;
+                sum += d * d;
+                n += 1;
+            }
+        }
+        sum / n.max(1) as f64
+    }
+
+    fn push_pair(&mut self, input: Vec<f32>, recon: Vec<f32>) {
+        self.ring.push_back((input, recon));
+        if self.ring.len() > self.window {
+            self.ring.pop_front();
+        }
+        self.steps += 1;
+    }
+}
+
+/// Advance one session by one sample and return the updated sliding
+/// score — the O(1)-per-sample sequential path.
+///
+/// `sample` must be one `[F]` row at `ae`'s feature width. The sample is
+/// quantized at the DataReader boundary, stepped through every layer
+/// with [`QuantLstmCell::step_into`] against the session's carried
+/// state, and the last layer's hidden row (the reconstruction, as in
+/// every other path) is dequantized into the scoring ring.
+pub fn step_session(ae: &LstmAutoencoder, state: &mut SessionState, sample: &[f32]) -> f64 {
+    let cells = ae.quant_cells();
+    assert_eq!(state.layers.len(), cells.len(), "session state is for a different model");
+    assert_eq!(sample.len(), ae.topo.features, "sample width must match the model");
+    let recon = with_thread_arena(|arena| {
+        arena.cur.clear();
+        arena.cur.extend(sample.iter().map(|&v| Q8_24::from_f32(v)));
+        for (cell, st) in cells.iter().zip(state.layers.iter_mut()) {
+            cell.step_into(st, &arena.cur, &mut arena.step);
+            arena.cur.clear();
+            arena.cur.extend_from_slice(&st.h);
+        }
+        state.layers.last().expect("at least one layer").h_f32()
+    });
+    state.push_pair(sample.to_vec(), recon);
+    state.score()
+}
+
+/// Advance `B` **distinct** sessions of one model by one sample each and
+/// return their updated sliding scores — the batched path the server's
+/// batcher groups same-lane session steps into.
+///
+/// Layer by layer, the sessions' carried h/c rows are gathered into the
+/// `[B][LH]` planes [`QuantLstmCell::step_batch_into`] expects, stepped
+/// once (each weight row streamed once across all `B` sessions — the
+/// same MVM → MMM weight reuse as the window batch engine), and
+/// scattered back. Per-session results are bit-identical to `B`
+/// separate [`step_session`] calls.
+///
+/// Callers must pass pairwise-distinct sessions (aliasing is impossible
+/// through `&mut`) belonging to the same `ae`; `states` and `samples`
+/// must be equal-length. Empty input is a no-op.
+pub fn step_sessions_batch(
+    ae: &LstmAutoencoder,
+    states: &mut [&mut SessionState],
+    samples: &[&[f32]],
+) -> Vec<f64> {
+    let b = states.len();
+    assert_eq!(b, samples.len(), "one sample per session");
+    if b == 0 {
+        return Vec::new();
+    }
+    if b == 1 {
+        return vec![step_session(ae, states[0], samples[0])];
+    }
+    let cells = ae.quant_cells();
+    for st in states.iter() {
+        assert_eq!(st.layers.len(), cells.len(), "session state is for a different model");
+    }
+    let recons: Vec<Vec<f32>> = with_thread_arena(|arena| {
+        // x plane, `[B][F]` row-major at the input boundary.
+        arena.cur.clear();
+        for s in samples {
+            assert_eq!(s.len(), ae.topo.features, "sample width must match the model");
+            arena.cur.extend(s.iter().map(|&v| Q8_24::from_f32(v)));
+        }
+        for (li, cell) in cells.iter().enumerate() {
+            let lh = cell.w.dims.lh;
+            // Gather carried h/c into `[B][LH]` planes…
+            arena.h.clear();
+            arena.c.clear();
+            for st in states.iter() {
+                arena.h.extend_from_slice(&st.layers[li].h);
+                arena.c.extend_from_slice(&st.layers[li].c);
+            }
+            cell.step_batch_into(b, &mut arena.h, &mut arena.c, &arena.cur, &mut arena.step);
+            // …scatter the advanced state back…
+            for (wi, st) in states.iter_mut().enumerate() {
+                st.layers[li].h.copy_from_slice(&arena.h[wi * lh..(wi + 1) * lh]);
+                st.layers[li].c.copy_from_slice(&arena.c[wi * lh..(wi + 1) * lh]);
+            }
+            // …and the h plane becomes the next layer's x plane.
+            arena.cur.clear();
+            arena.cur.extend_from_slice(&arena.h);
+        }
+        states.iter().map(|st| st.layers.last().expect("at least one layer").h_f32()).collect()
+    });
+    states
+        .iter_mut()
+        .zip(samples.iter().zip(recons))
+        .map(|(st, (s, recon))| {
+            st.push_pair(s.to_vec(), recon);
+            st.score()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Topology;
+    use crate::util::rng::Xoshiro256;
+
+    fn samples(n: usize, f: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut r = Xoshiro256::seeded(seed);
+        (0..n).map(|_| (0..f).map(|_| r.uniform(-1.0, 1.0) as f32).collect()).collect()
+    }
+
+    /// The full-rescore reference: run the entire `k`-sample history
+    /// through the zero-state sequential path and take the flat MSE over
+    /// the trailing `min(k, w)` rows — the O(T) baseline a session's
+    /// O(1) step must reproduce bit for bit.
+    fn rescore_reference(ae: &LstmAutoencoder, history: &[Vec<f32>], w: usize) -> f64 {
+        let recon = ae.forward_quant(history);
+        let tail = history.len().saturating_sub(w);
+        LstmAutoencoder::mse(&history[tail..], &recon[tail..])
+    }
+
+    #[test]
+    fn incremental_scores_match_full_rescore_on_all_paper_topologies() {
+        for topo in Topology::paper_models() {
+            let f = topo.features;
+            let ae = LstmAutoencoder::random(topo.clone(), 42);
+            let w = 6;
+            let mut sess = SessionState::new(&ae, w);
+            let hist = samples(2 * w + 3, f, 0xD0 + f as u64);
+            for k in 0..hist.len() {
+                let score = step_session(&ae, &mut sess, &hist[k]);
+                let want = rescore_reference(&ae, &hist[..=k], w);
+                assert_eq!(
+                    score.to_bits(),
+                    want.to_bits(),
+                    "{}: step {k} diverged from the full rescore",
+                    ae.topo.name
+                );
+                assert_eq!(score.to_bits(), sess.score().to_bits());
+            }
+            assert_eq!(sess.steps(), hist.len() as u64);
+        }
+    }
+
+    #[test]
+    fn batched_stepping_is_bit_identical_to_sequential_stepping() {
+        let topo = Topology::from_name("F64-D6").unwrap();
+        let f = topo.features;
+        let ae = LstmAutoencoder::random(topo, 7);
+        let b = 5;
+        let mut solo: Vec<SessionState> =
+            (0..b).map(|_| SessionState::new(&ae, 4)).collect();
+        let mut grouped: Vec<SessionState> =
+            (0..b).map(|_| SessionState::new(&ae, 4)).collect();
+        for step in 0..9 {
+            let rows: Vec<Vec<f32>> =
+                (0..b).map(|i| samples(1, f, 100 * step + i as u64).remove(0)).collect();
+            let solo_scores: Vec<f64> = solo
+                .iter_mut()
+                .zip(&rows)
+                .map(|(st, row)| step_session(&ae, st, row))
+                .collect();
+            let mut refs: Vec<&mut SessionState> = grouped.iter_mut().collect();
+            let row_refs: Vec<&[f32]> = rows.iter().map(Vec::as_slice).collect();
+            let grouped_scores = step_sessions_batch(&ae, &mut refs, &row_refs);
+            for (i, (a, g)) in solo_scores.iter().zip(&grouped_scores).enumerate() {
+                assert_eq!(a.to_bits(), g.to_bits(), "session {i} at step {step}");
+            }
+        }
+        for (a, g) in solo.iter().zip(&grouped) {
+            assert_eq!(a.layers.len(), g.layers.len());
+            for (la, lg) in a.layers.iter().zip(&g.layers) {
+                assert_eq!(la.h, lg.h);
+                assert_eq!(la.c, lg.c);
+            }
+        }
+    }
+
+    #[test]
+    fn reset_restores_a_cold_session() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let ae = LstmAutoencoder::random(topo, 3);
+        let rows = samples(5, 32, 11);
+        let mut warm = SessionState::new(&ae, 3);
+        for row in &rows {
+            step_session(&ae, &mut warm, row);
+        }
+        warm.reset();
+        assert_eq!(warm.steps(), 0);
+        assert_eq!(warm.score().to_bits(), 0.0f64.to_bits());
+        let mut cold = SessionState::new(&ae, 3);
+        for row in &rows {
+            let a = step_session(&ae, &mut warm, row);
+            let b = step_session(&ae, &mut cold, row);
+            assert_eq!(a.to_bits(), b.to_bits(), "reset must reproduce a fresh session");
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_batches_are_handled() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let ae = LstmAutoencoder::random(topo, 9);
+        assert!(step_sessions_batch(&ae, &mut [], &[]).is_empty());
+        let row = samples(1, 32, 1).remove(0);
+        let mut a = SessionState::new(&ae, 2);
+        let mut b = SessionState::new(&ae, 2);
+        let got = step_sessions_batch(&ae, &mut [&mut a], &[&row]);
+        let want = step_session(&ae, &mut b, &row);
+        assert_eq!(got[0].to_bits(), want.to_bits());
+    }
+}

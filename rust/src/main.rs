@@ -32,6 +32,9 @@
 //!             [--cache-entries N [--cache-bytes B]]
 //!             run this process as a network shard: all four paper topologies
 //!             behind the wire protocol, until killed
+//!             [--streams N --rate-hz R] additionally self-drive N in-process
+//!             telemetry sessions at R samples/s each through the lane
+//!             session tables (visible in --report-every-s reports)
 //!   fleet connect --shards a1:p1,a2:p2 [--requests N] [--rate R] [--timesteps T]
 //!             [--seed 7] [--report] drive the Poisson trace across a shard
 //!             fleet; exits nonzero on accounting mismatch or lost requests
@@ -42,6 +45,11 @@
 //!             [--reconnect-max-backoff 5000] control-plane tuning: probe
 //!             cadence, missed-probe demotion thresholds, redial backoff cap
 //!             — dead shards are redialed until they rejoin, no flag needed
+//!             [--streams N --rate-hz R] additionally drive N streaming
+//!             sessions at R samples/s each over the v3 session frames,
+//!             sticky-routed per session; prints a "stream resets N" line
+//!             (nonzero after a mid-trace shard restart) and gates the exit
+//!             code on the stream sample accounting too
 //!   checks                         run the paper-shape checks
 //! ```
 
@@ -67,8 +75,8 @@ use lstm_ae_accel::server::{
 use lstm_ae_accel::util::cli::Args;
 use lstm_ae_accel::util::table::Table;
 use lstm_ae_accel::workload::trace::{
-    closed_loop_async, merged_poisson, poisson_trace, replay_fleet, rotating_hot_poisson,
-    zipf_poisson,
+    closed_loop_async, merged_poisson, multi_stream_trace, poisson_trace, replay_fleet,
+    replay_streams, rotating_hot_poisson, zipf_poisson,
 };
 use lstm_ae_accel::workload::TelemetryGen;
 use lstm_ae_accel::model::LstmAutoencoder;
@@ -419,8 +427,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: args.get_usize("workers", 2),
         queue_capacity: args.get_usize("queue", 1024),
         threshold: args.get_f64("threshold", 0.0), // calibrated below
-        autoscale: None,
-        cache: None,
+        ..Default::default()
     };
 
     // Backend: PJRT artifact if available, else quantized golden model.
@@ -700,6 +707,32 @@ fn cmd_fleet_serve(args: &Args) -> Result<()> {
         let tick = std::time::Duration::from_millis(args.get_u64("tick-ms", 20));
         registry.start_autoscaler(tick, (budget > 0).then_some(budget));
     }
+    // --streams N: keep N in-process telemetry sessions stepping against
+    // this shard's own lanes, so the session tables (and the fleet
+    // report's sessions column) carry load even with no remote clients.
+    let streams = args.get_usize("streams", 0);
+    if streams > 0 {
+        let rate_hz = args.get_f64("rate-hz", 1.0).max(1e-3);
+        let reg = registry.clone();
+        println!("session self-drive: {streams} streams @ {rate_hz:.1} samples/s each");
+        std::thread::spawn(move || {
+            let topos = Topology::paper_models();
+            let models: Vec<String> = topos.iter().map(|t| t.name.clone()).collect();
+            let mut round = 0u64;
+            loop {
+                let trace = multi_stream_trace(
+                    &topos,
+                    seed.wrapping_add(60).wrapping_add(round),
+                    streams,
+                    rate_hz,
+                    64,
+                    0.05,
+                );
+                let _ = replay_streams(&*reg, &models, trace, false);
+                round += 1;
+            }
+        });
+    }
     let server = ShardServer::bind(bind, registry.clone())
         .map_err(|e| anyhow!("bind {bind}: {e}"))?;
     println!(
@@ -775,7 +808,28 @@ fn cmd_fleet_connect(args: &Args) -> Result<()> {
             String::new()
         }
     );
-    let stats = replay_fleet(&router, &models, merged, true);
+    // --streams N rides the same fleet concurrently: N sticky-routed
+    // sessions stepping at --rate-hz samples/s each, sized to span the
+    // window trace so a mid-trace shard kill hits both planes.
+    let streams = args.get_usize("streams", 0);
+    let stream_rate = args.get_f64("rate-hz", 1.0).max(1e-3);
+    let strace = (streams > 0).then(|| {
+        let span_s = n as f64 / rate.max(1.0);
+        let per = ((span_s * stream_rate).ceil() as usize).clamp(4, 4096);
+        multi_stream_trace(&topos, seed.wrapping_add(60), streams, stream_rate, per, anomaly_rate)
+    });
+    if streams > 0 {
+        println!("streams: {streams} sessions @ {stream_rate:.1} samples/s each, same fleet");
+    }
+    let (stats, sstats) = std::thread::scope(|sc| {
+        let sh = strace.map(|tr| {
+            let router = &router;
+            let models = &models;
+            sc.spawn(move || replay_streams(router, models, tr, true))
+        });
+        let stats = replay_fleet(&router, &models, merged, true);
+        (stats, sh.map(|h| h.join().expect("stream driver panicked")))
+    });
     let wall = stats.wall.as_secs_f64().max(1e-9);
     println!(
         "wall {wall:.2}s | offered {} | completed {} ({:.0}/s) | {} flagged | shed {} | \
@@ -815,6 +869,22 @@ fn cmd_fleet_connect(args: &Args) -> Result<()> {
             router.shard_inflight(i),
         );
     }
+    if let Some(s) = &sstats {
+        // Driver-side reopens plus fleet-side resets (failover re-routes
+        // and shard-local auto-reopens) — "stream resets N" is the
+        // greppable proof a kill −9 cost sessions their carried state.
+        let total_resets = s.resets + router.stream_resets();
+        println!(
+            "streams: opened {} closed {} | samples offered {} completed {} shed {} \
+             rejected_closed {} | stream resets {total_resets}",
+            s.opened,
+            s.closed,
+            s.fleet.offered,
+            s.fleet.completed,
+            s.fleet.shed,
+            s.fleet.rejected_closed,
+        );
+    }
     if args.has("report") {
         print!("{}", router.fleet_report());
     }
@@ -836,6 +906,26 @@ fn cmd_fleet_connect(args: &Args) -> Result<()> {
             "{} requests lost to closed shards (pass --allow-loss to tolerate)",
             stats.rejected_closed
         ));
+    }
+    // Stream samples join the admission accounting: the same conservation
+    // law and loss gate apply to the session plane.
+    if let Some(s) = &sstats {
+        if !s.fleet.conserves() {
+            return Err(anyhow!(
+                "stream accounting mismatch: offered {} != completed {} + shed {} + \
+                 rejected_closed {}",
+                s.fleet.offered,
+                s.fleet.completed,
+                s.fleet.shed,
+                s.fleet.rejected_closed
+            ));
+        }
+        if s.fleet.rejected_closed > 0 && !args.has("allow-loss") {
+            return Err(anyhow!(
+                "{} stream samples lost to closed shards (pass --allow-loss to tolerate)",
+                s.fleet.rejected_closed
+            ));
+        }
     }
     Ok(())
 }

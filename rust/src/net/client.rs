@@ -85,6 +85,10 @@ struct ControlState {
     /// Set by a `Leave` frame: the shard asked to drain — stop routing
     /// new work here, let in-flight requests finish.
     draining: AtomicBool,
+    /// `StreamScore` frames that arrived with `reset` set: the shard
+    /// scored those samples against freshly zeroed session state
+    /// (eviction or restart on its side).
+    stream_resets: AtomicU64,
 }
 
 /// A connection to one shard process, speaking the [`super::wire`]
@@ -259,6 +263,83 @@ impl ShardClient {
         Ok(ticket)
     }
 
+    /// Open (or reset) streaming session `stream` on the shard's lane
+    /// for `model`. Fire-and-forget on the wire: a failed open surfaces
+    /// as a `Shed` on the first sample. `window == 0` asks the lane for
+    /// its configured default score window.
+    pub fn open_stream(&self, model: &str, stream: u64, window: u32) -> Result<(), SubmitError> {
+        if !self.is_alive() {
+            return Err(SubmitError::Closed);
+        }
+        if model.len() > u16::MAX as usize {
+            return Err(SubmitError::TooLarge);
+        }
+        self.write(&Frame::StreamOpen { stream, model: model.to_string(), window })
+    }
+
+    /// Feed one sample to streaming session `stream` on the remote
+    /// shard. Returns a [`Ticket`] immediately, exactly like
+    /// [`Self::submit_async`]; the incremental score arrives as a
+    /// `StreamScore` frame (a `reset` flag on it bumps
+    /// [`Self::stream_resets`]). Takes the sample by reference so
+    /// failover retries in the router never deep-copy it twice.
+    pub fn submit_sample(
+        &self,
+        model: &str,
+        stream: u64,
+        sample: &[f32],
+    ) -> Result<Ticket, SubmitError> {
+        if !self.is_alive() {
+            return Err(SubmitError::Closed);
+        }
+        // Same representability pre-flight as submit_async: nothing the
+        // wire cannot carry touches the socket.
+        let need = 1 + 8 + 8 + 2 + model.len() + 4 + sample.len() * 4;
+        if need > wire::MAX_FRAME_LEN || model.len() > u16::MAX as usize {
+            return Err(SubmitError::TooLarge);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (ticket, shared) = Ticket::raw(id, self.lane.clone());
+        self.slots.lock().unwrap().insert(id, shared);
+        let frame = Frame::StreamSample {
+            stream,
+            id,
+            model: model.to_string(),
+            sample: sample.to_vec(),
+        };
+        if let Err(e) = self.write(&frame) {
+            self.slots.lock().unwrap().remove(&id);
+            return Err(e);
+        }
+        // Same post-write liveness re-check as submit_async: if the
+        // reader died (and poison-drained the map) around our insert,
+        // retire the slot so nothing waits forever.
+        if !self.is_alive() {
+            self.slots.lock().unwrap().remove(&id);
+            return Err(SubmitError::Closed);
+        }
+        Ok(ticket)
+    }
+
+    /// Close streaming session `stream` on the shard and drop its state.
+    /// Closing an unknown session is a remote no-op.
+    pub fn close_stream(&self, model: &str, stream: u64) -> Result<(), SubmitError> {
+        if !self.is_alive() {
+            return Err(SubmitError::Closed);
+        }
+        if model.len() > u16::MAX as usize {
+            return Err(SubmitError::TooLarge);
+        }
+        self.write(&Frame::StreamClose { stream, model: model.to_string() })
+    }
+
+    /// How many `StreamScore` replies on this connection carried the
+    /// `reset` flag — scores computed from freshly zeroed state after
+    /// the shard lost the session (eviction or restart).
+    pub fn stream_resets(&self) -> u64 {
+        self.control.stream_resets.load(Ordering::Relaxed)
+    }
+
     /// Fetch the shard's rolled-up fleet report
     /// ([`crate::server::ModelRegistry::fleet_report`]) over the wire.
     pub fn fleet_report(&self, timeout: Duration) -> Result<String, SubmitError> {
@@ -355,6 +436,25 @@ fn reader_loop(
                 let slot = slots.lock().unwrap().remove(&id);
                 if let Some(slot) = slot {
                     slot.complete(Err(shed_error(reason)));
+                }
+            }
+            Ok(Some(Frame::StreamScore { id, score, is_anomaly, reset, .. })) => {
+                if reset {
+                    control.stream_resets.fetch_add(1, Ordering::Relaxed);
+                }
+                let slot = slots.lock().unwrap().remove(&id);
+                if let Some(slot) = slot {
+                    // Stream steps carry no shard-side latency breakdown
+                    // on the wire (the frame stays small for the O(1)
+                    // path); the timing fields read as zero.
+                    slot.complete(Ok(Response {
+                        id,
+                        score,
+                        is_anomaly,
+                        queue_us: 0.0,
+                        service_us: 0.0,
+                        e2e_us: 0.0,
+                    }));
                 }
             }
             Ok(Some(Frame::FleetReport { text })) => {

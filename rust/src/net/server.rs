@@ -43,6 +43,17 @@
 //!   shard gracefully: stop routing new work, let in-flight tickets
 //!   complete, then close.
 //!
+//! # Streaming sessions
+//!
+//! `StreamOpen`/`StreamSample`/`StreamClose` frames map onto the
+//! registry's session surface ([`ModelRegistry::open_stream`] and
+//! friends); scores come back as `StreamScore` frames through the same
+//! bounded outbound queue. A sample for a session this shard does not
+//! know — evicted, or the process restarted and lost its tables — is
+//! auto-reopened and scored from freshly zeroed state, with `reset` set
+//! in the score frame and the lane's `stream_resets` counter bumped:
+//! the state-reset failover semantic routers surface to operators.
+//!
 //! The listener binds with `SO_REUSEADDR` (on Linux) so a restarted
 //! shard can rebind its port immediately instead of waiting out
 //! `TIME_WAIT` — a requirement for zero-operator-action rejoin.
@@ -66,9 +77,12 @@ fn shed_reason(e: &SubmitError) -> ShedReason {
         // Cancelled and TooLarge can't reach a server-side ticket (one
         // needs Ticket::cancel, the other is a client-side pre-flight);
         // fold them with the teardown-shaped errors for completeness.
-        SubmitError::Closed | SubmitError::Cancelled | SubmitError::TooLarge => {
-            ShedReason::Closed
-        }
+        // UnknownStream lands here only when the auto-reopen retry below
+        // also failed — from the client's view the session is gone.
+        SubmitError::Closed
+        | SubmitError::Cancelled
+        | SubmitError::TooLarge
+        | SubmitError::UnknownStream(_) => ShedReason::Closed,
     }
 }
 
@@ -508,6 +522,65 @@ fn handle_conn(
                         }
                     }
                 }
+            }
+            Ok(Some(Frame::StreamOpen { stream, model, window })) => {
+                // Best-effort: an open that fails (unknown model, lane
+                // without session support) surfaces on the first sample
+                // as a Shed — opens themselves have no reply frame.
+                let _ = shared.registry.open_stream(&model, stream, window as usize);
+            }
+            Ok(Some(Frame::StreamSample { stream, id, model, sample })) => {
+                // Unknown session (evicted, or this shard restarted and
+                // lost its table): re-open at the lane's default window
+                // and retry once, reporting `reset` so the client knows
+                // this score came from freshly zeroed state.
+                let mut reset = false;
+                let submitted = match shared.registry.submit_sample(&model, stream, sample.clone())
+                {
+                    Err(SubmitError::UnknownStream(_)) => {
+                        reset = true;
+                        shared
+                            .registry
+                            .open_stream(&model, stream, 0)
+                            .and_then(|()| shared.registry.submit_sample(&model, stream, sample))
+                    }
+                    other => other,
+                };
+                match submitted {
+                    Ok(ticket) => {
+                        if reset {
+                            if let Some(lane) = shared.registry.lane(&model) {
+                                lane.metrics().on_stream_resets(1);
+                            }
+                        }
+                        let otx = out_tx.clone();
+                        let sock = sock.clone();
+                        ticket.on_complete(move |outcome| {
+                            let frame = match outcome {
+                                Ok(r) => Frame::StreamScore {
+                                    stream,
+                                    id,
+                                    score: r.score,
+                                    is_anomaly: r.is_anomaly,
+                                    reset,
+                                },
+                                Err(e) => Frame::Shed { id, reason: shed_reason(&e) },
+                            };
+                            if otx.try_send(frame.encode()).is_err() {
+                                let _ = sock.shutdown(Shutdown::Both);
+                            }
+                        });
+                    }
+                    Err(e) => {
+                        let frame = Frame::Shed { id, reason: shed_reason(&e) };
+                        if out_tx.try_send(frame.encode()).is_err() {
+                            break;
+                        }
+                    }
+                }
+            }
+            Ok(Some(Frame::StreamClose { stream, model })) => {
+                shared.registry.close_stream(&model, stream);
             }
             Ok(Some(Frame::HealthProbe { seq })) => {
                 let load = shared.registry.fleet_load();

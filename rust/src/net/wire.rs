@@ -10,9 +10,10 @@
 //!   decoder reserve gigabytes or spin.
 //! ```
 //!
-//! Nine frame kinds carry the whole protocol (see [`Frame`]). Tags 0–4
-//! are the data plane; tags 5–8 are the control plane the shard registry
-//! drives membership and health from:
+//! Thirteen frame kinds carry the whole protocol (see [`Frame`]). Tags
+//! 0–4 are the window data plane; tags 5–8 are the control plane the
+//! shard registry drives membership and health from; tags 9–12 are the
+//! streaming-session plane (stateful incremental scoring):
 //!
 //! | tag | frame        | direction        | payload                        |
 //! |-----|--------------|------------------|--------------------------------|
@@ -25,6 +26,10 @@
 //! | 6   | `Leave`      | shard → client   | `reason: str`                  |
 //! | 7   | `HealthProbe`| client → shard   | `seq: u64`                     |
 //! | 8   | `Heartbeat`  | shard → client   | `seq, load counters, p50/p99`  |
+//! | 9   | `StreamOpen` | client → shard   | `stream, model, window: u32`   |
+//! | 10  | `StreamSample`| client → shard  | `stream, id, model, F f32 row` |
+//! | 11  | `StreamScore`| shard → client   | `stream, id, score, flags`     |
+//! | 12  | `StreamClose`| client → shard   | `stream, model`                |
 //!
 //! Integers and floats are little-endian; strings are `u16` length +
 //! UTF-8 bytes; the window is `T: u32, F: u32` then `T·F` `f32` samples
@@ -41,8 +46,10 @@ use std::io::{Read, Write};
 
 /// Protocol version exchanged in [`Frame::Hello`]; both ends must match.
 /// v2 added the control plane (`Join`/`Leave`/`HealthProbe`/`Heartbeat`)
-/// and the shard's post-handshake `Join` announcement.
-pub const WIRE_VERSION: u16 = 2;
+/// and the shard's post-handshake `Join` announcement. v3 added the
+/// streaming-session plane
+/// (`StreamOpen`/`StreamSample`/`StreamScore`/`StreamClose`).
+pub const WIRE_VERSION: u16 = 3;
 
 /// Upper bound on `len` (tag + payload bytes) accepted by the decoder.
 /// 16 MiB comfortably holds the largest real frame (a `Submit` carrying a
@@ -118,6 +125,24 @@ pub enum Frame {
     /// connection, and smoothed (EWMA) p50/p99 end-to-end latency in µs.
     /// Floats travel as raw bits like every other f64 on this wire.
     Heartbeat { seq: u64, inflight: u64, shed_delta: u64, p50_us: f64, p99_us: f64 },
+    /// Open (or re-open) a stateful streaming session `stream` on the
+    /// named model's lane. `window` is the trailing score window in
+    /// samples; `0` asks the lane for its configured default. Re-opening
+    /// an existing id resets its carried state to zero.
+    StreamOpen { stream: u64, model: String, window: u32 },
+    /// One telemetry sample for session `stream`: `id` is echoed in the
+    /// matching [`Frame::StreamScore`] / [`Frame::Shed`], and the row is
+    /// `F` `f32` values (the model's feature width).
+    StreamSample { stream: u64, id: u64, model: String, sample: Vec<f32> },
+    /// The incremental score after folding `StreamSample { id, .. }` into
+    /// session `stream`'s carried state — bit-identical to re-running the
+    /// session's full history from zero. `reset` reports that the shard
+    /// had lost the session (eviction, restart, failover) and scored this
+    /// sample against freshly zeroed state.
+    StreamScore { stream: u64, id: u64, score: f64, is_anomaly: bool, reset: bool },
+    /// Close session `stream` on the named model's lane and drop its
+    /// state. Closing an unknown session is a no-op.
+    StreamClose { stream: u64, model: String },
 }
 
 /// Decode/IO failure. Every malformed input maps here — the decoder has
@@ -209,6 +234,10 @@ impl Frame {
             Frame::Leave { .. } => 6,
             Frame::HealthProbe { .. } => 7,
             Frame::Heartbeat { .. } => 8,
+            Frame::StreamOpen { .. } => 9,
+            Frame::StreamSample { .. } => 10,
+            Frame::StreamScore { .. } => 11,
+            Frame::StreamClose { .. } => 12,
         }
     }
 
@@ -251,6 +280,31 @@ impl Frame {
                 put_u64(&mut body, *shed_delta);
                 put_f64(&mut body, *p50_us);
                 put_f64(&mut body, *p99_us);
+            }
+            Frame::StreamOpen { stream, model, window } => {
+                put_u64(&mut body, *stream);
+                put_str(&mut body, model);
+                put_u32(&mut body, *window);
+            }
+            Frame::StreamSample { stream, id, model, sample } => {
+                put_u64(&mut body, *stream);
+                put_u64(&mut body, *id);
+                put_str(&mut body, model);
+                put_u32(&mut body, sample.len() as u32);
+                for &v in sample {
+                    put_u32(&mut body, v.to_bits());
+                }
+            }
+            Frame::StreamScore { stream, id, score, is_anomaly, reset } => {
+                put_u64(&mut body, *stream);
+                put_u64(&mut body, *id);
+                put_f64(&mut body, *score);
+                body.push(u8::from(*is_anomaly));
+                body.push(u8::from(*reset));
+            }
+            Frame::StreamClose { stream, model } => {
+                put_u64(&mut body, *stream);
+                put_str(&mut body, model);
             }
         }
         finish_frame(body)
@@ -407,6 +461,40 @@ pub fn decode_frame(tag: u8, payload: &[u8]) -> Result<Frame, WireError> {
             p50_us: c.f64()?,
             p99_us: c.f64()?,
         },
+        9 => Frame::StreamOpen { stream: c.u64()?, model: c.string()?, window: c.u32()? },
+        10 => {
+            let stream = c.u64()?;
+            let id = c.u64()?;
+            let model = c.string()?;
+            let f = c.u32()? as usize;
+            // Same allocation guard as Submit: the declared width must
+            // agree with the bytes actually present before reserving.
+            let need = f.checked_mul(4).ok_or(WireError::BadPayload("sample size overflow"))?;
+            if need != payload.len() - c.off {
+                return Err(WireError::BadPayload("sample size disagrees with payload"));
+            }
+            let mut sample = Vec::with_capacity(f);
+            for _ in 0..f {
+                sample.push(f32::from_bits(c.u32()?));
+            }
+            Frame::StreamSample { stream, id, model, sample }
+        }
+        11 => Frame::StreamScore {
+            stream: c.u64()?,
+            id: c.u64()?,
+            score: c.f64()?,
+            is_anomaly: match c.u8()? {
+                0 => false,
+                1 => true,
+                _ => return Err(WireError::BadPayload("bad bool byte")),
+            },
+            reset: match c.u8()? {
+                0 => false,
+                1 => true,
+                _ => return Err(WireError::BadPayload("bad bool byte")),
+            },
+        },
+        12 => Frame::StreamClose { stream: c.u64()?, model: c.string()? },
         other => return Err(WireError::BadTag(other)),
     };
     c.done()?;
@@ -475,7 +563,7 @@ mod tests {
     }
 
     fn random_frame(rng: &mut Xoshiro256) -> Frame {
-        match rng.below(9) {
+        match rng.below(13) {
             0 => Frame::Hello { version: rng.below(u16::MAX as u64 + 1) as u16 },
             1 => {
                 let t = rng.below(6) as usize;
@@ -512,13 +600,39 @@ mod tests {
                 reason: ["drain", "restart", ""][rng.below(3) as usize].to_string(),
             },
             7 => Frame::HealthProbe { seq: rng.next_u64() },
-            _ => Frame::Heartbeat {
+            8 => Frame::Heartbeat {
                 seq: rng.next_u64(),
                 inflight: rng.below(1 << 20),
                 shed_delta: rng.below(1 << 20),
                 // Raw bit patterns (NaN/inf included) must survive.
                 p50_us: f64::from_bits(rng.next_u64()),
                 p99_us: f64::from_bits(rng.next_u64()),
+            },
+            9 => Frame::StreamOpen {
+                stream: rng.next_u64(),
+                model: format!("LSTM-AE-F{}-D{}", 16 << rng.below(3), rng.below(8)),
+                window: rng.below(256) as u32,
+            },
+            10 => {
+                let f = rng.below(9) as usize;
+                Frame::StreamSample {
+                    stream: rng.next_u64(),
+                    id: rng.next_u64(),
+                    model: format!("LSTM-AE-F{}-D{}", 16 << rng.below(3), rng.below(8)),
+                    sample: (0..f).map(|_| rng.uniform(-2.0, 2.0) as f32).collect(),
+                }
+            }
+            11 => Frame::StreamScore {
+                stream: rng.next_u64(),
+                id: rng.next_u64(),
+                // Raw bit patterns, including NaN/inf, must survive.
+                score: f64::from_bits(rng.next_u64()),
+                is_anomaly: rng.next_f64() < 0.5,
+                reset: rng.next_f64() < 0.5,
+            },
+            _ => Frame::StreamClose {
+                stream: rng.next_u64(),
+                model: format!("LSTM-AE-F{}-D{}", 16 << rng.below(3), rng.below(8)),
             },
         }
     }
@@ -560,6 +674,22 @@ mod tests {
                     && shed_delta == sd2
                     && p50_us.to_bits() == p50b.to_bits()
                     && p99_us.to_bits() == p99b.to_bits()
+            }
+            (
+                Frame::StreamScore { stream, id, score, is_anomaly, reset },
+                Frame::StreamScore {
+                    stream: st2,
+                    id: id2,
+                    score: sc2,
+                    is_anomaly: an2,
+                    reset: rs2,
+                },
+            ) => {
+                stream == st2
+                    && id == id2
+                    && score.to_bits() == sc2.to_bits()
+                    && is_anomaly == an2
+                    && reset == rs2
             }
             _ => a == b,
         }
@@ -632,7 +762,7 @@ mod tests {
 
     #[test]
     fn unknown_tags_and_malformed_payloads_are_rejected() {
-        assert!(matches!(decode_frame(9, &[]), Err(WireError::BadTag(9))));
+        assert!(matches!(decode_frame(13, &[]), Err(WireError::BadTag(13))));
         // Hello payload too short.
         assert!(matches!(decode_frame(0, &[1]), Err(WireError::BadPayload(_))));
         // Trailing bytes after a valid Hello.
@@ -684,6 +814,24 @@ mod tests {
         bad_leave.extend_from_slice(&2u16.to_le_bytes());
         bad_leave.extend_from_slice(&[0xFF, 0xFE]);
         assert!(matches!(decode_frame(6, &bad_leave), Err(WireError::BadUtf8)));
+        // Streaming frames: short payloads are clean rejections.
+        assert!(matches!(decode_frame(9, &[0; 5]), Err(WireError::BadPayload(_))));
+        assert!(matches!(decode_frame(12, &[0; 3]), Err(WireError::BadPayload(_))));
+        // StreamSample whose declared width disagrees with the payload.
+        let mut sample = Vec::new();
+        sample.extend_from_slice(&1u64.to_le_bytes()); // stream
+        sample.extend_from_slice(&2u64.to_le_bytes()); // id
+        sample.extend_from_slice(&0u16.to_le_bytes()); // empty model name
+        sample.extend_from_slice(&1000u32.to_le_bytes()); // F, but no samples
+        assert!(matches!(decode_frame(10, &sample), Err(WireError::BadPayload(_))));
+        // StreamScore with a non-boolean reset byte.
+        let mut score = Vec::new();
+        score.extend_from_slice(&1u64.to_le_bytes());
+        score.extend_from_slice(&2u64.to_le_bytes());
+        score.extend_from_slice(&0u64.to_le_bytes()); // score bits
+        score.push(0);
+        score.push(7);
+        assert!(matches!(decode_frame(11, &score), Err(WireError::BadPayload(_))));
         // Random byte soup across many seeds: errors only, no panics.
         let mut rng = Xoshiro256::seeded(0xD15EA5E);
         for _ in 0..2000 {

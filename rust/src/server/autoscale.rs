@@ -436,7 +436,7 @@ mod tests {
             queue_capacity: 64,
             threshold: 1.0,
             autoscale: Some(policy),
-            cache: None,
+            ..Default::default()
         };
         let lane = Arc::new(Lane::start(
             "hot",
@@ -497,7 +497,7 @@ mod tests {
                     queue_capacity: 64,
                     threshold: 1.0,
                     autoscale: Some(policy.clone()),
-                    cache: None,
+                    ..Default::default()
                 },
             ))
         };

@@ -26,6 +26,15 @@ pub trait Backend: Send + Sync {
     /// autoscaler's replica knob. The default is a no-op so backends
     /// without replica parallelism (PJRT, test doubles) ignore scaling.
     fn set_pipeline_replicas(&self, _replicas: usize) {}
+    /// The model behind this scorer, when one is available for stateful
+    /// stream sessions ([`crate::engine::session`]). Lanes whose backend
+    /// returns `Some` grow a per-lane `SessionTable` and accept
+    /// `submit_sample`; `None` (the default — PJRT executes windows only,
+    /// test doubles have no recurrence to carry) leaves the lane
+    /// window-only.
+    fn session_model(&self) -> Option<Arc<LstmAutoencoder>> {
+        None
+    }
 }
 
 /// Scores through the AOT-compiled PJRT artifact — real numerics,
@@ -278,6 +287,10 @@ impl Backend for QuantBackend {
 
     fn pipeline_replicas(&self) -> Option<usize> {
         self.pool.as_ref().map(|p| p.replicas())
+    }
+
+    fn session_model(&self) -> Option<Arc<LstmAutoencoder>> {
+        Some(self.ae.clone())
     }
 
     fn set_pipeline_replicas(&self, replicas: usize) {

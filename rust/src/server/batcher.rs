@@ -11,6 +11,13 @@
 //! bounded `sync_channel`, so when every worker is busy the flush blocks,
 //! the admission queue fills, and the lane sheds — backpressure instead
 //! of unbounded buffering.
+//!
+//! Stream-session steps (`Request::stream` set) and stateless windows
+//! never share a batch: the two dispatch to different worker code paths
+//! (`step_batch_into` over carried state vs. window scoring), so a kind
+//! boundary in the arrival order flushes the open batch and starts a new
+//! one. Same-kind runs still coalesce — a burst of steps from many
+//! sessions becomes one batched `step_batch_into` call.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
@@ -30,6 +37,12 @@ fn admit(req: Request, cancels: &CancelSet, metrics: &ServerMetrics) -> Option<R
         return None;
     }
     Some(req)
+}
+
+/// True when `req` cannot join the open batch: session steps and
+/// stateless windows dispatch to different worker paths and never mix.
+fn kind_differs(pending: &Batch, req: &Request) -> bool {
+    pending.first().is_some_and(|head| head.stream.is_some() != req.stream.is_some())
 }
 
 pub(crate) fn run_batcher(
@@ -72,10 +85,21 @@ pub(crate) fn run_batcher(
                 // every dequeued request is overdue, and flushing each
                 // one alone would collapse batching to singletons exactly
                 // when the throughput of big batches matters most.
+                let mut switched = false;
                 while pending.len() < cfg.max_batch {
                     match rx.try_recv() {
                         Ok(Msg::Req(req)) => {
                             if let Some(req) = admit(req, &cancels, &metrics) {
+                                if kind_differs(&pending, &req) {
+                                    // Kind boundary: dispatch the overdue
+                                    // batch and open a fresh one with this
+                                    // request — its own deadline applies.
+                                    flush(&mut pending, &out);
+                                    oldest = req.submitted;
+                                    pending.push(req);
+                                    switched = true;
+                                    break;
+                                }
                                 pending.push(req);
                             }
                         }
@@ -86,12 +110,18 @@ pub(crate) fn run_batcher(
                         Err(_) => break,
                     }
                 }
-                flush(&mut pending, &out);
+                if !switched {
+                    flush(&mut pending, &out);
+                }
                 continue;
             }
             match rx.recv_timeout(remaining) {
                 Ok(Msg::Req(req)) => {
                     if let Some(req) = admit(req, &cancels, &metrics) {
+                        if kind_differs(&pending, &req) {
+                            flush(&mut pending, &out);
+                            oldest = req.submitted;
+                        }
                         pending.push(req);
                         if pending.len() >= cfg.max_batch {
                             flush(&mut pending, &out);
@@ -131,7 +161,7 @@ mod tests {
     fn req(id: u64) -> (Request, std::sync::mpsc::Receiver<Response>) {
         let (reply, rx): (Sender<Response>, _) = channel();
         let window = Window { data: vec![vec![0.0f32]], anomaly: None };
-        (Request { id, window, submitted: Instant::now(), key: None, reply }, rx)
+        (Request { id, window, submitted: Instant::now(), key: None, stream: None, reply }, rx)
     }
 
     fn spawn_batcher(
@@ -273,6 +303,39 @@ mod tests {
         assert_eq!(ids, vec![1, 3], "the cancelled request must never be dispatched");
         assert_eq!(metrics.cancelled(), 1);
         assert!(cancels.lock().unwrap().is_empty(), "consumed marks are retired");
+        tx.send(BatcherMsg::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn step_and_window_requests_never_share_a_batch() {
+        // A session step between two windows must split the batch: the
+        // worker paths differ (carried-state stepping vs. window scoring)
+        // and mixing them would score the step's 1×F sample as a window.
+        let cfg = ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            ..Default::default()
+        };
+        let (tx, out_rx, h) = spawn_batcher(cfg);
+        let (w1, _k1) = req(1);
+        let (mut s2, _k2) = req(2);
+        s2.stream = Some(42);
+        let (w3, _k3) = req(3);
+        tx.send(BatcherMsg::Req(w1)).unwrap();
+        tx.send(BatcherMsg::Req(s2)).unwrap();
+        tx.send(BatcherMsg::Req(w3)).unwrap();
+        let mut total = 0;
+        while total < 3 {
+            let batch = batch_of(out_rx.recv().unwrap());
+            total += batch.len();
+            let steps = batch.iter().filter(|r| r.stream.is_some()).count();
+            assert!(
+                steps == 0 || steps == batch.len(),
+                "mixed batch: {steps} steps among {} requests",
+                batch.len()
+            );
+        }
         tx.send(BatcherMsg::Shutdown).unwrap();
         h.join().unwrap();
     }

@@ -25,23 +25,26 @@
 //! request path. [`super::AnomalyServer`] is a single-lane compatibility
 //! wrapper over exactly this machinery.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::engine::{ExecMode, PipelineOptions, PIPELINE_MIN_DEPTH};
+use crate::engine::{
+    step_session, step_sessions_batch, ExecMode, PipelineOptions, SessionState, PIPELINE_MIN_DEPTH,
+};
 use crate::model::{LstmAutoencoder, Topology};
+use crate::util::affinity;
 use crate::util::table::Table;
 use crate::workload::Window;
 
 use super::cache::{window_key, CacheConfig, CacheKey, Follower, LaneCache};
 use super::front::{CancelSet, CompletionRouter};
 use super::{
-    batcher, Autoscaler, AutoscalePolicy, Backend, BatcherMsg, QuantBackend, Request, Response,
-    ServerConfig, ServerMetrics, Ticket, WorkerMsg,
+    batcher, calibrate_threshold, Autoscaler, AutoscalePolicy, Backend, BatcherMsg, QuantBackend,
+    Request, Response, ServerConfig, ServerMetrics, SessionConfig, Ticket, WorkerMsg,
 };
 
 /// Why a submission was rejected at admission — and, through a
@@ -68,6 +71,11 @@ pub enum SubmitError {
     TooLarge,
     /// The registry serves no model by that name.
     UnknownModel(String),
+    /// No open stream session by that id on the addressed lane: it was
+    /// never opened, was explicitly closed, was LRU-evicted from a full
+    /// [`SessionTable`], or the lane's backend serves windows only.
+    /// Reopen (fresh state — the documented reset semantic) and resubmit.
+    UnknownStream(u64),
 }
 
 impl std::fmt::Display for SubmitError {
@@ -78,11 +86,203 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Cancelled => write!(f, "request cancelled before scoring"),
             SubmitError::TooLarge => write!(f, "window exceeds the wire frame-size limit"),
             SubmitError::UnknownModel(m) => write!(f, "unknown model {m:?}"),
+            SubmitError::UnknownStream(s) => write!(f, "unknown stream session {s}"),
         }
     }
 }
 
 impl std::error::Error for SubmitError {}
+
+/// Scores retained per session for online threshold recalibration.
+const SCORE_RING: usize = 128;
+/// Recalibrate a session's threshold every this many steps…
+const RECAL_EVERY: u64 = 32;
+/// …once at least this many scores have accumulated (earlier the
+/// quantile is too noisy; the lane threshold applies until then).
+const RECAL_MIN: usize = 16;
+/// Quantile for per-session recalibration, matching the benign-quantile
+/// recipe of [`calibrate_threshold`].
+const RECAL_Q: f64 = 0.99;
+
+/// One open stream session: carried engine state plus the lane-side
+/// bookkeeping (recent scores, recalibrated threshold, LRU stamp).
+struct SessionEntry {
+    state: SessionState,
+    /// The last ≤ [`SCORE_RING`] step scores, oldest first — the sample
+    /// the per-session threshold recalibrates over (drift tracking: a
+    /// stream whose baseline shifts re-learns its own normal).
+    scores: VecDeque<f64>,
+    /// Per-session recalibrated threshold; `None` until enough scores
+    /// accumulate, during which the lane threshold applies.
+    threshold: Option<f64>,
+    /// Logical LRU clock stamp of the last open/step touch.
+    last_used: u64,
+}
+
+impl SessionEntry {
+    fn fresh(ae: &LstmAutoencoder, window: usize, now: u64) -> SessionEntry {
+        SessionEntry {
+            state: SessionState::new(ae, window),
+            scores: VecDeque::new(),
+            threshold: None,
+            last_used: now,
+        }
+    }
+}
+
+struct TableInner {
+    map: HashMap<u64, SessionEntry>,
+    /// Monotonic logical clock stamping LRU order (no wall time on the
+    /// step path).
+    clock: u64,
+}
+
+/// Evict the least-recently-used session. O(n) scan — eviction only
+/// runs when an open (or an implicit worker-side reopen) overflows
+/// `capacity`, never on the per-step hot path.
+fn evict_lru(inner: &mut TableInner) {
+    if let Some((&id, _)) = inner.map.iter().min_by_key(|(_, e)| e.last_used) {
+        inner.map.remove(&id);
+    }
+}
+
+/// A lane's open stream sessions: bounded, LRU-evicting, explicitly
+/// closeable. Built by [`Lane::start`] exactly when the lane's backend
+/// exposes a [`Backend::session_model`]; sized by
+/// [`ServerConfig::sessions`].
+///
+/// Lifecycle: [`Lane::open_stream`] inserts (reopening resets state),
+/// opening past `capacity` evicts the least-recently-stepped session,
+/// [`Lane::close_stream`] removes. Samples for a closed or evicted
+/// session fail admission with [`SubmitError::UnknownStream`]; a session
+/// that vanishes *after* admission (close/evict racing the queue) is
+/// implicitly reopened cold by the worker and counted as a stream reset
+/// — an admitted sample always resolves to a score.
+pub struct SessionTable {
+    ae: Arc<LstmAutoencoder>,
+    capacity: usize,
+    default_window: usize,
+    inner: Mutex<TableInner>,
+}
+
+impl SessionTable {
+    fn new(ae: Arc<LstmAutoencoder>, cfg: SessionConfig) -> SessionTable {
+        SessionTable {
+            ae,
+            capacity: cfg.capacity.max(1),
+            default_window: cfg.window.max(1),
+            inner: Mutex::new(TableInner { map: HashMap::new(), clock: 0 }),
+        }
+    }
+
+    /// Open sessions right now.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// Whether no session is open.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether `stream` is currently open (admission check; the worker
+    /// re-checks, since close/evict can race the queue).
+    pub fn contains(&self, stream: u64) -> bool {
+        self.inner.lock().unwrap().map.contains_key(&stream)
+    }
+
+    /// Max concurrently-open sessions before LRU eviction.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Feature width every sample must have.
+    fn features(&self) -> usize {
+        self.ae.topo.features
+    }
+
+    /// Insert a fresh session (reopening an existing id resets it), then
+    /// LRU-evict down to capacity. `window == 0` takes the lane default.
+    fn open(&self, stream: u64, window: usize) {
+        let w = if window == 0 { self.default_window } else { window };
+        let mut inner = self.inner.lock().unwrap();
+        let now = inner.clock;
+        inner.clock += 1;
+        inner.map.insert(stream, SessionEntry::fresh(&self.ae, w, now));
+        while inner.map.len() > self.capacity {
+            evict_lru(&mut inner);
+        }
+    }
+
+    /// Remove a session; `false` when it wasn't open (idempotent).
+    fn close(&self, stream: u64) -> bool {
+        self.inner.lock().unwrap().map.remove(&stream).is_some()
+    }
+
+    /// Advance sessions by one sample each, in dispatch order, and return
+    /// `(score, is_anomaly)` per request plus the number of implicit
+    /// cold reopens (admission races — each is a stream reset).
+    ///
+    /// Requests are walked in order and grouped into maximal runs of
+    /// pairwise-distinct stream ids, each run advancing through one
+    /// [`step_sessions_batch`] call (the MVM → MMM weight reuse across
+    /// sessions); a repeated id flushes the run so same-stream samples
+    /// apply strictly in dispatch order. Missing sessions are reopened
+    /// cold at the lane default window.
+    fn step_many(&self, reqs: &[(u64, &[f32])], lane_threshold: f64) -> (Vec<(f64, bool)>, u64) {
+        let mut inner = self.inner.lock().unwrap();
+        let mut out = Vec::with_capacity(reqs.len());
+        let mut resets = 0u64;
+        let mut start = 0;
+        while start < reqs.len() {
+            let mut seen = HashSet::new();
+            let mut end = start;
+            while end < reqs.len() && seen.insert(reqs[end].0) {
+                end += 1;
+            }
+            let mut entries: Vec<(u64, SessionEntry)> = Vec::with_capacity(end - start);
+            for &(id, _) in &reqs[start..end] {
+                let entry = match inner.map.remove(&id) {
+                    Some(e) => e,
+                    None => {
+                        resets += 1;
+                        SessionEntry::fresh(&self.ae, self.default_window, inner.clock)
+                    }
+                };
+                entries.push((id, entry));
+            }
+            let samples: Vec<&[f32]> = reqs[start..end].iter().map(|&(_, s)| s).collect();
+            let scores = if entries.len() == 1 {
+                vec![step_session(&self.ae, &mut entries[0].1.state, samples[0])]
+            } else {
+                let mut states: Vec<&mut SessionState> =
+                    entries.iter_mut().map(|(_, e)| &mut e.state).collect();
+                step_sessions_batch(&self.ae, &mut states, &samples)
+            };
+            for ((id, mut entry), score) in entries.into_iter().zip(scores) {
+                entry.scores.push_back(score);
+                if entry.scores.len() > SCORE_RING {
+                    entry.scores.pop_front();
+                }
+                if entry.state.steps() % RECAL_EVERY == 0 && entry.scores.len() >= RECAL_MIN {
+                    entry.threshold =
+                        Some(calibrate_threshold(entry.scores.make_contiguous(), RECAL_Q));
+                }
+                let thr = entry.threshold.unwrap_or(lane_threshold);
+                out.push((score, score > thr));
+                entry.last_used = inner.clock;
+                inner.clock += 1;
+                inner.map.insert(id, entry);
+            }
+            start = end;
+        }
+        // Implicit reopens may have grown the table past its bound.
+        while inner.map.len() > self.capacity {
+            evict_lru(&mut inner);
+        }
+        (out, resets)
+    }
+}
 
 /// The dynamically resizable worker pool of one lane: worker threads
 /// consuming batches from the shared (bounded) batch queue, plus the
@@ -103,6 +303,14 @@ struct WorkerSet {
     /// The lane's score cache, shared with the submit paths: workers
     /// populate it after scoring cache-miss requests.
     cache: Option<Arc<LaneCache>>,
+    /// The lane's stream-session table, shared with the submit paths:
+    /// workers step admitted session samples against it. `None` on
+    /// window-only lanes.
+    sessions: Option<Arc<SessionTable>>,
+    /// Pin worker `wid` to core `(pin_base + wid) % cores` when set —
+    /// the batch-engine extension of the pipeline-stage pinning in
+    /// [`crate::engine::PipelineOptions::pin_base_core`].
+    pin_base: Option<usize>,
     /// Producer side of the batch queue, kept so retirement messages can
     /// be injected behind the batcher's traffic. Dropped (`None`) at
     /// shutdown so workers see a disconnected channel and exit.
@@ -129,12 +337,28 @@ impl WorkerSet {
         let threshold = self.threshold;
         let cancels = self.cancels.clone();
         let cache = self.cache.clone();
+        let sessions = self.sessions.clone();
         let alive = self.alive.clone();
         let pending_retire = self.pending_retire.clone();
+        let pin = self.pin_base.map(|base| (base + wid) % affinity::available_cores().max(1));
         let handle = std::thread::Builder::new()
             .name(format!("scr{wid}:{}", self.lane))
             .spawn(move || {
-                worker_loop(backend, rx, metrics, threshold, cancels, cache, alive, pending_retire)
+                if let Some(core) = pin {
+                    // Best-effort, like every other pin in the stack.
+                    let _ = affinity::pin_to_core(core);
+                }
+                worker_loop(
+                    backend,
+                    rx,
+                    metrics,
+                    threshold,
+                    cancels,
+                    cache,
+                    sessions,
+                    alive,
+                    pending_retire,
+                )
             })
             .expect("spawn worker");
         let mut handles = self.handles.lock().unwrap();
@@ -219,6 +443,10 @@ pub struct Lane {
     /// config enables one (see [`super::cache`]). Shared with the worker
     /// set, which populates it after scoring miss requests.
     cache: Option<Arc<LaneCache>>,
+    /// The lane's stream-session table, built exactly when the backend
+    /// exposes a [`Backend::session_model`]. Shared with the worker set,
+    /// which steps admitted samples against it.
+    sessions: Option<Arc<SessionTable>>,
     /// Autoscaling decisions applied to this lane (scale-ups, downs).
     scale_ups: AtomicU64,
     scale_downs: AtomicU64,
@@ -249,6 +477,11 @@ impl Lane {
             .as_ref()
             .filter(|c| c.entries > 0)
             .map(|c| Arc::new(LaneCache::new(c.clone())));
+        // Stream sessions exist exactly where the backend can hand out
+        // its model — carried state needs the real recurrence, not just
+        // a `score_batch` surface.
+        let sessions =
+            backend.session_model().map(|ae| Arc::new(SessionTable::new(ae, cfg.sessions)));
         let batcher = {
             let cfg2 = cfg.clone();
             let out = batch_tx.clone();
@@ -266,6 +499,8 @@ impl Lane {
             threshold: cfg.threshold,
             cancels: cancels.clone(),
             cache: cache.clone(),
+            sessions: sessions.clone(),
+            pin_base: cfg.pin_base_core,
             batch_tx: Mutex::new(Some(batch_tx)),
             batch_rx,
             alive: Arc::new(AtomicUsize::new(0)),
@@ -290,6 +525,7 @@ impl Lane {
             workers,
             front,
             cache,
+            sessions,
             scale_ups: AtomicU64::new(0),
             scale_downs: AtomicU64::new(0),
         }
@@ -376,6 +612,7 @@ impl Lane {
         id: u64,
         window: Window,
         key: Option<CacheKey>,
+        stream: Option<u64>,
         reply: std::sync::mpsc::Sender<Response>,
     ) -> Result<(), SubmitError> {
         // Held across the send so a concurrent shutdown cannot slot its
@@ -391,7 +628,7 @@ impl Lane {
             self.metrics.on_rejected_closed();
             return Err(SubmitError::Closed);
         }
-        let req = Request { id, window, submitted: Instant::now(), key, reply };
+        let req = Request { id, window, submitted: Instant::now(), key, stream, reply };
         match self.tx.try_send(BatcherMsg::Req(req)) {
             Ok(()) => {
                 self.metrics.on_submit();
@@ -441,10 +678,10 @@ impl Lane {
                 self.metrics.on_coalesced();
                 return Ok(rx);
             }
-            self.submit_inner(id, window, Some(key), reply)?;
+            self.submit_inner(id, window, Some(key), None, reply)?;
             return Ok(rx);
         }
-        self.submit_inner(id, window, None, reply)?;
+        self.submit_inner(id, window, None, None, reply)?;
         Ok(rx)
     }
 
@@ -488,7 +725,7 @@ impl Lane {
         let started = Instant::now();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let Some(cache) = self.cache.clone() else {
-            return self.submit_async_direct(id, window, None);
+            return self.submit_async_direct(id, window, None, None);
         };
         // Same fast-fail gate rule as submit_inner, checked up front: a
         // closed lane never answers from its cache.
@@ -516,7 +753,7 @@ impl Lane {
             self.metrics.on_coalesced();
             return Ok(follower.expect("attaching built a follower ticket"));
         }
-        match self.submit_async_direct(id, window, Some(key.clone())) {
+        match self.submit_async_direct(id, window, Some(key.clone()), None) {
             Ok(ticket) => {
                 // Fan the leader's outcome — Ok, Cancelled, or the exit
                 // drain's Closed after a worker panic — out to followers.
@@ -541,6 +778,7 @@ impl Lane {
         id: u64,
         window: Window,
         key: Option<CacheKey>,
+        stream: Option<u64>,
     ) -> Result<Ticket, SubmitError> {
         // Register the completion slot before the request can enter the
         // queue, so the reply can never beat the registration.
@@ -553,7 +791,7 @@ impl Lane {
                 return Err(e);
             }
         };
-        match self.submit_inner(id, window, key, reply) {
+        match self.submit_inner(id, window, key, stream, reply) {
             Ok(()) => Ok(ticket),
             Err(e) => {
                 self.front.revoke(id);
@@ -568,6 +806,73 @@ impl Lane {
     /// arrives — the router forgets a slot at delivery, never leaks it.
     pub fn async_inflight(&self) -> usize {
         self.front.inflight()
+    }
+
+    /// Open (or reopen with fresh state — the documented reset semantic)
+    /// stream session `stream`, scoring a sliding window of `window`
+    /// samples (`0` → the lane's [`SessionConfig::window`]). Opening past
+    /// the table's capacity evicts the least-recently-stepped session.
+    /// Fails with [`SubmitError::UnknownStream`] on a window-only lane
+    /// and [`SubmitError::Closed`] after shutdown.
+    pub fn open_stream(&self, stream: u64, window: usize) -> Result<(), SubmitError> {
+        let Some(table) = &self.sessions else {
+            return Err(SubmitError::UnknownStream(stream));
+        };
+        if !self.gate_open() {
+            return Err(SubmitError::Closed);
+        }
+        table.open(stream, window);
+        self.metrics.set_sessions(table.len());
+        Ok(())
+    }
+
+    /// Close stream session `stream`, releasing its table slot. Closing
+    /// an unknown (or never-opened) session is a no-op.
+    pub fn close_stream(&self, stream: u64) {
+        if let Some(table) = &self.sessions {
+            table.close(stream);
+            self.metrics.set_sessions(table.len());
+        }
+    }
+
+    /// Feed one `F`-feature sample to an open session: the O(1)
+    /// incremental path. Admission, batching, backpressure, and shedding
+    /// are exactly the window path's (the sample rides the same bounded
+    /// queue — session steps join the admission accounting law); the
+    /// batcher groups same-lane steps into one batched
+    /// [`step_sessions_batch`] call, and the [`Ticket`] resolves to the
+    /// session's updated sliding-window score with the per-session
+    /// recalibrated threshold applied.
+    ///
+    /// Fails fast with [`SubmitError::UnknownStream`] when the session
+    /// is not open (never opened / closed / evicted) and
+    /// [`SubmitError::TooLarge`] on a width-mismatched sample.
+    pub fn submit_sample_async(
+        &self,
+        stream: u64,
+        sample: Vec<f32>,
+    ) -> Result<Ticket, SubmitError> {
+        let Some(table) = &self.sessions else {
+            return Err(SubmitError::UnknownStream(stream));
+        };
+        if sample.len() != table.features() {
+            return Err(SubmitError::TooLarge);
+        }
+        if !table.contains(stream) {
+            return Err(SubmitError::UnknownStream(stream));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let window = Window { data: vec![sample], anomaly: None };
+        // Steps never touch the cache: carried state makes every step of
+        // a stream distinct even when sample bytes repeat.
+        self.submit_async_direct(id, window, None, Some(stream))
+    }
+
+    /// This lane's session table, when the backend supports streams —
+    /// exposed for lifecycle inspection (open count, capacity) in tests
+    /// and reports.
+    pub fn session_table(&self) -> Option<&SessionTable> {
+        self.sessions.as_deref()
     }
 
     /// Submit and wait. A lane torn down while the request is in flight
@@ -630,9 +935,10 @@ impl Drop for WorkerExitGuard {
     }
 }
 
-// Eight parameters because the worker IS the junction of every lane
-// subsystem (backend, queue, metrics, cancellation, cache, lifecycle);
-// a params struct would only add noise at the single call site.
+// Nine parameters because the worker IS the junction of every lane
+// subsystem (backend, queue, metrics, cancellation, cache, sessions,
+// lifecycle); a params struct would only add noise at the single call
+// site.
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     backend: Arc<dyn Backend>,
@@ -641,16 +947,15 @@ fn worker_loop(
     threshold: f64,
     cancels: CancelSet,
     cache: Option<Arc<LaneCache>>,
+    sessions: Option<Arc<SessionTable>>,
     alive: Arc<AtomicUsize>,
     pending_retire: Arc<AtomicUsize>,
 ) {
     let _exit = WorkerExitGuard { alive, metrics: metrics.clone() };
     loop {
         let wait_start = Instant::now();
-        let msg = {
-            let guard = rx.lock().unwrap();
-            guard.recv()
-        };
+        let guard = rx.lock().unwrap();
+        let msg = guard.recv();
         metrics.on_worker_idle(wait_start.elapsed().as_nanos() as u64);
         let mut batch = match msg {
             Ok(WorkerMsg::Batch(b)) => b,
@@ -660,6 +965,17 @@ fn worker_loop(
             }
             Err(_) => break,
         };
+        // Session-step batches run to completion while the dispatch lock
+        // is still held: a step is O(1) per sample, and serializing step
+        // batches keeps same-stream samples applying in dispatch order
+        // across workers (state carry makes order semantic — two workers
+        // racing consecutive steps of one stream would be a data race on
+        // meaning, if not on memory). Window batches drop the lock and
+        // score concurrently, exactly as before.
+        let step_batch = batch.first().is_some_and(|r| r.stream.is_some());
+        if !step_batch {
+            drop(guard);
+        }
         // Last cancellation point: a request cancelled after the batcher
         // dispatched its batch is dropped here, just before scoring. One
         // lock acquisition for the whole batch — the guard is held
@@ -681,6 +997,38 @@ fn worker_loop(
             continue;
         }
         let dispatch = Instant::now();
+        if step_batch {
+            // Admission only accepts samples on lanes with a table; a
+            // `None` here is unreachable, but dropping the batch beats
+            // panicking the worker.
+            let Some(table) = &sessions else { continue };
+            let reqs: Vec<(u64, &[f32])> = batch
+                .iter()
+                .map(|r| (r.stream.expect("step batch"), r.window.data[0].as_slice()))
+                .collect();
+            let (scored, resets) = table.step_many(&reqs, threshold);
+            if resets > 0 {
+                metrics.on_stream_resets(resets);
+                metrics.set_sessions(table.len());
+            }
+            let service_us = dispatch.elapsed().as_secs_f64() * 1e6;
+            metrics.on_batch(batch.len(), service_us);
+            for (req, (score, is_anomaly)) in batch.into_iter().zip(scored) {
+                let e2e_us = req.submitted.elapsed().as_secs_f64() * 1e6;
+                let queue_us = e2e_us - service_us;
+                let resp = Response {
+                    id: req.id,
+                    score,
+                    is_anomaly,
+                    queue_us: queue_us.max(0.0),
+                    service_us,
+                    e2e_us,
+                };
+                metrics.on_response(&resp);
+                let _ = req.reply.send(resp);
+            }
+            continue;
+        }
         let windows: Vec<&Window> = batch.iter().map(|r| &r.window).collect();
         let scores = backend.score_batch(&windows);
         let service_us = dispatch.elapsed().as_secs_f64() * 1e6;
@@ -814,9 +1162,40 @@ impl ModelRegistry {
             .score_blocking(window)
     }
 
+    /// Open a stream session on a model's lane (see
+    /// [`Lane::open_stream`]).
+    pub fn open_stream(&self, model: &str, stream: u64, window: usize) -> Result<(), SubmitError> {
+        self.lane(model)
+            .ok_or_else(|| SubmitError::UnknownModel(model.to_string()))?
+            .open_stream(stream, window)
+    }
+
+    /// Feed one sample to an open session on a model's lane (see
+    /// [`Lane::submit_sample_async`]).
+    pub fn submit_sample(
+        &self,
+        model: &str,
+        stream: u64,
+        sample: Vec<f32>,
+    ) -> Result<Ticket, SubmitError> {
+        self.lane(model)
+            .ok_or_else(|| SubmitError::UnknownModel(model.to_string()))?
+            .submit_sample_async(stream, sample)
+    }
+
+    /// Close a stream session on a model's lane; unknown model or
+    /// session is a no-op (close must be safe to fire at teardown).
+    pub fn close_stream(&self, model: &str, stream: u64) {
+        if let Some(lane) = self.lane(model) {
+            lane.close_stream(stream);
+        }
+    }
+
     /// Per-model metrics rolled up into one fleet report, including each
-    /// lane's current worker count, pipeline replicas, and the scaling
-    /// decisions an [`Autoscaler`] has applied (`scale +/-`).
+    /// lane's current worker count, pipeline replicas, the scaling
+    /// decisions an [`Autoscaler`] has applied (`scale +/-`), and the
+    /// streaming columns (open `sessions` gauge, cumulative stream
+    /// `resets`).
     pub fn fleet_report(&self) -> String {
         let mut t = Table::new("Fleet report (per-model lanes)").header(&[
             "Model",
@@ -832,9 +1211,12 @@ impl ModelRegistry {
             "repl",
             "scale +/-",
             "cache h/c",
+            "sessions",
+            "resets",
         ]);
         let (mut sub, mut shed, mut comp, mut anom) = (0u64, 0u64, 0u64, 0u64);
         let (mut hits, mut coal) = (0u64, 0u64);
+        let (mut sess, mut resets) = (0usize, 0u64);
         for lane in self.lanes.values() {
             let m = lane.metrics();
             let (p50, p95, _) = m.e2e_percentiles_us();
@@ -853,6 +1235,8 @@ impl ModelRegistry {
                 lane.pipeline_replicas().map_or_else(|| "-".to_string(), |r| r.to_string()),
                 format!("{ups}/{downs}"),
                 format!("{}/{}", m.cache_hits(), m.coalesced()),
+                m.sessions().to_string(),
+                m.stream_resets().to_string(),
             ]);
             sub += m.submitted();
             shed += m.shed();
@@ -860,12 +1244,16 @@ impl ModelRegistry {
             anom += m.anomalies();
             hits += m.cache_hits();
             coal += m.coalesced();
+            sess += m.sessions();
+            resets += m.stream_resets();
         }
-        // Cache totals are always in the footer (even at zero) so soak
-        // harnesses can grep one stable line for the hit count.
+        // Cache and stream totals are always in the footer (even at
+        // zero) so soak harnesses can grep one stable line for the hit,
+        // session, and reset counts.
         format!(
             "{}fleet: {sub} submitted, {shed} shed, {comp} completed, {anom} flagged, \
-             {hits} cache hits, {coal} coalesced across {} lanes\n",
+             {hits} cache hits, {coal} coalesced, {sess} sessions, \
+             {resets} stream resets across {} lanes\n",
             t.render(),
             self.lanes.len()
         )
@@ -977,9 +1365,13 @@ impl ModelRegistry {
     /// pipeline pool is assigned a disjoint run of cores starting where
     /// the previous pooled lane's replicas end (`depth × replicas` cores
     /// per lane, wrapping modulo the online core count inside the
-    /// pipeline), so two lanes' stage workers never contend for a pin.
-    /// `cache` applies the same score-cache config to every lane (`None`
-    /// runs the fleet uncached — the default everywhere else).
+    /// pipeline), so two lanes' stage workers never contend for a pin;
+    /// every lane's batch-engine *worker* threads then take the next
+    /// `workers` cores from the same counter
+    /// ([`ServerConfig::pin_base_core`]), extending the pinning to the
+    /// non-pipelined scoring paths. `cache` applies the same score-cache
+    /// config to every lane (`None` runs the fleet uncached — the
+    /// default everywhere else).
     pub fn paper_fleet_opts(
         base_seed: u64,
         mode: ExecMode,
@@ -1011,11 +1403,15 @@ impl ModelRegistry {
             // gets its replicas at every depth.
             let backend =
                 Arc::new(QuantBackend::with_engine_options(ae, mode, replicas, lane_engine));
-            let cfg = ServerConfig {
+            let mut cfg = ServerConfig {
                 autoscale: autoscale.clone(),
                 cache: cache.clone(),
                 ..Self::paper_lane_config(&topo, replicas)
             };
+            if engine.pin_base_core.is_some() {
+                cfg.pin_base_core = next_core;
+                next_core = next_core.map(|c| c + cfg.workers);
+            }
             reg.register(&topo.name, backend, cfg);
         }
         reg
@@ -1035,6 +1431,8 @@ impl ModelRegistry {
             threshold: 0.05,
             autoscale: None,
             cache: None,
+            sessions: SessionConfig::default(),
+            pin_base_core: None,
         }
     }
 }
@@ -1048,6 +1446,25 @@ impl super::SubmitSurface for ModelRegistry {
     /// `Receiver` wait, no router slot) rather than the trait default.
     fn score_blocking(&self, model: &str, window: Window) -> Result<Response, SubmitError> {
         ModelRegistry::score_blocking(self, model, window)
+    }
+}
+
+impl super::StreamSurface for ModelRegistry {
+    fn open_stream(&self, model: &str, stream: u64, window: usize) -> Result<(), SubmitError> {
+        ModelRegistry::open_stream(self, model, stream, window)
+    }
+
+    fn submit_sample(
+        &self,
+        model: &str,
+        stream: u64,
+        sample: Vec<f32>,
+    ) -> Result<Ticket, SubmitError> {
+        ModelRegistry::submit_sample(self, model, stream, sample)
+    }
+
+    fn close_stream(&self, model: &str, stream: u64) {
+        ModelRegistry::close_stream(self, model, stream)
     }
 }
 
@@ -1101,8 +1518,7 @@ mod tests {
             workers: 1,
             queue_capacity: 2,
             threshold: 1.0,
-            autoscale: None,
-            cache: None,
+            ..Default::default()
         };
         let lane = Lane::start("gated", backend, cfg);
         // Worker blocks on the first batch; the batch queue (cap 2), the
@@ -1179,8 +1595,7 @@ mod tests {
             workers: 2,
             queue_capacity: 64,
             threshold: 1.0,
-            autoscale: None,
-            cache: None,
+            ..Default::default()
         };
         let lane = Lane::start("panicky", Arc::new(PanickingBackend), cfg);
         assert_eq!(lane.workers(), 2);
@@ -1215,8 +1630,7 @@ mod tests {
             workers: 1,
             queue_capacity: 2,
             threshold: 1.0,
-            autoscale: None,
-            cache: None,
+            ..Default::default()
         };
         let lane = Lane::start("conserve", backend, cfg);
         let attempts = 16u64;
@@ -1299,8 +1713,7 @@ mod tests {
             workers: 1,
             queue_capacity: 64,
             threshold: 1.0,
-            autoscale: None,
-            cache: None,
+            ..Default::default()
         };
         let lane = Lane::start("cancel", backend, cfg);
         // First request occupies the worker behind the gate...
@@ -1410,6 +1823,42 @@ mod tests {
         assert!(m.worker_idle_ns() > 0, "workers waited between batches");
         lane.shutdown();
         assert_eq!(lane.metrics().completed(), 175, "shutdown drains, never drops");
+    }
+
+    #[test]
+    fn stream_samples_flow_and_match_the_session_reference() {
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let ae = LstmAutoencoder::random(topo.clone(), 5);
+        let reference = LstmAutoencoder::random(topo, 5);
+        let backend = Arc::new(QuantBackend::new(ae));
+        let cfg = ServerConfig {
+            sessions: SessionConfig { capacity: 8, window: 4 },
+            ..Default::default()
+        };
+        let lane = Lane::start("stream", backend, cfg);
+        lane.open_stream(7, 0).expect("quant backends accept stream opens");
+        assert_eq!(lane.session_table().unwrap().len(), 1);
+        let mut state = SessionState::new(&reference, 4);
+        let mut gen = TelemetryGen::new(32, 11);
+        for _ in 0..6 {
+            let sample = gen.benign_window(1).data.remove(0);
+            let want = step_session(&reference, &mut state, &sample);
+            let r = lane.submit_sample_async(7, sample).unwrap().wait().unwrap();
+            assert_eq!(r.score.to_bits(), want.to_bits(), "lane step == direct session step");
+        }
+        // Width mismatches are rejected at admission, not in the worker.
+        assert_eq!(lane.submit_sample_async(7, vec![0.0; 3]).unwrap_err(), SubmitError::TooLarge);
+        // Samples after close fail fast with UnknownStream.
+        lane.close_stream(7);
+        assert_eq!(
+            lane.submit_sample_async(7, vec![0.0; 32]).unwrap_err(),
+            SubmitError::UnknownStream(7)
+        );
+        lane.shutdown();
+        let m = lane.metrics();
+        assert_eq!(m.completed(), 6);
+        assert_eq!(m.submitted(), 6, "steps ride the same admission accounting");
+        assert_eq!(m.stream_resets(), 0);
     }
 
     #[test]

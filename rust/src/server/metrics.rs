@@ -64,6 +64,15 @@ pub struct ServerMetrics {
     coalesced: AtomicU64,
     /// Entries evicted from the score cache (entry-count or byte cap).
     cache_evictions: AtomicU64,
+    /// Stream sessions currently open on this lane (point-in-time gauge,
+    /// refreshed on open/close and on worker-side implicit reopens).
+    sessions: AtomicUsize,
+    /// Stream sessions restarted cold: worker-side implicit reopens
+    /// after a close/evict raced an admitted sample, and (on routers)
+    /// sessions reopened on another shard after a failover — each one is
+    /// a documented state reset, so downstream scores restart as a fresh
+    /// stream's.
+    stream_resets: AtomicU64,
     completed: AtomicU64,
     anomalies: AtomicU64,
     batches: AtomicU64,
@@ -107,6 +116,8 @@ impl ServerMetrics {
             cache_hits: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
             cache_evictions: AtomicU64::new(0),
+            sessions: AtomicUsize::new(0),
+            stream_resets: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             anomalies: AtomicU64::new(0),
             batches: AtomicU64::new(0),
@@ -204,6 +215,16 @@ impl ServerMetrics {
     /// `n` entries were evicted from the score cache by one insert.
     pub fn on_cache_evictions(&self, n: u64) {
         self.cache_evictions.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Refresh the open-sessions gauge (called after table mutations).
+    pub fn set_sessions(&self, n: usize) {
+        self.sessions.store(n, Ordering::Relaxed);
+    }
+
+    /// `n` stream sessions restarted cold (implicit reopen or failover).
+    pub fn on_stream_resets(&self, n: u64) {
+        self.stream_resets.fetch_add(n, Ordering::Relaxed);
     }
 
     /// The batcher popped one request out of the admission queue.
@@ -328,6 +349,17 @@ impl ServerMetrics {
         self.cache_evictions.load(Ordering::Relaxed)
     }
 
+    /// Stream sessions currently open (gauge, as of the last refresh).
+    pub fn sessions(&self) -> usize {
+        self.sessions.load(Ordering::Relaxed)
+    }
+
+    /// Stream sessions restarted cold so far (see the field note: each
+    /// is a documented fresh-stream state reset, never silent reuse).
+    pub fn stream_resets(&self) -> u64 {
+        self.stream_resets.load(Ordering::Relaxed)
+    }
+
     pub fn completed(&self) -> u64 {
         self.completed.load(Ordering::Relaxed)
     }
@@ -414,6 +446,13 @@ impl ServerMetrics {
                 self.cache_hits(),
                 self.coalesced(),
                 self.cache_evictions(),
+            ));
+        }
+        if self.sessions() > 0 || self.stream_resets() > 0 {
+            extra.push_str(&format!(
+                " | streams: {} sessions, {} resets",
+                self.sessions(),
+                self.stream_resets(),
             ));
         }
         if self.health_probes() > 0 {
@@ -552,6 +591,22 @@ mod tests {
         assert_eq!(m.cache_evictions(), 3);
         let report = m.report();
         assert!(report.contains("cache: 2 hits, 1 coalesced, 3 evictions"), "{report}");
+    }
+
+    #[test]
+    fn stream_gauges_surface_in_the_report() {
+        let m = ServerMetrics::new();
+        assert_eq!((m.sessions(), m.stream_resets()), (0, 0));
+        assert!(!m.report().contains("streams:"), "quiet report must omit the stream segment");
+        m.set_sessions(5);
+        m.on_stream_resets(2);
+        m.on_stream_resets(1);
+        assert_eq!(m.sessions(), 5);
+        assert_eq!(m.stream_resets(), 3);
+        let report = m.report();
+        assert!(report.contains("streams: 5 sessions, 3 resets"), "{report}");
+        m.set_sessions(0);
+        assert!(m.report().contains("streams: 0 sessions, 3 resets"), "resets keep the segment");
     }
 
     #[test]

@@ -69,7 +69,7 @@ pub mod shard;
 pub use autoscale::{Autoscaler, AutoscalePolicy, ScaleDecision};
 pub use backend::{Backend, PjrtBackend, QuantBackend, ThrottledBackend};
 pub use cache::CacheConfig;
-pub use fabric::{FleetLoad, Lane, ModelRegistry, SubmitError};
+pub use fabric::{FleetLoad, Lane, ModelRegistry, SessionTable, SubmitError};
 pub use front::{Completion, CompletionSet, Ticket};
 pub use metrics::ServerMetrics;
 pub use shard::{RouterConfig, ShardRouter, ShardState};
@@ -92,6 +92,34 @@ pub trait SubmitSurface: Sync {
     fn score_blocking(&self, model: &str, window: Window) -> Result<Response, SubmitError> {
         self.submit_async(model, window)?.wait()
     }
+}
+
+/// The stateful companion to [`SubmitSurface`]: per-stream sessions that
+/// carry LSTM hidden/cell state forward so each arriving sample costs one
+/// recurrence step instead of a full-window re-run. Implemented by the
+/// in-process [`ModelRegistry`] and the cross-process [`ShardRouter`]
+/// (which adds sticky session→shard routing), so the multi-stream
+/// workload driver ([`crate::workload::trace::replay_streams`]) runs
+/// unchanged against either.
+pub trait StreamSurface: Sync {
+    /// Open (or reopen, resetting state) session `stream` on `model` with
+    /// scoring window `window` (`0` → the lane default).
+    fn open_stream(&self, model: &str, stream: u64, window: usize) -> Result<(), SubmitError>;
+
+    /// Feed one `F`-feature sample to an open session. The [`Ticket`]
+    /// resolves to the session's updated trailing-window score.
+    /// [`SubmitError::UnknownStream`] when the session was never opened,
+    /// was closed, or was evicted.
+    fn submit_sample(
+        &self,
+        model: &str,
+        stream: u64,
+        sample: Vec<f32>,
+    ) -> Result<Ticket, SubmitError>;
+
+    /// Close a session, releasing its table slot. Closing an unknown
+    /// session is a no-op.
+    fn close_stream(&self, model: &str, stream: u64);
 }
 
 use std::sync::mpsc::{Receiver, Sender};
@@ -126,6 +154,15 @@ pub struct ServerConfig {
     /// [`cache`]). `None` (the default) runs the lane uncached; a config
     /// with `entries == 0` is also treated as off.
     pub cache: Option<CacheConfig>,
+    /// Stream-session table sizing (see [`fabric::SessionTable`]). Only
+    /// consulted on lanes whose backend exposes a
+    /// [`Backend::session_model`]; window-only lanes ignore it.
+    pub sessions: SessionConfig,
+    /// Pin this lane's worker threads to cores `base, base+1, …` (modulo
+    /// the machine's core count) via [`crate::util::affinity`]. `None`
+    /// (the default) leaves placement to the scheduler. Best-effort and
+    /// Linux-only, like the pipeline-stage pinning it extends.
+    pub pin_base_core: Option<usize>,
 }
 
 impl Default for ServerConfig {
@@ -138,7 +175,29 @@ impl Default for ServerConfig {
             threshold: 0.05,
             autoscale: None,
             cache: None,
+            sessions: SessionConfig::default(),
+            pin_base_core: None,
         }
+    }
+}
+
+/// Sizing for a lane's stream-session table (the stateful half of the
+/// serving surface — see [`fabric::SessionTable`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SessionConfig {
+    /// Max concurrently-open sessions per lane. Opening beyond this
+    /// evicts the least-recently-stepped session (its next sample then
+    /// fails with [`SubmitError::UnknownStream`] until reopened).
+    pub capacity: usize,
+    /// Default scoring window `W` per session: the score after each step
+    /// is the reconstruction MSE over the last `min(steps, W)` samples.
+    /// `StreamOpen` may override it per session.
+    pub window: usize,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig { capacity: 4096, window: 64 }
     }
 }
 
@@ -163,6 +222,11 @@ pub(crate) struct Request {
     /// Cache key for worker-side population — present exactly when the
     /// lane's score cache admitted this request as a miss.
     key: Option<cache::CacheKey>,
+    /// Stream session this request steps, if any. `Some(id)` marks a
+    /// one-sample session step (`window` is its `1×F` sample; steps never
+    /// carry a cache key — carried state makes them uncacheable);
+    /// `None` is the classic stateless window path.
+    stream: Option<u64>,
     reply: Sender<Response>,
 }
 

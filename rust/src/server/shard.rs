@@ -60,6 +60,20 @@
 //! Membership is dynamic the other way too: [`ShardRouter::add_shard`]
 //! admits a new shard into a running fleet.
 //!
+//! # Sticky session routing
+//!
+//! Streaming sessions ([`super::StreamSurface`]) carry per-session LSTM
+//! state *on the shard*, so unlike windows they cannot hop shards per
+//! sample. [`ShardRouter::open_stream`] picks a home shard with the same
+//! health-weighted pair draw and records `session → (slot, generation)`;
+//! every [`ShardRouter::submit_sample`] goes to that home while it stays
+//! routable on the same process generation. When the home dies (or came
+//! back as a new process — the generation bump), the router re-opens the
+//! session on a fresh shard and retries there: the carried state is
+//! **reset to zero** — the first scores after failover are what a brand
+//! new session would produce — and the `stream_resets` counter ticks so
+//! the loss of history is observable, not silent.
+//!
 //! # Why routing is not cache-aware
 //!
 //! Shards may run per-lane score caches (`--cache-entries`), and one
@@ -76,7 +90,7 @@
 //! bounded by `--cache-bytes`), and routing stays a pure load/health
 //! decision that keeps working unchanged through failover and rejoin.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
@@ -343,7 +357,23 @@ pub struct ShardRouter {
     /// Counter feeding the SplitMix64 draw behind each power-of-two pick
     /// (cheap, lock-free, deterministic per submission index).
     picks: AtomicU64,
+    /// Sticky session routes: `(model, stream) → home shard`. Samples
+    /// follow the route while its slot stays routable on the recorded
+    /// process generation; failover re-opens elsewhere (state reset).
+    streams: Mutex<HashMap<(String, u64), StreamRoute>>,
     health: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// Where one streaming session lives and how it was opened.
+#[derive(Clone, Copy)]
+struct StreamRoute {
+    /// Slot index of the session's home shard.
+    slot: usize,
+    /// The slot's reconnect generation at open time: a later bump means
+    /// "same address, new process" — the session state is gone there.
+    generation: u64,
+    /// Requested score window, replayed verbatim on failover re-opens.
+    window: u32,
 }
 
 impl ShardRouter {
@@ -413,6 +443,7 @@ impl ShardRouter {
             shared,
             map,
             picks: AtomicU64::new(0),
+            streams: Mutex::new(HashMap::new()),
             health: Mutex::new(Some(health)),
         }
     }
@@ -533,6 +564,134 @@ impl ShardRouter {
                 }
             }
         }
+    }
+
+    /// One routable slot index for `model`: Live candidates first
+    /// (Suspect as a last resort), health-weighted pair draw among them.
+    /// The session-open path's pick — rare enough that collecting the
+    /// pool allocates, unlike the allocation-free window hot path.
+    fn pick_routable(&self, slots: &[Arc<ShardSlot>], model: &str) -> Result<usize, SubmitError> {
+        let cands = self.candidates(model, slots.len());
+        let total = cands.len();
+        if total == 0 {
+            return Err(SubmitError::UnknownModel(model.to_string()));
+        }
+        let mut live: Vec<usize> = Vec::new();
+        let mut suspect: Vec<usize> = Vec::new();
+        for k in 0..total {
+            let i = cands.get(k);
+            if !slots[i].client_alive() {
+                continue;
+            }
+            match slots[i].state() {
+                ShardState::Live => live.push(i),
+                ShardState::Suspect => suspect.push(i),
+                _ => {}
+            }
+        }
+        let pool = if live.is_empty() { suspect } else { live };
+        match pool.len() {
+            0 => Err(SubmitError::Closed),
+            1 => Ok(pool[0]),
+            n => {
+                let (a, b) = draw_pair(self.picks.fetch_add(1, Ordering::Relaxed), n);
+                Ok(self.lighter(slots, pool[a], pool[b]))
+            }
+        }
+    }
+
+    /// Open streaming session `stream` on `model`: pick a home shard,
+    /// open there, and record the sticky route every later
+    /// [`Self::submit_sample`] follows. Re-opening an existing session
+    /// moves/resets it like a local table re-open would.
+    pub fn open_stream(&self, model: &str, stream: u64, window: usize) -> Result<(), SubmitError> {
+        let window = u32::try_from(window).map_err(|_| SubmitError::TooLarge)?;
+        let slots = self.shared.slots.read().unwrap();
+        let idx = self.pick_routable(&slots, model)?;
+        let client = slots[idx].client().ok_or(SubmitError::Closed)?;
+        client.open_stream(model, stream, window)?;
+        let generation = slots[idx].ctl.lock().unwrap().generation;
+        self.streams
+            .lock()
+            .unwrap()
+            .insert((model.to_string(), stream), StreamRoute { slot: idx, generation, window });
+        Ok(())
+    }
+
+    /// Feed one sample to the session's home shard. If the home is no
+    /// longer routable on the generation the session was opened under —
+    /// it died, or came back as a new process — the session is re-opened
+    /// on a fresh shard with **zeroed state** (the documented failover
+    /// reset semantic), `stream_resets` ticks, and the sample is scored
+    /// there.
+    pub fn submit_sample(
+        &self,
+        model: &str,
+        stream: u64,
+        sample: Vec<f32>,
+    ) -> Result<Ticket, SubmitError> {
+        let key = (model.to_string(), stream);
+        let Some(mut route) = self.streams.lock().unwrap().get(&key).copied() else {
+            return Err(SubmitError::UnknownStream(stream));
+        };
+        let slots = self.shared.slots.read().unwrap();
+        let sticky_ok = route.slot < slots.len() && {
+            let slot = &slots[route.slot];
+            let st = slot.state();
+            (st == ShardState::Live || st == ShardState::Suspect)
+                && slot.client_alive()
+                && slot.ctl.lock().unwrap().generation == route.generation
+        };
+        if sticky_ok {
+            if let Some(client) = slots[route.slot].client() {
+                match client.submit_sample(model, stream, &sample) {
+                    // Died under the write: fall through to failover.
+                    Err(SubmitError::Closed) => {}
+                    Ok(ticket) => {
+                        self.shared.metrics.on_submit();
+                        return Ok(ticket);
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        let idx = self.pick_routable(&slots, model)?;
+        let client = slots[idx].client().ok_or(SubmitError::Closed)?;
+        client.open_stream(model, stream, route.window)?;
+        self.shared.metrics.on_stream_resets(1);
+        self.shared.metrics.on_shard_failover();
+        route.slot = idx;
+        route.generation = slots[idx].ctl.lock().unwrap().generation;
+        self.streams.lock().unwrap().insert(key, route);
+        let ticket = client.submit_sample(model, stream, &sample)?;
+        self.shared.metrics.on_submit();
+        Ok(ticket)
+    }
+
+    /// Close a session: drop the sticky route and tell its home shard
+    /// (best-effort — a dead home already lost the state).
+    pub fn close_stream(&self, model: &str, stream: u64) {
+        let route = self.streams.lock().unwrap().remove(&(model.to_string(), stream));
+        if let Some(route) = route {
+            let slots = self.shared.slots.read().unwrap();
+            if route.slot < slots.len() {
+                if let Some(client) = slots[route.slot].client() {
+                    let _ = client.close_stream(model, stream);
+                }
+            }
+        }
+    }
+
+    /// Sessions that lost carried state to failover or shard restarts,
+    /// fleet-wide from this router's perspective: its own failover
+    /// re-opens plus every live connection's `reset`-flagged scores
+    /// (shard-side re-opens). Counts on connections that have since been
+    /// replaced are gone, so this is a lower bound across reconnects.
+    pub fn stream_resets(&self) -> u64 {
+        let local = self.shared.metrics.stream_resets();
+        let slots = self.shared.slots.read().unwrap();
+        local
+            + slots.iter().filter_map(|s| s.client()).map(|c| c.stream_resets()).sum::<u64>()
     }
 
     /// Fleet reports of every serving shard, queried concurrently (one
@@ -702,6 +861,25 @@ impl SubmitSurface for ShardRouter {
             }
         }
         Err(SubmitError::Closed)
+    }
+}
+
+impl super::StreamSurface for ShardRouter {
+    fn open_stream(&self, model: &str, stream: u64, window: usize) -> Result<(), SubmitError> {
+        ShardRouter::open_stream(self, model, stream, window)
+    }
+
+    fn submit_sample(
+        &self,
+        model: &str,
+        stream: u64,
+        sample: Vec<f32>,
+    ) -> Result<Ticket, SubmitError> {
+        ShardRouter::submit_sample(self, model, stream, sample)
+    }
+
+    fn close_stream(&self, model: &str, stream: u64) {
+        ShardRouter::close_stream(self, model, stream)
     }
 }
 

@@ -16,7 +16,7 @@ use std::time::{Duration, Instant};
 
 use super::{TelemetryGen, Window};
 use crate::model::Topology;
-use crate::server::{CompletionSet, SubmitError, SubmitSurface};
+use crate::server::{CompletionSet, StreamSurface, SubmitError, SubmitSurface, Ticket};
 use crate::util::rng::Xoshiro256;
 
 /// One timed request.
@@ -197,6 +197,103 @@ pub fn zipf_poisson(
             (mi, TimedRequest { at_s: at, window: pools[mi][rank].clone(), id: i as u64 })
         })
         .collect()
+}
+
+/// One event in a multi-stream session trace ([`multi_stream_trace`]).
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// Open the session (`window == 0` → the lane's default).
+    Open {
+        /// Trailing score window in samples.
+        window: usize,
+    },
+    /// One telemetry sample at the stream's model feature width.
+    Sample(Vec<f32>),
+    /// Close the session, releasing its table slot.
+    Close,
+}
+
+/// A timed event on one stream of a multi-stream trace.
+#[derive(Clone, Debug)]
+pub struct TimedStreamEvent {
+    /// Arrival offset from trace start, seconds.
+    pub at_s: f64,
+    /// Session id (unique across the trace).
+    pub stream: u64,
+    /// Index into the driver's `models` slice.
+    pub model: usize,
+    pub event: StreamEvent,
+}
+
+/// A multi-stream session trace: `streams` concurrent low-rate sessions
+/// (stream `i` on model `i % models.len()`), each an independent Poisson
+/// arrival process at `rate_hz` samples/second carrying
+/// `samples_per_stream` samples between an `Open` and a `Close`. Sample
+/// rows come from each stream's own [`TelemetryGen`] (so benign drift
+/// accumulates per stream), with anomaly **bursts**: at probability
+/// `anomaly_rate` a stream enters a short burst of anomalous samples of
+/// one kind — the shape that drives a session's recalibrated threshold,
+/// unlike isolated single-sample blips. Deterministic for a given
+/// `base_seed`; events come back merged in arrival order, each stream's
+/// `Open` strictly before its samples and its `Close` strictly after.
+pub fn multi_stream_trace(
+    models: &[Topology],
+    base_seed: u64,
+    streams: usize,
+    rate_hz: f64,
+    samples_per_stream: usize,
+    anomaly_rate: f64,
+) -> Vec<TimedStreamEvent> {
+    assert!(!models.is_empty(), "multi_stream_trace needs at least one model");
+    assert!(rate_hz > 0.0 && streams >= 1);
+    let kinds = super::AnomalyKind::all();
+    let mut events = Vec::with_capacity(streams * (samples_per_stream + 2));
+    for i in 0..streams {
+        let mi = i % models.len();
+        let mut gen = TelemetryGen::new(models[mi].features, base_seed + 7000 + i as u64);
+        let mut rng = Xoshiro256::seeded(base_seed + 9000 + i as u64);
+        // Stagger opens uniformly over one mean inter-arrival so a
+        // thousand streams don't all open at t = 0.
+        let mut at = rng.next_f64() / rate_hz;
+        let stream = i as u64;
+        events.push(TimedStreamEvent {
+            at_s: at,
+            stream,
+            model: mi,
+            event: StreamEvent::Open { window: 0 },
+        });
+        let mut burst = 0usize;
+        let mut kind = kinds[0];
+        for _ in 0..samples_per_stream {
+            at += rng.exponential(rate_hz);
+            let row = if burst > 0 {
+                burst -= 1;
+                gen.anomalous_window(1, kind).data.remove(0)
+            } else if rng.next_f64() < anomaly_rate {
+                kind = kinds[rng.below(4) as usize];
+                burst = 2;
+                gen.anomalous_window(1, kind).data.remove(0)
+            } else {
+                gen.benign_window(1).data.remove(0)
+            };
+            events.push(TimedStreamEvent {
+                at_s: at,
+                stream,
+                model: mi,
+                event: StreamEvent::Sample(row),
+            });
+        }
+        events.push(TimedStreamEvent {
+            at_s: at + 1e-3,
+            stream,
+            model: mi,
+            event: StreamEvent::Close,
+        });
+    }
+    // Stable by arrival time: within a stream, times are strictly
+    // increasing, so Open/samples/Close keep their relative order.
+    events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+    events
 }
 
 /// Outcome of an open-loop async replay ([`replay_async`]). Admission
@@ -704,6 +801,234 @@ impl<S: SubmitSurface> FleetDriver<'_, S> {
     }
 }
 
+/// Outcome of a [`replay_streams`] run. `fleet` carries the sample
+/// accounting (opens and closes are control traffic, outside the
+/// conservation law): every `Sample` event terminates in exactly one of
+/// `completed` / `shed` / `rejected_closed`, checked by
+/// [`FleetReplayStats::conserves`] exactly like the window driver.
+#[derive(Clone, Debug, Default)]
+pub struct StreamReplayStats {
+    /// Per-sample accounting, conservation law included. `offered`
+    /// counts samples only.
+    pub fleet: FleetReplayStats,
+    /// Sessions the driver had to re-open after
+    /// [`SubmitError::UnknownStream`] — the serving side lost the state
+    /// (eviction, restart) and the affected stream restarted from zero.
+    pub resets: u64,
+    /// `Open` events the surface accepted.
+    pub opened: u64,
+    /// `Close` events driven.
+    pub closed: u64,
+}
+
+/// One in-flight [`replay_streams`] sample, kept so `Closed` outcomes
+/// can be re-offered (the re-offer rides the surface's failover path —
+/// against a [`crate::server::ShardRouter`], a reopen on a surviving
+/// shard with reset state).
+struct StreamEntry {
+    stream: u64,
+    mi: usize,
+    sample: Vec<f32>,
+    retries: u32,
+}
+
+/// [`replay_streams`]'s working state — the session-aware sibling of
+/// [`FleetDriver`], with the same grace schedule and retry budget.
+struct StreamDriver<'a, S: StreamSurface> {
+    surface: &'a S,
+    models: &'a [String],
+    retry_closed: bool,
+    /// Latched after one fully failed grace schedule, reset by any
+    /// accepted submit — see [`FleetDriver::fast_fail`].
+    fast_fail: bool,
+    set: CompletionSet,
+    inflight: HashMap<u64, StreamEntry>,
+    stats: StreamReplayStats,
+    next_key: u64,
+}
+
+impl<S: StreamSurface> StreamDriver<'_, S> {
+    /// One submit with driver-side session-loss recovery folded in:
+    /// `UnknownStream` re-opens the session at the lane default and
+    /// retries once, counted as a reset (the stream's history restarts
+    /// from zero — observable, never silent).
+    fn submit_once(
+        &mut self,
+        mi: usize,
+        stream: u64,
+        sample: &[f32],
+    ) -> Result<Ticket, SubmitError> {
+        match self.surface.submit_sample(&self.models[mi], stream, sample.to_vec()) {
+            Err(SubmitError::UnknownStream(_)) => {
+                self.stats.resets += 1;
+                self.surface.open_stream(&self.models[mi], stream, 0)?;
+                self.surface.submit_sample(&self.models[mi], stream, sample.to_vec())
+            }
+            other => other,
+        }
+    }
+
+    /// Submit with the same churn grace as [`FleetDriver::submit_graced`]:
+    /// a momentarily unroutable fleet gets the back-off schedule before a
+    /// sample counts as lost.
+    fn submit_graced(
+        &mut self,
+        mi: usize,
+        stream: u64,
+        sample: &[f32],
+    ) -> (Result<Ticket, SubmitError>, bool) {
+        let mut outcome = self.submit_once(mi, stream, sample);
+        let mut graced = false;
+        if self.retry_closed && !self.fast_fail {
+            for ms in SUBMIT_GRACE_MS {
+                if !matches!(outcome, Err(SubmitError::Closed)) {
+                    break;
+                }
+                graced = true;
+                std::thread::sleep(Duration::from_millis(ms));
+                outcome = self.submit_once(mi, stream, sample);
+            }
+        }
+        match &outcome {
+            Err(SubmitError::Closed) if graced => self.fast_fail = true,
+            Ok(_) => self.fast_fail = false,
+            _ => {}
+        }
+        (outcome, graced)
+    }
+
+    /// Open with the same grace (opens are cheap control traffic, but a
+    /// kill→restart window would otherwise orphan every stream opened
+    /// during it).
+    fn open(&mut self, mi: usize, stream: u64, window: usize) {
+        let mut outcome = self.surface.open_stream(&self.models[mi], stream, window);
+        if self.retry_closed && !self.fast_fail {
+            for ms in SUBMIT_GRACE_MS {
+                if !matches!(outcome, Err(SubmitError::Closed)) {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(ms));
+                outcome = self.surface.open_stream(&self.models[mi], stream, window);
+            }
+        }
+        if outcome.is_ok() {
+            self.stats.opened += 1;
+        }
+    }
+
+    /// First offer of one sample.
+    fn offer(&mut self, mi: usize, stream: u64, sample: Vec<f32>) {
+        let (outcome, graced) = self.submit_graced(mi, stream, &sample);
+        match outcome {
+            Ok(ticket) => {
+                if graced {
+                    self.stats.fleet.retried_closed += 1;
+                }
+                let key = self.next_key;
+                self.next_key += 1;
+                self.inflight.insert(key, StreamEntry { stream, mi, sample, retries: 0 });
+                self.set.add(key, ticket);
+                self.stats.fleet.max_outstanding =
+                    self.stats.fleet.max_outstanding.max(self.set.pending());
+            }
+            Err(SubmitError::Overloaded) => self.stats.fleet.shed += 1,
+            Err(_) => self.stats.fleet.rejected_closed += 1,
+        }
+    }
+
+    /// One outcome for the sample under `key` — the exact settle logic of
+    /// [`FleetDriver::settle`], sample-shaped.
+    fn settle(&mut self, key: u64, outcome: crate::server::Completion) {
+        let entry = self.inflight.remove(&key).expect("every key has an in-flight entry");
+        match outcome {
+            Ok(r) => {
+                self.stats.fleet.completed += 1;
+                if r.is_anomaly {
+                    self.stats.fleet.flagged += 1;
+                }
+            }
+            Err(SubmitError::Overloaded) => self.stats.fleet.shed += 1,
+            Err(SubmitError::Closed)
+                if self.retry_closed && entry.retries < CLOSED_RETRY_BUDGET =>
+            {
+                let (outcome, _) = self.submit_graced(entry.mi, entry.stream, &entry.sample);
+                match outcome {
+                    Ok(ticket) => {
+                        self.stats.fleet.retried_closed += 1;
+                        self.inflight
+                            .insert(key, StreamEntry { retries: entry.retries + 1, ..entry });
+                        self.set.add(key, ticket);
+                    }
+                    Err(SubmitError::Overloaded) => self.stats.fleet.shed += 1,
+                    Err(_) => self.stats.fleet.rejected_closed += 1,
+                }
+            }
+            Err(_) => self.stats.fleet.rejected_closed += 1,
+        }
+    }
+}
+
+/// Replay a multi-stream session trace ([`multi_stream_trace`])
+/// open-loop through any [`StreamSurface`] — the driver behind
+/// `fleet serve --streams` / `fleet connect --streams` and the streaming
+/// half of the CI loopback soak.
+///
+/// One submitter honors every arrival time; sample completions drain
+/// between events and fully at the end. Conservation covers samples
+/// (`Open`/`Close` are control traffic): `offered == completed + shed +
+/// rejected_closed` on the embedded [`FleetReplayStats`]. With
+/// `retry_closed` set, the driver rides out shard churn exactly like
+/// [`replay_fleet`] — and additionally recovers `UnknownStream` by
+/// re-opening the session (counted in
+/// [`StreamReplayStats::resets`]): after a kill −9 restart every stream
+/// keeps scoring, from freshly zeroed state.
+pub fn replay_streams<S: StreamSurface>(
+    surface: &S,
+    models: &[String],
+    trace: Vec<TimedStreamEvent>,
+    retry_closed: bool,
+) -> StreamReplayStats {
+    assert!(!models.is_empty(), "replay_streams needs at least one model");
+    let start = Instant::now();
+    let mut d = StreamDriver {
+        surface,
+        models,
+        retry_closed,
+        fast_fail: false,
+        set: CompletionSet::new(),
+        inflight: HashMap::new(),
+        stats: StreamReplayStats::default(),
+        next_key: 0,
+    };
+    for ev in trace {
+        let target = Duration::from_secs_f64(ev.at_s);
+        if let Some(sleep) = target.checked_sub(start.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        // Open loop: drain whatever has completed, without blocking.
+        while let Some((key, outcome)) = d.set.try_next() {
+            d.settle(key, outcome);
+        }
+        match ev.event {
+            StreamEvent::Open { window } => d.open(ev.model, ev.stream, window),
+            StreamEvent::Sample(sample) => {
+                d.stats.fleet.offered += 1;
+                d.offer(ev.model, ev.stream, sample);
+            }
+            StreamEvent::Close => {
+                d.surface.close_stream(&d.models[ev.model], ev.stream);
+                d.stats.closed += 1;
+            }
+        }
+    }
+    while let Some((key, outcome)) = d.set.wait() {
+        d.settle(key, outcome);
+    }
+    debug_assert!(d.inflight.is_empty(), "drained replay leaves no in-flight entries");
+    d.stats.fleet.wall = start.elapsed();
+    d.stats
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -900,6 +1225,55 @@ mod tests {
             async_stats.max_outstanding > blocking.max_outstanding,
             "tickets must hold more in flight than one-per-thread"
         );
+        reg.shutdown();
+    }
+
+    #[test]
+    fn multi_stream_trace_is_ordered_and_covers_every_stream() {
+        let models = Topology::paper_models();
+        let (streams, per) = (12usize, 20usize);
+        let trace = multi_stream_trace(&models, 21, streams, 50.0, per, 0.1);
+        assert_eq!(trace.len(), streams * (per + 2), "open + samples + close per stream");
+        for w in trace.windows(2) {
+            assert!(w[1].at_s >= w[0].at_s, "events must be time-sorted");
+        }
+        for s in 0..streams as u64 {
+            let evs: Vec<&TimedStreamEvent> =
+                trace.iter().filter(|e| e.stream == s).collect();
+            assert_eq!(evs.len(), per + 2);
+            assert!(matches!(evs[0].event, StreamEvent::Open { .. }), "stream {s} opens first");
+            assert!(
+                matches!(evs.last().unwrap().event, StreamEvent::Close),
+                "stream {s} closes last"
+            );
+            let mi = evs[0].model;
+            assert_eq!(mi, s as usize % models.len(), "round-robin model assignment");
+            for e in &evs[1..=per] {
+                assert_eq!(e.model, mi);
+                match &e.event {
+                    StreamEvent::Sample(row) => {
+                        assert_eq!(row.len(), models[mi].features, "sample width");
+                    }
+                    other => panic!("stream {s}: expected Sample, got {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn replay_streams_conserves_and_closes_every_session() {
+        let (reg, models) = one_lane_registry();
+        let topo = Topology::from_name("F32-D2").unwrap();
+        let (streams, per) = (8usize, 25usize);
+        let trace = multi_stream_trace(&[topo], 31, streams, 2000.0, per, 0.1);
+        let stats = replay_streams(&reg, &models, trace, true);
+        assert_eq!(stats.fleet.offered, (streams * per) as u64, "offered counts samples only");
+        assert!(stats.fleet.conserves(), "conservation must hold: {stats:?}");
+        assert_eq!(stats.fleet.rejected_closed, 0, "healthy lane loses nothing");
+        assert_eq!(stats.fleet.completed + stats.fleet.shed, (streams * per) as u64);
+        assert_eq!(stats.opened, streams as u64);
+        assert_eq!(stats.closed, streams as u64);
+        assert_eq!(stats.resets, 0, "no eviction pressure, no resets");
         reg.shutdown();
     }
 }

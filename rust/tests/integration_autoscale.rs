@@ -52,7 +52,7 @@ fn build_registry(topos: &[Topology], autoscale: Option<AutoscalePolicy>) -> Mod
             queue_capacity: 16,
             threshold: 1.0,
             autoscale: autoscale.clone(),
-            cache: None,
+            ..Default::default()
         };
         registry.register(&topo.name, backend, cfg);
     }

@@ -165,8 +165,8 @@ fn coalesced_followers_score_bit_identical_across_topologies() {
             workers: 1,
             queue_capacity: 64,
             threshold: 0.05,
-            autoscale: None,
             cache: Some(CacheConfig::default()),
+            ..Default::default()
         };
         registry.register(&topo.name, backend, cfg);
         let lane = registry.lane(&topo.name).unwrap();
@@ -229,8 +229,8 @@ fn barrier_coalescing_takes_one_batch_slot_for_n_concurrent_submits() {
         workers: 1,
         queue_capacity: 64,
         threshold: 0.05,
-        autoscale: None,
         cache: Some(CacheConfig::default()),
+        ..Default::default()
     };
     registry.register(&topo.name, backend, cfg);
     let lane = registry.lane(&topo.name).unwrap();
@@ -288,8 +288,8 @@ fn admission_accounting_conserves_with_cache_counters() {
         workers: 1,
         queue_capacity: 2,
         threshold: 1.0,
-        autoscale: None,
         cache: Some(CacheConfig::default()),
+        ..Default::default()
     };
     registry.register("gated", backend, cfg);
     let lane = registry.lane("gated").unwrap();
@@ -375,8 +375,8 @@ fn followers_on_a_panicked_leader_resolve_closed_not_hang() {
         workers: 1,
         queue_capacity: 64,
         threshold: 1.0,
-        autoscale: None,
         cache: Some(CacheConfig::default()),
+        ..Default::default()
     };
     registry.register("panicky", Arc::new(PanickingBackend), cfg);
     let lane = registry.lane("panicky").unwrap();
@@ -409,8 +409,8 @@ fn followers_on_a_cancelled_leader_resolve_cancelled() {
         workers: 1,
         queue_capacity: 64,
         threshold: 1.0,
-        autoscale: None,
         cache: Some(CacheConfig::default()),
+        ..Default::default()
     };
     registry.register("gated", backend, cfg);
     let lane = registry.lane("gated").unwrap();

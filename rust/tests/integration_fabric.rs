@@ -97,8 +97,7 @@ fn deep_lane_workers_use_multiple_pipeline_replicas() {
         workers: 3,
         queue_capacity: 4096,
         threshold: 0.05,
-        autoscale: None,
-        cache: None,
+        ..Default::default()
     };
     registry.register(&topo.name, backend.clone() as Arc<dyn Backend>, cfg);
     let mut gen = TelemetryGen::new(topo.features, 9);
@@ -148,8 +147,7 @@ fn poisson_overload_sheds_then_recovers() {
         workers: 1,
         queue_capacity: 4,
         threshold: 1.0,
-        autoscale: None,
-        cache: None,
+        ..Default::default()
     };
     registry.register(
         "slow-model",

@@ -182,8 +182,7 @@ fn async_shed_and_backpressure_semantics_match_blocking() {
         workers: 1,
         queue_capacity: 2,
         threshold: 1.0,
-        autoscale: None,
-        cache: None,
+        ..Default::default()
     };
     registry.register("gated", backend, cfg);
     let lane = registry.lane("gated").unwrap();
@@ -305,8 +304,7 @@ fn shutdown_poisons_tickets_orphaned_by_a_worker_panic() {
         workers: 1,
         queue_capacity: 64,
         threshold: 1.0,
-        autoscale: None,
-        cache: None,
+        ..Default::default()
     };
     registry.register("panicky", Arc::new(PanickingBackend), cfg);
     let lane = registry.lane("panicky").unwrap();

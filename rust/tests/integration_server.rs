@@ -33,8 +33,7 @@ fn serve_trace(
         workers: 2,
         queue_capacity: 1024,
         threshold,
-        autoscale: None,
-        cache: None,
+        ..Default::default()
     };
     let srv = AnomalyServer::start(backend, cfg);
     let mut gen = mk_gen(6);
@@ -102,8 +101,7 @@ fn batcher_amortizes_under_burst() {
         workers: 1,
         queue_capacity: 1024,
         threshold: 1.0,
-        autoscale: None,
-        cache: None,
+        ..Default::default()
     };
     let srv = AnomalyServer::start(backend, cfg);
     let mut gen = TelemetryGen::new(32, 8);

@@ -1,0 +1,265 @@
+//! Integration: streaming sessions end to end — bit-identity of the
+//! incremental scoring path against full-window `ExecMode::Sequential`
+//! re-runs from zero on all four paper topologies (including across
+//! batcher-grouped concurrent streams), session lifecycle edges
+//! (close / eviction / reopen), and the shard-failover reopen semantic
+//! (state reset, counted as a stream reset).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lstm_ae_accel::engine::ExecMode;
+use lstm_ae_accel::model::{LstmAutoencoder, Topology};
+use lstm_ae_accel::net::ShardServer;
+use lstm_ae_accel::server::{
+    ModelRegistry, QuantBackend, RouterConfig, ServerConfig, SessionConfig, ShardRouter,
+    ShardState, SubmitError,
+};
+use lstm_ae_accel::workload::TelemetryGen;
+
+/// The settled incremental-scoring semantics, stated as stateless
+/// arithmetic: the session score after k samples equals running the FULL
+/// k-sample history through the quantized forward pass from zeroed state
+/// and taking the flat MSE over the trailing `min(k, w)` rows. Every
+/// assertion below compares bitwise against this.
+fn rescore_reference(ae: &LstmAutoencoder, history: &[Vec<f32>], w: usize) -> f64 {
+    let recon = ae.forward_quant(history);
+    let tail = history.len().saturating_sub(w);
+    LstmAutoencoder::mse(&history[tail..], &recon[tail..])
+}
+
+#[test]
+fn incremental_scores_match_full_window_reruns_on_all_four_topologies() {
+    // Three concurrent streams per lane, samples interleaved round-robin
+    // and submitted without waiting — so the batcher groups same-lane
+    // steps into batched step calls — then every returned score is
+    // checked bitwise against the full-history rerun from zero. 24
+    // samples over a window of 16 also exercises the ring wrap.
+    const W: usize = 16;
+    const STREAMS: u64 = 3;
+    const SAMPLES: usize = 24;
+    for (i, topo) in Topology::paper_models().into_iter().enumerate() {
+        let seed = 510 + i as u64;
+        let reference = LstmAutoencoder::random(topo.clone(), seed);
+        let mut registry = ModelRegistry::new();
+        registry.register(
+            &topo.name,
+            Arc::new(QuantBackend::new(LstmAutoencoder::random(topo.clone(), seed))),
+            ServerConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(500),
+                workers: 2,
+                queue_capacity: 1024,
+                threshold: 1.0,
+                ..Default::default()
+            },
+        );
+        let mut histories: Vec<Vec<Vec<f32>>> = Vec::new();
+        for s in 0..STREAMS {
+            registry.open_stream(&topo.name, s, W).expect("session lane");
+            let mut gen = TelemetryGen::new(topo.features, 620 + 10 * i as u64 + s);
+            histories.push((0..SAMPLES).map(|_| gen.benign_window(1).data.remove(0)).collect());
+        }
+        let mut pending = Vec::new();
+        for k in 0..SAMPLES {
+            for s in 0..STREAMS {
+                let sample = histories[s as usize][k].clone();
+                let ticket = registry.submit_sample(&topo.name, s, sample).expect("open session");
+                pending.push((s, k, ticket));
+            }
+        }
+        for (s, k, ticket) in pending {
+            let r = ticket.wait().expect("every admitted step resolves to a score");
+            let want = rescore_reference(&reference, &histories[s as usize][..=k], W);
+            assert_eq!(
+                r.score.to_bits(),
+                want.to_bits(),
+                "{} stream {s} step {k}: incremental score must be bit-identical to the \
+                 full-window sequential rerun from zero",
+                topo.name
+            );
+        }
+        registry.shutdown();
+    }
+}
+
+/// One F32-D2 lane with a deliberately tiny session table.
+fn tiny_table_registry(capacity: usize) -> (ModelRegistry, LstmAutoencoder, String) {
+    let topo = Topology::from_name("F32-D2").unwrap();
+    let reference = LstmAutoencoder::random(topo.clone(), 77);
+    let mut registry = ModelRegistry::new();
+    registry.register(
+        &topo.name,
+        Arc::new(QuantBackend::new(LstmAutoencoder::random(topo.clone(), 77))),
+        ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            workers: 1,
+            queue_capacity: 64,
+            threshold: 1.0,
+            sessions: SessionConfig { capacity, window: 8 },
+            ..Default::default()
+        },
+    );
+    let name = topo.name;
+    (registry, reference, name)
+}
+
+fn one_sample(seed: u64) -> Vec<f32> {
+    TelemetryGen::new(32, seed).benign_window(1).data.remove(0)
+}
+
+#[test]
+fn samples_after_close_fail_fast_with_unknown_stream() {
+    let (registry, _, model) = tiny_table_registry(4);
+    registry.open_stream(&model, 1, 0).unwrap();
+    registry.submit_sample(&model, 1, one_sample(1)).expect("open").wait().expect("scored");
+    registry.close_stream(&model, 1);
+    assert!(matches!(
+        registry.submit_sample(&model, 1, one_sample(2)),
+        Err(SubmitError::UnknownStream(1))
+    ));
+    // Never-opened sessions get the same verdict, and closing an unknown
+    // session is an idempotent no-op rather than an error.
+    assert!(matches!(
+        registry.submit_sample(&model, 99, one_sample(3)),
+        Err(SubmitError::UnknownStream(99))
+    ));
+    registry.close_stream(&model, 42);
+    registry.shutdown();
+}
+
+#[test]
+fn opening_past_capacity_evicts_the_lru_session_and_reopen_starts_fresh() {
+    let (registry, reference, model) = tiny_table_registry(2);
+    // Fill the table, then overflow it: streams 1 and 2 occupy both
+    // slots; opening 3 must evict the least-recently-touched (1).
+    registry.open_stream(&model, 1, 0).unwrap();
+    registry.open_stream(&model, 2, 0).unwrap();
+    registry.open_stream(&model, 3, 0).unwrap();
+    let table = registry.lane(&model).unwrap().session_table().expect("session lane");
+    assert_eq!(table.len(), 2, "the table never exceeds its capacity");
+    assert!(matches!(
+        registry.submit_sample(&model, 1, one_sample(4)),
+        Err(SubmitError::UnknownStream(1))
+    ));
+    for s in [2u64, 3] {
+        registry
+            .submit_sample(&model, s, one_sample(10 + s))
+            .expect("survivors keep scoring")
+            .wait()
+            .expect("scored");
+    }
+    // Open-after-eviction: stream 1 reopens into a fresh slot, and its
+    // first score proves the state is zeroed — bit-identical to a
+    // single-sample full rerun, not a continuation of its old history.
+    registry.open_stream(&model, 1, 8).unwrap();
+    let sample = one_sample(5);
+    let r = registry
+        .submit_sample(&model, 1, sample.clone())
+        .expect("reopened")
+        .wait()
+        .expect("scored");
+    let want = rescore_reference(&reference, &[sample], 8);
+    assert_eq!(r.score.to_bits(), want.to_bits(), "a reopened session starts from zero");
+    assert_eq!(table.len(), 2, "the reopen evicted another LRU slot to make room");
+    registry.shutdown();
+}
+
+#[test]
+fn shard_restart_reopens_sessions_fresh_and_counts_stream_resets() {
+    // The failover reset semantic end to end: a session sticky-routed to
+    // a shard whose process dies is reopened on rejoin with zeroed state
+    // — scores restart as a fresh session (bit-asserted), and the reset
+    // is counted, never silent.
+    const W: usize = 16;
+    let seed = 350;
+    let registry = Arc::new(ModelRegistry::paper_fleet(seed, ExecMode::Auto, 2));
+    let server = ShardServer::bind("127.0.0.1:0", registry).expect("bind loopback");
+    let addr = server.local_addr().to_string();
+    let cfg = RouterConfig {
+        heartbeat_ms: 25,
+        suspect_after: 2,
+        dead_after: 4,
+        reconnect_max_backoff_ms: 200,
+    };
+    let router = ShardRouter::connect_with(&[addr.clone()], cfg).expect("connect");
+    let topo = &Topology::paper_models()[0];
+    let reference = LstmAutoencoder::random(topo.clone(), seed);
+    let mut gen = TelemetryGen::new(topo.features, 910);
+    let stream = 5u64;
+    router.open_stream(&topo.name, stream, W).expect("live shard");
+    let mut history: Vec<Vec<f32>> = Vec::new();
+    for _ in 0..6 {
+        history.push(gen.benign_window(1).data.remove(0));
+        let r = router
+            .submit_sample(&topo.name, stream, history.last().unwrap().clone())
+            .expect("sticky shard accepts")
+            .wait()
+            .expect("scored");
+        let want = rescore_reference(&reference, &history, W);
+        assert_eq!(r.score.to_bits(), want.to_bits(), "pre-kill steps carry state");
+    }
+    assert_eq!(router.stream_resets(), 0, "a healthy session never resets");
+
+    // Kill the process and restart the same deployment on the same port:
+    // the router redials it, but the carried session state died with the
+    // old process — the sticky route's generation check forces a reopen.
+    server.shutdown();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while router.metrics().shard_deaths() == 0 {
+        assert!(Instant::now() < deadline, "health loop must demote the killed shard");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let registry2 = Arc::new(ModelRegistry::paper_fleet(seed, ExecMode::Auto, 2));
+    let server2 = loop {
+        match ShardServer::bind(&addr, Arc::clone(&registry2)) {
+            Ok(s) => break s,
+            Err(_) if Instant::now() < deadline => std::thread::sleep(Duration::from_millis(50)),
+            Err(e) => panic!("rebind {addr}: {e}"),
+        }
+    };
+    while router.shard_state(0) != ShardState::Live {
+        assert!(Instant::now() < deadline, "restarted shard must rejoin automatically");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // First post-restart sample: submitted with a small retry loop (the
+    // rejoin can race the submit), it must score as a BRAND-NEW session
+    // — the documented state-reset failover semantic.
+    let mut fresh_history = vec![gen.benign_window(1).data.remove(0)];
+    let score = loop {
+        assert!(Instant::now() < deadline, "rejoined shard must serve the stream");
+        match router.submit_sample(&topo.name, stream, fresh_history[0].clone()) {
+            Ok(ticket) => match ticket.wait() {
+                Ok(r) => break r.score,
+                Err(SubmitError::Closed) => std::thread::sleep(Duration::from_millis(10)),
+                Err(e) => panic!("unexpected outcome {e}"),
+            },
+            Err(SubmitError::Closed) | Err(SubmitError::UnknownStream(_)) => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => panic!("unexpected submit error {e}"),
+        }
+    };
+    let want = rescore_reference(&reference, &fresh_history, W);
+    assert_eq!(
+        score.to_bits(),
+        want.to_bits(),
+        "a failed-over session restarts from zeroed state, not its old history"
+    );
+    assert!(router.stream_resets() >= 1, "the reset is counted, never silent");
+
+    // And the reopened session carries state again from here on.
+    fresh_history.push(gen.benign_window(1).data.remove(0));
+    let r = router
+        .submit_sample(&topo.name, stream, fresh_history.last().unwrap().clone())
+        .expect("rejoined shard accepts")
+        .wait()
+        .expect("scored");
+    let want = rescore_reference(&reference, &fresh_history, W);
+    assert_eq!(r.score.to_bits(), want.to_bits(), "post-reset steps carry state again");
+    router.close_stream(&topo.name, stream);
+    router.shutdown();
+    server2.shutdown();
+}

@@ -77,8 +77,7 @@ fn remote_shed_resolves_tickets_overloaded_and_lane_recovers() {
             workers: 1,
             queue_capacity: 2,
             threshold: 1.0,
-            autoscale: None,
-            cache: None,
+            ..Default::default()
         },
     );
     let server = ShardServer::bind("127.0.0.1:0", Arc::new(registry)).expect("bind");
