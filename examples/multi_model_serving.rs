@@ -32,7 +32,7 @@ use lstm_ae_accel::engine::{ExecMode, PIPELINE_MIN_DEPTH};
 use lstm_ae_accel::model::{LstmAutoencoder, Topology};
 use lstm_ae_accel::server::{
     calibrate_threshold, AutoscalePolicy, Backend, ModelRegistry, QuantBackend, ServerConfig,
-    SubmitError,
+    ServingSurface, SubmitError,
 };
 use lstm_ae_accel::util::cli::Args;
 use lstm_ae_accel::workload::{

@@ -23,7 +23,7 @@ use std::time::Duration;
 use lstm_ae_accel::engine::ExecMode;
 use lstm_ae_accel::model::{LstmAutoencoder, Topology};
 use lstm_ae_accel::net::ShardServer;
-use lstm_ae_accel::server::{ModelRegistry, ShardRouter, SubmitError, SubmitSurface};
+use lstm_ae_accel::server::{ModelRegistry, ServingSurface, ShardRouter, SubmitError};
 use lstm_ae_accel::workload::TelemetryGen;
 
 fn main() {

@@ -476,14 +476,13 @@ fn main() {
     )));
     let srv = AnomalyServer::start(
         backend,
-        ServerConfig {
-            max_batch: 16,
-            max_wait: std::time::Duration::from_micros(200),
-            workers: 4,
-            queue_capacity: 1024, // 512 in flight: sized to never shed
-            threshold: 0.1,
-            ..Default::default()
-        },
+        ServerConfig::builder()
+            .max_batch(16)
+            .max_wait(std::time::Duration::from_micros(200))
+            .workers(4)
+            .queue_capacity(1024) // 512 in flight: sized to never shed
+            .threshold(0.1)
+            .build(),
     );
     let mut gen = TelemetryGen::new(32, 11);
     let windows: Vec<_> = (0..512).map(|_| gen.benign_window(16)).collect();
@@ -523,14 +522,13 @@ fn main() {
                     Topology::from_name("F32-D2").unwrap(),
                     15,
                 ))),
-                ServerConfig {
-                    max_batch: 16,
-                    max_wait: std::time::Duration::from_micros(200),
-                    workers: 4,
-                    queue_capacity: 1024,
-                    threshold: 0.1,
-                    ..Default::default()
-                },
+                ServerConfig::builder()
+                    .max_batch(16)
+                    .max_wait(std::time::Duration::from_micros(200))
+                    .workers(4)
+                    .queue_capacity(1024)
+                    .threshold(0.1)
+                    .build(),
             );
             let models = vec!["LSTM-AE-F32-D2".to_string()];
             let stats = if asynchronous {
@@ -596,18 +594,19 @@ fn main() {
         });
         let mut registry = ModelRegistry::new();
         for topo in &topos {
+            let mut cfg = ServerConfig::builder()
+                .max_batch(1)
+                .max_wait(std::time::Duration::from_micros(50))
+                .workers(2)
+                .queue_capacity(16)
+                .threshold(1.0);
+            if let Some(p) = policy.clone() {
+                cfg = cfg.autoscale(p);
+            }
             registry.register(
                 &topo.name,
                 Arc::new(ThrottledBackend::zeros(std::time::Duration::from_millis(1))),
-                ServerConfig {
-                    max_batch: 1,
-                    max_wait: std::time::Duration::from_micros(50),
-                    workers: 2,
-                    queue_capacity: 16,
-                    threshold: 1.0,
-                    autoscale: policy.clone(),
-                    ..Default::default()
-                },
+                cfg.build(),
             );
         }
         if autoscaled {
@@ -671,14 +670,13 @@ fn main() {
                     Topology::from_name("F32-D2").unwrap(),
                     15,
                 ))),
-                ServerConfig {
-                    max_batch: 16,
-                    max_wait: std::time::Duration::from_micros(200),
-                    workers: 4,
-                    queue_capacity: 4096,
-                    threshold: 0.1,
-                    ..Default::default()
-                },
+                ServerConfig::builder()
+                    .max_batch(16)
+                    .max_wait(std::time::Duration::from_micros(200))
+                    .workers(4)
+                    .queue_capacity(4096)
+                    .threshold(0.1)
+                    .build(),
             );
             registry
         };

@@ -32,6 +32,9 @@
 //!             [--cache-entries N [--cache-bytes B]]
 //!             run this process as a network shard: all four paper topologies
 //!             behind the wire protocol, until killed
+//!             [--ephemeral] child-process mode for the fleet autoscaler:
+//!             exit cleanly once a drain request (`Leave` over the wire)
+//!             lands and every connection has wound down
 //!             [--streams N --rate-hz R] additionally self-drive N in-process
 //!             telemetry sessions at R samples/s each through the lane
 //!             session tables (visible in --report-every-s reports)
@@ -50,6 +53,14 @@
 //!             sticky-routed per session; prints a "stream resets N" line
 //!             (nonzero after a mid-trace shard restart) and gates the exit
 //!             code on the stream sample accounting too
+//!             [--fleet-autoscale] run the fleet process autoscaler: spawn
+//!             ephemeral `fleet serve` children under pressure, drain and
+//!             reap them when quiet ([--min-shards 1] [--max-shards 4]
+//!             [--fleet-tick-ms 100]); prints a "shard spawns / shard
+//!             retires" summary line
+//!             [--surge] two-phase trace — a burst at --rate then a long
+//!             quiet tail at [--quiet-rate rate/20] — that forces the
+//!             autoscaler through both directions in one run
 //!   checks                         run the paper-shape checks
 //! ```
 
@@ -69,14 +80,15 @@ use lstm_ae_accel::runtime::Runtime;
 use lstm_ae_accel::engine::{ExecMode, PipelineOptions};
 use lstm_ae_accel::net::{ShardServer, WIRE_VERSION};
 use lstm_ae_accel::server::{
-    self, AnomalyServer, AutoscalePolicy, Backend, CacheConfig, ModelRegistry, PjrtBackend,
-    QuantBackend, RouterConfig, ServerConfig, ShardRouter, SubmitError,
+    self, AnomalyServer, AutoscalePolicy, Backend, CacheConfig, FleetScalePolicy, FleetScaler,
+    ModelRegistry, PjrtBackend, QuantBackend, RouterConfig, ServerConfig, ShardRouter,
+    ShardSpawner, SubmitError,
 };
 use lstm_ae_accel::util::cli::Args;
 use lstm_ae_accel::util::table::Table;
 use lstm_ae_accel::workload::trace::{
     closed_loop_async, merged_poisson, multi_stream_trace, poisson_trace, replay_fleet,
-    replay_streams, rotating_hot_poisson, zipf_poisson,
+    replay_streams, rotating_hot_poisson, surge_poisson, zipf_poisson,
 };
 use lstm_ae_accel::workload::TelemetryGen;
 use lstm_ae_accel::model::LstmAutoencoder;
@@ -421,14 +433,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.get_usize("requests", 1000);
     let rate = args.get_f64("rate", 2000.0);
     let anomaly_rate = args.get_f64("anomaly-rate", 0.1);
-    let cfg = ServerConfig {
-        max_batch: args.get_usize("max-batch", 8),
-        max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us", 500)),
-        workers: args.get_usize("workers", 2),
-        queue_capacity: args.get_usize("queue", 1024),
-        threshold: args.get_f64("threshold", 0.0), // calibrated below
-        ..Default::default()
-    };
 
     // Backend: PJRT artifact if available, else quantized golden model.
     let topo = Topology::from_name(&model)?;
@@ -461,7 +465,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect();
     let threshold = server::calibrate_threshold(&benign, 0.99);
-    let cfg = ServerConfig { threshold, ..cfg };
+    let cfg = ServerConfig::builder()
+        .max_batch(args.get_usize("max-batch", 8))
+        .max_wait(std::time::Duration::from_micros(args.get_u64("max-wait-us", 500)))
+        .workers(args.get_usize("workers", 2))
+        .queue_capacity(args.get_usize("queue", 1024))
+        .threshold(threshold)
+        .build();
     println!("backend {backend_name} | threshold {threshold:.6}");
 
     let srv = AnomalyServer::start(backend, cfg);
@@ -733,24 +743,43 @@ fn cmd_fleet_serve(args: &Args) -> Result<()> {
             }
         });
     }
+    let ephemeral = args.has("ephemeral");
     let server = ShardServer::bind(bind, registry.clone())
         .map_err(|e| anyhow!("bind {bind}: {e}"))?;
     println!(
         "fleet shard: serving {} models on {} (wire v{WIRE_VERSION}, seed {seed}, \
-         mode {mode:?}, {replicas} replicas on deep lanes) — kill to stop",
+         mode {mode:?}, {replicas} replicas on deep lanes) — {}",
         registry.len(),
-        server.local_addr()
+        server.local_addr(),
+        if ephemeral { "ephemeral, exits after drain" } else { "kill to stop" }
     );
     // stdout may be pipe-buffered (the soak job backgrounds this); make
     // the banner visible before parking.
     use std::io::Write as _;
     let _ = std::io::stdout().flush();
     let every = args.get_u64("report-every-s", 0);
+    // Ephemeral children (the fleet autoscaler's spawn unit) poll for the
+    // drain handshake: once a `Leave` drain request lands and the last
+    // connection winds down, exit cleanly instead of parking forever.
+    let poll = if ephemeral {
+        std::time::Duration::from_millis(50)
+    } else {
+        std::time::Duration::from_secs(if every > 0 { every } else { 3600 })
+    };
+    let mut last_report = std::time::Instant::now();
     loop {
-        std::thread::sleep(std::time::Duration::from_secs(if every > 0 { every } else { 3600 }));
-        if every > 0 {
+        std::thread::sleep(poll);
+        if every > 0 && last_report.elapsed() >= std::time::Duration::from_secs(every) {
             print!("{}", registry.fleet_report());
             let _ = std::io::stdout().flush();
+            last_report = std::time::Instant::now();
+        }
+        if ephemeral && server.is_leaving() && server.live_connections() == 0 {
+            println!("ephemeral shard on {} drained — exiting", server.local_addr());
+            let _ = std::io::stdout().flush();
+            server.shutdown();
+            registry.shutdown();
+            return Ok(());
         }
     }
 }
@@ -775,14 +804,37 @@ fn cmd_fleet_connect(args: &Args) -> Result<()> {
     // Clamp instead of panicking on dead-after < suspect-after.
     let dead_after =
         args.get_u64("dead-after", 6).clamp(u64::from(suspect_after), u32::MAX as u64) as u32;
-    let cfg = RouterConfig {
-        heartbeat_ms: args.get_u64("heartbeat-ms", 250).max(1),
-        suspect_after,
-        dead_after,
-        reconnect_max_backoff_ms: args.get_u64("reconnect-max-backoff", 5000).max(1),
+    let cfg = RouterConfig::builder()
+        .heartbeat_ms(args.get_u64("heartbeat-ms", 250).max(1))
+        .suspect_after(suspect_after)
+        .dead_after(dead_after)
+        .reconnect_max_backoff_ms(args.get_u64("reconnect-max-backoff", 5000).max(1))
+        .build();
+    let router = Arc::new(
+        ShardRouter::connect_with(&shards, cfg).map_err(|e| anyhow!("connect {shards:?}: {e}"))?,
+    );
+    // --fleet-autoscale: the fleet process autoscaler — spawn ephemeral
+    // `fleet serve` children of this very binary under pressure, drain
+    // and reap them when quiet, bounded to [--min-shards, --max-shards].
+    // The children inherit --seed so their model weights (and thus
+    // scores) are bit-identical to the static fleet's.
+    let floor = args.get_usize("min-shards", router.len().max(1));
+    let scaler = if args.has("fleet-autoscale") {
+        let policy = FleetScalePolicy::bounded(floor, args.get_usize("max-shards", floor.max(4)));
+        let tick = std::time::Duration::from_millis(args.get_u64("fleet-tick-ms", 100).max(1));
+        let exe = std::env::current_exe().map_err(|e| anyhow!("current_exe: {e}"))?;
+        let spawner = ShardSpawner::new(
+            exe,
+            vec!["fleet".into(), "serve".into(), "--seed".into(), seed.to_string()],
+        );
+        println!(
+            "fleet autoscaler: {}..={} shards, tick {tick:?}",
+            policy.min_shards, policy.max_shards
+        );
+        Some(FleetScaler::start(router.clone(), spawner, policy, tick))
+    } else {
+        None
     };
-    let router = ShardRouter::connect_with(&shards, cfg)
-        .map_err(|e| anyhow!("connect {shards:?}: {e}"))?;
     let topos = Topology::paper_models();
     let models: Vec<String> = topos.iter().map(|m| m.name.clone()).collect();
     // --zipf-pool P swaps the fresh-window Poisson mix for a repeat-heavy
@@ -791,7 +843,25 @@ fn cmd_fleet_connect(args: &Args) -> Result<()> {
     // only the window population changes, which is exactly what the
     // server-side score cache keys on.
     let zipf_pool = args.get_usize("zipf-pool", 0);
-    let merged = if zipf_pool > 0 {
+    // --surge swaps in the two-phase trace: a burst at --rate, then a
+    // long quiet tail at --quiet-rate. Pressure then sustained quiet is
+    // exactly the shape that forces the fleet autoscaler through both a
+    // spawn and a retire within one run.
+    let surge = args.has("surge");
+    let merged = if surge {
+        let quiet_rate = args.get_f64("quiet-rate", (rate / 20.0).max(1.0));
+        let n_surge = (n * 3 / 4).max(1);
+        let n_quiet = (n - n_surge).max(1);
+        surge_poisson(
+            &topos,
+            seed.wrapping_add(40),
+            rate,
+            quiet_rate,
+            n_surge,
+            n_quiet,
+            timesteps,
+        )
+    } else if zipf_pool > 0 {
         zipf_poisson(&topos, seed.wrapping_add(40), rate, n, timesteps, zipf_pool, 1.1)
     } else {
         merged_poisson(&topos, seed.wrapping_add(40), rate, n, timesteps, anomaly_rate)
@@ -802,7 +872,9 @@ fn cmd_fleet_connect(args: &Args) -> Result<()> {
         merged.len(),
         models.len(),
         router.len(),
-        if zipf_pool > 0 {
+        if surge {
+            ", surge-then-quiet trace".to_string()
+        } else if zipf_pool > 0 {
             format!(", zipf pool {zipf_pool}/model (s=1.1)")
         } else {
             String::new()
@@ -823,13 +895,31 @@ fn cmd_fleet_connect(args: &Args) -> Result<()> {
     }
     let (stats, sstats) = std::thread::scope(|sc| {
         let sh = strace.map(|tr| {
-            let router = &router;
+            let router = &*router;
             let models = &models;
             sc.spawn(move || replay_streams(router, models, tr, true))
         });
-        let stats = replay_fleet(&router, &models, merged, true);
+        let stats = replay_fleet(&*router, &models, merged, true);
         (stats, sh.map(|h| h.join().expect("stream driver panicked")))
     });
+    // With the autoscaler on, give the quiet tail time to drain the
+    // fleet back to the floor before stopping the controller — the
+    // "shard retires" count and the live-shard gauge below are what the
+    // CI autoscale leg greps for.
+    if let Some(scaler) = &scaler {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while router.live_shards() > floor && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+        scaler.stop();
+        let m = router.metrics();
+        println!(
+            "fleet scaler: {} shard spawns, {} shard retires | {} live at exit (floor {floor})",
+            m.shard_spawns(),
+            m.shard_retires(),
+            router.live_shards(),
+        );
+    }
     let wall = stats.wall.as_secs_f64().max(1e-9);
     println!(
         "wall {wall:.2}s | offered {} | completed {} ({:.0}/s) | {} flagged | shed {} | \

@@ -192,6 +192,24 @@ impl ShardClient {
         self.control.draining.load(Ordering::Acquire)
     }
 
+    /// Ask the shard to drain and retire: writes a `Leave` frame *to*
+    /// the shard (the same tag a shard uses to announce its own
+    /// departure — tag 6 is bidirectional). The shard flips to leaving,
+    /// re-announces `Leave` on every connection, stops admitting new
+    /// work, answers what is in flight, and — when running `fleet serve
+    /// --ephemeral` — exits once drained. Fire-and-forget: drain
+    /// *completion* is observed through the router's health tick
+    /// (Draining → in-flight zero → Dead), not a reply to this call.
+    pub fn request_leave(&self, reason: &str) -> Result<(), SubmitError> {
+        if !self.is_alive() {
+            return Err(SubmitError::Closed);
+        }
+        if reason.len() > u16::MAX as usize {
+            return Err(SubmitError::TooLarge);
+        }
+        self.write(&Frame::Leave { reason: reason.to_string() })
+    }
+
     /// Send one `HealthProbe { seq }`; the shard answers with a
     /// `Heartbeat` echoing `seq`, which lands in
     /// [`Self::last_heartbeat`]. Fails fast with `Err(Closed)` when the

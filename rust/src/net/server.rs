@@ -41,7 +41,14 @@
 //! - [`ShardServer::announce_leave`] broadcasts a `Leave` frame on every
 //!   connection (and to late joiners), telling routers to drain this
 //!   shard gracefully: stop routing new work, let in-flight tickets
-//!   complete, then close.
+//!   complete, then close;
+//! - a `Leave` frame *received* on a connection is the mirror image — a
+//!   drain request from a router (the fleet autoscaler's retire path,
+//!   [`crate::server::ShardRouter::retire_shard`]). The shard flips to
+//!   leaving exactly as if [`ShardServer::announce_leave`] had been
+//!   called locally and re-broadcasts `Leave` to every peer; a process
+//!   running `fleet serve --ephemeral` then exits once
+//!   [`ShardServer::is_leaving`] is set and its connections drain.
 //!
 //! # Streaming sessions
 //!
@@ -297,16 +304,22 @@ impl ShardServer {
     /// does not itself close anything.
     pub fn announce_leave(&self) {
         self.shared.leaving.store(true, Ordering::Release);
-        let frame = Frame::Leave { reason: "drain".to_string() }.encode();
-        let conns = self.conns.lock().unwrap();
-        for conn in conns.iter() {
-            if let Some(tx) = conn.out.lock().unwrap().as_ref() {
-                // try_send: a connection too backed up to take one
-                // control frame is already being killed by the overflow
-                // path; never block the caller on it.
-                let _ = tx.try_send(frame.clone());
-            }
-        }
+        broadcast_leave(&self.conns);
+    }
+
+    /// Whether a drain has been requested — by a local
+    /// [`ShardServer::announce_leave`] call or by a `Leave` frame from a
+    /// router (the fleet autoscaler's retire signal). An ephemeral shard
+    /// polls this to know when to begin its exit.
+    pub fn is_leaving(&self) -> bool {
+        self.shared.leaving.load(Ordering::Acquire)
+    }
+
+    /// Fabric connections whose handler threads are still running. An
+    /// ephemeral shard exits once it is leaving *and* this reaches zero
+    /// — every router has observed the drain and hung up.
+    pub fn live_connections(&self) -> usize {
+        self.conns.lock().unwrap().iter().filter(|c| !c.handle.is_finished()).count()
     }
 
     /// Stop accepting, close every connection, and join all server
@@ -320,12 +333,18 @@ impl ShardServer {
         if let Some(h) = self.accept.lock().unwrap().take() {
             let _ = h.join();
         }
-        let mut conns = self.conns.lock().unwrap();
-        // Unblock every connection reader first, then join the handlers.
-        for conn in conns.iter() {
-            let _ = conn.stream.shutdown(Shutdown::Both);
-        }
-        for conn in conns.drain(..) {
+        // Take the list, then join *outside* the lock: a handler
+        // mid-way through a Leave re-broadcast needs this same lock to
+        // finish, so joining under it would deadlock the shutdown.
+        let drained: Vec<Conn> = {
+            let mut conns = self.conns.lock().unwrap();
+            // Unblock every connection reader first, then join.
+            for conn in conns.iter() {
+                let _ = conn.stream.shutdown(Shutdown::Both);
+            }
+            conns.drain(..).collect()
+        };
+        for conn in drained {
             let _ = conn.handle.join();
         }
     }
@@ -334,6 +353,19 @@ impl ShardServer {
 impl Drop for ShardServer {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+/// Queue one `Leave` frame on every live connection's outbound queue.
+/// `try_send`: a connection too backed up to take one control frame is
+/// already being killed by the overflow path; never block the caller.
+fn broadcast_leave(conns: &Mutex<Vec<Conn>>) {
+    let frame = Frame::Leave { reason: "drain".to_string() }.encode();
+    let conns = conns.lock().unwrap();
+    for conn in conns.iter() {
+        if let Some(tx) = conn.out.lock().unwrap().as_ref() {
+            let _ = tx.try_send(frame.clone());
+        }
     }
 }
 
@@ -374,9 +406,10 @@ fn accept_loop(
                 let shared = shared.clone();
                 let handle = {
                     let out = out.clone();
+                    let conns = conns.clone();
                     std::thread::Builder::new()
                         .name(format!("shard-conn:{peer}"))
-                        .spawn(move || handle_conn(stream, shared, out))
+                        .spawn(move || handle_conn(stream, shared, out, conns))
                         .expect("spawn connection handler")
                 };
                 conns.lock().unwrap().push(Conn { stream: clone, handle, out });
@@ -430,6 +463,7 @@ fn handle_conn(
     mut stream: TcpStream,
     shared: Arc<ServerShared>,
     out_slot: Arc<Mutex<Option<SyncSender<Vec<u8>>>>>,
+    conns: Arc<Mutex<Vec<Conn>>>,
 ) {
     use std::io::Write;
     // Version gate before anything else: a mismatched (or non-protocol)
@@ -603,6 +637,17 @@ fn handle_conn(
                 if out_tx.try_send(frame.encode()).is_err() {
                     break;
                 }
+            }
+            Ok(Some(Frame::Leave { .. })) => {
+                // A drain request from a router (tag 6 is bidirectional):
+                // behave exactly as if announce_leave had been called
+                // locally — flip to leaving and re-broadcast on every
+                // connection, this one included, so every router (the
+                // requester too) observes the drain through the same
+                // Leave-frame path. An ephemeral shard then exits once
+                // its connections wind down.
+                shared.leaving.store(true, Ordering::Release);
+                broadcast_leave(&conns);
             }
             // A second Hello, or client-bound frames, are protocol
             // violations; clean EOF and decode errors end the connection

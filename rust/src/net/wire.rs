@@ -23,7 +23,7 @@
 //! | 3   | `Shed`       | shard → client   | `id, reason: u8`               |
 //! | 4   | `FleetReport`| both             | `text` (empty = request)       |
 //! | 5   | `Join`       | shard → client   | `shard_id: u64, models: u32`   |
-//! | 6   | `Leave`      | shard → client   | `reason: str`                  |
+//! | 6   | `Leave`      | both             | `reason: str`                  |
 //! | 7   | `HealthProbe`| client → shard   | `seq: u64`                     |
 //! | 8   | `Heartbeat`  | shard → client   | `seq, load counters, p50/p99`  |
 //! | 9   | `StreamOpen` | client → shard   | `stream, model, window: u32`   |
@@ -112,9 +112,12 @@ pub enum Frame {
     /// rejoin from a reconnect to the same process), `models` is how many
     /// lanes it serves.
     Join { shard_id: u64, models: u32 },
-    /// Graceful-departure announcement (shard → client): stop routing new
-    /// work here; in-flight requests will still be answered. The
-    /// connection stays open until the client has drained it.
+    /// Graceful-drain signal, valid in both directions. Shard → client:
+    /// a departure announcement — stop routing new work here; in-flight
+    /// requests will still be answered, and the connection stays open
+    /// until the client has drained it. Client → shard: a drain
+    /// *request* (the fleet autoscaler's retire path) — the shard flips
+    /// to leaving and announces `Leave` back on every connection.
     Leave { reason: String },
     /// Health probe (client → shard): `seq` is echoed in the matching
     /// [`Frame::Heartbeat`] so the registry can tell fresh replies from

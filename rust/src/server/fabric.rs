@@ -1437,7 +1437,7 @@ impl ModelRegistry {
     }
 }
 
-impl super::SubmitSurface for ModelRegistry {
+impl super::ServingSurface for ModelRegistry {
     fn submit_async(&self, model: &str, window: Window) -> Result<Ticket, SubmitError> {
         ModelRegistry::submit_async(self, model, window)
     }
@@ -1447,9 +1447,7 @@ impl super::SubmitSurface for ModelRegistry {
     fn score_blocking(&self, model: &str, window: Window) -> Result<Response, SubmitError> {
         ModelRegistry::score_blocking(self, model, window)
     }
-}
 
-impl super::StreamSurface for ModelRegistry {
     fn open_stream(&self, model: &str, stream: u64, window: usize) -> Result<(), SubmitError> {
         ModelRegistry::open_stream(self, model, stream, window)
     }
@@ -1465,6 +1463,10 @@ impl super::StreamSurface for ModelRegistry {
 
     fn close_stream(&self, model: &str, stream: u64) {
         ModelRegistry::close_stream(self, model, stream)
+    }
+
+    fn fleet_report(&self) -> String {
+        ModelRegistry::fleet_report(self)
     }
 }
 

@@ -1,0 +1,532 @@
+//! Fleet-tier process autoscaling: spawning and retiring whole shard
+//! processes from fleet-wide load.
+//!
+//! The per-lane tier ([`super::autoscale`]) resizes worker pools inside
+//! one process; this tier closes the same loop one level up — the
+//! runtime analogue of sizing the accelerator to the workload, done
+//! with processes instead of fabric:
+//!
+//! ```text
+//!            every `fleet_tick`
+//!  ┌────────────────────────────────────────────────────────────┐
+//!  │ sample   ShardRouter::fleet_sample(): live shards, shed    │
+//!  │          delta, in-flight total, worst p99 EWMA            │
+//!  │          (all already flowing through heartbeats)          │
+//!  │ decide   pressure → Up, sustained quiet → Down, else Hold  │
+//!  │          (the same streak hysteresis as the lane tier,     │
+//!  │           clamped to [min_shards, max_shards])             │
+//!  │ apply    Up:   ShardSpawner — free port, spawn             │
+//!  │                `fleet serve --ephemeral`, readiness probe  │
+//!  │                via the wire handshake, add_shard           │
+//!  │          Down: pick the least-loaded spawned shard,        │
+//!  │                retire_shard (drain over the wire), then    │
+//!  │                reap the child once the slot lands Dead     │
+//!  └────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Scale-down is lossless by construction: [`ShardRouter::retire_shard`]
+//! rides the PR-6 drain path (`Leave` → Draining → in-flight zero →
+//! clean close), so every in-flight ticket completes before the child is
+//! reaped — the integration suite pins zero lost tickets and bit-exact
+//! scores across churn. The scaler only ever retires shards *it*
+//! spawned: the operator's static fleet is the floor it returns to.
+
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::net::ShardClient;
+
+use super::shard::{FleetSample, ShardRouter, ShardState};
+use super::ScaleDecision;
+
+/// Fleet-tier scaling bounds and hysteresis knobs. The thresholds read
+/// against in-flight submissions *per live shard* (the fleet's queue
+/// depth analogue); any shed since the last tick counts as pressure
+/// outright, exactly like the lane tier.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FleetScalePolicy {
+    /// Never drain the fleet below this many live shards.
+    pub min_shards: usize,
+    /// Never spawn beyond this many live shards.
+    pub max_shards: usize,
+    /// Pressure threshold: a tick counts toward scale-up when in-flight
+    /// per live shard reaches this (or any request was shed since the
+    /// last tick).
+    pub up_inflight_per_shard: f64,
+    /// Consecutive pressure ticks required before one spawn.
+    pub up_ticks: u32,
+    /// Quiet threshold: a tick counts toward scale-down only when
+    /// nothing was shed and in-flight per live shard is at most this.
+    pub down_inflight_per_shard: f64,
+    /// Consecutive quiet ticks required before one retire.
+    pub down_ticks: u32,
+}
+
+impl Default for FleetScalePolicy {
+    fn default() -> Self {
+        FleetScalePolicy {
+            min_shards: 1,
+            max_shards: 4,
+            up_inflight_per_shard: 32.0,
+            up_ticks: 2,
+            down_inflight_per_shard: 2.0,
+            down_ticks: 8,
+        }
+    }
+}
+
+impl FleetScalePolicy {
+    /// A policy bounded to `min..=max` live shards, other knobs default.
+    pub fn bounded(min: usize, max: usize) -> FleetScalePolicy {
+        let min = min.max(1);
+        FleetScalePolicy { min_shards: min, max_shards: max.max(min), ..Default::default() }
+    }
+}
+
+/// Controller memory across ticks: the previous cumulative shed count
+/// and the hysteresis streaks.
+#[derive(Debug, Default)]
+struct FleetTrack {
+    last_shed: u64,
+    up_streak: u32,
+    down_streak: u32,
+}
+
+/// The pure fleet-tier decision: fold one sample into the streaks and
+/// report whether the process count should move. Same shape as the lane
+/// tier's, with the floor/ceiling clamp folded in — a completed streak
+/// at a bound emits Hold (and resets, so pressure at the ceiling doesn't
+/// bank an instant spawn for later).
+fn decide(
+    policy: &FleetScalePolicy,
+    sample: &FleetSample,
+    track: &mut FleetTrack,
+) -> ScaleDecision {
+    let shed_delta = sample.shed_total.saturating_sub(track.last_shed);
+    track.last_shed = sample.shed_total;
+    let per_shard = sample.inflight as f64 / sample.live.max(1) as f64;
+    let pressure = shed_delta > 0 || per_shard >= policy.up_inflight_per_shard;
+    let quiet = shed_delta == 0 && per_shard <= policy.down_inflight_per_shard;
+    if pressure {
+        track.down_streak = 0;
+        track.up_streak += 1;
+        if track.up_streak >= policy.up_ticks {
+            track.up_streak = 0;
+            if sample.live < policy.max_shards {
+                return ScaleDecision::Up;
+            }
+        }
+    } else if quiet {
+        track.up_streak = 0;
+        track.down_streak += 1;
+        if track.down_streak >= policy.down_ticks {
+            track.down_streak = 0;
+            if sample.live > policy.min_shards {
+                return ScaleDecision::Down;
+            }
+        }
+    } else {
+        track.up_streak = 0;
+        track.down_streak = 0;
+    }
+    ScaleDecision::Hold
+}
+
+/// Spawns ephemeral shard processes: allocate a free loopback port,
+/// launch `<binary> <base_args..> --bind <addr> --ephemeral`, and probe
+/// readiness by completing the wire handshake against the new port.
+/// A child that never becomes ready is killed *and reaped* before the
+/// error returns — a failed spawn leaves no zombie and no router slot.
+pub struct ShardSpawner {
+    binary: PathBuf,
+    base_args: Vec<String>,
+    ready_timeout: Duration,
+}
+
+impl ShardSpawner {
+    /// A spawner launching `binary` with `base_args` before the
+    /// spawner-owned `--bind`/`--ephemeral` flags. For the fleet CLI the
+    /// binary is the running executable itself and the args are
+    /// `["fleet", "serve", ..model flags..]`.
+    pub fn new(binary: impl Into<PathBuf>, base_args: Vec<String>) -> ShardSpawner {
+        ShardSpawner { binary: binary.into(), base_args, ready_timeout: Duration::from_secs(10) }
+    }
+
+    /// How long a child gets to open its port and answer the handshake
+    /// before the spawn is declared failed (default 10 s).
+    pub fn ready_timeout(mut self, d: Duration) -> ShardSpawner {
+        self.ready_timeout = d;
+        self
+    }
+
+    /// Spawn one shard child and wait for it to serve the handshake.
+    /// Returns the ready child and its address; the caller admits it
+    /// with [`ShardRouter::add_shard`].
+    pub fn spawn_shard(&self) -> std::io::Result<SpawnedShard> {
+        // Bind port 0 to have the kernel pick a free port, then release
+        // it for the child. The classic TOCTOU gap is tolerable on
+        // loopback: a steal surfaces as a readiness failure, not a hang.
+        let probe = std::net::TcpListener::bind("127.0.0.1:0")?;
+        let addr = probe.local_addr()?.to_string();
+        drop(probe);
+        let mut child = Command::new(&self.binary)
+            .args(&self.base_args)
+            .arg("--bind")
+            .arg(&addr)
+            .arg("--ephemeral")
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()?;
+        let deadline = Instant::now() + self.ready_timeout;
+        loop {
+            // Readiness = the full version handshake, not a bare TCP
+            // accept: the child is provably speaking the protocol.
+            if let Ok(client) = ShardClient::connect(&addr) {
+                client.shutdown();
+                return Ok(SpawnedShard { addr, child });
+            }
+            if Instant::now() >= deadline {
+                let pid = child.id();
+                // Kill then reap: wait() after kill cannot hang, and a
+                // reaped child is no zombie.
+                let _ = child.kill();
+                let _ = child.wait();
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    format!(
+                        "shard at {addr} (pid {pid}) not ready within {:?}; killed and reaped",
+                        self.ready_timeout
+                    ),
+                ));
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+}
+
+/// A ready shard child process, as produced by
+/// [`ShardSpawner::spawn_shard`].
+pub struct SpawnedShard {
+    addr: String,
+    child: Child,
+}
+
+impl SpawnedShard {
+    /// The loopback address the child is serving on.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Non-blocking reap: `Some(status)` once the child has exited (an
+    /// ephemeral child exits on its own after a drain completes).
+    pub fn try_wait(&mut self) -> std::io::Result<Option<std::process::ExitStatus>> {
+        self.child.try_wait()
+    }
+
+    /// Kill and reap the child unconditionally.
+    pub fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// One scaler-owned shard child: its router slot, the OS process, and —
+/// once a Down decision picked it — when the drain was requested.
+struct ManagedShard {
+    slot: usize,
+    spawned: SpawnedShard,
+    draining_since: Option<Instant>,
+}
+
+/// If a retiring child has not exited this long after its drain was
+/// requested, it is killed. The drain path normally finishes in a few
+/// health ticks; this is the backstop against a wedged child.
+const RETIRE_KILL_AFTER: Duration = Duration::from_secs(30);
+
+/// The fleet-tier controller: one background thread sampling
+/// [`ShardRouter::fleet_sample`] every tick and spawning/retiring
+/// ephemeral shard processes within the policy bounds. Stopping is
+/// idempotent, happens on drop, and kills any children still alive —
+/// the scaler never leaks processes past its own lifetime.
+pub struct FleetScaler {
+    stop_tx: Sender<()>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl FleetScaler {
+    /// Spawn the controller over `router`, ticking every `tick`. Spawn
+    /// and retire events tick the router's `shard_spawns`/`shard_retires`
+    /// metrics. Panics when `policy` is unrunnable
+    /// (`min_shards == 0` or `min_shards > max_shards`).
+    pub fn start(
+        router: Arc<ShardRouter>,
+        spawner: ShardSpawner,
+        policy: FleetScalePolicy,
+        tick: Duration,
+    ) -> FleetScaler {
+        assert!(
+            1 <= policy.min_shards && policy.min_shards <= policy.max_shards,
+            "FleetScalePolicy: need 1 <= min_shards <= max_shards"
+        );
+        let (stop_tx, stop_rx) = channel::<()>();
+        let handle = std::thread::Builder::new()
+            .name("fleet-scaler".into())
+            .spawn(move || {
+                // Prime against the current cumulative shed so the first
+                // tick sees only activity since start, not the fleet's
+                // lifetime shed history.
+                let mut track = FleetTrack {
+                    last_shed: router.fleet_sample().shed_total,
+                    ..FleetTrack::default()
+                };
+                let mut children: Vec<ManagedShard> = Vec::new();
+                loop {
+                    match stop_rx.recv_timeout(tick) {
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Ok(()) | Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                    reap_retired(&router, &mut children);
+                    let sample = router.fleet_sample();
+                    match decide(&policy, &sample, &mut track) {
+                        ScaleDecision::Up => scale_up(&router, &spawner, &mut children),
+                        ScaleDecision::Down => scale_down(&router, &policy, &mut children),
+                        ScaleDecision::Hold => {}
+                    }
+                }
+                // Teardown: no child outlives the scaler. Anything still
+                // here either never got a Down decision (traffic is over
+                // by stop time — a kill poisons nothing) or is mid-drain
+                // and gets cut short the same way. A draining child still
+                // counts as a retire: the drain was requested, stop just
+                // beat the reap tick to it.
+                for mut m in children {
+                    let was_draining = m.draining_since.is_some();
+                    let _ = m.spawned.child.kill();
+                    let _ = m.spawned.child.wait();
+                    if was_draining {
+                        router.metrics().on_shard_retire();
+                    }
+                }
+            })
+            .expect("spawn fleet scaler");
+        FleetScaler { stop_tx, handle: Mutex::new(Some(handle)) }
+    }
+
+    /// Stop the controller, reap its children, and join (idempotent).
+    pub fn stop(&self) {
+        let _ = self.stop_tx.send(());
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FleetScaler {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// One Up step: spawn a child, wait for readiness, admit it. A child
+/// that fails readiness was already killed and reaped by the spawner; a
+/// child the router refuses is killed here — either way no zombie and no
+/// phantom slot.
+fn scale_up(router: &ShardRouter, spawner: &ShardSpawner, children: &mut Vec<ManagedShard>) {
+    let Ok(mut spawned) = spawner.spawn_shard() else {
+        return;
+    };
+    match router.add_shard(&spawned.addr) {
+        Ok(slot) => {
+            router.metrics().on_shard_spawn();
+            children.push(ManagedShard { slot, spawned, draining_since: None });
+        }
+        Err(_) => {
+            let _ = spawned.child.kill();
+            let _ = spawned.child.wait();
+        }
+    }
+}
+
+/// One Down step: among scaler-owned, not-yet-draining children whose
+/// slots are still Live, drain the least-loaded one. Only spawned shards
+/// are ever retired — the operator's static fleet is the floor.
+fn scale_down(router: &ShardRouter, policy: &FleetScalePolicy, children: &mut [ManagedShard]) {
+    let target = children
+        .iter_mut()
+        .filter(|m| {
+            m.draining_since.is_none() && router.shard_state(m.slot) == ShardState::Live
+        })
+        .min_by_key(|m| router.shard_inflight(m.slot));
+    let Some(m) = target else {
+        return;
+    };
+    // Re-clamp against the floor at apply time: live may have moved
+    // (a shard died, a spawn landed) since the decision's sample.
+    if router.live_shards() <= policy.min_shards {
+        return;
+    }
+    // A failed drain request means the connection is already gone — the
+    // slot is retired either way, so fall through to the reap path.
+    let _ = router.retire_shard(m.slot);
+    m.draining_since = Some(Instant::now());
+}
+
+/// Reap draining children: once the router observed the drain complete
+/// (slot Dead) the child exits on its own and `try_wait` collects it;
+/// a child wedged past [`RETIRE_KILL_AFTER`] is killed. Each reaped
+/// child counts one `shard retires`.
+fn reap_retired(router: &ShardRouter, children: &mut Vec<ManagedShard>) {
+    children.retain_mut(|m| {
+        let Some(since) = m.draining_since else {
+            return true;
+        };
+        if since.elapsed() >= RETIRE_KILL_AFTER {
+            let _ = m.spawned.child.kill();
+            let _ = m.spawned.child.wait();
+            router.metrics().on_shard_retire();
+            return false;
+        }
+        // The ephemeral child exits once its drain completes; until the
+        // slot lands Dead it is still answering in-flight work.
+        if router.shard_state(m.slot) != ShardState::Dead {
+            return true;
+        }
+        match m.spawned.child.try_wait() {
+            Ok(Some(_)) => {
+                router.metrics().on_shard_retire();
+                false
+            }
+            // Dead slot but the process is still winding down its
+            // connections: check again next tick.
+            Ok(None) => true,
+            Err(_) => {
+                let _ = m.spawned.child.kill();
+                let _ = m.spawned.child.wait();
+                router.metrics().on_shard_retire();
+                false
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(live: usize, shed_total: u64, inflight: u64) -> FleetSample {
+        FleetSample { live, shed_total, inflight, p99_us: 0.0 }
+    }
+
+    fn policy() -> FleetScalePolicy {
+        FleetScalePolicy {
+            min_shards: 1,
+            max_shards: 3,
+            up_inflight_per_shard: 16.0,
+            up_ticks: 2,
+            down_inflight_per_shard: 1.0,
+            down_ticks: 3,
+        }
+    }
+
+    #[test]
+    fn scale_up_requires_sustained_pressure() {
+        let p = policy();
+        let mut t = FleetTrack::default();
+        // One pressured tick, one deadband tick, then two pressured: the
+        // deadband tick must reset the streak.
+        assert_eq!(decide(&p, &sample(1, 0, 100), &mut t), ScaleDecision::Hold);
+        assert_eq!(decide(&p, &sample(1, 0, 8), &mut t), ScaleDecision::Hold);
+        assert_eq!(decide(&p, &sample(1, 0, 100), &mut t), ScaleDecision::Hold);
+        assert_eq!(decide(&p, &sample(1, 0, 100), &mut t), ScaleDecision::Up);
+        // Emitted decisions reset the streak: one step per streak.
+        assert_eq!(decide(&p, &sample(1, 0, 100), &mut t), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn shed_delta_counts_as_pressure_and_is_differenced() {
+        let p = FleetScalePolicy { up_ticks: 1, ..policy() };
+        let mut t = FleetTrack { last_shed: 40, ..FleetTrack::default() };
+        // Cumulative 50 against a remembered 40: 10 shed this tick.
+        assert_eq!(decide(&p, &sample(1, 50, 0), &mut t), ScaleDecision::Up);
+        // Unchanged cumulative count: no new shed, idle fleet → quiet.
+        assert_eq!(decide(&p, &sample(1, 50, 0), &mut t), ScaleDecision::Hold);
+        assert_eq!(t.down_streak, 1, "no-new-shed idle tick must count toward Down");
+    }
+
+    #[test]
+    fn scale_down_requires_sustained_quiet_and_respects_floor() {
+        let p = policy();
+        let mut t = FleetTrack::default();
+        // Two shards, three quiet ticks → Down.
+        assert_eq!(decide(&p, &sample(2, 0, 0), &mut t), ScaleDecision::Hold);
+        assert_eq!(decide(&p, &sample(2, 0, 0), &mut t), ScaleDecision::Hold);
+        assert_eq!(decide(&p, &sample(2, 0, 0), &mut t), ScaleDecision::Down);
+        // At the floor the completed streak emits Hold instead.
+        for _ in 0..10 {
+            assert_eq!(decide(&p, &sample(1, 0, 0), &mut t), ScaleDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn ceiling_clamps_sustained_pressure_to_hold() {
+        let p = policy();
+        let mut t = FleetTrack::default();
+        for _ in 0..10 {
+            assert_eq!(decide(&p, &sample(3, 0, 1000), &mut t), ScaleDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn deadband_holds_and_resets_both_streaks() {
+        let p = policy();
+        let mut t = FleetTrack::default();
+        // Almost-complete streaks on both sides, each broken by a
+        // deadband tick (between the down and up thresholds).
+        assert_eq!(decide(&p, &sample(2, 0, 200), &mut t), ScaleDecision::Hold);
+        assert_eq!(decide(&p, &sample(2, 0, 0), &mut t), ScaleDecision::Hold);
+        assert_eq!(decide(&p, &sample(2, 0, 0), &mut t), ScaleDecision::Hold);
+        assert_eq!(decide(&p, &sample(2, 0, 10), &mut t), ScaleDecision::Hold);
+        assert_eq!((t.up_streak, t.down_streak), (0, 0));
+    }
+
+    #[test]
+    fn bounded_policy_clamps_degenerate_ranges() {
+        let p = FleetScalePolicy::bounded(0, 0);
+        assert_eq!((p.min_shards, p.max_shards), (1, 1));
+        let p = FleetScalePolicy::bounded(3, 2);
+        assert_eq!((p.min_shards, p.max_shards), (3, 3));
+    }
+
+    #[test]
+    fn spawner_readiness_timeout_kills_and_reaps_the_child() {
+        // A child that never opens the port: the bind/ephemeral flags the
+        // spawner appends land as unused positional args to `sh -c`.
+        let spawner = ShardSpawner::new("/bin/sh", vec!["-c".into(), "sleep 300".into()])
+            .ready_timeout(Duration::from_millis(200));
+        let started = Instant::now();
+        let err = spawner.spawn_shard().expect_err("never-ready child must fail the spawn");
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut);
+        assert!(started.elapsed() >= Duration::from_millis(200));
+        // The error names the pid it killed; the child must be fully
+        // reaped — no /proc entry left, not even a zombie's.
+        #[cfg(target_os = "linux")]
+        {
+            let msg = err.to_string();
+            let pid: u64 = msg
+                .split("(pid ")
+                .nth(1)
+                .and_then(|s| s.split(')').next())
+                .and_then(|s| s.parse().ok())
+                .expect("error message carries the killed pid");
+            assert!(
+                !std::path::Path::new(&format!("/proc/{pid}")).exists(),
+                "pid {pid} still present after failed spawn: {msg}"
+            );
+        }
+    }
+}

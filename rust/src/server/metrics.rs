@@ -47,6 +47,12 @@ pub struct ServerMetrics {
     shard_reconnect_attempts: AtomicU64,
     /// Control plane: reconnects that landed — a dead shard rejoined.
     shard_reconnects: AtomicU64,
+    /// Fleet autoscaler: shard processes spawned (and admitted) by a
+    /// scale-up decision.
+    shard_spawns: AtomicU64,
+    /// Fleet autoscaler: shard processes drained and reaped by a
+    /// scale-down decision.
+    shard_retires: AtomicU64,
     /// Control plane: fleet membership by state, refreshed every health
     /// tick — (live, suspect, draining, down). Point-in-time gauges,
     /// unlike the monotone counters above.
@@ -109,6 +115,8 @@ impl ServerMetrics {
             shard_deaths: AtomicU64::new(0),
             shard_reconnect_attempts: AtomicU64::new(0),
             shard_reconnects: AtomicU64::new(0),
+            shard_spawns: AtomicU64::new(0),
+            shard_retires: AtomicU64::new(0),
             shards_live: AtomicUsize::new(0),
             shards_suspect: AtomicUsize::new(0),
             shards_draining: AtomicUsize::new(0),
@@ -191,6 +199,16 @@ impl ServerMetrics {
     /// A reconnect succeeded — the shard is back in the routable set.
     pub fn on_shard_reconnect(&self) {
         self.shard_reconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The fleet autoscaler spawned a shard process and admitted it.
+    pub fn on_shard_spawn(&self) {
+        self.shard_spawns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The fleet autoscaler drained and reaped a shard process.
+    pub fn on_shard_retire(&self) {
+        self.shard_retires.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Refresh the fleet-membership gauges (called once per health tick
@@ -320,6 +338,16 @@ impl ServerMetrics {
     /// Reconnects that landed so far.
     pub fn shard_reconnects(&self) -> u64 {
         self.shard_reconnects.load(Ordering::Relaxed)
+    }
+
+    /// Shard processes spawned by the fleet autoscaler so far.
+    pub fn shard_spawns(&self) -> u64 {
+        self.shard_spawns.load(Ordering::Relaxed)
+    }
+
+    /// Shard processes drained and reaped by the fleet autoscaler so far.
+    pub fn shard_retires(&self) -> u64 {
+        self.shard_retires.load(Ordering::Relaxed)
     }
 
     /// Fleet membership gauges as of the last health tick:
@@ -469,6 +497,13 @@ impl ServerMetrics {
             let (live, suspect, draining, down) = self.shard_states();
             extra.push_str(&format!(
                 " | fleet: {live} live, {suspect} suspect, {draining} draining, {down} down"
+            ));
+        }
+        if self.shard_spawns() + self.shard_retires() > 0 {
+            extra.push_str(&format!(
+                " | scaler: {} shard spawns, {} shard retires",
+                self.shard_spawns(),
+                self.shard_retires(),
             ));
         }
         format!(
@@ -638,6 +673,20 @@ mod tests {
         assert!(report.contains("4 probes"), "{report}");
         assert!(report.contains("1 reconnects (2 attempts)"), "{report}");
         assert!(report.contains("2 live, 1 suspect, 0 draining, 1 down"), "{report}");
+    }
+
+    #[test]
+    fn scaler_counters_surface_in_the_report() {
+        let m = ServerMetrics::new();
+        assert_eq!((m.shard_spawns(), m.shard_retires()), (0, 0));
+        assert!(!m.report().contains("scaler:"), "quiet report must omit the scaler segment");
+        m.on_shard_spawn();
+        m.on_shard_spawn();
+        m.on_shard_retire();
+        assert_eq!(m.shard_spawns(), 2);
+        assert_eq!(m.shard_retires(), 1);
+        let report = m.report();
+        assert!(report.contains("scaler: 2 shard spawns, 1 shard retires"), "{report}");
     }
 
     #[test]

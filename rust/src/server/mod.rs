@@ -54,14 +54,20 @@
 //!   shard through Live→Suspect→Dead ([`ShardState`]), dead shards are
 //!   redialed with capped backoff until they rejoin, `Leave` announcers
 //!   drain gracefully, and [`ShardRouter::add_shard`] admits shards into
-//!   a running fleet. [`SubmitSurface`] is the trait both ends of that
+//!   a running fleet. [`ServingSurface`] is the trait both ends of that
 //!   symmetry implement.
+//! - [`fleetscale`] — the fleet-tier process autoscaler: a controller
+//!   thread samples fleet-wide heartbeat signals (shed deltas, p99 EWMAs,
+//!   in-flight counts, live-shard count) and spawns or drains whole
+//!   `fleet serve` child processes between configured bounds with the
+//!   same streak hysteresis the per-lane [`autoscale`] tier uses.
 
 pub mod autoscale;
 pub mod backend;
 pub mod batcher;
 pub mod cache;
 pub mod fabric;
+pub mod fleetscale;
 pub mod front;
 pub mod metrics;
 pub mod shard;
@@ -70,18 +76,23 @@ pub use autoscale::{Autoscaler, AutoscalePolicy, ScaleDecision};
 pub use backend::{Backend, PjrtBackend, QuantBackend, ThrottledBackend};
 pub use cache::CacheConfig;
 pub use fabric::{FleetLoad, Lane, ModelRegistry, SessionTable, SubmitError};
+pub use fleetscale::{FleetScalePolicy, FleetScaler, ShardSpawner, SpawnedShard};
 pub use front::{Completion, CompletionSet, Ticket};
 pub use metrics::ServerMetrics;
-pub use shard::{RouterConfig, ShardRouter, ShardState};
+pub use shard::{FleetSample, RouterConfig, RouterConfigBuilder, ShardRouter, ShardState};
 
-/// The fleet-wide submission surface: anything that accepts
-/// `submit(model, window)` and answers through a [`Ticket`]. Implemented
-/// by the in-process [`ModelRegistry`] and the cross-process
-/// [`ShardRouter`], so the workload drivers
-/// ([`crate::workload::trace::closed_loop_async`] and friends) run
-/// unchanged against one process or a whole shard fleet — the scale step
-/// the ROADMAP's sharding item asks for, with client code untouched.
-pub trait SubmitSurface: Sync {
+/// The one serving surface: everything a client can ask of the fleet —
+/// stateless window scoring, stateful streaming sessions, and the
+/// rolled-up fleet report — behind a single trait. Implemented by the
+/// in-process [`ModelRegistry`] and the cross-process [`ShardRouter`]
+/// (which adds health-weighted balancing and sticky session→shard
+/// routing), so the workload drivers
+/// ([`crate::workload::trace::closed_loop_async`],
+/// [`crate::workload::trace::replay_fleet`],
+/// [`crate::workload::trace::replay_streams`], and friends) run unchanged
+/// against one process or a whole shard fleet — the scale step the
+/// ROADMAP's sharding item asks for, with client code untouched.
+pub trait ServingSurface: Sync {
     /// Nonblocking submit: a [`Ticket`] on acceptance, the usual
     /// [`SubmitError`] admission outcomes otherwise. Remote surfaces may
     /// additionally resolve the *ticket* to `Err(Overloaded)` — their
@@ -92,18 +103,11 @@ pub trait SubmitSurface: Sync {
     fn score_blocking(&self, model: &str, window: Window) -> Result<Response, SubmitError> {
         self.submit_async(model, window)?.wait()
     }
-}
 
-/// The stateful companion to [`SubmitSurface`]: per-stream sessions that
-/// carry LSTM hidden/cell state forward so each arriving sample costs one
-/// recurrence step instead of a full-window re-run. Implemented by the
-/// in-process [`ModelRegistry`] and the cross-process [`ShardRouter`]
-/// (which adds sticky session→shard routing), so the multi-stream
-/// workload driver ([`crate::workload::trace::replay_streams`]) runs
-/// unchanged against either.
-pub trait StreamSurface: Sync {
     /// Open (or reopen, resetting state) session `stream` on `model` with
-    /// scoring window `window` (`0` → the lane default).
+    /// scoring window `window` (`0` → the lane default). Sessions carry
+    /// LSTM hidden/cell state forward so each arriving sample costs one
+    /// recurrence step instead of a full-window re-run.
     fn open_stream(&self, model: &str, stream: u64, window: usize) -> Result<(), SubmitError>;
 
     /// Feed one `F`-feature sample to an open session. The [`Ticket`]
@@ -120,6 +124,13 @@ pub trait StreamSurface: Sync {
     /// Close a session, releasing its table slot. Closing an unknown
     /// session is a no-op.
     fn close_stream(&self, model: &str, stream: u64);
+
+    /// The rolled-up human-readable fleet report (per-lane counters,
+    /// latency percentiles, cache and session totals). Default: empty —
+    /// surfaces with nothing to report stay report-free.
+    fn fleet_report(&self) -> String {
+        String::new()
+    }
 }
 
 use std::sync::mpsc::{Receiver, Sender};
@@ -178,6 +189,98 @@ impl Default for ServerConfig {
             sessions: SessionConfig::default(),
             pin_base_core: None,
         }
+    }
+}
+
+impl ServerConfig {
+    /// Start a [`ServerConfigBuilder`] from the defaults. Prefer this
+    /// over struct literals with `..Default::default()`: the builder
+    /// validates at [`ServerConfigBuilder::build`], and adding a config
+    /// field stops being a repo-wide diff.
+    pub fn builder() -> ServerConfigBuilder {
+        ServerConfigBuilder { cfg: ServerConfig::default() }
+    }
+}
+
+/// Typed builder for [`ServerConfig`] — see [`ServerConfig::builder`].
+///
+/// ```
+/// use lstm_ae_accel::server::ServerConfig;
+/// let cfg = ServerConfig::builder().max_batch(4).workers(1).build();
+/// assert_eq!(cfg.max_batch, 4);
+/// ```
+#[derive(Clone, Debug)]
+pub struct ServerConfigBuilder {
+    cfg: ServerConfig,
+}
+
+impl ServerConfigBuilder {
+    /// Max windows per dispatched batch (must stay ≥ 1).
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.cfg.max_batch = n;
+        self
+    }
+
+    /// Max time the batcher holds the first request of a batch.
+    pub fn max_wait(mut self, d: Duration) -> Self {
+        self.cfg.max_wait = d;
+        self
+    }
+
+    /// Worker threads (must stay ≥ 1).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n;
+        self
+    }
+
+    /// Bounded admission-queue capacity in requests (must stay ≥ 1).
+    pub fn queue_capacity(mut self, n: usize) -> Self {
+        self.cfg.queue_capacity = n;
+        self
+    }
+
+    /// Anomaly threshold on the reconstruction-error score.
+    pub fn threshold(mut self, t: f64) -> Self {
+        self.cfg.threshold = t;
+        self
+    }
+
+    /// Per-lane autoscaling policy (see [`AutoscalePolicy`]).
+    pub fn autoscale(mut self, p: AutoscalePolicy) -> Self {
+        self.cfg.autoscale = Some(p);
+        self
+    }
+
+    /// Per-lane exact-match score cache (see [`CacheConfig`]).
+    pub fn cache(mut self, c: CacheConfig) -> Self {
+        self.cfg.cache = Some(c);
+        self
+    }
+
+    /// Stream-session table sizing (capacity must stay ≥ 1).
+    pub fn sessions(mut self, s: SessionConfig) -> Self {
+        self.cfg.sessions = s;
+        self
+    }
+
+    /// Pin the lane's worker threads from this core up.
+    pub fn pin_base_core(mut self, c: usize) -> Self {
+        self.cfg.pin_base_core = Some(c);
+        self
+    }
+
+    /// Validate and produce the [`ServerConfig`].
+    ///
+    /// Panics on configurations no lane can run: a zero `max_batch`,
+    /// `workers`, `queue_capacity`, or session capacity. Misconfiguration
+    /// is a programming error, so it fails loudly at construction instead
+    /// of wedging a batcher at runtime.
+    pub fn build(self) -> ServerConfig {
+        assert!(self.cfg.max_batch >= 1, "ServerConfig: max_batch must be >= 1");
+        assert!(self.cfg.workers >= 1, "ServerConfig: workers must be >= 1");
+        assert!(self.cfg.queue_capacity >= 1, "ServerConfig: queue_capacity must be >= 1");
+        assert!(self.cfg.sessions.capacity >= 1, "ServerConfig: session capacity must be >= 1");
+        self.cfg
     }
 }
 

@@ -62,7 +62,8 @@
 //!
 //! # Sticky session routing
 //!
-//! Streaming sessions ([`super::StreamSurface`]) carry per-session LSTM
+//! Streaming sessions (the stream half of [`super::ServingSurface`])
+//! carry per-session LSTM
 //! state *on the shard*, so unlike windows they cannot hop shards per
 //! sample. [`ShardRouter::open_stream`] picks a home shard with the same
 //! health-weighted pair draw and records `session → (slot, generation)`;
@@ -91,7 +92,7 @@
 //! decision that keeps working unchanged through failover and rejoin.
 
 use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -101,7 +102,7 @@ use crate::net::{ShardClient, WireError};
 use crate::util::rng::SplitMix64;
 use crate::workload::Window;
 
-use super::{ServerMetrics, SubmitError, SubmitSurface, Ticket};
+use super::{ServerMetrics, ServingSurface, SubmitError, Ticket};
 
 /// First redial delay after a shard dies; doubles per failed attempt up
 /// to [`RouterConfig::reconnect_max_backoff_ms`].
@@ -179,6 +180,90 @@ impl Default for RouterConfig {
     }
 }
 
+impl RouterConfig {
+    /// Start a [`RouterConfigBuilder`] from the defaults. Prefer this
+    /// over struct literals: the builder validates the cross-field
+    /// invariants (`suspect_after <= dead_after`, nonzero periods) at
+    /// [`RouterConfigBuilder::build`] instead of panicking later inside
+    /// [`ShardRouter::over_with`].
+    pub fn builder() -> RouterConfigBuilder {
+        RouterConfigBuilder { cfg: RouterConfig::default() }
+    }
+}
+
+/// Typed builder for [`RouterConfig`] — see [`RouterConfig::builder`].
+///
+/// ```
+/// use lstm_ae_accel::server::RouterConfig;
+/// let cfg = RouterConfig::builder().heartbeat_ms(50).suspect_after(2).dead_after(4).build();
+/// assert_eq!(cfg.dead_after, 4);
+/// ```
+#[derive(Clone, Debug)]
+pub struct RouterConfigBuilder {
+    cfg: RouterConfig,
+}
+
+impl RouterConfigBuilder {
+    /// Health-tick period in ms (must stay ≥ 1).
+    pub fn heartbeat_ms(mut self, ms: u64) -> Self {
+        self.cfg.heartbeat_ms = ms;
+        self
+    }
+
+    /// Consecutive missed probes before Live→Suspect (≥ 1, ≤ dead_after).
+    pub fn suspect_after(mut self, n: u32) -> Self {
+        self.cfg.suspect_after = n;
+        self
+    }
+
+    /// Consecutive missed probes before demotion to Dead.
+    pub fn dead_after(mut self, n: u32) -> Self {
+        self.cfg.dead_after = n;
+        self
+    }
+
+    /// Cap on the exponential redial backoff, ms (must stay ≥ 1).
+    pub fn reconnect_max_backoff_ms(mut self, ms: u64) -> Self {
+        self.cfg.reconnect_max_backoff_ms = ms;
+        self
+    }
+
+    /// Validate and produce the [`RouterConfig`].
+    ///
+    /// Panics on configurations the health loop cannot run: a zero
+    /// heartbeat period or backoff cap, `suspect_after == 0`, or
+    /// `suspect_after > dead_after`.
+    pub fn build(self) -> RouterConfig {
+        assert!(self.cfg.heartbeat_ms >= 1, "RouterConfig: heartbeat_ms must be >= 1");
+        assert!(
+            1 <= self.cfg.suspect_after && self.cfg.suspect_after <= self.cfg.dead_after,
+            "RouterConfig: need 1 <= suspect_after <= dead_after"
+        );
+        assert!(
+            self.cfg.reconnect_max_backoff_ms >= 1,
+            "RouterConfig: reconnect_max_backoff_ms must be >= 1"
+        );
+        self.cfg
+    }
+}
+
+/// A fleet-wide signal snapshot from [`ShardRouter::fleet_sample`]: the
+/// inputs the fleet-tier autoscaler's `decide()` works from, aggregated
+/// over non-retired slots.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetSample {
+    /// Shards currently Live with an open connection.
+    pub live: usize,
+    /// Cumulative fleet-wide shed count folded from heartbeats
+    /// (monotone; the scaler differences consecutive samples).
+    pub shed_total: u64,
+    /// This router's in-flight submissions summed across the fleet.
+    pub inflight: u64,
+    /// Worst per-shard p99 EWMA across live shards, µs (0 until any
+    /// shard has a heartbeat sample).
+    pub p99_us: f64,
+}
+
 /// Mutable per-slot health bookkeeping, guarded by one mutex. Lock
 /// order: a holder of this lock may take the slot's `client` lock, never
 /// the reverse (the submit path takes only `client`; the reader threads
@@ -222,6 +307,10 @@ struct ShardSlot {
     /// Published [`ShardState`]; transitions happen under `ctl`, reads
     /// are lock-free.
     state: AtomicU8,
+    /// Intentionally retired (the fleet autoscaler drained this shard and
+    /// will reap its process): once Dead, the health tick must NOT redial
+    /// it — the address is gone for good, not recovering.
+    retired: AtomicBool,
     /// f64 bits; NaN = no heartbeat sample yet on this connection.
     inflight_ewma: AtomicU64,
     p99_ewma: AtomicU64,
@@ -235,6 +324,7 @@ impl ShardSlot {
         ShardSlot {
             addr,
             state: AtomicU8::new(ShardState::Live as u8),
+            retired: AtomicBool::new(false),
             inflight_ewma: AtomicU64::new(f64::NAN.to_bits()),
             p99_ewma: AtomicU64::new(f64::NAN.to_bits()),
             client: RwLock::new(Some(client)),
@@ -301,6 +391,11 @@ struct RouterShared {
     slots: RwLock<Vec<Arc<ShardSlot>>>,
     metrics: Arc<ServerMetrics>,
     cfg: RouterConfig,
+    /// Cumulative fleet-wide shed count, folded from every fresh
+    /// heartbeat's `shed_delta` by the health tick — the pressure signal
+    /// the fleet-tier autoscaler samples (it differences consecutive
+    /// reads itself, like the per-lane tracks do).
+    fleet_shed: AtomicU64,
     stop: Mutex<bool>,
     tick: Condvar,
 }
@@ -347,7 +442,7 @@ fn draw_pair(seed: u64, n: usize) -> (usize, usize) {
 }
 
 /// Client-side registry/router over N shard slots, implementing
-/// [`SubmitSurface`] so every driver that runs against a local
+/// [`ServingSurface`] so every driver that runs against a local
 /// [`super::ModelRegistry`] runs unchanged against a remote fleet.
 pub struct ShardRouter {
     shared: Arc<RouterShared>,
@@ -429,6 +524,7 @@ impl ShardRouter {
             slots: RwLock::new(slots),
             metrics: Arc::new(ServerMetrics::new()),
             cfg,
+            fleet_shed: AtomicU64::new(0),
             stop: Mutex::new(false),
             tick: Condvar::new(),
         });
@@ -453,16 +549,82 @@ impl ShardRouter {
     /// Returns the new slot's index. Only valid with the empty static
     /// map (every shard serves every model); a pinned map names slot
     /// indices, which a post-hoc join can't extend coherently.
+    ///
+    /// Idempotent: an address that already holds a Live, Suspect, or
+    /// Reconnecting slot returns that slot's index without dialing — a
+    /// duplicate slot would double-route and double-count heartbeats
+    /// against one process. (A Dead or Draining slot does *not* absorb
+    /// the re-add: its redial owns that address's recovery.)
     pub fn add_shard(&self, addr: &str) -> Result<usize, WireError> {
         assert!(
             self.map.is_empty(),
             "add_shard requires the every-shard-serves-every-model map"
         );
+        let existing = |slots: &[Arc<ShardSlot>]| {
+            slots.iter().position(|s| {
+                s.addr == addr
+                    && matches!(
+                        s.state(),
+                        ShardState::Live | ShardState::Suspect | ShardState::Reconnecting
+                    )
+            })
+        };
+        if let Some(i) = existing(&self.shared.slots.read().unwrap()) {
+            return Ok(i);
+        }
         let client = Arc::new(ShardClient::connect(addr)?);
-        let slot = Arc::new(ShardSlot::new(addr.to_string(), client));
         let mut slots = self.shared.slots.write().unwrap();
-        slots.push(slot);
+        // Re-check under the write lock: a concurrent add_shard may have
+        // admitted the address between our read scan and the dial.
+        if let Some(i) = existing(&slots) {
+            client.shutdown();
+            return Ok(i);
+        }
+        slots.push(Arc::new(ShardSlot::new(addr.to_string(), client)));
         Ok(slots.len() - 1)
+    }
+
+    /// Drain and permanently retire the slot at `index` (the fleet
+    /// autoscaler's scale-down hook): sends the drain request over the
+    /// wire — the shard broadcasts `Leave`, the health tick demotes the
+    /// slot to Draining, and once its in-flight count reaches zero the
+    /// connection closes and the slot lands Dead — and marks the slot
+    /// retired so the health tick never redials the intentionally-gone
+    /// address. In-flight tickets complete normally; zero are lost.
+    pub fn retire_shard(&self, index: usize) -> Result<(), SubmitError> {
+        let slots = self.shared.slots.read().unwrap();
+        let slot = slots.get(index).ok_or(SubmitError::Closed)?;
+        slot.retired.store(true, Ordering::Release);
+        let client = slot.client().ok_or(SubmitError::Closed)?;
+        client.request_leave("retired by fleet autoscaler")
+    }
+
+    /// Whether the slot at `index` was retired by [`Self::retire_shard`]
+    /// (the health tick stops redialing it once Dead).
+    pub fn shard_retired(&self, index: usize) -> bool {
+        self.shared.slots.read().unwrap()[index].retired.load(Ordering::Acquire)
+    }
+
+    /// One fleet-wide signal sample for the fleet-tier autoscaler:
+    /// aggregates over non-retired slots only, so a draining shard's
+    /// tail never argues for more capacity.
+    pub fn fleet_sample(&self) -> FleetSample {
+        let slots = self.shared.slots.read().unwrap();
+        let mut s = FleetSample::default();
+        for slot in slots.iter() {
+            if slot.retired.load(Ordering::Acquire) {
+                continue;
+            }
+            if slot.state() == ShardState::Live && slot.client_alive() {
+                s.live += 1;
+            }
+            s.inflight += slot.local_inflight() as u64;
+            if let Some((_, p99)) = slot.ewmas() {
+                s.p99_us = s.p99_us.max(p99);
+            }
+        }
+        s.shed_total = self.shared.fleet_shed.load(Ordering::Relaxed);
+        s
     }
 
     /// Shard slots this router manages (dead ones included).
@@ -757,7 +919,7 @@ impl Drop for ShardRouter {
     }
 }
 
-impl SubmitSurface for ShardRouter {
+impl ServingSurface for ShardRouter {
     /// Route a submission: static map → routable filter (dead, draining,
     /// and — while any Live candidate exists — suspect shards are
     /// skipped, counted as failovers) → power-of-two pick → submit,
@@ -862,9 +1024,7 @@ impl SubmitSurface for ShardRouter {
         }
         Err(SubmitError::Closed)
     }
-}
 
-impl super::StreamSurface for ShardRouter {
     fn open_stream(&self, model: &str, stream: u64, window: usize) -> Result<(), SubmitError> {
         ShardRouter::open_stream(self, model, stream, window)
     }
@@ -880,6 +1040,10 @@ impl super::StreamSurface for ShardRouter {
 
     fn close_stream(&self, model: &str, stream: u64) {
         ShardRouter::close_stream(self, model, stream)
+    }
+
+    fn fleet_report(&self) -> String {
+        ShardRouter::fleet_report(self)
     }
 }
 
@@ -935,6 +1099,12 @@ fn health_tick(shared: &Arc<RouterShared>, redials: &mut Vec<JoinHandle<()>>) {
         match slot.state() {
             ShardState::Dead => {
                 down += 1;
+                // A retired slot's process was drained and reaped on
+                // purpose — redialing the gone address forever would be
+                // pure churn.
+                if slot.retired.load(Ordering::Acquire) {
+                    continue;
+                }
                 let due = {
                     let ctl = slot.ctl.lock().unwrap();
                     match ctl.next_attempt {
@@ -977,6 +1147,7 @@ fn health_tick(shared: &Arc<RouterShared>, redials: &mut Vec<JoinHandle<()>>) {
                     ctl.seen_seq = hb.seq;
                     ctl.missed = 0;
                     shared.metrics.on_heartbeat();
+                    shared.fleet_shed.fetch_add(hb.shed_delta, Ordering::Relaxed);
                     slot.fold_ewmas(hb.inflight as f64, hb.p99_us);
                     if slot.state() == ShardState::Suspect {
                         // Slow-but-alive shard answered again: re-promote.
@@ -1188,6 +1359,44 @@ mod tests {
         assert_eq!(router.live_shards(), 0);
         assert_eq!(router.shard_state(0), ShardState::Dead);
         srv.shutdown();
+    }
+
+    #[test]
+    fn add_shard_is_idempotent_for_routable_addresses() {
+        let reg = Arc::new(crate::server::ModelRegistry::new());
+        let srv_a = crate::net::ShardServer::bind("127.0.0.1:0", reg.clone()).unwrap();
+        let srv_b = crate::net::ShardServer::bind("127.0.0.1:0", reg).unwrap();
+        let addr_a = srv_a.local_addr().to_string();
+        let addr_b = srv_b.local_addr().to_string();
+        let router = ShardRouter::connect(&[addr_a.clone()]).unwrap();
+        assert_eq!(router.add_shard(&addr_b).unwrap(), 1);
+        assert_eq!(router.len(), 2);
+        // Re-admitting either address must return the existing slot, not
+        // append a duplicate that would double-route to one process.
+        assert_eq!(router.add_shard(&addr_a).unwrap(), 0);
+        assert_eq!(router.add_shard(&addr_b).unwrap(), 1);
+        assert_eq!(router.len(), 2);
+        router.shutdown();
+        srv_a.shutdown();
+        srv_b.shutdown();
+    }
+
+    #[test]
+    fn router_config_builder_validates() {
+        let cfg = RouterConfig::builder()
+            .heartbeat_ms(25)
+            .suspect_after(2)
+            .dead_after(4)
+            .reconnect_max_backoff_ms(500)
+            .build();
+        assert_eq!(cfg.heartbeat_ms, 25);
+        assert_eq!(cfg.suspect_after, 2);
+        assert_eq!(cfg.dead_after, 4);
+        assert_eq!(cfg.reconnect_max_backoff_ms, 500);
+        let bad = std::panic::catch_unwind(|| {
+            RouterConfig::builder().suspect_after(5).dead_after(2).build()
+        });
+        assert!(bad.is_err(), "suspect_after > dead_after must fail build()");
     }
 
     #[test]

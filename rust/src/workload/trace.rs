@@ -1,10 +1,10 @@
 //! Request traces for the serving experiments: Poisson (open-loop) and
 //! closed-loop arrival processes over telemetry windows, the multi-model
 //! merge used by the fleet driver, and the replay drivers that push those
-//! traces through any [`SubmitSurface`] — blocking or through the async
+//! traces through any [`ServingSurface`] — blocking or through the async
 //! ticket front ([`replay_async`], [`closed_loop_async`]).
 //!
-//! Every driver is generic over [`SubmitSurface`], so the same
+//! Every driver is generic over [`ServingSurface`], so the same
 //! closed-loop client that exercises an in-process
 //! [`crate::server::ModelRegistry`] drives a cross-process
 //! [`crate::server::ShardRouter`] unchanged — the `fleet connect` CLI
@@ -16,7 +16,7 @@ use std::time::{Duration, Instant};
 
 use super::{TelemetryGen, Window};
 use crate::model::Topology;
-use crate::server::{CompletionSet, StreamSurface, SubmitError, SubmitSurface, Ticket};
+use crate::server::{CompletionSet, ServingSurface, SubmitError, Ticket};
 use crate::util::rng::Xoshiro256;
 
 /// One timed request.
@@ -199,6 +199,50 @@ pub fn zipf_poisson(
         .collect()
 }
 
+/// A two-phase surge trace for fleet-autoscaling experiments: one global
+/// Poisson arrival stream whose rate starts at `surge_rate` for the
+/// first `n_surge` requests (the burst that sheds on an undersized
+/// fleet — fleet-wide shed deltas argue Up) and then drops to
+/// `quiet_rate` for the remaining `n_quiet` (the cool-down during which
+/// an oversized fleet sits idle — quiet ticks argue Down). Arrivals are
+/// routed uniformly across `models`; windows are benign, drawn per model
+/// at its feature width from `base_seed + i` generators (the
+/// [`merged_poisson`] convention), so replaying the same trace against
+/// fleets of different sizes offers byte-identical windows — the
+/// bit-identity comparisons in `tests/integration_fleetscale.rs` depend
+/// on that.
+///
+/// Deterministic for a given `base_seed`; ids are sequential across both
+/// phases.
+pub fn surge_poisson(
+    models: &[Topology],
+    base_seed: u64,
+    surge_rate: f64,
+    quiet_rate: f64,
+    n_surge: usize,
+    n_quiet: usize,
+    t: usize,
+) -> Vec<(usize, TimedRequest)> {
+    assert!(!models.is_empty(), "surge_poisson needs at least one model");
+    assert!(surge_rate > 0.0 && quiet_rate > 0.0);
+    let mut rng = Xoshiro256::seeded(base_seed.wrapping_add(4000));
+    let mut gens: Vec<TelemetryGen> = models
+        .iter()
+        .enumerate()
+        .map(|(i, m)| TelemetryGen::new(m.features, base_seed + i as u64))
+        .collect();
+    let mut at = 0.0f64;
+    (0..n_surge + n_quiet)
+        .map(|i| {
+            let rate = if i < n_surge { surge_rate } else { quiet_rate };
+            at += rng.exponential(rate);
+            let mi = rng.below(models.len() as u64) as usize;
+            let window = gens[mi].benign_window(t);
+            (mi, TimedRequest { at_s: at, window, id: i as u64 })
+        })
+        .collect()
+}
+
 /// One event in a multi-stream session trace ([`multi_stream_trace`]).
 #[derive(Clone, Debug)]
 pub enum StreamEvent {
@@ -343,7 +387,7 @@ fn reap_replay(stats: &mut AsyncReplayStats, outcome: crate::server::Completion)
 /// thread per in-flight request to keep submitting on time; through
 /// tickets the submitter alone sustains the entire backlog
 /// (`max_outstanding` reports how deep it got).
-pub fn replay_async<S: SubmitSurface>(
+pub fn replay_async<S: ServingSurface>(
     surface: &S,
     models: &[String],
     trace: Vec<(usize, TimedRequest)>,
@@ -425,7 +469,7 @@ fn client_gens(models: &[String], client: usize, base_seed: u64) -> Vec<Telemetr
 /// exactly `total` requests split evenly across threads (remainder to
 /// the first ones). The baseline the async driver is compared against
 /// at equal client-thread count.
-pub fn closed_loop_blocking<S: SubmitSurface>(
+pub fn closed_loop_blocking<S: ServingSurface>(
     surface: &S,
     models: &[String],
     clients: usize,
@@ -489,7 +533,7 @@ pub fn closed_loop_blocking<S: SubmitSurface>(
 /// `outstanding_per_client ×` the outstanding work — the fleet-scale
 /// property `fleet --async` demonstrates and `benches/hotpath.rs`
 /// tracks.
-pub fn closed_loop_async<S: SubmitSurface>(
+pub fn closed_loop_async<S: ServingSurface>(
     surface: &S,
     models: &[String],
     clients: usize,
@@ -611,7 +655,7 @@ impl FleetReplayStats {
     }
 }
 
-/// Replay a merged trace open-loop through any [`SubmitSurface`] with
+/// Replay a merged trace open-loop through any [`ServingSurface`] with
 /// full conservation accounting — the driver behind `fleet connect` and
 /// the CI loopback soak.
 ///
@@ -631,7 +675,7 @@ impl FleetReplayStats {
 /// terminal, and one fully failed schedule latches fast-fail, so the
 /// retry path can never spin — not even against a fleet that is down
 /// for good.
-pub fn replay_fleet<S: SubmitSurface>(
+pub fn replay_fleet<S: ServingSurface>(
     surface: &S,
     models: &[String],
     trace: Vec<(usize, TimedRequest)>,
@@ -700,7 +744,7 @@ struct InflightEntry {
 
 /// [`replay_fleet`]'s working state: the completion set, the in-flight
 /// entries, and the running accounting.
-struct FleetDriver<'a, S: SubmitSurface> {
+struct FleetDriver<'a, S: ServingSurface> {
     surface: &'a S,
     models: &'a [String],
     retry_closed: bool,
@@ -714,7 +758,7 @@ struct FleetDriver<'a, S: SubmitSurface> {
     next_key: u64,
 }
 
-impl<S: SubmitSurface> FleetDriver<'_, S> {
+impl<S: ServingSurface> FleetDriver<'_, S> {
     /// Submit with churn grace: `Err(Closed)` at submit time means the
     /// whole fleet is unroutable *right now* — which, mid kill→restart,
     /// is a transient the router's redial loop fixes within the
@@ -834,7 +878,7 @@ struct StreamEntry {
 
 /// [`replay_streams`]'s working state — the session-aware sibling of
 /// [`FleetDriver`], with the same grace schedule and retry budget.
-struct StreamDriver<'a, S: StreamSurface> {
+struct StreamDriver<'a, S: ServingSurface> {
     surface: &'a S,
     models: &'a [String],
     retry_closed: bool,
@@ -847,7 +891,7 @@ struct StreamDriver<'a, S: StreamSurface> {
     next_key: u64,
 }
 
-impl<S: StreamSurface> StreamDriver<'_, S> {
+impl<S: ServingSurface> StreamDriver<'_, S> {
     /// One submit with driver-side session-loss recovery folded in:
     /// `UnknownStream` re-opens the session at the lane default and
     /// retries once, counted as a reset (the stream's history restarts
@@ -969,7 +1013,7 @@ impl<S: StreamSurface> StreamDriver<'_, S> {
 }
 
 /// Replay a multi-stream session trace ([`multi_stream_trace`])
-/// open-loop through any [`StreamSurface`] — the driver behind
+/// open-loop through any [`ServingSurface`] — the driver behind
 /// `fleet serve --streams` / `fleet connect --streams` and the streaming
 /// half of the CI loopback soak.
 ///
@@ -982,7 +1026,7 @@ impl<S: StreamSurface> StreamDriver<'_, S> {
 /// re-opening the session (counted in
 /// [`StreamReplayStats::resets`]): after a kill −9 restart every stream
 /// keeps scoring, from freshly zeroed state.
-pub fn replay_streams<S: StreamSurface>(
+pub fn replay_streams<S: ServingSurface>(
     surface: &S,
     models: &[String],
     trace: Vec<TimedStreamEvent>,
@@ -1150,6 +1194,44 @@ mod tests {
             "head rank must dominate its lane: top {top} of {n} over {} models",
             models.len()
         );
+    }
+
+    #[test]
+    fn surge_trace_bursts_then_cools_and_repeats_windows_across_replays() {
+        let models = Topology::paper_models();
+        let (n_surge, n_quiet) = (400usize, 100usize);
+        let trace = surge_poisson(&models, 13, 4000.0, 50.0, n_surge, n_quiet, 4);
+        assert_eq!(trace.len(), n_surge + n_quiet);
+        for w in trace.windows(2) {
+            assert!(w[1].1.at_s >= w[0].1.at_s, "arrivals must be sorted");
+        }
+        // The surge phase must be far denser than the cool-down: compare
+        // mean inter-arrival spans (4000 rps vs 50 rps — a 80× gap even
+        // under Poisson noise).
+        let surge_span = trace[n_surge - 1].1.at_s - trace[0].1.at_s;
+        let quiet_span = trace.last().unwrap().1.at_s - trace[n_surge].1.at_s;
+        let surge_rate = (n_surge - 1) as f64 / surge_span;
+        let quiet_rate = (n_quiet - 1) as f64 / quiet_span;
+        assert!(
+            surge_rate > 10.0 * quiet_rate,
+            "surge {surge_rate:.0} rps vs quiet {quiet_rate:.0} rps"
+        );
+        // Windows carry each model's feature width.
+        for (mi, req) in &trace {
+            assert_eq!(req.window.data[0].len(), models[*mi].features);
+        }
+        // Re-generating the trace offers byte-identical windows — what
+        // lets equal-offered-load fleet comparisons pin bit-identity.
+        let again = surge_poisson(&models, 13, 4000.0, 50.0, n_surge, n_quiet, 4);
+        for ((mi_a, a), (mi_b, b)) in trace.iter().zip(&again) {
+            assert_eq!(mi_a, mi_b);
+            assert_eq!(a.at_s.to_bits(), b.at_s.to_bits());
+            for (ra, rb) in a.window.data.iter().zip(&b.window.data) {
+                for (va, vb) in ra.iter().zip(rb) {
+                    assert_eq!(va.to_bits(), vb.to_bits());
+                }
+            }
+        }
     }
 
     #[test]

@@ -45,16 +45,16 @@ fn build_registry(topos: &[Topology], autoscale: Option<AutoscalePolicy>) -> Mod
             LstmAutoencoder::random(topo.clone(), 900 + i as u64),
             Duration::from_millis(1),
         ));
-        let cfg = ServerConfig {
-            max_batch: 1,
-            max_wait: Duration::from_micros(50),
-            workers: 2,
-            queue_capacity: 16,
-            threshold: 1.0,
-            autoscale: autoscale.clone(),
-            ..Default::default()
-        };
-        registry.register(&topo.name, backend, cfg);
+        let mut cfg = ServerConfig::builder()
+            .max_batch(1)
+            .max_wait(Duration::from_micros(50))
+            .workers(2)
+            .queue_capacity(16)
+            .threshold(1.0);
+        if let Some(p) = autoscale.clone() {
+            cfg = cfg.autoscale(p);
+        }
+        registry.register(&topo.name, backend, cfg.build());
     }
     registry
 }

@@ -159,15 +159,14 @@ fn coalesced_followers_score_bit_identical_across_topologies() {
             gate: Mutex::new(gate_rx),
         });
         let mut registry = ModelRegistry::new();
-        let cfg = ServerConfig {
-            max_batch: 1,
-            max_wait: Duration::from_micros(1),
-            workers: 1,
-            queue_capacity: 64,
-            threshold: 0.05,
-            cache: Some(CacheConfig::default()),
-            ..Default::default()
-        };
+        let cfg = ServerConfig::builder()
+            .max_batch(1)
+            .max_wait(Duration::from_micros(1))
+            .workers(1)
+            .queue_capacity(64)
+            .threshold(0.05)
+            .cache(CacheConfig::default())
+            .build();
         registry.register(&topo.name, backend, cfg);
         let lane = registry.lane(&topo.name).unwrap();
         let reference = LstmAutoencoder::random(topo.clone(), seed);
@@ -223,15 +222,14 @@ fn barrier_coalescing_takes_one_batch_slot_for_n_concurrent_submits() {
         gate: Mutex::new(gate_rx),
     });
     let mut registry = ModelRegistry::new();
-    let cfg = ServerConfig {
-        max_batch: 1,
-        max_wait: Duration::from_micros(1),
-        workers: 1,
-        queue_capacity: 64,
-        threshold: 0.05,
-        cache: Some(CacheConfig::default()),
-        ..Default::default()
-    };
+    let cfg = ServerConfig::builder()
+        .max_batch(1)
+        .max_wait(Duration::from_micros(1))
+        .workers(1)
+        .queue_capacity(64)
+        .threshold(0.05)
+        .cache(CacheConfig::default())
+        .build();
     registry.register(&topo.name, backend, cfg);
     let lane = registry.lane(&topo.name).unwrap();
     let reference = LstmAutoencoder::random(topo.clone(), seed);
@@ -282,15 +280,14 @@ fn admission_accounting_conserves_with_cache_counters() {
     let (gate_tx, gate_rx) = channel::<()>();
     let backend = Arc::new(GatedZero { gate: Mutex::new(gate_rx) });
     let mut registry = ModelRegistry::new();
-    let cfg = ServerConfig {
-        max_batch: 1,
-        max_wait: Duration::from_micros(1),
-        workers: 1,
-        queue_capacity: 2,
-        threshold: 1.0,
-        cache: Some(CacheConfig::default()),
-        ..Default::default()
-    };
+    let cfg = ServerConfig::builder()
+        .max_batch(1)
+        .max_wait(Duration::from_micros(1))
+        .workers(1)
+        .queue_capacity(2)
+        .threshold(1.0)
+        .cache(CacheConfig::default())
+        .build();
     registry.register("gated", backend, cfg);
     let lane = registry.lane("gated").unwrap();
     let hot = Window { data: vec![vec![7.0f32]], anomaly: None };
@@ -369,15 +366,14 @@ fn followers_on_a_panicked_leader_resolve_closed_not_hang() {
     // `Err(Closed)`, the blocking follower's channel disconnects, and no
     // router slot or flight entry leaks.
     let mut registry = ModelRegistry::new();
-    let cfg = ServerConfig {
-        max_batch: 1,
-        max_wait: Duration::from_micros(1),
-        workers: 1,
-        queue_capacity: 64,
-        threshold: 1.0,
-        cache: Some(CacheConfig::default()),
-        ..Default::default()
-    };
+    let cfg = ServerConfig::builder()
+        .max_batch(1)
+        .max_wait(Duration::from_micros(1))
+        .workers(1)
+        .queue_capacity(64)
+        .threshold(1.0)
+        .cache(CacheConfig::default())
+        .build();
     registry.register("panicky", Arc::new(PanickingBackend), cfg);
     let lane = registry.lane("panicky").unwrap();
     let poison = Window { data: vec![vec![666.0f32]], anomaly: None };
@@ -403,15 +399,14 @@ fn followers_on_a_cancelled_leader_resolve_cancelled() {
     let (gate_tx, gate_rx) = channel::<()>();
     let backend = Arc::new(GatedZero { gate: Mutex::new(gate_rx) });
     let mut registry = ModelRegistry::new();
-    let cfg = ServerConfig {
-        max_batch: 1,
-        max_wait: Duration::from_micros(1),
-        workers: 1,
-        queue_capacity: 64,
-        threshold: 1.0,
-        cache: Some(CacheConfig::default()),
-        ..Default::default()
-    };
+    let cfg = ServerConfig::builder()
+        .max_batch(1)
+        .max_wait(Duration::from_micros(1))
+        .workers(1)
+        .queue_capacity(64)
+        .threshold(1.0)
+        .cache(CacheConfig::default())
+        .build();
     registry.register("gated", backend, cfg);
     let lane = registry.lane("gated").unwrap();
     let plug = Window { data: vec![vec![1.0f32]], anomaly: None };

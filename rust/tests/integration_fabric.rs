@@ -91,14 +91,13 @@ fn deep_lane_workers_use_multiple_pipeline_replicas() {
     ));
     let reference = LstmAutoencoder::random(topo.clone(), seed);
     let mut registry = ModelRegistry::new();
-    let cfg = ServerConfig {
-        max_batch: 1,
-        max_wait: Duration::from_micros(50),
-        workers: 3,
-        queue_capacity: 4096,
-        threshold: 0.05,
-        ..Default::default()
-    };
+    let cfg = ServerConfig::builder()
+        .max_batch(1)
+        .max_wait(Duration::from_micros(50))
+        .workers(3)
+        .queue_capacity(4096)
+        .threshold(0.05)
+        .build();
     registry.register(&topo.name, backend.clone() as Arc<dyn Backend>, cfg);
     let mut gen = TelemetryGen::new(topo.features, 9);
     let mut inflight = Vec::new();
@@ -141,14 +140,13 @@ fn poisson_overload_sheds_then_recovers() {
     // the open-loop Poisson trace arrives at ~50k rps — two orders of
     // magnitude over capacity — so the bounded queue must shed.
     let mut registry = ModelRegistry::new();
-    let cfg = ServerConfig {
-        max_batch: 1,
-        max_wait: Duration::from_micros(1),
-        workers: 1,
-        queue_capacity: 4,
-        threshold: 1.0,
-        ..Default::default()
-    };
+    let cfg = ServerConfig::builder()
+        .max_batch(1)
+        .max_wait(Duration::from_micros(1))
+        .workers(1)
+        .queue_capacity(4)
+        .threshold(1.0)
+        .build();
     registry.register(
         "slow-model",
         Arc::new(SlowBackend { floor: Duration::from_millis(2) }),

@@ -1,0 +1,279 @@
+//! Integration: the fleet process autoscaler — real child processes of
+//! this crate's own binary (`fleet serve --ephemeral`) spawned under a
+//! surge, drained and reaped on the cool-down.
+//!
+//! The headline test runs the same surge-then-quiet trace twice against
+//! the same deliberately undersized static shard: once bare (the
+//! min-shard baseline) and once with the [`FleetScaler`] allowed to grow
+//! the fleet. It pins the whole contract at once: the fleet grows under
+//! pressure, sheds strictly less than the static baseline at equal
+//! offered load, retires back to the floor with zero lost tickets and
+//! conserved accounting, and every score completed mid-churn is
+//! bit-identical to the `ExecMode::Sequential` reference.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lstm_ae_accel::model::{LstmAutoencoder, Topology};
+use lstm_ae_accel::server::{
+    Backend, FleetScalePolicy, FleetScaler, ModelRegistry, RouterConfig, ServerConfig,
+    ServingSurface, ShardRouter, ShardSpawner,
+};
+use lstm_ae_accel::net::ShardServer;
+use lstm_ae_accel::workload::trace::{replay_fleet, surge_poisson};
+use lstm_ae_accel::workload::{TelemetryGen, Window};
+
+/// The crate's own binary — what the fleet CLI hands the spawner too.
+const BIN: &str = env!("CARGO_BIN_EXE_lstm-ae-accel");
+
+/// A correct-but-slow scorer: real `score_quant` arithmetic (so remote
+/// scores stay bit-comparable to the sequential reference) behind a
+/// fixed per-batch floor. The floor caps the static shard's throughput
+/// far below the surge rate, which is what makes the baseline shed.
+struct SlowQuant {
+    model: LstmAutoencoder,
+    floor: Duration,
+}
+
+impl Backend for SlowQuant {
+    fn name(&self) -> String {
+        "slow-quant".to_string()
+    }
+
+    fn score_batch(&self, windows: &[&Window]) -> Vec<f64> {
+        std::thread::sleep(self.floor);
+        windows.iter().map(|w| self.model.score_quant(&w.data)).collect()
+    }
+}
+
+/// The undersized floor shard both runs share: every paper model behind
+/// a 2 ms-per-window lane with a tiny queue, served in-process.
+fn spawn_slow_floor_shard(seed: u64) -> (ShardServer, String) {
+    let mut registry = ModelRegistry::new();
+    for (i, topo) in Topology::paper_models().into_iter().enumerate() {
+        let backend = SlowQuant {
+            model: LstmAutoencoder::random(topo.clone(), seed + i as u64),
+            floor: Duration::from_millis(2),
+        };
+        registry.register(
+            &topo.name,
+            Arc::new(backend),
+            ServerConfig::builder()
+                .max_batch(1)
+                .max_wait(Duration::from_micros(50))
+                .workers(1)
+                .queue_capacity(8)
+                .threshold(1.0)
+                .build(),
+        );
+    }
+    let server = ShardServer::bind("127.0.0.1:0", Arc::new(registry)).expect("bind loopback");
+    let addr = server.local_addr().to_string();
+    (server, addr)
+}
+
+fn router_config() -> RouterConfig {
+    RouterConfig::builder().heartbeat_ms(25).suspect_after(3).dead_after(6).build()
+}
+
+/// The surge-then-quiet schedule: ~2.5 s far above the floor shard's
+/// capacity, then a ~3 s quiet tail the scaler can drain into. Both runs
+/// regenerate it from the same seed, so offered load is byte-identical.
+fn surge_trace(seed: u64) -> Vec<(usize, lstm_ae_accel::workload::trace::TimedRequest)> {
+    let topos = Topology::paper_models();
+    surge_poisson(&topos, seed, 4000.0, 150.0, 10_000, 450, 8)
+}
+
+/// Spawner for ephemeral children of this very binary, seeded like the
+/// floor shard so model weights — and therefore scores — line up.
+fn child_spawner(seed: u64) -> ShardSpawner {
+    ShardSpawner::new(
+        BIN,
+        vec!["fleet".into(), "serve".into(), "--seed".into(), seed.to_string()],
+    )
+    .ready_timeout(Duration::from_secs(60))
+}
+
+#[test]
+fn surge_grows_the_fleet_sheds_less_than_static_and_retires_to_floor_losslessly() {
+    let seed = 300;
+    let topos = Topology::paper_models();
+    let models: Vec<String> = topos.iter().map(|t| t.name.clone()).collect();
+
+    // Run 1 — static min-shard baseline: the slow floor shard alone.
+    let (static_srv, static_addr) = spawn_slow_floor_shard(seed);
+    let static_router =
+        ShardRouter::connect_with(&[static_addr], router_config()).expect("connect static");
+    let static_stats = replay_fleet(&static_router, &models, surge_trace(seed), true);
+    static_router.shutdown();
+    static_srv.shutdown();
+    assert!(static_stats.conserves(), "static baseline must conserve accounting");
+    assert!(
+        static_stats.shed > 0,
+        "the surge must overwhelm the floor shard, or the comparison is vacuous"
+    );
+
+    // Run 2 — same floor shard and the same trace, autoscaled.
+    let (auto_srv, auto_addr) = spawn_slow_floor_shard(seed);
+    let router =
+        Arc::new(ShardRouter::connect_with(&[auto_addr], router_config()).expect("connect"));
+    let policy = FleetScalePolicy {
+        min_shards: 1,
+        max_shards: 3,
+        up_inflight_per_shard: 8.0,
+        up_ticks: 2,
+        down_inflight_per_shard: 2.0,
+        down_ticks: 4,
+    };
+    let scaler = FleetScaler::start(
+        router.clone(),
+        child_spawner(seed),
+        policy,
+        Duration::from_millis(25),
+    );
+
+    // Concurrent churn verifier: while the replay runs (shards joining
+    // and leaving underneath), keep submitting windows with known
+    // sequential references and insist every completed score is
+    // bit-identical. Shed/closed outcomes are legitimate mid-churn; a
+    // wrong bit never is.
+    let done = AtomicBool::new(false);
+    let peak_live = AtomicUsize::new(0);
+    let verified = AtomicUsize::new(0);
+    let stats = std::thread::scope(|sc| {
+        let verifier = {
+            let router = &*router;
+            let (done, peak_live, verified) = (&done, &peak_live, &verified);
+            let topos = &topos;
+            sc.spawn(move || {
+                let refs: Vec<LstmAutoencoder> = topos
+                    .iter()
+                    .enumerate()
+                    .map(|(i, t)| LstmAutoencoder::random(t.clone(), seed + i as u64))
+                    .collect();
+                let mut gens: Vec<TelemetryGen> = topos
+                    .iter()
+                    .enumerate()
+                    .map(|(i, t)| TelemetryGen::new(t.features, 900 + i as u64))
+                    .collect();
+                while !done.load(Ordering::Acquire) {
+                    peak_live.fetch_max(router.live_shards(), Ordering::Relaxed);
+                    for (i, topo) in topos.iter().enumerate() {
+                        let w = gens[i].benign_window(6);
+                        let want = refs[i].score_quant(&w.data);
+                        let Ok(ticket) = router.submit_async(&topo.name, w) else {
+                            continue;
+                        };
+                        if let Ok(r) = ticket.wait() {
+                            assert_eq!(
+                                r.score.to_bits(),
+                                want.to_bits(),
+                                "{}: score completed mid-churn must be bit-identical",
+                                topo.name
+                            );
+                            verified.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            })
+        };
+        let stats = replay_fleet(&*router, &models, surge_trace(seed), true);
+        done.store(true, Ordering::Release);
+        verifier.join().expect("verifier thread panicked");
+        stats
+    });
+
+    // Growth under pressure: the scaler spawned, and the fleet was
+    // observed above the floor while traffic flowed.
+    let m = router.metrics();
+    assert!(m.shard_spawns() >= 1, "the surge must force at least one spawn");
+    assert!(
+        peak_live.load(Ordering::Relaxed) >= 2,
+        "the fleet must have been observed above the one-shard floor"
+    );
+    assert!(
+        verified.load(Ordering::Relaxed) > 0,
+        "the churn verifier must have completed at least one scored window"
+    );
+
+    // Strictly fewer sheds than the static baseline at equal offered
+    // load — the autoscaler paid for itself.
+    assert!(
+        stats.shed < static_stats.shed,
+        "autoscaled fleet must shed strictly less: {} vs static {}",
+        stats.shed,
+        static_stats.shed
+    );
+
+    // Zero lost tickets and conserved accounting through the churn.
+    assert!(stats.conserves(), "autoscaled run must conserve accounting");
+    assert_eq!(stats.rejected_closed, 0, "no ticket may be lost to the churn");
+    assert_eq!(stats.offered, static_stats.offered, "equal offered load by construction");
+    assert!(stats.completed > 0);
+
+    // Cool-down: the quiet tail drains the fleet back to the floor and
+    // the children are reaped.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while (router.live_shards() > 1 || m.shard_retires() < m.shard_spawns())
+        && Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    scaler.stop();
+    assert_eq!(router.live_shards(), 1, "fleet must retire back to the one-shard floor");
+    assert!(m.shard_retires() >= 1, "every drained child counts a retire");
+    assert_eq!(
+        m.shard_retires(),
+        m.shard_spawns(),
+        "every spawned child must eventually be retired"
+    );
+    router.shutdown();
+    auto_srv.shutdown();
+}
+
+#[test]
+fn ephemeral_child_serves_bit_identical_scores_then_exits_on_drain_request() {
+    // The spawn→serve→drain→exit lifecycle of one child, no scaler: the
+    // spawner's readiness handshake, `add_shard` admission at connect,
+    // and the `--ephemeral` self-exit once `retire_shard`'s Leave lands.
+    let seed = 7;
+    let mut spawned = child_spawner(seed).spawn_shard().expect("child becomes ready");
+    let router = ShardRouter::connect_with(&[spawned.addr().to_string()], router_config())
+        .expect("connect to child");
+    for (i, topo) in Topology::paper_models().into_iter().enumerate() {
+        let reference = LstmAutoencoder::random(topo.clone(), seed + i as u64);
+        let mut gen = TelemetryGen::new(topo.features, 950 + i as u64);
+        let w = gen.benign_window(6);
+        let want = reference.score_quant(&w.data);
+        let r = router
+            .submit_async(&topo.name, w)
+            .expect("child is live")
+            .wait()
+            .expect("child scores");
+        assert_eq!(
+            r.score.to_bits(),
+            want.to_bits(),
+            "{}: child-process score must be bit-identical to sequential",
+            topo.name
+        );
+    }
+    router.retire_shard(0).expect("drain request reaches the child");
+    assert!(router.shard_retired(0), "slot must be marked retired");
+    // The drain completes (slot → Dead, connection closed), after which
+    // the ephemeral child exits on its own — no kill involved.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let status = loop {
+        if let Some(status) = spawned.try_wait().expect("child is this process's to reap") {
+            break status;
+        }
+        if Instant::now() >= deadline {
+            spawned.kill();
+            panic!("ephemeral child did not exit within 30s of its drain");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(status.success(), "drained child must exit cleanly, got {status}");
+    router.shutdown();
+}

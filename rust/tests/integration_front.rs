@@ -176,14 +176,13 @@ fn async_shed_and_backpressure_semantics_match_blocking() {
     let (gate_tx, gate_rx) = channel::<()>();
     let backend = Arc::new(GatedBackend { gate: Mutex::new(gate_rx) });
     let mut registry = ModelRegistry::new();
-    let cfg = ServerConfig {
-        max_batch: 1,
-        max_wait: Duration::from_micros(1),
-        workers: 1,
-        queue_capacity: 2,
-        threshold: 1.0,
-        ..Default::default()
-    };
+    let cfg = ServerConfig::builder()
+        .max_batch(1)
+        .max_wait(Duration::from_micros(1))
+        .workers(1)
+        .queue_capacity(2)
+        .threshold(1.0)
+        .build();
     registry.register("gated", backend, cfg);
     let lane = registry.lane("gated").unwrap();
     let attempts = 32u64;
@@ -298,14 +297,13 @@ impl Backend for PanickingBackend {
 #[test]
 fn shutdown_poisons_tickets_orphaned_by_a_worker_panic() {
     let mut registry = ModelRegistry::new();
-    let cfg = ServerConfig {
-        max_batch: 1,
-        max_wait: Duration::from_micros(1),
-        workers: 1,
-        queue_capacity: 64,
-        threshold: 1.0,
-        ..Default::default()
-    };
+    let cfg = ServerConfig::builder()
+        .max_batch(1)
+        .max_wait(Duration::from_micros(1))
+        .workers(1)
+        .queue_capacity(64)
+        .threshold(1.0)
+        .build();
     registry.register("panicky", Arc::new(PanickingBackend), cfg);
     let lane = registry.lane("panicky").unwrap();
     let poison = Window { data: vec![vec![666.0f32]], anomaly: None };
@@ -341,7 +339,7 @@ fn async_driver_sustains_4x_outstanding_at_equal_threads_without_shedding() {
         registry.register(
             &topo.name,
             backend,
-            ServerConfig { queue_capacity: 1024, ..ServerConfig::default() },
+            ServerConfig::builder().queue_capacity(1024).build(),
         );
         let models = vec![topo.name.clone()];
         let blocking = closed_loop_blocking(&registry, &models, clients, 256, 4, 33);

@@ -27,14 +27,13 @@ fn serve_trace(
         .map(|_| backend.score_batch(&[&gen.benign_window(t)])[0])
         .collect();
     let threshold = calibrate_threshold(&benign, 0.99);
-    let cfg = ServerConfig {
-        max_batch: 4,
-        max_wait: std::time::Duration::from_micros(300),
-        workers: 2,
-        queue_capacity: 1024,
-        threshold,
-        ..Default::default()
-    };
+    let cfg = ServerConfig::builder()
+        .max_batch(4)
+        .max_wait(std::time::Duration::from_micros(300))
+        .workers(2)
+        .queue_capacity(1024)
+        .threshold(threshold)
+        .build();
     let srv = AnomalyServer::start(backend, cfg);
     let mut gen = mk_gen(6);
     let trace = poisson_trace(&mut gen, 7, 5000.0, 300, t, 0.25);
@@ -95,14 +94,13 @@ fn pjrt_backend_detects_anomalies_with_trained_model() {
 fn batcher_amortizes_under_burst() {
     let topo = Topology::from_name("F32-D2").unwrap();
     let backend = Arc::new(QuantBackend::new(LstmAutoencoder::random(topo, 2)));
-    let cfg = ServerConfig {
-        max_batch: 8,
-        max_wait: std::time::Duration::from_millis(2),
-        workers: 1,
-        queue_capacity: 1024,
-        threshold: 1.0,
-        ..Default::default()
-    };
+    let cfg = ServerConfig::builder()
+        .max_batch(8)
+        .max_wait(std::time::Duration::from_millis(2))
+        .workers(1)
+        .queue_capacity(1024)
+        .threshold(1.0)
+        .build();
     let srv = AnomalyServer::start(backend, cfg);
     let mut gen = TelemetryGen::new(32, 8);
     // Burst of 64 requests at once → batches should form.

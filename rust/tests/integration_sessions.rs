@@ -45,14 +45,13 @@ fn incremental_scores_match_full_window_reruns_on_all_four_topologies() {
         registry.register(
             &topo.name,
             Arc::new(QuantBackend::new(LstmAutoencoder::random(topo.clone(), seed))),
-            ServerConfig {
-                max_batch: 8,
-                max_wait: Duration::from_micros(500),
-                workers: 2,
-                queue_capacity: 1024,
-                threshold: 1.0,
-                ..Default::default()
-            },
+            ServerConfig::builder()
+                .max_batch(8)
+                .max_wait(Duration::from_micros(500))
+                .workers(2)
+                .queue_capacity(1024)
+                .threshold(1.0)
+                .build(),
         );
         let mut histories: Vec<Vec<Vec<f32>>> = Vec::new();
         for s in 0..STREAMS {
@@ -91,15 +90,14 @@ fn tiny_table_registry(capacity: usize) -> (ModelRegistry, LstmAutoencoder, Stri
     registry.register(
         &topo.name,
         Arc::new(QuantBackend::new(LstmAutoencoder::random(topo.clone(), 77))),
-        ServerConfig {
-            max_batch: 4,
-            max_wait: Duration::from_micros(100),
-            workers: 1,
-            queue_capacity: 64,
-            threshold: 1.0,
-            sessions: SessionConfig { capacity, window: 8 },
-            ..Default::default()
-        },
+        ServerConfig::builder()
+            .max_batch(4)
+            .max_wait(Duration::from_micros(100))
+            .workers(1)
+            .queue_capacity(64)
+            .threshold(1.0)
+            .sessions(SessionConfig { capacity, window: 8 })
+            .build(),
     );
     let name = topo.name;
     (registry, reference, name)

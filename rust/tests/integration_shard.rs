@@ -16,8 +16,8 @@ use lstm_ae_accel::net::{
     wire, Frame, ShardClient, ShardServer, WireError, WIRE_VERSION,
 };
 use lstm_ae_accel::server::{
-    CompletionSet, ModelRegistry, RouterConfig, ServerConfig, ShardRouter, ShardState,
-    SubmitError, SubmitSurface, ThrottledBackend,
+    CompletionSet, ModelRegistry, RouterConfig, ServerConfig, ServingSurface, ShardRouter,
+    ShardState, SubmitError, ThrottledBackend,
 };
 use lstm_ae_accel::workload::{trace, TelemetryGen, Window};
 
@@ -71,14 +71,13 @@ fn remote_shed_resolves_tickets_overloaded_and_lane_recovers() {
     registry.register(
         "tiny",
         Arc::new(ThrottledBackend::zeros(Duration::from_millis(30))),
-        ServerConfig {
-            max_batch: 1,
-            max_wait: Duration::from_micros(50),
-            workers: 1,
-            queue_capacity: 2,
-            threshold: 1.0,
-            ..Default::default()
-        },
+        ServerConfig::builder()
+            .max_batch(1)
+            .max_wait(Duration::from_micros(50))
+            .workers(1)
+            .queue_capacity(2)
+            .threshold(1.0)
+            .build(),
     );
     let server = ShardServer::bind("127.0.0.1:0", Arc::new(registry)).expect("bind");
     let client = ShardClient::connect(&server.local_addr().to_string()).expect("connect");
